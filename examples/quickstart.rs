@@ -1,0 +1,57 @@
+//! Quickstart: tune one convolution layer with RELEASE and with the
+//! AutoTVM baseline, and compare.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --offline --example quickstart
+//! ```
+
+use release::report::runtime_if_available;
+use release::sim::SimMeasurer;
+use release::tuner::{tune, MethodSpec, TunerConfig};
+use release::workload::zoo;
+
+fn main() {
+    // The workload: ResNet-18's 6th conv task (128ch 3x3 @ 28x28).
+    let task = &zoo::resnet18()[5];
+    println!("tuning {} — {:?}", task.id, task.layer);
+    let space = release::space::DesignSpace::for_conv(task.layer);
+    println!("design space: {:.2e} configurations\n", space.size() as f64);
+
+    // "Hardware": the simulated Titan Xp.
+    let cfg = TunerConfig { max_trials: 500, seed: 42, ..Default::default() };
+
+    // Baseline: AutoTVM (simulated annealing + greedy sampling, full budget).
+    let autotvm_cfg = TunerConfig { early_stop: None, ..cfg.clone() };
+    let meas = SimMeasurer::titan_xp(7);
+    let at = tune(task, &meas, MethodSpec::autotvm(), &autotvm_cfg, None);
+    println!(
+        "AutoTVM : {:.4} ms ({:>5.0} GFLOPS)  {:>4} measurements  {:>5.1} simulated min",
+        at.best_runtime_ms,
+        at.best_gflops,
+        at.n_measurements,
+        at.clock.total_s() / 60.0
+    );
+
+    // RELEASE: PPO search agent + adaptive sampling (needs artifacts/).
+    let Some(runtime) = runtime_if_available() else {
+        eprintln!("RELEASE needs AOT artifacts — run `make artifacts` first");
+        std::process::exit(1);
+    };
+    let meas = SimMeasurer::titan_xp(7);
+    let rel = tune(task, &meas, MethodSpec::release(), &cfg, Some(runtime));
+    println!(
+        "RELEASE : {:.4} ms ({:>5.0} GFLOPS)  {:>4} measurements  {:>5.1} simulated min",
+        rel.best_runtime_ms,
+        rel.best_gflops,
+        rel.n_measurements,
+        rel.clock.total_s() / 60.0
+    );
+
+    println!(
+        "\noptimization-time speedup: {:.2}x   output-performance ratio: {:.2}x",
+        at.clock.total_s() / rel.clock.total_s(),
+        rel.best_gflops / at.best_gflops
+    );
+    let cfg_best = rel.best_config.expect("release found a config");
+    println!("best RELEASE config: {:?}", space.decode(&cfg_best));
+}

@@ -1,0 +1,70 @@
+//! The *real measurement* path: instead of the analytical GPU simulator,
+//! wall-clock genuinely different AOT-compiled Pallas tiled-matmul variants
+//! on the PJRT CPU client — the same build-once/measure-many plumbing an
+//! optimizing compiler uses on real hardware (DESIGN.md §2, last row).
+//!
+//! Each variant is one (BM, BK, BN) tiling of a 256^3 matmul, lowered from
+//! the L1 Pallas kernel in python/compile/kernels/matmul_tiled.py.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --offline --example real_measure_pjrt
+//! ```
+
+use release::report::Table;
+use release::runtime::Runtime;
+use release::util::stats;
+
+fn main() {
+    let dir = release::runtime::default_artifact_dir();
+    if !Runtime::artifacts_present(&dir) {
+        eprintln!("needs AOT artifacts — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let rt = Runtime::load(&dir).expect("runtime");
+    let n = rt.manifest.matmul_m;
+    let x: Vec<f32> = (0..n * n).map(|i| ((i % 17) as f32 - 8.0) / 17.0).collect();
+    let w: Vec<f32> = (0..n * n).map(|i| ((i % 11) as f32 - 5.0) / 11.0).collect();
+
+    let flops = 2.0 * (n as f64).powi(3);
+    let mut table = Table::new(
+        "real PJRT measurements — tiled matmul variants (median of 5 runs)",
+        &["variant", "median ms", "MFLOP/s", "correct"],
+    );
+
+    // reference output from the first variant
+    let variants = rt.matmul_variants().to_vec();
+    let (y_ref, _) = rt.run_matmul(&variants[0], &x, &w).expect("run");
+
+    let mut best: Option<(String, f64)> = None;
+    for v in &variants {
+        // warmup + 5 timed runs
+        let _ = rt.run_matmul(v, &x, &w).expect("warmup");
+        let mut times = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..5 {
+            let (out, dt) = rt.run_matmul(v, &x, &w).expect("run");
+            times.push(dt.as_secs_f64() * 1e3);
+            y = out;
+        }
+        let med = stats::percentile(&times, 50.0);
+        let max_err = y
+            .iter()
+            .zip(&y_ref)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        table.row(vec![
+            v.clone(),
+            format!("{med:.3}"),
+            format!("{:.0}", flops / (med * 1e-3) / 1e6),
+            if max_err < 1e-2 { "yes".into() } else { format!("MAX ERR {max_err}") },
+        ]);
+        if best.as_ref().map(|(_, b)| med < *b).unwrap_or(true) {
+            best = Some((v.clone(), med));
+        }
+    }
+    table.print();
+    let (bv, bt) = best.unwrap();
+    println!("fastest tiling on this host: {bv} ({bt:.3} ms)");
+    println!("\n(different tilings of the SAME kernel genuinely differ in measured");
+    println!("runtime — the signal a hardware-measuring autotuner feeds on)");
+}

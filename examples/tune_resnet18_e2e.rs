@@ -1,0 +1,76 @@
+//! End-to-end driver (the EXPERIMENTS.md headline run): optimize ALL 12
+//! conv tasks of ResNet-18 with both AutoTVM and RELEASE on the simulated
+//! Titan Xp, reporting per-task results, total optimization time, and the
+//! resulting end-to-end inference time — the paper's Table 5/6 protocol on
+//! its largest workload, exercising every layer of this system: the PPO
+//! agent (L1 Pallas kernels + L2 JAX graph via PJRT), the boosted-tree cost
+//! model, adaptive sampling, the measurement coordinator, and the GPU
+//! simulator.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --offline --example tune_resnet18_e2e
+//! ```
+//!
+//! Pass `--quick` for a reduced budget.
+
+use release::report::{runtime_if_available, Table};
+use release::sim::SimMeasurer;
+use release::tuner::{e2e::tune_model, MethodSpec, TunerConfig};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let trials = if quick { 192 } else { 1000 };
+
+    let Some(runtime) = runtime_if_available() else {
+        eprintln!("needs AOT artifacts — run `make artifacts` first");
+        std::process::exit(1);
+    };
+
+    let mut table = Table::new(
+        "ResNet-18 end-to-end: AutoTVM vs RELEASE (simulated Titan Xp)",
+        &["task", "AT ms", "REL ms", "AT meas", "REL meas", "AT min", "REL min"],
+    );
+
+    let at_cfg = TunerConfig { max_trials: trials, early_stop: None, seed: 0, ..Default::default() };
+    let rel_cfg = TunerConfig { max_trials: trials, seed: 0, ..Default::default() };
+
+    let meas_at = SimMeasurer::titan_xp(11);
+    let at = tune_model("resnet18", &meas_at, MethodSpec::autotvm(), &at_cfg, None);
+    let meas_rel = SimMeasurer::titan_xp(11);
+    let rel =
+        tune_model("resnet18", &meas_rel, MethodSpec::release(), &rel_cfg, Some(runtime));
+
+    for (a, r) in at.tasks.iter().zip(&rel.tasks) {
+        table.row(vec![
+            a.task_id.clone(),
+            format!("{:.4}", a.best_runtime_ms),
+            format!("{:.4}", r.best_runtime_ms),
+            a.n_measurements.to_string(),
+            r.n_measurements.to_string(),
+            format!("{:.1}", a.clock.total_s() / 60.0),
+            format!("{:.1}", r.clock.total_s() / 60.0),
+        ]);
+    }
+    table.print();
+
+    println!(
+        "AutoTVM : {:.2} simulated hours, inference {:.4} ms ({} measurements)",
+        at.opt_time_hours(),
+        at.inference_ms,
+        at.n_measurements
+    );
+    println!(
+        "RELEASE : {:.2} simulated hours, inference {:.4} ms ({} measurements)",
+        rel.opt_time_hours(),
+        rel.inference_ms,
+        rel.n_measurements
+    );
+    println!(
+        "\noptimization-time speedup: {:.2}x (paper: 4.28x for ResNet-18)",
+        at.opt_time_hours() / rel.opt_time_hours()
+    );
+    println!(
+        "inference-time ratio (AutoTVM/RELEASE): {:.3}x (paper: ~1.06x)",
+        at.inference_ms / rel.inference_ms
+    );
+}

@@ -1,0 +1,118 @@
+"""AOT pipeline: lower every L2 entry point to HLO *text* artifacts.
+
+HLO text — not ``.serialize()`` — is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Run once via ``make artifacts`` (no-op when inputs are unchanged); the rust
+binary is self-contained afterwards. Also writes ``artifacts/manifest.txt``
+with the shared shape/hyperparameter constants the rust side asserts against.
+
+Usage: cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import matmul_tiled as mt
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_all():
+    """name -> HLO text for every artifact."""
+    P = model.NPARAMS
+    arts = {}
+
+    arts["ppo_init"] = to_hlo_text(
+        jax.jit(model.ppo_init).lower(_spec((1,), jnp.int32))
+    )
+
+    arts["policy_forward"] = to_hlo_text(
+        jax.jit(model.policy_forward).lower(
+            _spec((P,)), _spec((model.B_POLICY, model.NDIMS))
+        )
+    )
+
+    B = model.B_ROLLOUT
+    arts["ppo_update"] = to_hlo_text(
+        jax.jit(model.ppo_update).lower(
+            _spec((P,)),                       # params
+            _spec((P,)),                       # m
+            _spec((P,)),                       # v
+            _spec((1,)),                       # t
+            _spec((B, model.NDIMS)),           # obs
+            _spec((B, model.NDIMS), jnp.int32),  # actions
+            _spec((B,)),                       # old_logp
+            _spec((B,)),                       # adv
+            _spec((B,)),                       # ret
+            _spec((B,)),                       # mask
+            _spec((1,), jnp.int32),            # seed
+        )
+    )
+
+    mspec = _spec((mt.M, mt.K))
+    for bm, bk, bn in mt.TILE_VARIANTS:
+        arts[mt.variant_name(bm, bk, bn)] = to_hlo_text(
+            jax.jit(mt.variant_fn(bm, bk, bn)).lower(mspec, _spec((mt.K, mt.N)))
+        )
+    return arts
+
+
+def manifest_text() -> str:
+    lines = [
+        f"ndims {model.NDIMS}",
+        f"nact {model.NACT}",
+        f"nparams {model.NPARAMS}",
+        f"b_policy {model.B_POLICY}",
+        f"b_rollout {model.B_ROLLOUT}",
+        f"minibatch {model.MINIBATCH}",
+        f"n_epochs {model.N_EPOCHS}",
+        f"adam_lr {model.ADAM_LR}",
+        f"discount {model.DISCOUNT}",
+        f"gae_lambda {model.GAE_LAMBDA}",
+        f"clip {model.CLIP}",
+        f"vf_coef {model.VF_COEF}",
+        f"ent_coef {model.ENT_COEF}",
+        f"matmul_m {mt.M}",
+        f"matmul_variants {' '.join(mt.variant_name(*v) for v in mt.TILE_VARIANTS)}",
+    ]
+    return "\n".join(lines) + "\n"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    for name, text in lower_all().items():
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.out_dir, "manifest.txt")
+    with open(mpath, "w") as f:
+        f.write(manifest_text())
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

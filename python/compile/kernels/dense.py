@@ -1,0 +1,137 @@
+"""L1 Pallas kernels: fused dense layers (forward + hand-written VJP).
+
+These are the compute hot-spot of the RELEASE search agent: every PPO policy
+forward / update step is a stack of small dense layers. Each layer is a
+Pallas kernel so the whole agent lowers into one HLO module.
+
+TPU-flavoured design (see DESIGN.md §Hardware-Adaptation):
+- the grid tiles the *batch* dimension (BM rows per program); the weight
+  panel (I x O) stays resident in VMEM across the grid, the activation tile
+  streams HBM->VMEM via BlockSpec;
+- hidden widths are 128/64 so the (I x O) panels are MXU-friendly;
+- accumulation happens in the f32 VMEM tile (``o_ref``), no shared-memory /
+  warp choreography — that concept belongs to the *simulated* GPU target the
+  compiler tunes, not to our host kernels.
+
+``interpret=True`` everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls, and interpret-mode lowers to plain HLO that the rust runtime
+runs. Correctness is pinned to ``ref.py`` by ``python/tests/test_kernel.py``.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows per program instance. All batch sizes used by the agent (64 policy
+# walkers, 128-row PPO minibatches) are multiples of 64.
+BM = 64
+
+
+def _pick_bm(n_rows: int) -> int:
+    return BM if n_rows % BM == 0 else n_rows
+
+
+def _dense_fwd_kernel(x_ref, w_ref, b_ref, o_ref, *, act):
+    """o = act(x @ w + b) on one (BM, I) x (I, O) tile."""
+    y = jnp.dot(x_ref[...], w_ref[...]) + b_ref[...][None, :]
+    if act == "tanh":
+        y = jnp.tanh(y)
+    o_ref[...] = y
+
+
+def _dense_bwd_dx_kernel(g_ref, w_ref, o_ref):
+    """dx = g_pre @ w.T on one (BM, O) tile; w panel resident."""
+    o_ref[...] = jnp.dot(g_ref[...], w_ref[...].T)
+
+
+def _dense_bwd_dw_kernel(x_ref, g_ref, o_ref):
+    """dw += x_tile.T @ g_tile, accumulated over the batch grid."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...].T, g_ref[...])
+
+
+def dense_fwd_pallas(x, w, b, act=None):
+    """Pallas forward: y = act(x @ w + b)."""
+    n, i = x.shape
+    o = w.shape[1]
+    bm = _pick_bm(n)
+    return pl.pallas_call(
+        partial(_dense_fwd_kernel, act=act),
+        grid=(n // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, i), lambda r: (r, 0)),
+            pl.BlockSpec((i, o), lambda r: (0, 0)),
+            pl.BlockSpec((o,), lambda r: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, o), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, o), x.dtype),
+        interpret=True,
+    )(x, w, b)
+
+
+def dense_bwd_dx_pallas(g_pre, w):
+    n, o = g_pre.shape
+    i = w.shape[0]
+    bm = _pick_bm(n)
+    return pl.pallas_call(
+        _dense_bwd_dx_kernel,
+        grid=(n // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, o), lambda r: (r, 0)),
+            pl.BlockSpec((i, o), lambda r: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, i), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, i), g_pre.dtype),
+        interpret=True,
+    )(g_pre, w)
+
+
+def dense_bwd_dw_pallas(x, g_pre):
+    n, i = x.shape
+    o = g_pre.shape[1]
+    bm = _pick_bm(n)
+    return pl.pallas_call(
+        _dense_bwd_dw_kernel,
+        grid=(n // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, i), lambda r: (r, 0)),
+            pl.BlockSpec((bm, o), lambda r: (r, 0)),
+        ],
+        out_specs=pl.BlockSpec((i, o), lambda r: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((i, o), x.dtype),
+        interpret=True,
+    )(x, g_pre)
+
+
+def _make_dense(act):
+    """Build a differentiable dense layer whose fwd AND bwd are Pallas."""
+
+    @jax.custom_vjp
+    def dense(x, w, b):
+        return dense_fwd_pallas(x, w, b, act=act)
+
+    def fwd(x, w, b):
+        y = dense_fwd_pallas(x, w, b, act=act)
+        return y, (x, w, y)
+
+    def bwd(res, g):
+        x, w, y = res
+        g_pre = g * (1.0 - y * y) if act == "tanh" else g
+        dx = dense_bwd_dx_pallas(g_pre, w)
+        dw = dense_bwd_dw_pallas(x, g_pre)
+        db = jnp.sum(g_pre, axis=0)
+        return dx, dw, db
+
+    dense.defvjp(fwd, bwd)
+    return dense
+
+
+dense_tanh = _make_dense("tanh")
+dense_linear = _make_dense(None)

@@ -1,0 +1,73 @@
+"""L1 Pallas kernel: block-tiled matmul used by the *real measurement* path.
+
+The paper's compiler measures candidate code variants on hardware. Our main
+evaluation substitutes an analytical GPU simulator (DESIGN.md §2), but to
+ground that substitution we also AOT-compile a family of genuinely different
+tiled-matmul variants — one HLO artifact per (BM, BK, BN) tiling — and let the
+rust measurement worker wall-clock them on the PJRT CPU client
+(``examples/real_measure_pjrt.rs``). The tiling knobs here play the role of
+``tile_x/tile_y/tile_rc`` in the paper's Table 1.
+
+TPU-flavoured: BM x BN output tile accumulated in VMEM while the K dimension
+is streamed in BK panels through the grid's innermost axis.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Problem size for the measurement family (square f32 matmul).
+M = N = K = 256
+
+# (BM, BK, BN) variants AOT-compiled into artifacts/matmul_bm{BM}_bk{BK}_bn{BN}.hlo.txt
+TILE_VARIANTS = [
+    (32, 32, 32),
+    (64, 32, 64),
+    (64, 64, 64),
+    (128, 64, 128),
+    (128, 128, 128),
+    (256, 256, 256),  # single-tile: the "no tiling" corner of the space
+]
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    """Accumulate one BK panel into the (BM, BN) output tile."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], w_ref[...])
+
+
+def matmul_tiled(x, w, bm, bk, bn):
+    m, k = x.shape
+    n = w.shape[1]
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, "tiles must divide dims"
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, w)
+
+
+def variant_fn(bm, bk, bn):
+    """A jit-able (x, w) -> (y,) closure for one tile variant."""
+
+    def fn(x, w):
+        return (matmul_tiled(x, w, bm, bk, bn),)
+
+    return fn
+
+
+def variant_name(bm, bk, bn):
+    return f"matmul_bm{bm}_bk{bk}_bn{bn}"

@@ -1,0 +1,95 @@
+"""Pure-jnp oracles for the L1 Pallas kernels and the L2 PPO graph.
+
+Everything in this file is the *reference semantics*: the Pallas kernels in
+``dense.py`` / ``matmul_tiled.py`` and the jitted graphs in ``model.py`` are
+checked against these functions by ``python/tests/``.
+"""
+
+import jax.numpy as jnp
+
+
+def dense_ref(x, w, b, act=None):
+    """y = act(x @ w + b). ``act`` in {None, "tanh"}."""
+    y = jnp.dot(x, w) + b
+    if act == "tanh":
+        y = jnp.tanh(y)
+    elif act is not None:
+        raise ValueError(f"unknown activation {act!r}")
+    return y
+
+
+def dense_bwd_ref(x, w, y, g, act=None):
+    """Reference VJP of dense_ref w.r.t. (x, w, b).
+
+    ``y`` is the saved forward output (post-activation).
+    Returns (dx, dw, db).
+    """
+    if act == "tanh":
+        g = g * (1.0 - y * y)
+    dx = jnp.dot(g, w.T)
+    dw = jnp.dot(x.T, g)
+    db = jnp.sum(g, axis=0)
+    return dx, dw, db
+
+
+def matmul_ref(x, w):
+    return jnp.dot(x, w)
+
+
+def log_softmax_ref(logits, axis=-1):
+    m = jnp.max(logits, axis=axis, keepdims=True)
+    z = logits - m
+    return z - jnp.log(jnp.sum(jnp.exp(z), axis=axis, keepdims=True))
+
+
+def policy_forward_ref(packed, obs, layout):
+    """Reference policy/value network forward (pure jnp, no pallas).
+
+    packed: flat f32[P] parameter vector, ``layout`` as in model.param_layout().
+    obs:    f32[B, NDIMS]
+    Returns (logp[B, NDIMS, NACT], value[B]).
+    """
+    p = {name: packed[s:e].reshape(shape) for name, (s, e, shape) in layout.items()}
+    h = dense_ref(obs, p["w0"], p["b0"], act="tanh")
+    hp = dense_ref(h, p["wp1"], p["bp1"], act="tanh")
+    logits = dense_ref(hp, p["wp2"], p["bp2"])
+    ndims = obs.shape[1]
+    logits = logits.reshape(obs.shape[0], ndims, -1)
+    hv = dense_ref(h, p["wv1"], p["bv1"], act="tanh")
+    value = dense_ref(hv, p["wv2"], p["bv2"])[:, 0]
+    return log_softmax_ref(logits), value
+
+
+def ppo_loss_ref(
+    packed, obs, actions, old_logp, adv, ret, mask, layout,
+    clip=0.3, vf_coef=1.0, ent_coef=0.1,
+):
+    """Reference clipped-PPO loss on one minibatch (Table 2 hyperparams)."""
+    logp_all, value = policy_forward_ref(packed, obs, layout)
+    new_logp = jnp.sum(
+        jnp.take_along_axis(logp_all, actions[..., None], axis=-1)[..., 0], axis=-1
+    )
+    ratio = jnp.exp(new_logp - old_logp)
+    wsum = jnp.maximum(jnp.sum(mask), 1.0)
+
+    unclipped = ratio * adv
+    clipped = jnp.clip(ratio, 1.0 - clip, 1.0 + clip) * adv
+    pg_loss = -jnp.sum(jnp.minimum(unclipped, clipped) * mask) / wsum
+
+    v_loss = jnp.sum((value - ret) ** 2 * mask) / wsum
+
+    ent = -jnp.sum(jnp.exp(logp_all) * logp_all, axis=(-1, -2))
+    ent_mean = jnp.sum(ent * mask) / wsum
+
+    total = pg_loss + vf_coef * v_loss - ent_coef * ent_mean
+    return total, (pg_loss, v_loss, ent_mean)
+
+
+def adam_step_ref(p, g, m, v, t, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    """One Adam step on flat vectors. ``t`` is the 1-based step count."""
+    m = b1 * m + (1.0 - b1) * g
+    v = b2 * v + (1.0 - b2) * g * g
+    mhat = m / (1.0 - b1**t)
+    vhat = v / (1.0 - b2**t)
+    p = p - lr * mhat / (jnp.sqrt(vhat) + eps)
+    return p, m, v

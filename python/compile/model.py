@@ -1,0 +1,186 @@
+"""L2: the RELEASE search agent's PPO policy/value networks + update rule.
+
+Paper mapping (Section 4.1, Table 2):
+- state  = the current knob configuration, normalized per dimension to [0,1]
+  (NDIMS = 8 knobs of the conv2d template, Table 1);
+- action = a direction per dimension: {decrement, stay, increment} (NACT = 3);
+- the first dense layer is *shared* between the policy and value networks
+  ("the agent's first layer is shared to foster information sharing");
+- PPO with the exact Table 2 hyperparameters.
+
+Everything here is build-time Python. ``aot.py`` lowers three entry points to
+HLO text that the rust coordinator executes via PJRT:
+
+- ``ppo_init(seed)``                        -> (params, m, v)
+- ``policy_forward(params, obs)``           -> (logp, value)
+- ``ppo_update(params, m, v, t, batch...)`` -> (params', m', v', stats)
+
+The whole update — 3 epochs x 4 minibatches of clipped-PPO + Adam — runs as a
+single XLA executable (a ``lax.scan`` over minibatches), so the rust hot loop
+makes exactly one PJRT call per agent update. Dense layers are the L1 Pallas
+kernels from ``kernels/dense.py``.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.dense import dense_linear, dense_tanh
+
+# ---------------------------------------------------------------- constants
+NDIMS = 8          # knobs in the conv2d template (Table 1)
+NACT = 3           # {decrement, stay, increment}
+HIDDEN = 128       # shared trunk width
+HEAD = 64          # head width
+B_POLICY = 64      # parallel episode walkers per policy-forward call
+B_ROLLOUT = 512    # transitions per PPO update
+MINIBATCH = 128    # minibatch rows
+N_EPOCHS = 3       # Table 2
+N_MINIBATCH = B_ROLLOUT // MINIBATCH
+
+# Table 2 hyperparameters.
+ADAM_LR = 1e-3
+DISCOUNT = 0.9
+GAE_LAMBDA = 0.99
+CLIP = 0.3
+VF_COEF = 1.0
+ENT_COEF = 0.1
+
+_SHAPES = [
+    ("w0", (NDIMS, HIDDEN)),
+    ("b0", (HIDDEN,)),
+    ("wp1", (HIDDEN, HEAD)),
+    ("bp1", (HEAD,)),
+    ("wp2", (HEAD, NDIMS * NACT)),
+    ("bp2", (NDIMS * NACT,)),
+    ("wv1", (HIDDEN, HEAD)),
+    ("bv1", (HEAD,)),
+    ("wv2", (HEAD, 1)),
+    ("bv2", (1,)),
+]
+
+
+def param_layout():
+    """name -> (start, end, shape) in the flat parameter vector."""
+    layout, off = {}, 0
+    for name, shape in _SHAPES:
+        size = 1
+        for d in shape:
+            size *= d
+        layout[name] = (off, off + size, shape)
+        off += size
+    return layout
+
+
+LAYOUT = param_layout()
+NPARAMS = max(e for _, e, _ in LAYOUT.values())
+
+
+def unpack(packed):
+    return {n: packed[s:e].reshape(shape) for n, (s, e, shape) in LAYOUT.items()}
+
+
+# ----------------------------------------------------------------- networks
+def _forward(packed, obs):
+    """(logp[B, NDIMS, NACT], value[B]) via the Pallas dense kernels."""
+    p = unpack(packed)
+    h = dense_tanh(obs, p["w0"], p["b0"])          # shared first layer
+    hp = dense_tanh(h, p["wp1"], p["bp1"])
+    logits = dense_linear(hp, p["wp2"], p["bp2"])
+    logits = logits.reshape(obs.shape[0], NDIMS, NACT)
+    hv = dense_tanh(h, p["wv1"], p["bv1"])
+    value = dense_linear(hv, p["wv2"], p["bv2"])[:, 0]
+    return jax.nn.log_softmax(logits, axis=-1), value
+
+
+def policy_forward(packed, obs):
+    """AOT entry point. obs: f32[B_POLICY, NDIMS]."""
+    logp, value = _forward(packed, obs)
+    return logp, value
+
+
+# --------------------------------------------------------------------- init
+def ppo_init(seed):
+    """AOT entry point: seed i32[1] -> (params f32[P], m f32[P], v f32[P]).
+
+    Scaled-normal init (std = 1/sqrt(fan_in)); the policy output layer is
+    shrunk 100x so the initial policy is near-uniform — standard PPO practice.
+    """
+    key = jax.random.PRNGKey(seed[0])
+    parts = []
+    for name, shape in _SHAPES:
+        key, sub = jax.random.split(key)
+        if name.startswith("w"):
+            std = 1.0 / jnp.sqrt(jnp.asarray(shape[0], jnp.float32))
+            if name == "wp2":
+                std = std * 0.01
+            parts.append((jax.random.normal(sub, shape, jnp.float32) * std).ravel())
+        else:
+            parts.append(jnp.zeros(shape, jnp.float32).ravel())
+    params = jnp.concatenate(parts)
+    zeros = jnp.zeros_like(params)
+    return params, zeros, zeros
+
+
+# ------------------------------------------------------------------- update
+def _minibatch_loss(packed, mb):
+    obs, actions, old_logp, adv, ret, mask = mb
+    logp_all, value = _forward(packed, obs)
+    new_logp = jnp.sum(
+        jnp.take_along_axis(logp_all, actions[..., None], axis=-1)[..., 0], axis=-1
+    )
+    ratio = jnp.exp(new_logp - old_logp)
+    wsum = jnp.maximum(jnp.sum(mask), 1.0)
+
+    pg = -jnp.sum(
+        jnp.minimum(ratio * adv, jnp.clip(ratio, 1.0 - CLIP, 1.0 + CLIP) * adv) * mask
+    ) / wsum
+    v_loss = jnp.sum((value - ret) ** 2 * mask) / wsum
+    ent = -jnp.sum(jnp.exp(logp_all) * logp_all, axis=(-1, -2))
+    ent_mean = jnp.sum(ent * mask) / wsum
+    kl = jnp.sum((old_logp - new_logp) * mask) / wsum
+
+    total = pg + VF_COEF * v_loss - ENT_COEF * ent_mean
+    return total, jnp.stack([pg, v_loss, ent_mean, kl])
+
+
+_loss_and_grad = jax.value_and_grad(_minibatch_loss, has_aux=True)
+
+
+def ppo_update(packed, m, v, t, obs, actions, old_logp, adv, ret, mask, seed):
+    """AOT entry point: the full PPO update as one XLA program.
+
+    packed/m/v: f32[P] Adam triple;  t: f32[1] 1-based Adam step count.
+    obs f32[B_ROLLOUT, NDIMS]; actions i32[B_ROLLOUT, NDIMS];
+    old_logp/adv/ret/mask f32[B_ROLLOUT]; seed i32[1] (minibatch shuffling).
+
+    Returns (packed', m', v', stats f32[4] = [pg_loss, v_loss, entropy, kl]
+    averaged over all minibatch steps).
+    """
+    key = jax.random.PRNGKey(seed[0])
+    # One permutation per epoch, reshaped into minibatch index rows.
+    perms = jnp.concatenate(
+        [
+            jax.random.permutation(jax.random.fold_in(key, e), B_ROLLOUT)
+            for e in range(N_EPOCHS)
+        ]
+    ).reshape(N_EPOCHS * N_MINIBATCH, MINIBATCH)
+
+    # Normalize advantages over the valid transitions (standard PPO).
+    wsum = jnp.maximum(jnp.sum(mask), 1.0)
+    mean = jnp.sum(adv * mask) / wsum
+    var = jnp.sum((adv - mean) ** 2 * mask) / wsum
+    adv = (adv - mean) / jnp.sqrt(var + 1e-8) * mask
+
+    def step(carry, idx):
+        packed, m, v, t = carry
+        mb = (obs[idx], actions[idx], old_logp[idx], adv[idx], ret[idx], mask[idx])
+        (_, stats), grad = _loss_and_grad(packed, mb)
+        m = 0.9 * m + 0.1 * grad
+        v = 0.999 * v + 0.001 * grad * grad
+        mhat = m / (1.0 - 0.9**t)
+        vhat = v / (1.0 - 0.999**t)
+        packed = packed - ADAM_LR * mhat / (jnp.sqrt(vhat) + 1e-8)
+        return (packed, m, v, t + 1.0), stats
+
+    (packed, m, v, t), stats = jax.lax.scan(step, (packed, m, v, t), perms)
+    return packed, m, v, jnp.mean(stats, axis=0)

@@ -1,0 +1,50 @@
+"""AOT pipeline: HLO text artifacts are well-formed and manifest is complete."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model
+from compile.kernels import matmul_tiled as mt
+
+ARTI = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_manifest_contents():
+    text = aot.manifest_text()
+    kv = dict(line.split(" ", 1) for line in text.strip().splitlines())
+    assert int(kv["ndims"]) == model.NDIMS
+    assert int(kv["nparams"]) == model.NPARAMS
+    assert int(kv["b_rollout"]) == model.B_ROLLOUT
+    assert float(kv["clip"]) == 0.3
+    assert len(kv["matmul_variants"].split()) == len(mt.TILE_VARIANTS)
+
+
+def test_policy_forward_lowers_to_hlo_text():
+    lowered = jax.jit(model.policy_forward).lower(
+        jax.ShapeDtypeStruct((model.NPARAMS,), jnp.float32),
+        jax.ShapeDtypeStruct((model.B_POLICY, model.NDIMS), jnp.float32),
+    )
+    text = aot.to_hlo_text(lowered)
+    assert "ENTRY" in text and "HloModule" in text
+    # return_tuple=True -> root is a tuple of (logp, value)
+    b = model.B_POLICY
+    assert f"f32[{b},8,3]" in text and f"f32[{b}]" in text
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTI, "manifest.txt")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_artifacts_on_disk_complete():
+    names = ["ppo_init", "policy_forward", "ppo_update"] + [
+        mt.variant_name(*v) for v in mt.TILE_VARIANTS
+    ]
+    for name in names:
+        path = os.path.join(ARTI, f"{name}.hlo.txt")
+        assert os.path.exists(path), path
+        with open(path) as f:
+            head = f.read(4096)
+        assert "HloModule" in head, f"{name} is not HLO text"

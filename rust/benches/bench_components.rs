@@ -1,0 +1,110 @@
+//! Component micro-benchmarks — the §Perf hot paths (EXPERIMENTS.md):
+//! simulator eval, feature extraction, GBT fit/predict, k-means, PCA,
+//! adaptive sampling, one SA round, and (if artifacts exist) the PJRT
+//! policy-forward / ppo-update calls.
+
+use release::costmodel::CostModel;
+use release::gbt::{Gbt, GbtParams};
+use release::report::runtime_if_available;
+use release::sampling::{adaptive_sample, kmeans};
+use release::search::{sa::SimulatedAnnealing, Searcher};
+use release::sim::{evaluate_config, GpuModel, Measurer, SimMeasurer};
+use release::space::{features::features, pca, Config, DesignSpace};
+use release::util::bench::Bencher;
+use release::util::rng::Pcg32;
+use release::workload::zoo;
+use std::collections::HashSet;
+
+fn main() {
+    let b = Bencher::default();
+    let space = DesignSpace::for_conv(zoo::resnet18()[5].layer);
+    let gpu = GpuModel::titan_xp();
+    let mut rng = Pcg32::seed_from(0);
+    let configs: Vec<Config> = (0..512).map(|_| space.random_config(&mut rng)).collect();
+
+    // --- simulator + features (called ~10^5-10^6 times per tuning run) ----
+    {
+        let mut i = 0;
+        b.iter("sim::evaluate_config", || {
+            i = (i + 1) % configs.len();
+            evaluate_config(&gpu, &space, &configs[i], 0)
+        });
+    }
+    {
+        let mut i = 0;
+        b.iter("space::features", || {
+            i = (i + 1) % configs.len();
+            features(&space, &configs[i])
+        });
+    }
+
+    // --- cost model -------------------------------------------------------
+    let meas = SimMeasurer::titan_xp(0);
+    let measured = meas.measure_batch(&space, &configs);
+    let mut cm = CostModel::new(0);
+    cm.update(&space, &measured);
+    {
+        let mut i = 0;
+        b.iter("costmodel::predict(1)", || {
+            i = (i + 1) % configs.len();
+            cm.predict(&space, &configs[i])
+        });
+    }
+    b.iter("costmodel::predict_batch(128)", || {
+        cm.predict_batch(&space, &configs[..128])
+    });
+    {
+        let rows: Vec<Vec<f32>> = configs.iter().map(|c| features(&space, c)).collect();
+        let ys: Vec<f32> =
+            measured.iter().map(|m| m.gflops.max(1.0).ln() as f32).collect();
+        b.iter("gbt::fit(512x24, 200 trees)", || {
+            Gbt::fit(&rows, &ys, &GbtParams::default())
+        });
+    }
+
+    // --- sampling ----------------------------------------------------------
+    let points: Vec<Vec<f32>> = configs.iter().map(|c| space.normalize(c)).collect();
+    b.iter("kmeans(512x8, k=32)", || {
+        let mut r = Pcg32::seed_from(1);
+        kmeans(&points, 32, &mut r, 25)
+    });
+    b.iter("adaptive_sample(512)", || {
+        let mut r = Pcg32::seed_from(2);
+        adaptive_sample(&space, &configs, &HashSet::new(), &mut r)
+    });
+    b.iter("pca::project_2d(512x8)", || pca::project_2d(&points));
+
+    // --- one full SA round (the AutoTVM inner loop) -------------------------
+    {
+        let (sa_round, _) = Bencher::once("sa round (128 chains x <=500 steps)", || {
+            let mut sa = SimulatedAnnealing::default();
+            let mut r = Pcg32::seed_from(3);
+            sa.round(&space, &cm, &HashSet::new(), &mut r)
+        });
+        std::hint::black_box(sa_round.trajectory.len());
+    }
+
+    // --- PJRT agent calls ----------------------------------------------------
+    if let Some(rt) = runtime_if_available() {
+        let st = rt.ppo_init(1).expect("init");
+        let m = rt.manifest.clone();
+        let obs = vec![0.5f32; m.b_policy * m.ndims];
+        b.iter("pjrt policy_forward", || rt.policy_forward(&st, &obs).unwrap());
+
+        let bsz = m.b_rollout;
+        let obs_u = vec![0.5f32; bsz * m.ndims];
+        let actions = vec![1i32; bsz * m.ndims];
+        let old_logp = vec![-8.8f32; bsz];
+        let adv = vec![0.1f32; bsz];
+        let ret = vec![0.5f32; bsz];
+        let mask = vec![1.0f32; bsz];
+        let mut st2 = rt.ppo_init(2).expect("init");
+        let quick = Bencher::quick();
+        quick.iter("pjrt ppo_update(512 rollout)", || {
+            rt.ppo_update(&mut st2, &obs_u, &actions, &old_logp, &adv, &ret, &mask, 3)
+                .unwrap()
+        });
+    } else {
+        println!("bench pjrt: skipped (artifacts not built)");
+    }
+}

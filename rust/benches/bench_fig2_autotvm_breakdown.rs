@@ -1,0 +1,25 @@
+//! Regenerates paper Figure 2: AutoTVM optimization time per ResNet-18
+//! conv task, with the fraction spent on (simulated) hardware measurement.
+//!
+//! Paper shape to reproduce: the majority of optimization time goes to
+//! hardware measurements on every task.
+//!
+//! `RELEASE_QUICK=1 cargo bench --bench bench_fig2_autotvm_breakdown` for a
+//! reduced budget.
+
+use release::report::{fig2, ExperimentConfig};
+use release::util::bench::Bencher;
+
+fn main() {
+    let cfg = ExperimentConfig::from_env(0);
+    let (r, _) = Bencher::once("fig2", || fig2(&cfg));
+    println!(
+        "\nSHAPE CHECK — mean measurement fraction: {:.2} (paper: majority of time)",
+        r.mean_measure_fraction
+    );
+    println!(
+        "total AutoTVM optimization time for ResNet-18: {:.2} simulated hours (paper: ~10h)",
+        r.total_hours
+    );
+    assert!(r.mean_measure_fraction > 0.5, "measurement must dominate");
+}

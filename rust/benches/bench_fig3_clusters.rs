@@ -1,0 +1,18 @@
+//! Regenerates paper Figure 3: the 2-D (PCA) projection of a search
+//! trajectory, showing that sampled configurations form clusters — the
+//! observation that motivates adaptive sampling.
+//!
+//! Output: results/fig3_trajectory_pca.csv (pc1, pc2, cluster label).
+
+use release::report::{fig3, ExperimentConfig};
+use release::util::bench::Bencher;
+
+fn main() {
+    let cfg = ExperimentConfig::from_env(0);
+    let (r, _) = Bencher::once("fig3", || fig3(&cfg));
+    println!(
+        "\nSHAPE CHECK — {} points, within-cluster/total variance = {:.3} (clustered iff << 1)",
+        r.n_points, r.cluster_ratio
+    );
+    assert!(r.cluster_ratio < 0.6, "trajectory must be visibly clustered");
+}

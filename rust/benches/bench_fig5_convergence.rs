@@ -1,0 +1,22 @@
+//! Regenerates paper Figure 5: search steps per iteration to converge,
+//! simulated annealing vs the PPO agent, on layers L1–L8.
+//!
+//! Paper shape to reproduce: RL needs substantially fewer steps (paper
+//! geomean: 2.88x).
+
+use release::report::{fig5, runtime_if_available, ExperimentConfig};
+use release::util::bench::Bencher;
+
+fn main() {
+    let Some(rt) = runtime_if_available() else {
+        println!("skipped: artifacts not built (run `make artifacts`)");
+        return;
+    };
+    let cfg = ExperimentConfig::from_env(0);
+    let (r, _) = Bencher::once("fig5", || fig5(&cfg, rt));
+    println!(
+        "\nSHAPE CHECK — steps-to-converge reduction (SA/RL): {:.2}x (paper: 2.88x)",
+        r.step_reduction
+    );
+    assert!(r.step_reduction > 1.2, "RL must converge in fewer steps than SA");
+}

@@ -1,0 +1,23 @@
+//! Regenerates paper Figure 6: number of hardware measurements per layer
+//! for SA, SA+AS, RL, RL+AS.
+//!
+//! Paper shape to reproduce: adaptive sampling cuts measurements for both
+//! searchers (paper: 1.98x for SA, 2.33x for RL).
+
+use release::report::{fig6, runtime_if_available, ExperimentConfig};
+use release::util::bench::Bencher;
+
+fn main() {
+    let Some(rt) = runtime_if_available() else {
+        println!("skipped: artifacts not built (run `make artifacts`)");
+        return;
+    };
+    let cfg = ExperimentConfig::from_env(0);
+    let (r, _) = Bencher::once("fig6", || fig6(&cfg, rt));
+    println!(
+        "\nSHAPE CHECK — measurement reduction: SA {:.2}x (paper 1.98x), RL {:.2}x (paper 2.33x)",
+        r.sa_reduction, r.rl_reduction
+    );
+    assert!(r.sa_reduction > 1.05, "AS must reduce SA measurements");
+    assert!(r.rl_reduction > 1.05, "AS must reduce RL measurements");
+}

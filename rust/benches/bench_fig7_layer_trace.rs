@@ -1,0 +1,38 @@
+//! Regenerates paper Figure 7: output-code performance vs number of
+//! hardware measurements during optimization of ResNet-18's 11th task,
+//! for all four arms (SA, SA+AS, RL, RL+AS).
+//!
+//! Paper shape to reproduce: the +AS arms climb with far fewer
+//! measurements; RELEASE reaches good performance earliest.
+
+use release::report::{fig7, runtime_if_available, ExperimentConfig};
+use release::util::bench::Bencher;
+
+fn main() {
+    let Some(rt) = runtime_if_available() else {
+        println!("skipped: artifacts not built (run `make artifacts`)");
+        return;
+    };
+    let cfg = ExperimentConfig::from_env(0);
+    let (r, _) = Bencher::once("fig7", || fig7(&cfg, rt));
+    println!("\nSHAPE CHECK — final (method, GFLOPS, measurements):");
+    let mut autotvm = (0.0, 0usize);
+    let mut release_arm = (0.0, 0usize);
+    for (name, gf, n) in &r.finals {
+        println!("  {name:<8} {gf:>7.0} GFLOPS after {n} measurements");
+        if name == "AutoTVM" {
+            autotvm = (*gf, *n);
+        }
+        if name == "RELEASE" {
+            release_arm = (*gf, *n);
+        }
+    }
+    assert!(
+        release_arm.1 < autotvm.1,
+        "RELEASE must need fewer measurements than AutoTVM"
+    );
+    assert!(
+        release_arm.0 > 0.75 * autotvm.0,
+        "RELEASE quality must stay in AutoTVM's ballpark"
+    );
+}

@@ -1,0 +1,24 @@
+//! Regenerates paper Figure 8: per-layer optimization time and output
+//! performance, AutoTVM vs RELEASE, on layers L1–L8.
+//!
+//! Paper shape to reproduce: RELEASE optimizes each layer several times
+//! faster (paper geomean 4.82x) at comparable-or-better output performance
+//! (paper 1.17x).
+
+use release::report::{fig8, runtime_if_available, ExperimentConfig};
+use release::util::bench::Bencher;
+
+fn main() {
+    let Some(rt) = runtime_if_available() else {
+        println!("skipped: artifacts not built (run `make artifacts`)");
+        return;
+    };
+    let cfg = ExperimentConfig::from_env(0);
+    let (r, _) = Bencher::once("fig8", || fig8(&cfg, rt));
+    println!(
+        "\nSHAPE CHECK — opt-time speedup {:.2}x (paper 4.82x), perf ratio {:.2}x (paper 1.17x)",
+        r.time_speedup, r.perf_ratio
+    );
+    assert!(r.time_speedup > 1.5, "RELEASE must be much faster to optimize");
+    assert!(r.perf_ratio > 0.75, "RELEASE output perf must be comparable");
+}

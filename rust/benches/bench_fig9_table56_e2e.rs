@@ -1,0 +1,33 @@
+//! Regenerates paper Figure 9 + Tables 5 and 6: end-to-end optimization
+//! time and emitted-code inference time for AlexNet, VGG-16 and ResNet-18
+//! under all four arms (AutoTVM, RL, SA+AS, RELEASE).
+//!
+//! Paper shape to reproduce: RELEASE cuts end-to-end optimization time by
+//! several-fold (paper: 3.59x / 5.73x / 4.28x, mean 4.45x) with
+//! equal-or-better inference time (paper: up to 6.4% better).
+//!
+//! This is the heaviest bench (26 tasks x 4 arms) — use RELEASE_QUICK=1
+//! for a fast pass.
+
+use release::report::{fig9_tables56, runtime_if_available, ExperimentConfig};
+use release::util::bench::Bencher;
+
+fn main() {
+    let Some(rt) = runtime_if_available() else {
+        println!("skipped: artifacts not built (run `make artifacts`)");
+        return;
+    };
+    let cfg = ExperimentConfig::from_env(0);
+    let (r, _) = Bencher::once("fig9_tables56", || fig9_tables56(&cfg, rt));
+    println!(
+        "\nSHAPE CHECK — mean end-to-end optimization speedup: {:.2}x (paper 4.45x)",
+        r.mean_speedup
+    );
+    for (model, ratio) in &r.infer_ratios {
+        println!("  inference ratio AutoTVM/RELEASE on {model}: {ratio:.3}x (paper ~1.0-1.06x)");
+    }
+    assert!(r.mean_speedup > 1.5, "RELEASE must be much faster end-to-end");
+    for (model, ratio) in &r.infer_ratios {
+        assert!(*ratio > 0.75, "{model} inference must stay comparable");
+    }
+}

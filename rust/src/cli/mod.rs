@@ -1,0 +1,293 @@
+//! Hand-rolled CLI (clap is not vendored).
+//!
+//! ```text
+//! release info
+//! release tune --model resnet18 [--method release] [--trials 1000] [--seed 0]
+//! release tune --layer L8 [--method autotvm] ...
+//! release experiment <fig2|fig3|fig5|fig6|fig7|fig8|fig9|all> [--quick] [--seed 0]
+//! ```
+
+use crate::report::{self, ExperimentConfig};
+use crate::sim::SimMeasurer;
+use crate::tuner::{tune, e2e::tune_model, MethodSpec, TunerConfig};
+use crate::workload::zoo;
+use std::collections::HashMap;
+
+const USAGE: &str = "\
+RELEASE — RL + adaptive-sampling optimizing compiler (paper reproduction)
+
+USAGE:
+  release info
+  release tune --model <alexnet|vgg16|resnet18> [options]
+  release tune --layer <L1..L8> [options]
+  release experiment <fig2|fig3|fig5|fig6|fig7|fig8|fig9|all> [--quick] [--seed N]
+
+TUNE OPTIONS:
+  --method <autotvm|rl|sa+as|release|ga|random>   (default: release)
+  --trials N        measurement budget per task    (default: 1000)
+  --seed N          RNG seed                       (default: 0)
+  --no-early-stop   run the full budget
+";
+
+/// Parse `--key value` pairs and positional args.
+fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
+    let mut pos = Vec::new();
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(key) = a.strip_prefix("--") {
+            // boolean flags
+            if matches!(key, "quick" | "no-early-stop" | "help") {
+                flags.insert(key.to_string(), "1".to_string());
+                i += 1;
+            } else if i + 1 < args.len() {
+                flags.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(key.to_string(), String::new());
+                i += 1;
+            }
+        } else {
+            pos.push(a.clone());
+            i += 1;
+        }
+    }
+    (pos, flags)
+}
+
+pub fn run(args: &[String]) -> i32 {
+    let (pos, flags) = parse_flags(args);
+    if flags.contains_key("help") || pos.is_empty() {
+        println!("{USAGE}");
+        return if pos.is_empty() && !flags.contains_key("help") { 2 } else { 0 };
+    }
+    match pos[0].as_str() {
+        "info" => cmd_info(),
+        "tune" => cmd_tune(&flags),
+        "experiment" => cmd_experiment(&pos[1..], &flags),
+        other => {
+            eprintln!("unknown command {other:?}\n{USAGE}");
+            2
+        }
+    }
+}
+
+fn cmd_info() -> i32 {
+    println!("models:");
+    for m in zoo::MODELS {
+        let tasks = zoo::model_tasks(m).unwrap();
+        println!("  {m}: {} conv tasks", tasks.len());
+        for t in &tasks {
+            let space = crate::space::DesignSpace::for_conv(t.layer);
+            println!(
+                "    {:<14} {}x{}x{} -> {} k{} s{}  |space| = {:.2e}",
+                t.id,
+                t.layer.c,
+                t.layer.h,
+                t.layer.w,
+                t.layer.k,
+                t.layer.kh,
+                t.layer.stride,
+                space.size() as f64
+            );
+        }
+    }
+    println!("\nlayer subset (Table 4):");
+    for (name, t) in zoo::layer_table() {
+        println!("  {name} = {}", t.id);
+    }
+    let dir = crate::runtime::default_artifact_dir();
+    println!(
+        "\nartifacts: {} ({})",
+        dir.display(),
+        if crate::runtime::Runtime::artifacts_present(&dir) {
+            "present"
+        } else {
+            "MISSING — run `make artifacts`"
+        }
+    );
+    0
+}
+
+fn tuner_config(flags: &HashMap<String, String>) -> TunerConfig {
+    let mut cfg = TunerConfig::default();
+    if let Some(t) = flags.get("trials") {
+        cfg.max_trials = t.parse().expect("--trials must be an integer");
+    }
+    if let Some(s) = flags.get("seed") {
+        cfg.seed = s.parse().expect("--seed must be an integer");
+    }
+    if flags.contains_key("no-early-stop") {
+        cfg.early_stop = None;
+    }
+    cfg
+}
+
+fn cmd_tune(flags: &HashMap<String, String>) -> i32 {
+    let method = match MethodSpec::parse(
+        flags.get("method").map(String::as_str).unwrap_or("release"),
+    ) {
+        Some(m) => m,
+        None => {
+            eprintln!("unknown --method\n{USAGE}");
+            return 2;
+        }
+    };
+    let cfg = tuner_config(flags);
+    let runtime = if method.searcher == crate::tuner::SearcherKind::Rl {
+        match report::runtime_if_available() {
+            Some(rt) => Some(rt),
+            None => {
+                eprintln!("RL methods need artifacts/ — run `make artifacts`");
+                return 1;
+            }
+        }
+    } else {
+        None
+    };
+    let meas = SimMeasurer::titan_xp(cfg.seed ^ 0xdead);
+
+    if let Some(layer) = flags.get("layer") {
+        let Some((_, task)) =
+            zoo::layer_table().into_iter().find(|(n, _)| n.eq_ignore_ascii_case(layer))
+        else {
+            eprintln!("unknown --layer {layer} (want L1..L8)");
+            return 2;
+        };
+        println!("tuning {} ({}) with {}", layer, task.id, method.name());
+        let r = tune(&task, &meas, method, &cfg, runtime);
+        println!(
+            "best: {:.4} ms ({:.0} GFLOPS) after {} measurements, {:.1} simulated min",
+            r.best_runtime_ms,
+            r.best_gflops,
+            r.n_measurements,
+            r.clock.total_s() / 60.0
+        );
+        return 0;
+    }
+
+    let model = flags.get("model").map(String::as_str).unwrap_or("resnet18");
+    if zoo::model_tasks(model).is_none() {
+        eprintln!("unknown --model {model}");
+        return 2;
+    }
+    println!("tuning {model} end-to-end with {}", method.name());
+    let r = tune_model(model, &meas, method, &cfg, runtime);
+    let mut table = report::Table::new(
+        &format!("{model} via {}", method.name()),
+        &["task", "best ms", "GFLOPS", "measurements", "opt min"],
+    );
+    for t in &r.tasks {
+        table.row(vec![
+            t.task_id.clone(),
+            format!("{:.4}", t.best_runtime_ms),
+            format!("{:.0}", t.best_gflops),
+            t.n_measurements.to_string(),
+            format!("{:.1}", t.clock.total_s() / 60.0),
+        ]);
+    }
+    table.print();
+    println!(
+        "total: {:.2} simulated hours, inference {:.4} ms",
+        r.opt_time_hours(),
+        r.inference_ms
+    );
+    0
+}
+
+fn cmd_experiment(pos: &[String], flags: &HashMap<String, String>) -> i32 {
+    let Some(which) = pos.first() else {
+        eprintln!("experiment name required\n{USAGE}");
+        return 2;
+    };
+    let seed: u64 =
+        flags.get("seed").map(|s| s.parse().expect("--seed")).unwrap_or(0);
+    let cfg = if flags.contains_key("quick") {
+        ExperimentConfig::quick(seed)
+    } else {
+        ExperimentConfig::from_env(seed)
+    };
+    let needs_rt = !matches!(which.as_str(), "fig2" | "fig3");
+    let runtime = if needs_rt {
+        match report::runtime_if_available() {
+            Some(rt) => Some(rt),
+            None => {
+                eprintln!("this experiment needs artifacts/ — run `make artifacts`");
+                return 1;
+            }
+        }
+    } else {
+        None
+    };
+    match which.as_str() {
+        "fig2" => {
+            report::fig2(&cfg);
+        }
+        "fig3" => {
+            report::fig3(&cfg);
+        }
+        "fig5" => {
+            report::fig5(&cfg, runtime.unwrap());
+        }
+        "fig6" => {
+            report::fig6(&cfg, runtime.unwrap());
+        }
+        "fig7" => {
+            report::fig7(&cfg, runtime.unwrap());
+        }
+        "fig8" => {
+            report::fig8(&cfg, runtime.unwrap());
+        }
+        "fig9" | "table5" | "table6" => {
+            report::fig9_tables56(&cfg, runtime.unwrap());
+        }
+        "all" => {
+            let rt = runtime.unwrap();
+            report::fig2(&cfg);
+            report::fig3(&cfg);
+            report::fig5(&cfg, rt.clone());
+            report::fig6(&cfg, rt.clone());
+            report::fig7(&cfg, rt.clone());
+            report::fig8(&cfg, rt.clone());
+            report::fig9_tables56(&cfg, rt);
+        }
+        other => {
+            eprintln!("unknown experiment {other:?}\n{USAGE}");
+            return 2;
+        }
+    }
+    0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_flags_mixes_positional_and_kv() {
+        let args: Vec<String> = ["experiment", "fig5", "--seed", "7", "--quick"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let (pos, flags) = parse_flags(&args);
+        assert_eq!(pos, vec!["experiment", "fig5"]);
+        assert_eq!(flags.get("seed").unwrap(), "7");
+        assert_eq!(flags.get("quick").unwrap(), "1");
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert_eq!(run(&["bogus".to_string()]), 2);
+    }
+
+    #[test]
+    fn info_runs() {
+        assert_eq!(run(&["info".to_string()]), 0);
+    }
+
+    #[test]
+    fn empty_args_prints_usage() {
+        assert_eq!(run(&[]), 2);
+    }
+}

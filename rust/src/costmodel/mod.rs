@@ -1,0 +1,212 @@
+//! The cost model: predicts a configuration's fitness from structural
+//! features, trained online on hardware measurements (paper §4, building on
+//! AutoTVM's boosted-tree model).
+//!
+//! Targets are log-GFLOPS; failed measurements contribute fitness 0 (mapped
+//! to a large negative log target), teaching the model to avoid invalid
+//! regions — exactly the role the XGBoost model plays in AutoTVM.
+
+use crate::gbt::{Gbt, GbtParams};
+use crate::sim::Measurement;
+use crate::space::{features::features, Config, DesignSpace};
+
+/// Time model for what fitting/querying would cost on the paper's host —
+/// drives the simulated `Clock::model_s` (the non-measurement slice of
+/// Figure 2's bars).
+#[derive(Debug, Clone)]
+pub struct ModelTimeCost {
+    /// Seconds per (re)fit, plus per-sample increment.
+    pub fit_base_s: f64,
+    pub fit_per_sample_s: f64,
+    /// Seconds per 1000 predictions (feature extraction dominates).
+    pub predict_per_k_s: f64,
+}
+
+impl Default for ModelTimeCost {
+    fn default() -> Self {
+        ModelTimeCost { fit_base_s: 3.0, fit_per_sample_s: 0.012, predict_per_k_s: 0.22 }
+    }
+}
+
+/// Online-trained surrogate of f(τ(Θ)).
+pub struct CostModel {
+    gbt: Option<Gbt>,
+    params: GbtParams,
+    /// (features, log-gflops target) training pairs accumulated so far.
+    xs: Vec<Vec<f32>>,
+    ys: Vec<f32>,
+    best_gflops: f64,
+    pub time: ModelTimeCost,
+    /// Simulated seconds spent fitting + predicting.
+    pub spent_s: std::cell::Cell<f64>,
+    n_fits: usize,
+}
+
+/// Fitness of a failed config in log-GFLOPS space.
+const FAIL_TARGET: f32 = -4.0;
+
+impl CostModel {
+    pub fn new(seed: u64) -> Self {
+        CostModel {
+            gbt: None,
+            params: GbtParams { seed, ..Default::default() },
+            xs: Vec::new(),
+            ys: Vec::new(),
+            best_gflops: 0.0,
+            time: ModelTimeCost::default(),
+            spent_s: std::cell::Cell::new(0.0),
+            n_fits: 0,
+        }
+    }
+
+    /// Override ensemble hyperparameters (takes effect on the next fit).
+    pub fn set_params(&mut self, params: GbtParams) {
+        self.params = params;
+    }
+
+    pub fn n_samples(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn n_fits(&self) -> usize {
+        self.n_fits
+    }
+
+    pub fn is_trained(&self) -> bool {
+        self.gbt.is_some()
+    }
+
+    /// Ingest a batch of measurements and refit.
+    pub fn update(&mut self, space: &DesignSpace, results: &[Measurement]) {
+        for m in results {
+            self.xs.push(features(space, &m.config));
+            if m.gflops > 0.0 {
+                self.ys.push((m.gflops.max(1e-3)).ln() as f32);
+                self.best_gflops = self.best_gflops.max(m.gflops);
+            } else {
+                self.ys.push(FAIL_TARGET);
+            }
+        }
+        if self.xs.len() >= 8 {
+            self.gbt = Some(Gbt::fit(&self.xs, &self.ys, &self.params));
+            self.n_fits += 1;
+            self.spent_s.set(
+                self.spent_s.get()
+                    + self.time.fit_base_s
+                    + self.time.fit_per_sample_s * self.xs.len() as f64,
+            );
+        }
+    }
+
+    /// Predicted log-GFLOPS (higher = better). Untrained model returns 0
+    /// for everything (uninformative prior), like AutoTVM's first round.
+    pub fn predict(&self, space: &DesignSpace, config: &Config) -> f64 {
+        self.predict_batch(space, std::slice::from_ref(config))[0]
+    }
+
+    pub fn predict_batch(&self, space: &DesignSpace, configs: &[Config]) -> Vec<f64> {
+        self.spent_s.set(
+            self.spent_s.get() + self.time.predict_per_k_s * configs.len() as f64 / 1000.0,
+        );
+        match &self.gbt {
+            None => vec![0.0; configs.len()],
+            Some(gbt) => {
+                let rows: Vec<Vec<f32>> =
+                    configs.iter().map(|c| features(space, c)).collect();
+                gbt.predict_batch(&rows).into_iter().map(|v| v as f64).collect()
+            }
+        }
+    }
+
+    /// Best measured fitness so far (GFLOPS).
+    pub fn best_gflops(&self) -> f64 {
+        self.best_gflops
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{Measurer, SimMeasurer};
+    use crate::util::rng::Pcg32;
+    use crate::util::stats::spearman;
+    use crate::workload::zoo;
+
+    fn setup() -> (DesignSpace, SimMeasurer) {
+        (
+            DesignSpace::for_conv(zoo::resnet18()[1].layer),
+            SimMeasurer::titan_xp(0),
+        )
+    }
+
+    #[test]
+    fn untrained_model_is_uninformative() {
+        let (space, _) = setup();
+        let cm = CostModel::new(0);
+        let mut rng = Pcg32::seed_from(0);
+        let c = space.random_config(&mut rng);
+        assert_eq!(cm.predict(&space, &c), 0.0);
+        assert!(!cm.is_trained());
+    }
+
+    #[test]
+    fn learns_to_rank_the_simulator() {
+        let (space, meas) = setup();
+        let mut rng = Pcg32::seed_from(1);
+        let mut cm = CostModel::new(1);
+
+        let train: Vec<_> = (0..300).map(|_| space.random_config(&mut rng)).collect();
+        cm.update(&space, &meas.measure_batch(&space, &train));
+        assert!(cm.is_trained());
+        assert_eq!(cm.n_samples(), 300);
+
+        // rank correlation on held-out valid configs
+        let test: Vec<_> = (0..150).map(|_| space.random_config(&mut rng)).collect();
+        let measured = meas.measure_batch(&space, &test);
+        let valid: Vec<usize> = (0..test.len()).filter(|&i| measured[i].ok()).collect();
+        let preds = cm.predict_batch(&space, &test);
+        let p: Vec<f64> = valid.iter().map(|&i| preds[i]).collect();
+        let y: Vec<f64> = valid.iter().map(|&i| measured[i].gflops.ln()).collect();
+        let rho = spearman(&p, &y);
+        assert!(rho > 0.45, "spearman {rho}");
+    }
+
+    #[test]
+    fn predicts_failures_low() {
+        let (space, meas) = setup();
+        let mut rng = Pcg32::seed_from(2);
+        let mut cm = CostModel::new(2);
+        let train: Vec<_> = (0..400).map(|_| space.random_config(&mut rng)).collect();
+        let measured = meas.measure_batch(&space, &train);
+        cm.update(&space, &measured);
+
+        // average prediction of failing configs must sit below passing ones
+        let mut fail_p = Vec::new();
+        let mut ok_p = Vec::new();
+        for _ in 0..400 {
+            let c = space.random_config(&mut rng);
+            let m = &meas.measure_batch(&space, std::slice::from_ref(&c))[0];
+            let p = cm.predict(&space, &c);
+            if m.ok() {
+                ok_p.push(p);
+            } else {
+                fail_p.push(p);
+            }
+        }
+        let mf = crate::util::stats::mean(&fail_p);
+        let mo = crate::util::stats::mean(&ok_p);
+        assert!(mf < mo, "fail {mf} ok {mo}");
+    }
+
+    #[test]
+    fn tracks_best_and_charges_time() {
+        let (space, meas) = setup();
+        let mut rng = Pcg32::seed_from(3);
+        let mut cm = CostModel::new(3);
+        let batch: Vec<_> = (0..64).map(|_| space.random_config(&mut rng)).collect();
+        cm.update(&space, &meas.measure_batch(&space, &batch));
+        assert!(cm.best_gflops() > 0.0);
+        assert!(cm.spent_s.get() > 0.0);
+        assert_eq!(cm.n_fits(), 1);
+    }
+}

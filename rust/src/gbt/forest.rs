@@ -1,0 +1,214 @@
+//! Gradient-boosted regression forest (squared error, shrinkage, optional
+//! row subsampling) over the histogram trees in `tree.rs`.
+
+use super::tree::{Binner, Tree, TreeParams};
+use crate::util::parallel::par_map;
+use crate::util::rng::Pcg32;
+
+#[derive(Debug, Clone)]
+pub struct GbtParams {
+    pub n_trees: usize,
+    pub learning_rate: f32,
+    pub max_depth: usize,
+    pub min_samples_leaf: usize,
+    pub lambda: f32,
+    /// Fraction of rows drawn (without replacement) per tree.
+    pub subsample: f32,
+    pub seed: u64,
+}
+
+impl Default for GbtParams {
+    fn default() -> Self {
+        GbtParams {
+            n_trees: 200,
+            learning_rate: 0.08,
+            max_depth: 8,
+            min_samples_leaf: 3,
+            lambda: 1.0,
+            subsample: 0.85,
+            seed: 0,
+        }
+    }
+}
+
+/// A fitted boosted ensemble.
+pub struct Gbt {
+    pub base: f32,
+    trees: Vec<Tree>,
+    shrinkage: f32,
+}
+
+impl Gbt {
+    /// Fit on row-major `data` (n x d) against targets `y`.
+    pub fn fit(data: &[Vec<f32>], y: &[f32], params: &GbtParams) -> Self {
+        assert_eq!(data.len(), y.len());
+        assert!(!data.is_empty());
+        let d = data[0].len();
+        let binner = Binner::fit(data, d);
+        let binned: Vec<Vec<u8>> = data.iter().map(|r| binner.bin_row(r)).collect();
+
+        let base = y.iter().sum::<f32>() / y.len() as f32;
+        let mut pred = vec![base; y.len()];
+        let mut trees = Vec::with_capacity(params.n_trees);
+        let tparams = TreeParams {
+            max_depth: params.max_depth,
+            min_samples_leaf: params.min_samples_leaf,
+            lambda: params.lambda,
+            gamma: 1e-6,
+        };
+        let mut rng = Pcg32::seed_from(params.seed ^ 0x6b7);
+
+        for _ in 0..params.n_trees {
+            let res: Vec<f32> = y.iter().zip(&pred).map(|(t, p)| t - p).collect();
+            // row subsampling: mask residuals to a subset by index selection
+            let tree = if params.subsample < 1.0 && y.len() > 20 {
+                let keep = ((y.len() as f32 * params.subsample) as usize).max(10);
+                let mut order: Vec<u32> = (0..y.len() as u32).collect();
+                rng.shuffle(&mut order);
+                order.truncate(keep);
+                let sub_binned: Vec<Vec<u8>> =
+                    order.iter().map(|&i| binned[i as usize].clone()).collect();
+                let sub_res: Vec<f32> = order.iter().map(|&i| res[i as usize]).collect();
+                Tree::fit(&sub_binned, &sub_res, &binner, &tparams)
+            } else {
+                Tree::fit(&binned, &res, &binner, &tparams)
+            };
+            for (p, row) in pred.iter_mut().zip(data) {
+                *p += params.learning_rate * tree.predict(row);
+            }
+            trees.push(tree);
+        }
+        Gbt { base, trees, shrinkage: params.learning_rate }
+    }
+
+    #[inline]
+    pub fn predict(&self, row: &[f32]) -> f32 {
+        let mut acc = self.base;
+        for t in &self.trees {
+            acc += self.shrinkage * t.predict(row);
+        }
+        acc
+    }
+
+    /// Batch prediction. Tree-major iteration keeps each tree's node array
+    /// cache-resident across the whole batch (§Perf: ~2x over row-major),
+    /// with thread-parallel row chunks for large batches.
+    pub fn predict_batch(&self, rows: &[Vec<f32>]) -> Vec<f32> {
+        if rows.len() >= 512 {
+            return par_map(rows, crate::util::parallel::default_threads(), |r| {
+                self.predict(r)
+            });
+        }
+        let mut acc = vec![self.base; rows.len()];
+        for t in &self.trees {
+            for (a, row) in acc.iter_mut().zip(rows) {
+                *a += self.shrinkage * t.predict(row);
+            }
+        }
+        acc
+    }
+
+    pub fn n_trees(&self) -> usize {
+        self.trees.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+    use crate::util::stats::{pearson, spearman};
+
+    fn make(n: usize, seed: u64, f: impl Fn(&[f32]) -> f32) -> (Vec<Vec<f32>>, Vec<f32>) {
+        let mut rng = Pcg32::seed_from(seed);
+        let xs: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..4).map(|_| rng.f32()).collect())
+            .collect();
+        let ys: Vec<f32> = xs.iter().map(|r| f(r)).collect();
+        (xs, ys)
+    }
+
+    #[test]
+    fn fits_additive_nonlinear_function() {
+        let target = |r: &[f32]| (6.0 * r[0]).sin() + 2.0 * r[1] * r[1] - r[2];
+        let (xs, ys) = make(1500, 1, target);
+        let gbt = Gbt::fit(&xs, &ys, &GbtParams::default());
+        let (tx, ty) = make(300, 2, target);
+        let preds = gbt.predict_batch(&tx);
+        let r = pearson(
+            &preds.iter().map(|&v| v as f64).collect::<Vec<_>>(),
+            &ty.iter().map(|&v| v as f64).collect::<Vec<_>>(),
+        );
+        assert!(r > 0.95, "test correlation {r}");
+    }
+
+    #[test]
+    fn ranks_well_with_few_samples() {
+        // The cost model regime: ~100 measurements, needs good *ranking*.
+        let target = |r: &[f32]| r[0] * 3.0 + (4.0 * r[1]).cos();
+        let (xs, ys) = make(100, 3, target);
+        let gbt = Gbt::fit(&xs, &ys, &GbtParams::default());
+        let (tx, ty) = make(200, 4, target);
+        let preds = gbt.predict_batch(&tx);
+        let rho = spearman(
+            &preds.iter().map(|&v| v as f64).collect::<Vec<_>>(),
+            &ty.iter().map(|&v| v as f64).collect::<Vec<_>>(),
+        );
+        assert!(rho > 0.8, "spearman {rho}");
+    }
+
+    #[test]
+    fn more_trees_reduce_training_error() {
+        let target = |r: &[f32]| (8.0 * r[0]).sin() + r[1];
+        let (xs, ys) = make(600, 5, target);
+        let mse = |n_trees: usize| {
+            let gbt = Gbt::fit(
+                &xs,
+                &ys,
+                &GbtParams { n_trees, subsample: 1.0, ..Default::default() },
+            );
+            xs.iter()
+                .zip(&ys)
+                .map(|(x, y)| {
+                    let d = gbt.predict(x) - y;
+                    (d * d) as f64
+                })
+                .sum::<f64>()
+                / ys.len() as f64
+        };
+        let few = mse(5);
+        let many = mse(60);
+        assert!(many < few * 0.5, "few {few} many {many}");
+    }
+
+    #[test]
+    fn constant_target_predicts_constant() {
+        let (xs, _) = make(50, 6, |_| 0.0);
+        let ys = vec![2.5f32; 50];
+        let gbt = Gbt::fit(&xs, &ys, &GbtParams::default());
+        for x in &xs {
+            assert!((gbt.predict(x) - 2.5).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let target = |r: &[f32]| r[0] + r[1];
+        let (xs, ys) = make(200, 7, target);
+        let a = Gbt::fit(&xs, &ys, &GbtParams::default());
+        let b = Gbt::fit(&xs, &ys, &GbtParams::default());
+        for x in xs.iter().take(20) {
+            assert_eq!(a.predict(x), b.predict(x));
+        }
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let (xs, ys) = make(700, 8, |r| r[0] - r[3]);
+        let gbt = Gbt::fit(&xs, &ys, &GbtParams::default());
+        let batch = gbt.predict_batch(&xs);
+        for (x, p) in xs.iter().zip(&batch) {
+            assert_eq!(gbt.predict(x), *p);
+        }
+    }
+}

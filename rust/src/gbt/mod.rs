@@ -1,0 +1,7 @@
+//! From-scratch gradient-boosted trees (the XGBoost stand-in, DESIGN.md §2).
+
+pub mod forest;
+pub mod tree;
+
+pub use forest::{Gbt, GbtParams};
+pub use tree::{Binner, Tree, TreeParams};

@@ -1,0 +1,31 @@
+//! # RELEASE — Reinforcement Learning + Adaptive Sampling optimizing compiler
+//!
+//! A from-scratch reproduction of *"Reinforcement Learning and Adaptive
+//! Sampling for Optimized DNN Compilation"* (Ahn, Pilligundla, Esmaeilzadeh;
+//! RL4RealLife @ ICML 2019) as a three-layer Rust + JAX + Pallas system:
+//!
+//! - **L3 (this crate)**: the optimizing compiler — design space, search
+//!   algorithms (PPO / simulated annealing / GA / random), adaptive sampling
+//!   (k-means + knee + mode-replacement), boosted-tree cost model,
+//!   measurement coordination, and the simulated Titan Xp hardware.
+//! - **L2/L1 (python/, build-time only)**: the PPO policy/value networks and
+//!   their Pallas dense kernels, AOT-lowered to HLO text artifacts executed
+//!   from rust via PJRT (`runtime`).
+//!
+//! See DESIGN.md for the system inventory and experiment index, and
+//! EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod cli;
+pub mod coordinator;
+pub mod costmodel;
+pub mod gbt;
+pub mod report;
+pub mod rl;
+pub mod runtime;
+pub mod sampling;
+pub mod search;
+pub mod sim;
+pub mod space;
+pub mod tuner;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,7 @@
+//! `release` — CLI entry point for the RELEASE optimizing compiler.
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = release::cli::run(&args);
+    std::process::exit(code);
+}

@@ -1,0 +1,11 @@
+//! Reporting: aligned tables, CSV dumps, and the per-figure experiment
+//! drivers that regenerate every table and figure in the paper.
+
+pub mod experiments;
+pub mod table;
+
+pub use experiments::{
+    fig2, fig3, fig5, fig6, fig7, fig8, fig9_tables56, runtime_if_available,
+    ExperimentConfig,
+};
+pub use table::{results_dir, Table};

@@ -1,0 +1,390 @@
+//! The RELEASE search agent (paper §4.1): PPO walkers over the design
+//! space, driven from rust, with the policy/value networks and the whole
+//! clipped-PPO + Adam update executing as AOT-compiled XLA artifacts.
+//!
+//! Per search round:
+//!   1. `b_policy` parallel walkers start from random configurations;
+//!   2. for each of H steps, one `policy_forward` PJRT call yields per-dim
+//!      {dec, stay, inc} distributions; actions are sampled in rust and the
+//!      configuration updater applies them (an all-stay action ends the
+//!      episode — "the agent ends the episode after reaching convergence");
+//!   3. rewards are the cost model's predicted fitness (the surrogate
+//!      reward of §4.1) queried per step;
+//!   4. GAE(γ=0.9, λ=0.99) runs host-side; one `ppo_update` call trains
+//!      both networks;
+//!   5. episode batches repeat until the best predicted score plateaus.
+//!
+//! The policy parameters persist across rounds and across tuner iterations,
+//! which is exactly the information reuse of Eq. 3 that lets RL converge in
+//! fewer steps than simulated annealing (Fig. 5).
+
+use super::gae::gae;
+use crate::costmodel::CostModel;
+use crate::runtime::{AgentState, Runtime};
+use crate::search::{dedup_top, SearchRound, Searcher};
+use crate::space::{Config, DesignSpace, Direction};
+use crate::util::rng::Pcg32;
+use std::collections::HashSet;
+use std::sync::Arc;
+
+#[derive(Debug, Clone)]
+pub struct PpoAgentParams {
+    /// Max episode batches per round.
+    pub max_batches: usize,
+    /// Minimum batches before convergence can fire.
+    pub min_batches: usize,
+    /// Stop after this many non-improving batches.
+    pub patience: usize,
+    pub traj_cap: usize,
+    /// Simulated host+device seconds per episode batch (policy forwards +
+    /// one PPO update; measured ~50 ms on this machine, charged at the
+    /// paper's host scale).
+    pub batch_cost_s: f64,
+}
+
+impl Default for PpoAgentParams {
+    fn default() -> Self {
+        PpoAgentParams {
+            max_batches: 24,
+            min_batches: 4,
+            patience: 3,
+            traj_cap: 512,
+            batch_cost_s: 0.35,
+        }
+    }
+}
+
+pub struct PpoAgent {
+    runtime: Arc<Runtime>,
+    pub params: PpoAgentParams,
+    state: Option<AgentState>,
+    init_seed: i32,
+    update_seed: i32,
+    /// Best measured configs fed back by the tuner — half of each episode
+    /// batch starts from perturbations of these (exploitation).
+    seed_configs: Vec<Config>,
+}
+
+impl PpoAgent {
+    pub fn new(runtime: Arc<Runtime>, seed: i32) -> Self {
+        PpoAgent {
+            runtime,
+            params: PpoAgentParams::default(),
+            state: None,
+            init_seed: seed,
+            update_seed: seed.wrapping_mul(7919),
+            seed_configs: Vec::new(),
+        }
+    }
+
+    fn ensure_state(&mut self) -> &mut AgentState {
+        if self.state.is_none() {
+            self.state = Some(
+                self.runtime
+                    .ppo_init(self.init_seed)
+                    .expect("ppo_init artifact execution failed"),
+            );
+        }
+        self.state.as_mut().unwrap()
+    }
+
+    /// Sample one categorical action per dimension from flattened
+    /// log-probs [b, ndims, nact]; returns (directions, summed logp) per row.
+    fn sample_actions(
+        logp: &[f32],
+        b: usize,
+        ndims: usize,
+        nact: usize,
+        rng: &mut Pcg32,
+    ) -> (Vec<Vec<Direction>>, Vec<f32>, Vec<Vec<i32>>) {
+        let mut dirs = Vec::with_capacity(b);
+        let mut logps = Vec::with_capacity(b);
+        let mut acts = Vec::with_capacity(b);
+        for i in 0..b {
+            let mut row_dirs = Vec::with_capacity(ndims);
+            let mut row_acts = Vec::with_capacity(ndims);
+            let mut lp_sum = 0.0f32;
+            for d in 0..ndims {
+                let off = (i * ndims + d) * nact;
+                let probs: Vec<f64> =
+                    (0..nact).map(|a| logp[off + a].exp() as f64).collect();
+                let a = rng.categorical(&probs);
+                lp_sum += logp[off + a];
+                row_dirs.push(Direction::from_index(a));
+                row_acts.push(a as i32);
+            }
+            dirs.push(row_dirs);
+            logps.push(lp_sum);
+            acts.push(row_acts);
+        }
+        (dirs, logps, acts)
+    }
+}
+
+impl Searcher for PpoAgent {
+    fn name(&self) -> &'static str {
+        "rl"
+    }
+
+    fn reset(&mut self) {
+        // Fresh policy for a fresh task (per-task agents, like the paper).
+        self.state = None;
+        self.seed_configs.clear();
+    }
+
+    fn seed(&mut self, configs: &[Config]) {
+        self.seed_configs = configs.to_vec();
+    }
+
+    fn round(
+        &mut self,
+        space: &DesignSpace,
+        model: &CostModel,
+        _visited: &HashSet<u64>,
+        rng: &mut Pcg32,
+    ) -> SearchRound {
+        let m = self.runtime.manifest.clone();
+        let b = m.b_policy;
+        let ndims = m.ndims;
+        let horizon = m.b_rollout / m.b_policy;
+        let p = self.params.clone();
+        self.ensure_state();
+
+        let mut trajectory: Vec<(Config, f64)> = Vec::new();
+        let mut best = f64::NEG_INFINITY;
+        let mut last_improve = 0usize;
+        let mut batches = 0usize;
+
+        for batch in 0..p.max_batches {
+            batches = batch + 1;
+
+            // --- rollout -----------------------------------------------------
+            // Walkers: three quarters explore from uniform-random starts, one
+            // quarter exploits perturbations of the best measured configs fed
+            // back by the tuner (information reuse across iterations, Eq. 3).
+            // Heavier exploitation couples badly with clustering-based
+            // sampling: a bad early basin becomes self-reinforcing.
+            let mut configs: Vec<Config> = (0..b)
+                .map(|i| {
+                    if !self.seed_configs.is_empty() && i % 4 == 0 {
+                        let base = rng.choose(&self.seed_configs).clone();
+                        let once = space.mutate(&base, rng);
+                        if rng.bool(0.5) {
+                            once
+                        } else {
+                            space.mutate(&once, rng)
+                        }
+                    } else {
+                        space.random_config(rng)
+                    }
+                })
+                .collect();
+            let mut alive = vec![true; b];
+
+            // per-step storage
+            let mut all_obs: Vec<f32> = Vec::with_capacity(b * horizon * ndims);
+            let mut all_actions: Vec<i32> = Vec::with_capacity(b * horizon * ndims);
+            let mut all_logp: Vec<f32> = Vec::with_capacity(b * horizon);
+            let mut rewards: Vec<Vec<f32>> = vec![Vec::with_capacity(horizon); b];
+            let mut values: Vec<Vec<f32>> = vec![Vec::with_capacity(horizon + 1); b];
+            let mut masks: Vec<Vec<f32>> = vec![Vec::with_capacity(horizon); b];
+
+            for _step in 0..horizon {
+                let obs: Vec<f32> =
+                    configs.iter().flat_map(|c| space.normalize(c)).collect();
+                let state = self.state.as_ref().unwrap();
+                let (logp, value) = self
+                    .runtime
+                    .policy_forward(state, &obs)
+                    .expect("policy_forward failed");
+                let (dirs, lp, acts) =
+                    Self::sample_actions(&logp, b, ndims, m.nact, rng);
+
+                let new_configs: Vec<Config> = (0..b)
+                    .map(|i| {
+                        if alive[i] {
+                            space.apply_actions(&configs[i], &dirs[i])
+                        } else {
+                            configs[i].clone()
+                        }
+                    })
+                    .collect();
+                let mut scores = model.predict_batch(space, &new_configs);
+                // static screen (TVM verify_gpu_code analogue): invalid
+                // configs get the failed-measurement score so the agent
+                // learns to stay in the launchable region from episode one
+                crate::sim::screen_scores(space, &new_configs, &mut scores);
+
+                for i in 0..b {
+                    all_obs.extend_from_slice(&obs[i * ndims..(i + 1) * ndims]);
+                    all_actions.extend_from_slice(&acts[i]);
+                    all_logp.push(lp[i]);
+                    masks[i].push(if alive[i] { 1.0 } else { 0.0 });
+                    values[i].push(value[i]);
+                    rewards[i].push(if alive[i] { scores[i] as f32 } else { 0.0 });
+                    if alive[i] {
+                        trajectory.push((new_configs[i].clone(), scores[i]));
+                        if scores[i] > best + 1e-9 {
+                            best = scores[i];
+                            last_improve = batches;
+                        }
+                        // "end the episode after reaching convergence":
+                        // an all-stay action is the agent's stop signal
+                        if dirs[i].iter().all(|d| *d == Direction::Stay) {
+                            alive[i] = false;
+                        }
+                    }
+                }
+                configs = new_configs;
+            }
+
+            // bootstrap values for the final states
+            let obs: Vec<f32> =
+                configs.iter().flat_map(|c| space.normalize(c)).collect();
+            let state = self.state.as_ref().unwrap();
+            let (_, vlast) = self
+                .runtime
+                .policy_forward(state, &obs)
+                .expect("policy_forward failed");
+            for i in 0..b {
+                values[i].push(vlast[i]);
+            }
+
+            // --- GAE + update -----------------------------------------------
+            let mut adv_flat = vec![0.0f32; b * horizon];
+            let mut ret_flat = vec![0.0f32; b * horizon];
+            let mut mask_flat = vec![0.0f32; b * horizon];
+            for i in 0..b {
+                let (adv, ret) = gae(
+                    &rewards[i],
+                    &values[i],
+                    &masks[i],
+                    m.discount as f32,
+                    m.gae_lambda as f32,
+                );
+                for t in 0..horizon {
+                    // rollout batch is time-major per walker: row = t*b + i
+                    let row = t * b + i;
+                    adv_flat[row] = adv[t];
+                    ret_flat[row] = ret[t];
+                    mask_flat[row] = masks[i][t];
+                }
+            }
+            // reorder obs/actions/logp the same way (collected walker-major
+            // per step, which IS time-major rows of t*b + i already)
+            self.update_seed = self.update_seed.wrapping_add(1);
+            let state = self.state.as_mut().unwrap();
+            self.runtime
+                .ppo_update(
+                    state,
+                    &all_obs,
+                    &all_actions,
+                    &all_logp,
+                    &adv_flat,
+                    &ret_flat,
+                    &mask_flat,
+                    self.update_seed,
+                )
+                .expect("ppo_update failed");
+
+            if batches >= p.min_batches && batches - last_improve >= p.patience {
+                break;
+            }
+        }
+
+        let horizon_steps = batches * horizon;
+        let (configs, scores) = dedup_top(space, trajectory, p.traj_cap);
+        SearchRound {
+            trajectory: configs,
+            scores,
+            steps: horizon_steps,
+            steps_to_converge: (last_improve.max(1)) * horizon,
+            sim_time_s: batches as f64 * p.batch_cost_s,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::default_artifact_dir;
+    use crate::sim::{Measurer, SimMeasurer};
+    use crate::workload::zoo;
+
+    fn runtime() -> Option<Arc<Runtime>> {
+        let dir = default_artifact_dir();
+        if !Runtime::artifacts_present(&dir) {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(Arc::new(Runtime::load(&dir).unwrap()))
+    }
+
+    #[test]
+    fn sample_actions_respects_distribution() {
+        let mut rng = Pcg32::seed_from(0);
+        // 1 row, 2 dims, 3 actions: dim0 ~ always action 2, dim1 uniform
+        let mut logp = vec![f32::NEG_INFINITY, f32::NEG_INFINITY, 0.0];
+        logp.extend_from_slice(&[(1.0f32 / 3.0).ln(); 3]);
+        let mut counts = [0usize; 3];
+        for _ in 0..300 {
+            let (dirs, lp, acts) = PpoAgent::sample_actions(&logp, 1, 2, 3, &mut rng);
+            assert_eq!(dirs[0][0], Direction::Inc);
+            counts[acts[0][1] as usize] += 1;
+            assert!(lp[0].is_finite());
+        }
+        for &c in &counts {
+            assert!(c > 50, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn round_produces_trajectory_and_converges() {
+        let Some(rt) = runtime() else { return };
+        let space = DesignSpace::for_conv(zoo::resnet18()[5].layer);
+        let meas = SimMeasurer::titan_xp(0);
+        let mut rng = Pcg32::seed_from(1);
+        let mut cm = CostModel::new(1);
+        let train: Vec<_> = (0..150).map(|_| space.random_config(&mut rng)).collect();
+        cm.update(&space, &meas.measure_batch(&space, &train));
+
+        let mut agent = PpoAgent::new(rt, 42);
+        agent.params.max_batches = 6;
+        let r = agent.round(&space, &cm, &HashSet::new(), &mut rng);
+        assert!(!r.trajectory.is_empty());
+        assert_eq!(r.trajectory.len(), r.scores.len());
+        assert!(r.steps >= 8 && r.steps <= 6 * 8);
+        assert!(r.steps_to_converge <= r.steps);
+        // scores sorted best-first and finite
+        assert!(r.scores.windows(2).all(|w| w[0] >= w[1]));
+        assert!(r.scores.iter().all(|s| s.is_finite()));
+    }
+
+    #[test]
+    fn policy_improves_on_model_surface_across_rounds() {
+        // After a few rounds of PPO against a trained cost model, the best
+        // score the agent reaches should not degrade (information reuse).
+        let Some(rt) = runtime() else { return };
+        let space = DesignSpace::for_conv(zoo::resnet18()[1].layer);
+        let meas = SimMeasurer::titan_xp(0);
+        let mut rng = Pcg32::seed_from(2);
+        let mut cm = CostModel::new(2);
+        let train: Vec<_> = (0..250).map(|_| space.random_config(&mut rng)).collect();
+        cm.update(&space, &meas.measure_batch(&space, &train));
+
+        let mut agent = PpoAgent::new(rt, 7);
+        agent.params.max_batches = 5;
+        agent.params.min_batches = 5; // fixed batches for comparability
+        let r1 = agent.round(&space, &cm, &HashSet::new(), &mut rng);
+        let r2 = agent.round(&space, &cm, &HashSet::new(), &mut rng);
+        let r3 = agent.round(&space, &cm, &HashSet::new(), &mut rng);
+        let later = r2.scores[0].max(r3.scores[0]);
+        assert!(
+            later >= r1.scores[0] - 0.3,
+            "r1 {} r2 {} r3 {}",
+            r1.scores[0],
+            r2.scores[0],
+            r3.scores[0]
+        );
+    }
+}

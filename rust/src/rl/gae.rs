@@ -1,0 +1,98 @@
+//! Generalized Advantage Estimation (host side). The rollout is collected
+//! by the rust agent driver; GAE runs here on CPU (it's O(T) and trivially
+//! cheap), and the resulting tensors feed the XLA `ppo_update` artifact.
+//!
+//! Table 2: discount γ = 0.9, GAE λ = 0.99.
+
+/// Compute advantages and returns for one episode.
+///
+/// `rewards[t]` is received after taking the action in state t;
+/// `values[t]` is V(s_t) for t in 0..T, plus a bootstrap `values[T]`;
+/// `mask[t]` is 1.0 iff transition t is valid (the step was taken while the
+/// episode was live). The last valid transition before a masked one is
+/// terminal (no bootstrap); an episode still live at the horizon is
+/// *truncated* and bootstraps through `values[T]`.
+pub fn gae(
+    rewards: &[f32],
+    values: &[f32],
+    mask: &[f32],
+    gamma: f32,
+    lambda: f32,
+) -> (Vec<f32>, Vec<f32>) {
+    let t_len = rewards.len();
+    assert_eq!(values.len(), t_len + 1, "values needs a bootstrap entry");
+    assert_eq!(mask.len(), t_len);
+    let mut adv = vec![0.0f32; t_len];
+    let mut acc = 0.0f32;
+    for t in (0..t_len).rev() {
+        // continuation: does state t+1 exist for credit purposes?
+        let cont = if t + 1 < t_len { mask[t + 1] } else { 1.0 };
+        let delta = rewards[t] + gamma * values[t + 1] * cont - values[t];
+        acc = delta + gamma * lambda * cont * acc;
+        adv[t] = acc * mask[t];
+    }
+    let returns: Vec<f32> = adv.iter().zip(values).map(|(a, v)| a + v).collect();
+    (adv, returns)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_step_episode_is_td_error() {
+        let (adv, ret) = gae(&[1.0], &[0.25, 0.5], &[1.0], 0.9, 0.99);
+        let delta = 1.0 + 0.9 * 0.5 - 0.25;
+        assert!((adv[0] - delta).abs() < 1e-6);
+        assert!((ret[0] - (delta + 0.25)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn zero_reward_perfect_value_gives_zero_advantage() {
+        // V == discounted future rewards == 0 everywhere
+        let (adv, _) = gae(&[0.0; 5], &[0.0; 6], &[1.0; 5], 0.9, 0.99);
+        assert!(adv.iter().all(|&a| a.abs() < 1e-7));
+    }
+
+    #[test]
+    fn constant_reward_advantages_decay_backwards() {
+        let (adv, _) = gae(&[1.0; 4], &[0.0; 5], &[1.0; 4], 0.9, 0.99);
+        // earlier steps accumulate more future reward => larger advantage
+        assert!(adv[0] > adv[1] && adv[1] > adv[2] && adv[2] > adv[3]);
+        assert!((adv[3] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mask_truncates_credit_assignment() {
+        // episode terminates at step 1: steps 2,3 contribute nothing, and
+        // the terminal step gets no bootstrap even with nonzero values[2..]
+        let (adv, _) = gae(
+            &[1.0, 1.0, 99.0, 99.0],
+            &[0.0, 0.0, 5.0, 5.0, 5.0],
+            &[1.0, 1.0, 0.0, 0.0],
+            0.9,
+            0.99,
+        );
+        assert!((adv[1] - 1.0).abs() < 1e-6); // terminal step: just its reward
+        assert_eq!(adv[2], 0.0);
+        assert_eq!(adv[3], 0.0);
+        // step 0 sees step 1's reward through gamma*lambda
+        assert!((adv[0] - (1.0 + 0.9 * 0.99 * 1.0)).abs() < 1e-5);
+    }
+
+    #[test]
+    fn truncated_episode_bootstraps_final_value() {
+        // live at horizon: the last step must see gamma * values[T]
+        let (adv, _) = gae(&[0.0, 0.0], &[0.0, 0.0, 2.0], &[1.0, 1.0], 0.9, 0.99);
+        assert!((adv[1] - 0.9 * 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn lambda_zero_is_one_step_td() {
+        let rewards = [0.5, 0.25];
+        let values = [0.1, 0.2, 0.3];
+        let (adv, _) = gae(&rewards, &values, &[1.0, 1.0], 0.9, 0.0);
+        assert!((adv[0] - (0.5 + 0.9 * 0.2 - 0.1)).abs() < 1e-6);
+        assert!((adv[1] - (0.25 + 0.9 * 0.3 - 0.2)).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,8 @@
+//! The reinforcement-learning search agent (paper §4.1): PPO driven from
+//! rust over AOT XLA artifacts, GAE host-side.
+
+pub mod agent;
+pub mod gae;
+
+pub use agent::{PpoAgent, PpoAgentParams};
+pub use gae::gae;

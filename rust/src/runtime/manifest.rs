@@ -1,0 +1,140 @@
+//! `artifacts/manifest.txt` — shape/hyperparameter constants shared between
+//! the python AOT pipeline and this runtime. The rust side asserts against
+//! these at load time so a stale artifact directory fails fast.
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub ndims: usize,
+    pub nact: usize,
+    pub nparams: usize,
+    pub b_policy: usize,
+    pub b_rollout: usize,
+    pub minibatch: usize,
+    pub n_epochs: usize,
+    pub adam_lr: f64,
+    pub discount: f64,
+    pub gae_lambda: f64,
+    pub clip: f64,
+    pub vf_coef: f64,
+    pub ent_coef: f64,
+    pub matmul_m: usize,
+    pub matmul_variants: Vec<String>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut kv: HashMap<&str, &str> = HashMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once(' ')
+                .ok_or_else(|| anyhow!("malformed manifest line: {line:?}"))?;
+            kv.insert(k, v.trim());
+        }
+        let get = |k: &str| -> Result<&str> {
+            kv.get(k).copied().ok_or_else(|| anyhow!("manifest missing key {k:?}"))
+        };
+        Ok(Manifest {
+            ndims: get("ndims")?.parse()?,
+            nact: get("nact")?.parse()?,
+            nparams: get("nparams")?.parse()?,
+            b_policy: get("b_policy")?.parse()?,
+            b_rollout: get("b_rollout")?.parse()?,
+            minibatch: get("minibatch")?.parse()?,
+            n_epochs: get("n_epochs")?.parse()?,
+            adam_lr: get("adam_lr")?.parse()?,
+            discount: get("discount")?.parse()?,
+            gae_lambda: get("gae_lambda")?.parse()?,
+            clip: get("clip")?.parse()?,
+            vf_coef: get("vf_coef")?.parse()?,
+            ent_coef: get("ent_coef")?.parse()?,
+            matmul_m: get("matmul_m")?.parse()?,
+            matmul_variants: get("matmul_variants")?
+                .split_whitespace()
+                .map(String::from)
+                .collect(),
+        })
+    }
+
+    /// Cross-check against the L3 constants this crate was written for.
+    pub fn validate(&self) -> Result<()> {
+        use crate::space::NDIMS;
+        if self.ndims != NDIMS {
+            return Err(anyhow!("manifest ndims {} != crate NDIMS {}", self.ndims, NDIMS));
+        }
+        if self.nact != 3 {
+            return Err(anyhow!("manifest nact {} != 3", self.nact));
+        }
+        if self.b_rollout != self.b_policy * (self.b_rollout / self.b_policy) {
+            return Err(anyhow!("b_rollout must be a multiple of b_policy"));
+        }
+        // Table 2 hyperparameters must match the paper
+        for (name, got, want) in [
+            ("adam_lr", self.adam_lr, 1e-3),
+            ("discount", self.discount, 0.9),
+            ("gae_lambda", self.gae_lambda, 0.99),
+            ("clip", self.clip, 0.3),
+            ("vf_coef", self.vf_coef, 1.0),
+            ("ent_coef", self.ent_coef, 0.1),
+        ] {
+            if (got - want).abs() > 1e-12 {
+                return Err(anyhow!("manifest {name} {got} != Table 2 value {want}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "ndims 8\nnact 3\nnparams 19289\nb_policy 64\nb_rollout 512\nminibatch 128\nn_epochs 3\nadam_lr 0.001\ndiscount 0.9\ngae_lambda 0.99\nclip 0.3\nvf_coef 1.0\nent_coef 0.1\nmatmul_m 256\nmatmul_variants matmul_bm32_bk32_bn32 matmul_bm64_bk64_bn64\n";
+
+    #[test]
+    fn parses_and_validates_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.ndims, 8);
+        assert_eq!(m.nparams, 19289);
+        assert_eq!(m.matmul_variants.len(), 2);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn rejects_missing_key() {
+        assert!(Manifest::parse("ndims 8\n").is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_hyperparams() {
+        let bad = SAMPLE.replace("clip 0.3", "clip 0.2");
+        let m = Manifest::parse(&bad).unwrap();
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn loads_real_artifacts_if_present() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.txt").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        m.validate().unwrap();
+        assert!(m.nparams > 10_000);
+    }
+}

@@ -1,0 +1,344 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!
+//! This is the only place rust touches XLA. Python never runs on the
+//! search path — artifacts are compiled once by `make artifacts` and the
+//! `xla` crate (PJRT C API) executes them from here.
+
+pub mod manifest;
+
+use anyhow::{anyhow, Context as _, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+pub use manifest::Manifest;
+
+/// Default artifact directory relative to the crate root.
+pub fn default_artifact_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// The PPO agent's (params, adam-m, adam-v) triple — flat vectors matching
+/// python/compile/model.py's `param_layout()`.
+#[derive(Debug, Clone)]
+pub struct AgentState {
+    pub params: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    /// 1-based Adam step counter (f32 in the artifact interface).
+    pub t: f32,
+}
+
+/// Aggregate PPO statistics returned by one update call.
+#[derive(Debug, Clone, Copy)]
+pub struct PpoStats {
+    pub pg_loss: f32,
+    pub v_loss: f32,
+    pub entropy: f32,
+    pub approx_kl: f32,
+}
+
+/// Loaded artifacts + PJRT client. One compiled executable per entry point.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    exes: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+    dir: PathBuf,
+    pub manifest: Manifest,
+}
+
+impl Runtime {
+    /// Load the manifest and construct the CPU PJRT client. Executables are
+    /// compiled lazily on first use and cached.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        manifest.validate()?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PjRtClient::cpu failed: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            exes: Mutex::new(HashMap::new()),
+            dir: dir.to_path_buf(),
+            manifest,
+        })
+    }
+
+    pub fn load_default() -> Result<Self> {
+        Self::load(&default_artifact_dir())
+    }
+
+    /// True if the artifact directory looks usable (for test gating).
+    pub fn artifacts_present(dir: &Path) -> bool {
+        dir.join("manifest.txt").exists() && dir.join("ppo_update.hlo.txt").exists()
+    }
+
+    fn with_exe<T>(
+        &self,
+        name: &str,
+        f: impl FnOnce(&xla::PjRtLoadedExecutable) -> Result<T>,
+    ) -> Result<T> {
+        let mut exes = self.exes.lock().unwrap();
+        if !exes.contains_key(name) {
+            let path = self.dir.join(format!("{name}.hlo.txt"));
+            let path_str = path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?;
+            let proto = xla::HloModuleProto::from_text_file(path_str)
+                .with_context(|| format!("parsing {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))?;
+            exes.insert(name.to_string(), exe);
+        }
+        f(exes.get(name).unwrap())
+    }
+
+    /// Pre-compile every agent entry point (avoids first-call latency).
+    pub fn warmup(&self) -> Result<()> {
+        for name in ["ppo_init", "policy_forward", "ppo_update"] {
+            self.with_exe(name, |_| Ok(()))?;
+        }
+        Ok(())
+    }
+
+    fn run(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.with_exe(name, |exe| {
+            let result = exe
+                .execute::<xla::Literal>(inputs)
+                .with_context(|| format!("executing {name}"))?;
+            let lit = result[0][0]
+                .to_literal_sync()
+                .with_context(|| format!("fetching {name} result"))?;
+            lit.to_tuple().with_context(|| format!("untupling {name}"))
+        })
+    }
+
+    fn f32_input(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+        let numel: i64 = dims.iter().product();
+        if numel as usize != data.len() {
+            return Err(anyhow!("shape {dims:?} != len {}", data.len()));
+        }
+        Ok(xla::Literal::vec1(data).reshape(dims)?)
+    }
+
+    fn i32_input(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+        Ok(xla::Literal::vec1(data).reshape(dims)?)
+    }
+
+    fn to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+        Ok(lit.to_vec::<f32>()?)
+    }
+
+    // ------------------------------------------------------------ agent API
+
+    /// `ppo_init(seed)` — fresh parameters + zeroed Adam state.
+    pub fn ppo_init(&self, seed: i32) -> Result<AgentState> {
+        let out = self.run("ppo_init", &[Self::i32_input(&[seed], &[1])?])?;
+        if out.len() != 3 {
+            return Err(anyhow!("ppo_init returned {} outputs", out.len()));
+        }
+        let state = AgentState {
+            params: Self::to_f32(&out[0])?,
+            m: Self::to_f32(&out[1])?,
+            v: Self::to_f32(&out[2])?,
+            t: 1.0,
+        };
+        if state.params.len() != self.manifest.nparams {
+            return Err(anyhow!(
+                "ppo_init params len {} != manifest {}",
+                state.params.len(),
+                self.manifest.nparams
+            ));
+        }
+        Ok(state)
+    }
+
+    /// `policy_forward(params, obs)` — per-dim action log-probs + values.
+    /// obs is row-major [b_policy, ndims]; returns
+    /// (logp [b_policy * ndims * nact], value [b_policy]).
+    pub fn policy_forward(
+        &self,
+        state: &AgentState,
+        obs: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let m = &self.manifest;
+        let out = self.run(
+            "policy_forward",
+            &[
+                Self::f32_input(&state.params, &[m.nparams as i64])?,
+                Self::f32_input(obs, &[m.b_policy as i64, m.ndims as i64])?,
+            ],
+        )?;
+        Ok((Self::to_f32(&out[0])?, Self::to_f32(&out[1])?))
+    }
+
+    /// One full PPO update (3 epochs x minibatches + Adam) in a single XLA
+    /// call. Mutates `state` in place and returns the averaged loss stats.
+    #[allow(clippy::too_many_arguments)]
+    pub fn ppo_update(
+        &self,
+        state: &mut AgentState,
+        obs: &[f32],
+        actions: &[i32],
+        old_logp: &[f32],
+        advantages: &[f32],
+        returns: &[f32],
+        mask: &[f32],
+        seed: i32,
+    ) -> Result<PpoStats> {
+        let m = &self.manifest;
+        let b = m.b_rollout as i64;
+        let out = self.run(
+            "ppo_update",
+            &[
+                Self::f32_input(&state.params, &[m.nparams as i64])?,
+                Self::f32_input(&state.m, &[m.nparams as i64])?,
+                Self::f32_input(&state.v, &[m.nparams as i64])?,
+                Self::f32_input(&[state.t], &[1])?,
+                Self::f32_input(obs, &[b, m.ndims as i64])?,
+                Self::i32_input(actions, &[b, m.ndims as i64])?,
+                Self::f32_input(old_logp, &[b])?,
+                Self::f32_input(advantages, &[b])?,
+                Self::f32_input(returns, &[b])?,
+                Self::f32_input(mask, &[b])?,
+                Self::i32_input(&[seed], &[1])?,
+            ],
+        )?;
+        if out.len() != 4 {
+            return Err(anyhow!("ppo_update returned {} outputs", out.len()));
+        }
+        state.params = Self::to_f32(&out[0])?;
+        state.m = Self::to_f32(&out[1])?;
+        state.v = Self::to_f32(&out[2])?;
+        state.t += (m.n_epochs * (m.b_rollout / m.minibatch)) as f32;
+        let s = Self::to_f32(&out[3])?;
+        Ok(PpoStats { pg_loss: s[0], v_loss: s[1], entropy: s[2], approx_kl: s[3] })
+    }
+
+    // --------------------------------------------------- measurement kernels
+
+    /// Execute one AOT'd tiled-matmul variant, wall-clock timing the
+    /// execution (the *real measurement* path of DESIGN.md §2).
+    pub fn run_matmul(
+        &self,
+        variant: &str,
+        x: &[f32],
+        w: &[f32],
+    ) -> Result<(Vec<f32>, Duration)> {
+        let n = self.manifest.matmul_m as i64;
+        let xin = Self::f32_input(x, &[n, n])?;
+        let win = Self::f32_input(w, &[n, n])?;
+        let t0 = Instant::now();
+        let out = self.run(variant, &[xin, win])?;
+        let dt = t0.elapsed();
+        Ok((Self::to_f32(&out[0])?, dt))
+    }
+
+    pub fn matmul_variants(&self) -> &[String] {
+        &self.manifest.matmul_variants
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = default_artifact_dir();
+        if !Runtime::artifacts_present(&dir) {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return None;
+        }
+        Some(Runtime::load(&dir).expect("runtime load"))
+    }
+
+    #[test]
+    fn init_produces_finite_params_and_zero_moments() {
+        let Some(rt) = runtime() else { return };
+        let s = rt.ppo_init(7).unwrap();
+        assert_eq!(s.params.len(), rt.manifest.nparams);
+        assert!(s.params.iter().all(|v| v.is_finite()));
+        assert!(s.m.iter().all(|&v| v == 0.0));
+        assert!(s.v.iter().all(|&v| v == 0.0));
+        // different seeds differ
+        let s2 = rt.ppo_init(8).unwrap();
+        assert_ne!(s.params, s2.params);
+        // same seed reproduces
+        let s3 = rt.ppo_init(7).unwrap();
+        assert_eq!(s.params, s3.params);
+    }
+
+    #[test]
+    fn policy_forward_returns_normalized_logprobs() {
+        let Some(rt) = runtime() else { return };
+        let st = rt.ppo_init(1).unwrap();
+        let m = rt.manifest.clone();
+        let obs: Vec<f32> = (0..m.b_policy * m.ndims)
+            .map(|i| (i % 10) as f32 / 10.0)
+            .collect();
+        let (logp, value) = rt.policy_forward(&st, &obs).unwrap();
+        assert_eq!(logp.len(), m.b_policy * m.ndims * m.nact);
+        assert_eq!(value.len(), m.b_policy);
+        // each (row, dim) distribution sums to 1
+        for chunk in logp.chunks(m.nact) {
+            let p: f32 = chunk.iter().map(|l| l.exp()).sum();
+            assert!((p - 1.0).abs() < 1e-4, "sum {p}");
+        }
+        // fresh policy ~ uniform
+        for &l in logp.iter().take(30) {
+            assert!((l.exp() - 1.0 / 3.0).abs() < 0.05);
+        }
+    }
+
+    #[test]
+    fn ppo_update_moves_params_and_reports_stats() {
+        let Some(rt) = runtime() else { return };
+        let mut st = rt.ppo_init(2).unwrap();
+        let before = st.params.clone();
+        let m = rt.manifest.clone();
+        let b = m.b_rollout;
+        let obs: Vec<f32> =
+            (0..b * m.ndims).map(|i| ((i * 37) % 100) as f32 / 100.0).collect();
+        let actions: Vec<i32> = (0..b * m.ndims).map(|i| (i % 3) as i32).collect();
+        let old_logp = vec![(1.0f32 / 3.0).ln() * m.ndims as f32; b];
+        let adv: Vec<f32> = (0..b).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        let ret = vec![0.5f32; b];
+        let mask = vec![1.0f32; b];
+        let stats = rt
+            .ppo_update(&mut st, &obs, &actions, &old_logp, &adv, &ret, &mask, 3)
+            .unwrap();
+        assert_ne!(st.params, before);
+        assert!(stats.entropy > 7.0, "entropy {}", stats.entropy); // ~8*ln3=8.8
+        assert!(stats.v_loss >= 0.0);
+        assert!(st.t > 1.0);
+        let delta: f32 = st
+            .params
+            .iter()
+            .zip(&before)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max);
+        assert!(delta < 0.1, "suspiciously large step {delta}");
+    }
+
+    #[test]
+    fn matmul_variants_agree_with_each_other() {
+        let Some(rt) = runtime() else { return };
+        let n = rt.manifest.matmul_m;
+        let x: Vec<f32> = (0..n * n).map(|i| ((i % 13) as f32 - 6.0) / 13.0).collect();
+        let w: Vec<f32> = (0..n * n).map(|i| ((i % 7) as f32 - 3.0) / 7.0).collect();
+        let variants = rt.matmul_variants().to_vec();
+        assert!(variants.len() >= 2);
+        let (y0, _) = rt.run_matmul(&variants[0], &x, &w).unwrap();
+        for v in &variants[1..] {
+            let (y, dt) = rt.run_matmul(v, &x, &w).unwrap();
+            assert!(dt.as_nanos() > 0);
+            let max_err = y0
+                .iter()
+                .zip(&y)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(max_err < 1e-2, "{v} deviates by {max_err}");
+        }
+    }
+}

@@ -1,0 +1,244 @@
+//! Adaptive Sampling (paper §4.2, Algorithm 1).
+//!
+//! Given the search agent's trajectory s_Θ, cluster it with k-means,
+//! sweeping k ∈ [8, 64) and stopping at the knee of the loss curve
+//! (`KNEE_CONSTANT x Loss > PreviousLoss`). The centroids become the
+//! configurations measured on hardware; centroids that were already
+//! visited (v_Θ) are replaced by the per-dimension *mode* configuration of
+//! the trajectory — removing redundancy while maximizing the information
+//! H_Θ of the sample set.
+
+use super::kmeans::{kmeans, nearest_points};
+use crate::space::{Config, DesignSpace};
+use crate::util::rng::Pcg32;
+use std::collections::HashSet;
+
+/// `Constant` in Algorithm 1 line 7: break when Constant*Loss > PreviousLoss,
+/// i.e. when adding ~8 more clusters no longer cuts the loss by >1/Constant.
+pub const KNEE_CONSTANT: f64 = 1.4;
+pub const K_MIN: usize = 8;
+pub const K_MAX: usize = 64;
+pub const K_STEP: usize = 8;
+
+#[derive(Debug, Clone)]
+pub struct AdaptiveSampleResult {
+    pub samples: Vec<Config>,
+    /// k chosen at the knee.
+    pub k: usize,
+    /// how many visited centroids were replaced by mode-configs.
+    pub replaced: usize,
+}
+
+/// Sweep k over [K_MIN, K_MAX) in K_STEP strides; return the chosen k-means
+/// clustering at the knee of the loss curve.
+fn knee_kmeans(points: &[Vec<f32>], rng: &mut Pcg32) -> (usize, super::kmeans::KMeansResult) {
+    let mut prev_loss = f64::INFINITY;
+    let mut chosen = None;
+    let mut k = K_MIN;
+    while k < K_MAX {
+        let r = kmeans(points, k, rng, 25);
+        let loss = r.loss;
+        if loss <= 1e-12 {
+            // perfect clustering — no information left to resolve
+            chosen = Some((k, r));
+            break;
+        }
+        if chosen.is_some() && KNEE_CONSTANT * loss > prev_loss {
+            // knee reached: keep previous k's result
+            break;
+        }
+        chosen = Some((k, r));
+        prev_loss = loss;
+        k += K_STEP;
+    }
+    chosen.expect("k sweep produced no clustering")
+}
+
+/// The per-dimension mode of the trajectory ("configuration generated from
+/// modes of each dimension", Alg. 1 line 16).
+pub fn mode_config(space: &DesignSpace, trajectory: &[Config]) -> Config {
+    let idx = (0..space.ndims())
+        .map(|d| {
+            let mut counts = vec![0u32; space.knobs[d].len()];
+            for c in trajectory {
+                counts[c.idx[d] as usize] += 1;
+            }
+            let mut best = 0;
+            for i in 1..counts.len() {
+                if counts[i] > counts[best] {
+                    best = i;
+                }
+            }
+            best as u16
+        })
+        .collect();
+    Config::new(idx)
+}
+
+/// Algorithm 1: ADAPTIVESAMPLING(s_Θ, v_Θ).
+pub fn adaptive_sample(
+    space: &DesignSpace,
+    trajectory: &[Config],
+    visited: &HashSet<u64>,
+    rng: &mut Pcg32,
+) -> AdaptiveSampleResult {
+    assert!(!trajectory.is_empty());
+    let points: Vec<Vec<f32>> = trajectory.iter().map(|c| space.normalize(c)).collect();
+
+    let (k, clustering) = knee_kmeans(&points, rng);
+
+    // Centroids are means in R^8 — snap each to the nearest real trajectory
+    // point (a measurable configuration).
+    let nearest = nearest_points(&points, &clustering.centroids);
+    let mut samples: Vec<Config> = Vec::with_capacity(nearest.len());
+    let mut taken = HashSet::new();
+    let mut replaced = 0;
+
+    let mode = mode_config(space, trajectory);
+
+    for i in nearest {
+        let mut cand = trajectory[i].clone();
+        let mut flat = space.flat_index(&cand);
+        if visited.contains(&flat) || taken.contains(&flat) {
+            // replace a redundant centroid with the mode configuration,
+            // perturbing while still redundant (keeps exploration alive)
+            cand = mode.clone();
+            flat = space.flat_index(&cand);
+            let mut guard = 0;
+            while (visited.contains(&flat) || taken.contains(&flat)) && guard < 64 {
+                cand = space.mutate(&cand, rng);
+                flat = space.flat_index(&cand);
+                guard += 1;
+            }
+            if visited.contains(&flat) || taken.contains(&flat) {
+                continue; // give up on this centroid
+            }
+            replaced += 1;
+        }
+        taken.insert(flat);
+        samples.push(cand);
+    }
+
+    AdaptiveSampleResult { samples, k, replaced }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::workload::zoo;
+
+    fn space() -> DesignSpace {
+        DesignSpace::for_conv(zoo::resnet18()[1].layer)
+    }
+
+    fn random_trajectory(space: &DesignSpace, n: usize, rng: &mut Pcg32) -> Vec<Config> {
+        (0..n).map(|_| space.random_config(rng)).collect()
+    }
+
+    /// A trajectory concentrated around `m` cluster centers — the structure
+    /// the paper observes in Figure 3.
+    fn clustered_trajectory(space: &DesignSpace, m: usize, per: usize, rng: &mut Pcg32) -> Vec<Config> {
+        let mut t = Vec::new();
+        for _ in 0..m {
+            let center = space.random_config(rng);
+            for _ in 0..per {
+                let mut c = center.clone();
+                // jitter the wide knobs by ±1; keep small categorical knobs
+                // cluster-pure (what converging search trajectories look like)
+                for d in 0..space.ndims() {
+                    let len = space.knobs[d].len() as i32;
+                    if len > 8 {
+                        let j = (c.idx[d] as i32 + rng.below(3) as i32 - 1)
+                            .clamp(0, len - 1);
+                        c.idx[d] = j as u16;
+                    }
+                }
+                t.push(c);
+            }
+        }
+        t
+    }
+
+    #[test]
+    fn reduces_measurements_below_trajectory_size() {
+        let s = space();
+        let mut rng = Pcg32::seed_from(0);
+        let traj = random_trajectory(&s, 512, &mut rng);
+        let r = adaptive_sample(&s, &traj, &HashSet::new(), &mut rng);
+        assert!(r.samples.len() <= K_MAX);
+        assert!(r.samples.len() >= K_MIN / 2);
+        assert!(r.samples.len() < traj.len() / 4);
+    }
+
+    #[test]
+    fn knee_picks_small_k_for_clustered_data() {
+        let s = space();
+        let mut rng = Pcg32::seed_from(1);
+        let traj = clustered_trajectory(&s, 6, 60, &mut rng);
+        let r = adaptive_sample(&s, &traj, &HashSet::new(), &mut rng);
+        // 6 true clusters: the sweep must hit the knee well before K_MAX
+        assert!(r.k <= 40, "k = {}", r.k);
+
+        // degenerate case: 6 exactly-repeated configs => perfect clustering
+        // at K_MIN, the sweep must stop immediately
+        let centers: Vec<Config> = (0..6).map(|_| s.random_config(&mut rng)).collect();
+        let dup: Vec<Config> =
+            (0..360).map(|i| centers[i % 6].clone()).collect();
+        let rd = adaptive_sample(&s, &dup, &HashSet::new(), &mut rng);
+        assert_eq!(rd.k, K_MIN, "duplicates should cluster perfectly at K_MIN");
+    }
+
+    #[test]
+    fn samples_are_unique_and_unvisited() {
+        let s = space();
+        forall(20, 0xada, |rng| {
+            let traj = random_trajectory(&s, 256, rng);
+            // mark half the trajectory visited
+            let visited: HashSet<u64> =
+                traj.iter().take(128).map(|c| s.flat_index(c)).collect();
+            let r = adaptive_sample(&s, &traj, &visited, rng);
+            let mut seen = HashSet::new();
+            for c in &r.samples {
+                let f = s.flat_index(c);
+                assert!(!visited.contains(&f), "returned a visited config");
+                assert!(seen.insert(f), "duplicate sample");
+            }
+        });
+    }
+
+    #[test]
+    fn visited_centroids_get_replaced_by_mode() {
+        let s = space();
+        let mut rng = Pcg32::seed_from(3);
+        let traj = clustered_trajectory(&s, 4, 40, &mut rng);
+        // visit everything in the trajectory => all centroids redundant
+        let visited: HashSet<u64> = traj.iter().map(|c| s.flat_index(c)).collect();
+        let r = adaptive_sample(&s, &traj, &visited, &mut rng);
+        assert!(r.replaced > 0);
+        for c in &r.samples {
+            assert!(!visited.contains(&s.flat_index(c)));
+        }
+    }
+
+    #[test]
+    fn mode_config_is_per_dimension_majority() {
+        let s = space();
+        let mut a = Config::new(vec![1; 8]);
+        a.idx[0] = 3;
+        let b = Config::new(vec![1; 8]);
+        let c = Config::new(vec![0; 8]);
+        let m = mode_config(&s, &[a, b.clone(), b, c]);
+        assert_eq!(m.idx[0], 1); // 1 appears twice, 3 once, 0 once
+        assert_eq!(m.idx[1], 1);
+    }
+
+    #[test]
+    fn single_point_trajectory() {
+        let s = space();
+        let mut rng = Pcg32::seed_from(4);
+        let traj = vec![s.random_config(&mut rng)];
+        let r = adaptive_sample(&s, &traj, &HashSet::new(), &mut rng);
+        assert_eq!(r.samples.len(), 1);
+    }
+}

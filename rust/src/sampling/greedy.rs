@@ -1,0 +1,119 @@
+//! AutoTVM's baseline sampler: ε-greedy top-`plan_size` selection over the
+//! cost model's predicted scores (Chen et al., 2018b). The paper's Fig 6
+//! compares adaptive sampling against exactly this policy.
+
+use crate::space::{Config, DesignSpace};
+use crate::util::rng::Pcg32;
+use std::collections::HashSet;
+
+pub const DEFAULT_PLAN_SIZE: usize = 64;
+pub const DEFAULT_EPSILON: f64 = 0.05;
+
+/// Pick up to `plan_size` configs: the top-scored unvisited trajectory
+/// points, with an ε fraction replaced by random unvisited configs
+/// (AutoTVM's epsilon-greedy exploration).
+pub fn greedy_sample(
+    space: &DesignSpace,
+    trajectory: &[Config],
+    scores: &[f64],
+    visited: &HashSet<u64>,
+    plan_size: usize,
+    epsilon: f64,
+    rng: &mut Pcg32,
+) -> Vec<Config> {
+    assert_eq!(trajectory.len(), scores.len());
+    let mut order: Vec<usize> = (0..trajectory.len()).collect();
+    order.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+
+    let n_random = ((plan_size as f64 * epsilon).round() as usize).min(plan_size);
+    let n_top = plan_size - n_random;
+
+    let mut out = Vec::with_capacity(plan_size);
+    let mut taken: HashSet<u64> = HashSet::new();
+    for &i in &order {
+        if out.len() >= n_top {
+            break;
+        }
+        let flat = space.flat_index(&trajectory[i]);
+        if visited.contains(&flat) || !taken.insert(flat) {
+            continue;
+        }
+        out.push(trajectory[i].clone());
+    }
+    // ε exploration: uniform random unvisited configs from the full space
+    let mut guard = 0;
+    while out.len() < plan_size && guard < plan_size * 100 {
+        let c = space.random_config(rng);
+        let flat = space.flat_index(&c);
+        if !visited.contains(&flat) && taken.insert(flat) {
+            out.push(c);
+        }
+        guard += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::zoo;
+
+    fn space() -> DesignSpace {
+        DesignSpace::for_conv(zoo::vgg16()[4].layer)
+    }
+
+    #[test]
+    fn takes_top_scored_first() {
+        let s = space();
+        let mut rng = Pcg32::seed_from(0);
+        let traj: Vec<Config> = (0..100).map(|_| s.random_config(&mut rng)).collect();
+        let scores: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let out = greedy_sample(&s, &traj, &scores, &HashSet::new(), 8, 0.0, &mut rng);
+        assert_eq!(out.len(), 8);
+        // highest scores are at the end of traj
+        let top: HashSet<u64> =
+            traj[92..].iter().map(|c| s.flat_index(c)).collect();
+        let got: HashSet<u64> = out.iter().map(|c| s.flat_index(c)).collect();
+        assert_eq!(top, got);
+    }
+
+    #[test]
+    fn skips_visited() {
+        let s = space();
+        let mut rng = Pcg32::seed_from(1);
+        let traj: Vec<Config> = (0..50).map(|_| s.random_config(&mut rng)).collect();
+        let scores: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let visited: HashSet<u64> =
+            traj[40..].iter().map(|c| s.flat_index(c)).collect();
+        let out = greedy_sample(&s, &traj, &scores, &visited, 10, 0.0, &mut rng);
+        for c in &out {
+            assert!(!visited.contains(&s.flat_index(c)));
+        }
+    }
+
+    #[test]
+    fn epsilon_adds_random_exploration() {
+        let s = space();
+        let mut rng = Pcg32::seed_from(2);
+        let traj: Vec<Config> = (0..64).map(|_| s.random_config(&mut rng)).collect();
+        let scores = vec![1.0; 64];
+        let out = greedy_sample(&s, &traj, &scores, &HashSet::new(), 64, 0.25, &mut rng);
+        assert_eq!(out.len(), 64);
+        let traj_set: HashSet<u64> = traj.iter().map(|c| s.flat_index(c)).collect();
+        let fresh = out.iter().filter(|c| !traj_set.contains(&s.flat_index(c))).count();
+        assert!(fresh >= 10, "only {fresh} random picks");
+    }
+
+    #[test]
+    fn dedupes_duplicate_trajectory_entries() {
+        let s = space();
+        let mut rng = Pcg32::seed_from(3);
+        let c = s.random_config(&mut rng);
+        let traj = vec![c.clone(); 20];
+        let scores = vec![1.0; 20];
+        let out = greedy_sample(&s, &traj, &scores, &HashSet::new(), 5, 0.0, &mut rng);
+        // only one distinct trajectory point exists; rest come from ε-pool
+        let distinct: HashSet<u64> = out.iter().map(|x| s.flat_index(x)).collect();
+        assert_eq!(distinct.len(), out.len());
+    }
+}

@@ -1,0 +1,225 @@
+//! k-means (k-means++ init + Lloyd iterations) over normalized
+//! configuration coordinates — the engine of the adaptive sampling module
+//! (paper Algorithm 1). This is a hot path: it runs for every k in the
+//! knee sweep, every tuning iteration.
+
+use crate::util::rng::Pcg32;
+
+#[derive(Debug, Clone)]
+pub struct KMeansResult {
+    /// k centroids, each a d-vector.
+    pub centroids: Vec<Vec<f32>>,
+    /// Cluster assignment per input point.
+    pub assignment: Vec<u32>,
+    /// Total within-cluster sum of squared distances ("Loss" in Alg. 1).
+    pub loss: f64,
+}
+
+#[inline]
+fn dist2(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for (x, y) in a.iter().zip(b) {
+        let d = x - y;
+        acc += d * d;
+    }
+    acc
+}
+
+/// Run k-means with k-means++ seeding. `points` is row-major (n x d).
+pub fn kmeans(points: &[Vec<f32>], k: usize, rng: &mut Pcg32, max_iters: usize) -> KMeansResult {
+    let n = points.len();
+    assert!(n > 0 && k > 0);
+    let k = k.min(n);
+    let d = points[0].len();
+
+    // --- k-means++ seeding --------------------------------------------------
+    let mut centroids: Vec<Vec<f32>> = Vec::with_capacity(k);
+    centroids.push(points[rng.below(n)].clone());
+    let mut d2: Vec<f32> = points.iter().map(|p| dist2(p, &centroids[0])).collect();
+    while centroids.len() < k {
+        let total: f64 = d2.iter().map(|&x| x as f64).sum();
+        let next = if total <= 1e-30 {
+            rng.below(n) // all points identical to some centroid
+        } else {
+            let mut u = rng.f64() * total;
+            let mut pick = n - 1;
+            for (i, &w) in d2.iter().enumerate() {
+                u -= w as f64;
+                if u <= 0.0 {
+                    pick = i;
+                    break;
+                }
+            }
+            pick
+        };
+        centroids.push(points[next].clone());
+        let c = centroids.last().unwrap();
+        for (i, p) in points.iter().enumerate() {
+            let nd = dist2(p, c);
+            if nd < d2[i] {
+                d2[i] = nd;
+            }
+        }
+    }
+
+    // --- Lloyd iterations ---------------------------------------------------
+    let mut assignment = vec![0u32; n];
+    let mut loss = 0.0f64;
+    for _ in 0..max_iters {
+        // assign
+        loss = 0.0;
+        let mut moved = false;
+        for (i, p) in points.iter().enumerate() {
+            let mut best = 0u32;
+            let mut bd = f32::INFINITY;
+            for (j, c) in centroids.iter().enumerate() {
+                let dd = dist2(p, c);
+                if dd < bd {
+                    bd = dd;
+                    best = j as u32;
+                }
+            }
+            if assignment[i] != best {
+                assignment[i] = best;
+                moved = true;
+            }
+            loss += bd as f64;
+        }
+        if !moved {
+            break;
+        }
+        // update
+        let mut sums = vec![vec![0.0f64; d]; centroids.len()];
+        let mut counts = vec![0usize; centroids.len()];
+        for (p, &a) in points.iter().zip(&assignment) {
+            counts[a as usize] += 1;
+            for (s, &v) in sums[a as usize].iter_mut().zip(p) {
+                *s += v as f64;
+            }
+        }
+        for (j, c) in centroids.iter_mut().enumerate() {
+            if counts[j] > 0 {
+                for (cv, s) in c.iter_mut().zip(&sums[j]) {
+                    *cv = (s / counts[j] as f64) as f32;
+                }
+            }
+            // empty cluster: leave centroid in place (will likely capture
+            // points next iteration or stay harmless)
+        }
+    }
+
+    KMeansResult { centroids, assignment, loss }
+}
+
+/// Index of the input point nearest to each centroid (centroids are means,
+/// not actual configurations; the sampler must measure real points).
+pub fn nearest_points(points: &[Vec<f32>], centroids: &[Vec<f32>]) -> Vec<usize> {
+    centroids
+        .iter()
+        .map(|c| {
+            let mut best = 0;
+            let mut bd = f32::INFINITY;
+            for (i, p) in points.iter().enumerate() {
+                let dd = dist2(p, c);
+                if dd < bd {
+                    bd = dd;
+                    best = i;
+                }
+            }
+            best
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    fn blobs(rng: &mut Pcg32, k: usize, per: usize, d: usize, spread: f32) -> (Vec<Vec<f32>>, Vec<u32>) {
+        let mut pts = Vec::new();
+        let mut labels = Vec::new();
+        for c in 0..k {
+            let center: Vec<f32> = (0..d).map(|_| c as f32 * 10.0 + rng.f32()).collect();
+            for _ in 0..per {
+                pts.push(center.iter().map(|&v| v + rng.normal() as f32 * spread).collect());
+                labels.push(c as u32);
+            }
+        }
+        (pts, labels)
+    }
+
+    #[test]
+    fn recovers_well_separated_blobs() {
+        let mut rng = Pcg32::seed_from(0);
+        let (pts, labels) = blobs(&mut rng, 4, 50, 5, 0.2);
+        let r = kmeans(&pts, 4, &mut rng, 50);
+        // same-label points should share a cluster
+        for c in 0..4 {
+            let assigned: Vec<u32> = (0..200)
+                .filter(|&i| labels[i] == c)
+                .map(|i| r.assignment[i])
+                .collect();
+            assert!(assigned.iter().all(|&a| a == assigned[0]), "cluster {c} split");
+        }
+        assert!(r.loss < 200.0 * 5.0 * 0.2 * 0.2 * 4.0, "loss {}", r.loss);
+    }
+
+    #[test]
+    fn loss_decreases_with_k() {
+        let mut rng = Pcg32::seed_from(1);
+        let (pts, _) = blobs(&mut rng, 6, 40, 8, 1.0);
+        let l2 = kmeans(&pts, 2, &mut rng, 30).loss;
+        let l6 = kmeans(&pts, 6, &mut rng, 30).loss;
+        let l24 = kmeans(&pts, 24, &mut rng, 30).loss;
+        assert!(l2 > l6 && l6 > l24, "{l2} {l6} {l24}");
+    }
+
+    #[test]
+    fn k_ge_n_gives_zero_loss() {
+        let mut rng = Pcg32::seed_from(2);
+        let pts: Vec<Vec<f32>> = (0..10).map(|i| vec![i as f32, 0.0]).collect();
+        let r = kmeans(&pts, 32, &mut rng, 10);
+        assert!(r.loss < 1e-9);
+        assert_eq!(r.centroids.len(), 10); // clamped to n
+    }
+
+    #[test]
+    fn assignment_is_nearest_centroid_property() {
+        forall(30, 0xca11, |rng| {
+            let n = 30 + rng.below(100);
+            let d = 2 + rng.below(6);
+            let pts: Vec<Vec<f32>> =
+                (0..n).map(|_| (0..d).map(|_| rng.f32()).collect()).collect();
+            let k = 2 + rng.below(8);
+            let r = kmeans(&pts, k, rng, 25);
+            for (p, &a) in pts.iter().zip(&r.assignment) {
+                let da = dist2(p, &r.centroids[a as usize]);
+                for c in &r.centroids {
+                    assert!(da <= dist2(p, c) + 1e-4);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn nearest_points_returns_members() {
+        let mut rng = Pcg32::seed_from(3);
+        let (pts, _) = blobs(&mut rng, 3, 30, 4, 0.3);
+        let r = kmeans(&pts, 3, &mut rng, 30);
+        let near = nearest_points(&pts, &r.centroids);
+        assert_eq!(near.len(), 3);
+        for (j, &i) in near.iter().enumerate() {
+            // the chosen point must belong to that centroid's cluster
+            assert_eq!(r.assignment[i], j as u32);
+        }
+    }
+
+    #[test]
+    fn identical_points_dont_crash() {
+        let mut rng = Pcg32::seed_from(4);
+        let pts = vec![vec![1.0f32, 2.0]; 20];
+        let r = kmeans(&pts, 5, &mut rng, 10);
+        assert!(r.loss < 1e-12);
+    }
+}

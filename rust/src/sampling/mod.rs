@@ -1,0 +1,30 @@
+//! Sampling modules: which trajectory points get measured on hardware.
+//!
+//! - `greedy`: AutoTVM's ε-greedy top-plan_size baseline.
+//! - `adaptive`: the paper's clustering-based Algorithm 1.
+
+pub mod adaptive;
+pub mod greedy;
+pub mod kmeans;
+
+pub use adaptive::{adaptive_sample, mode_config, AdaptiveSampleResult};
+pub use greedy::{greedy_sample, DEFAULT_EPSILON, DEFAULT_PLAN_SIZE};
+pub use kmeans::{kmeans, nearest_points, KMeansResult};
+
+/// Which sampler a tuner uses (paper ablations: Greedy vs Adaptive).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SamplerKind {
+    /// AutoTVM ε-greedy top-k.
+    Greedy,
+    /// RELEASE adaptive sampling (Algorithm 1).
+    Adaptive,
+}
+
+impl std::fmt::Display for SamplerKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SamplerKind::Greedy => write!(f, "greedy"),
+            SamplerKind::Adaptive => write!(f, "adaptive"),
+        }
+    }
+}

@@ -1,0 +1,206 @@
+//! Genetic-algorithm searcher — the TensorComprehensions-class baseline
+//! (Vasilache et al., 2018): tournament selection, uniform crossover,
+//! per-knob mutation, elitism. Same `Searcher` interface as SA/RL.
+
+use super::{dedup_top, SearchRound, Searcher};
+use crate::costmodel::CostModel;
+use crate::space::{Config, DesignSpace};
+use crate::util::rng::Pcg32;
+use std::collections::HashSet;
+
+#[derive(Debug, Clone)]
+pub struct GaParams {
+    pub population: usize,
+    pub generations: usize,
+    pub tournament: usize,
+    pub crossover_rate: f64,
+    pub mutation_rate: f64,
+    pub elites: usize,
+    pub patience: usize,
+    pub traj_cap: usize,
+    pub step_cost_s: f64,
+}
+
+impl Default for GaParams {
+    fn default() -> Self {
+        GaParams {
+            population: 128,
+            generations: 150,
+            tournament: 4,
+            crossover_rate: 0.9,
+            mutation_rate: 0.15,
+            elites: 8,
+            patience: 40,
+            traj_cap: 512,
+            step_cost_s: 0.02,
+        }
+    }
+}
+
+pub struct GeneticAlgorithm {
+    pub params: GaParams,
+    population: Vec<Config>,
+}
+
+impl GeneticAlgorithm {
+    pub fn new(params: GaParams) -> Self {
+        GeneticAlgorithm { params, population: Vec::new() }
+    }
+}
+
+impl Default for GeneticAlgorithm {
+    fn default() -> Self {
+        Self::new(GaParams::default())
+    }
+}
+
+fn crossover(a: &Config, b: &Config, rng: &mut Pcg32) -> Config {
+    Config::new(
+        a.idx
+            .iter()
+            .zip(&b.idx)
+            .map(|(&x, &y)| if rng.bool(0.5) { x } else { y })
+            .collect(),
+    )
+}
+
+impl Searcher for GeneticAlgorithm {
+    fn name(&self) -> &'static str {
+        "ga"
+    }
+
+    fn reset(&mut self) {
+        self.population.clear();
+    }
+
+    fn round(
+        &mut self,
+        space: &DesignSpace,
+        model: &CostModel,
+        _visited: &HashSet<u64>,
+        rng: &mut Pcg32,
+    ) -> SearchRound {
+        let p = self.params.clone();
+        while self.population.len() < p.population {
+            self.population.push(space.random_config(rng));
+        }
+        let mut fitness = model.predict_batch(space, &self.population);
+        crate::sim::screen_scores(space, &self.population, &mut fitness);
+        let mut trajectory: Vec<(Config, f64)> = self
+            .population
+            .iter()
+            .cloned()
+            .zip(fitness.iter().cloned())
+            .collect();
+
+        let mut best = fitness.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let mut last_improve = 0usize;
+        let mut gens = 0usize;
+
+        for gen in 0..p.generations {
+            gens = gen + 1;
+            // elitism: carry the best individuals unchanged
+            let mut order: Vec<usize> = (0..self.population.len()).collect();
+            order.sort_by(|&a, &b| fitness[b].partial_cmp(&fitness[a]).unwrap());
+            let mut next: Vec<Config> =
+                order.iter().take(p.elites).map(|&i| self.population[i].clone()).collect();
+
+            let tourney = |rng: &mut Pcg32, fitness: &[f64]| -> usize {
+                let mut bi = rng.below(fitness.len());
+                for _ in 1..p.tournament {
+                    let j = rng.below(fitness.len());
+                    if fitness[j] > fitness[bi] {
+                        bi = j;
+                    }
+                }
+                bi
+            };
+
+            while next.len() < p.population {
+                let pa = tourney(rng, &fitness);
+                let pb = tourney(rng, &fitness);
+                let mut child = if rng.bool(p.crossover_rate) {
+                    crossover(&self.population[pa], &self.population[pb], rng)
+                } else {
+                    self.population[pa].clone()
+                };
+                if rng.bool(p.mutation_rate) {
+                    child = space.mutate(&child, rng);
+                }
+                next.push(child);
+            }
+            self.population = next;
+            fitness = model.predict_batch(space, &self.population);
+            crate::sim::screen_scores(space, &self.population, &mut fitness);
+            for (c, &f) in self.population.iter().zip(&fitness) {
+                trajectory.push((c.clone(), f));
+                if f > best + 1e-9 {
+                    best = f;
+                    last_improve = gens;
+                }
+            }
+            if gens - last_improve > p.patience {
+                break;
+            }
+        }
+
+        let (configs, tscores) = dedup_top(space, trajectory, p.traj_cap);
+        SearchRound {
+            trajectory: configs,
+            scores: tscores,
+            steps: gens,
+            steps_to_converge: last_improve.max(1),
+            sim_time_s: gens as f64 * p.step_cost_s,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{Measurer, SimMeasurer};
+    use crate::workload::zoo;
+
+    #[test]
+    fn improves_over_initial_population() {
+        let space = DesignSpace::for_conv(zoo::resnet18()[8].layer);
+        let meas = SimMeasurer::titan_xp(0);
+        let mut rng = Pcg32::seed_from(0);
+        let mut cm = CostModel::new(0);
+        let train: Vec<_> = (0..200).map(|_| space.random_config(&mut rng)).collect();
+        cm.update(&space, &meas.measure_batch(&space, &train));
+
+        let mut ga = GeneticAlgorithm::new(GaParams {
+            generations: 40,
+            population: 64,
+            ..Default::default()
+        });
+        let r = ga.round(&space, &cm, &HashSet::new(), &mut rng);
+
+        let init: Vec<_> = (0..64).map(|_| space.random_config(&mut rng)).collect();
+        let init_best = cm
+            .predict_batch(&space, &init)
+            .into_iter()
+            .fold(f64::NEG_INFINITY, f64::max);
+        assert!(r.scores[0] >= init_best, "{} vs {}", r.scores[0], init_best);
+        assert!(r.steps_to_converge <= r.steps);
+    }
+
+    #[test]
+    fn crossover_mixes_parents() {
+        let mut rng = Pcg32::seed_from(1);
+        let a = Config::new(vec![0; 8]);
+        let b = Config::new(vec![9; 8]);
+        let c = crossover(&a, &b, &mut rng);
+        assert!(c.idx.iter().all(|&v| v == 0 || v == 9));
+        // over many draws both parents contribute
+        let mut saw_a = false;
+        let mut saw_b = false;
+        for _ in 0..20 {
+            let c = crossover(&a, &b, &mut rng);
+            saw_a |= c.idx.contains(&0);
+            saw_b |= c.idx.contains(&9);
+        }
+        assert!(saw_a && saw_b);
+    }
+}

@@ -1,0 +1,97 @@
+//! Search agents: propose a trajectory s_Θ of candidate configurations on
+//! top of the cost model surface (paper §3.2 Eq. 2–3).
+//!
+//! - `sa`: AutoTVM's parallel simulated annealing (the headline baseline).
+//! - `ga`: genetic algorithm (TensorComprehensions-class baseline).
+//! - `random`: uniform random search (sanity floor).
+//! - RL (PPO) lives in `crate::rl` and implements the same trait.
+
+pub mod ga;
+pub mod random;
+pub mod sa;
+
+use crate::costmodel::CostModel;
+use crate::space::{Config, DesignSpace};
+use crate::util::rng::Pcg32;
+use std::collections::HashSet;
+
+/// The outcome of one search round (one tuner iteration's worth of search).
+#[derive(Debug, Clone)]
+pub struct SearchRound {
+    /// The trajectory s_Θ: candidate configurations visited by the agent.
+    pub trajectory: Vec<Config>,
+    /// Cost-model score for each trajectory entry (higher = better).
+    pub scores: Vec<f64>,
+    /// Sequential search steps executed this round.
+    pub steps: usize,
+    /// Step index after which the round's best score stopped improving —
+    /// the Fig 5 "steps for convergence" metric.
+    pub steps_to_converge: usize,
+    /// Simulated host seconds spent inside the search algorithm itself
+    /// (cost-model query time is charged separately by the model).
+    pub sim_time_s: f64,
+}
+
+/// A search agent the tuner can drive.
+pub trait Searcher {
+    fn name(&self) -> &'static str;
+
+    /// Run one round of search and return the trajectory.
+    fn round(
+        &mut self,
+        space: &DesignSpace,
+        model: &CostModel,
+        visited: &HashSet<u64>,
+        rng: &mut Pcg32,
+    ) -> SearchRound;
+
+    /// Reset internal state (fresh task).
+    fn reset(&mut self);
+
+    /// Feed back the best measured configurations so far — searchers may
+    /// warm-start from them (information reuse, paper Eq. 3). Default: ignore.
+    fn seed(&mut self, _configs: &[Config]) {}
+}
+
+/// Deduplicate a scored trajectory, keeping the best-scored `cap` entries
+/// (order: best first) — the interchange format between search and sampling.
+pub fn dedup_top(
+    space: &DesignSpace,
+    trajectory: Vec<(Config, f64)>,
+    cap: usize,
+) -> (Vec<Config>, Vec<f64>) {
+    let mut seen = HashSet::new();
+    let mut items: Vec<(Config, f64)> = trajectory
+        .into_iter()
+        .filter(|(c, _)| seen.insert(space.flat_index(c)))
+        .collect();
+    items.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    items.truncate(cap);
+    let scores = items.iter().map(|(_, s)| *s).collect();
+    let configs = items.into_iter().map(|(c, _)| c).collect();
+    (configs, scores)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::zoo;
+
+    #[test]
+    fn dedup_top_orders_and_caps() {
+        let s = DesignSpace::for_conv(zoo::alexnet()[2].layer);
+        let mut rng = Pcg32::seed_from(0);
+        let mut traj = Vec::new();
+        for i in 0..50 {
+            let c = s.random_config(&mut rng);
+            traj.push((c.clone(), i as f64));
+            traj.push((c, i as f64)); // duplicate
+        }
+        let (configs, scores) = dedup_top(&s, traj, 10);
+        assert_eq!(configs.len(), 10);
+        assert!(scores.windows(2).all(|w| w[0] >= w[1]));
+        assert_eq!(scores[0], 49.0);
+        let distinct: HashSet<u64> = configs.iter().map(|c| s.flat_index(c)).collect();
+        assert_eq!(distinct.len(), 10);
+    }
+}

@@ -1,0 +1,65 @@
+//! Uniform random search — the sanity floor every guided searcher must beat.
+
+use super::{dedup_top, SearchRound, Searcher};
+use crate::costmodel::CostModel;
+use crate::space::DesignSpace;
+use crate::util::rng::Pcg32;
+use std::collections::HashSet;
+
+pub struct RandomSearch {
+    /// How many uniform draws per round.
+    pub draws: usize,
+    pub traj_cap: usize,
+}
+
+impl Default for RandomSearch {
+    fn default() -> Self {
+        RandomSearch { draws: 512, traj_cap: 512 }
+    }
+}
+
+impl Searcher for RandomSearch {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn reset(&mut self) {}
+
+    fn round(
+        &mut self,
+        space: &DesignSpace,
+        model: &CostModel,
+        _visited: &HashSet<u64>,
+        rng: &mut Pcg32,
+    ) -> SearchRound {
+        let configs: Vec<_> = (0..self.draws).map(|_| space.random_config(rng)).collect();
+        let scores = model.predict_batch(space, &configs);
+        let traj: Vec<_> = configs.into_iter().zip(scores).collect();
+        let (trajectory, scores) = dedup_top(space, traj, self.traj_cap);
+        SearchRound {
+            trajectory,
+            scores,
+            steps: self.draws,
+            steps_to_converge: self.draws,
+            sim_time_s: self.draws as f64 * 0.0005,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::zoo;
+
+    #[test]
+    fn produces_requested_trajectory() {
+        let space = DesignSpace::for_conv(zoo::alexnet()[1].layer);
+        let cm = CostModel::new(0);
+        let mut rng = Pcg32::seed_from(0);
+        let mut rs = RandomSearch { draws: 100, traj_cap: 64 };
+        let r = rs.round(&space, &cm, &HashSet::new(), &mut rng);
+        assert!(r.trajectory.len() <= 64);
+        assert!(r.trajectory.len() > 32); // collisions are rare in a vast space
+        assert_eq!(r.steps, 100);
+    }
+}

@@ -1,0 +1,467 @@
+//! Analytical GPU performance model — the "real hardware" of this repo.
+//!
+//! The paper measures candidate CUDA kernels on an NVIDIA Titan Xp. We
+//! substitute an analytical SM model of that card (DESIGN.md §2, §6): the
+//! search and sampling algorithms only ever observe a scalar runtime (or a
+//! launch failure), so what matters is that the *landscape* has the right
+//! structure: hard resource walls, a few dominant knobs (⇒ the clusters of
+//! Figure 3), heavy tails, measurement noise.
+//!
+//! The model is deliberately white-box and unit-testable: every term
+//! (occupancy, reuse, coalescing, bank conflicts, unrolling) is a small
+//! function with documented first-order behaviour taken from the CUDA
+//! programming guide. It is *not* fit to any proprietary data.
+
+use crate::space::{DecodedConfig, DesignSpace};
+use crate::space::Config;
+use crate::util::rng::hash64;
+use crate::workload::ConvLayer;
+
+/// Why a configuration failed to "run on hardware".
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MeasureError {
+    /// threads/block > hardware limit (CUDA launch failure).
+    TooManyThreads,
+    /// shared memory per block over the per-block limit.
+    SharedMemOverflow,
+    /// register file exhausted (compiler would spill to local => we model
+    /// the pathological cases as failures, like TVM's timeout class).
+    RegisterOverflow,
+}
+
+impl std::fmt::Display for MeasureError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MeasureError::TooManyThreads => write!(f, "too many threads per block"),
+            MeasureError::SharedMemOverflow => write!(f, "shared memory overflow"),
+            MeasureError::RegisterOverflow => write!(f, "register overflow"),
+        }
+    }
+}
+
+/// Static hardware description (defaults: NVIDIA Titan Xp).
+#[derive(Debug, Clone)]
+pub struct GpuModel {
+    pub name: &'static str,
+    pub sms: i64,
+    pub max_threads_per_block: i64,
+    pub max_threads_per_sm: i64,
+    pub smem_per_block_bytes: i64,
+    pub smem_per_sm_bytes: i64,
+    pub regs_per_thread_max: i64,
+    pub regs_per_sm: i64,
+    pub max_blocks_per_sm: i64,
+    pub clock_ghz: f64,
+    /// FMA lanes per SM per cycle (fp32 cores).
+    pub macs_per_sm_cycle: f64,
+    pub mem_bw_gbps: f64,
+    /// Fixed kernel launch + driver overhead.
+    pub launch_overhead_us: f64,
+    /// Multiplicative log-normal noise sigma for a single measurement.
+    pub noise_sigma: f64,
+}
+
+impl GpuModel {
+    /// NVIDIA Titan Xp (Pascal GP102): 30 SMs x 128 cores, 1.58 GHz boost,
+    /// 547 GB/s GDDR5X, 48 KiB smem/block, 96 KiB smem/SM, 64K regs/SM.
+    pub fn titan_xp() -> Self {
+        GpuModel {
+            name: "titan-xp",
+            sms: 30,
+            max_threads_per_block: 1024,
+            max_threads_per_sm: 2048,
+            smem_per_block_bytes: 48 * 1024,
+            smem_per_sm_bytes: 96 * 1024,
+            regs_per_thread_max: 255,
+            regs_per_sm: 65_536,
+            max_blocks_per_sm: 16,
+            clock_ghz: 1.58,
+            macs_per_sm_cycle: 128.0,
+            mem_bw_gbps: 547.0,
+            launch_overhead_us: 5.0,
+            noise_sigma: 0.03,
+        }
+    }
+
+    /// Peak MAC throughput (MAC/s).
+    pub fn peak_macs_per_s(&self) -> f64 {
+        self.sms as f64 * self.macs_per_sm_cycle * self.clock_ghz * 1e9
+    }
+}
+
+/// Derived static resources of one kernel variant.
+#[derive(Debug, Clone, Copy)]
+pub struct KernelResources {
+    pub threads_per_block: i64,
+    pub smem_bytes: i64,
+    pub regs_per_thread: i64,
+    pub blocks: i64,
+    pub reg_tile: i64,
+}
+
+/// Compute the resource footprint of `cfg` on `layer`.
+pub fn resources(layer: &ConvLayer, cfg: &DecodedConfig) -> KernelResources {
+    let threads = cfg.f.threads * cfg.y.threads * cfg.x.threads;
+    // per-thread output elements: register tiles x virtual threads
+    let reg_tile = cfg.f.work() * cfg.y.work() * cfg.x.work();
+
+    // Shared-memory staging per reduction step: an input halo tile plus the
+    // filter slab all threads in the block cooperate on.
+    let in_tile = cfg.rc
+        * ((cfg.y.tile() - 1) * layer.stride + cfg.ry)
+        * ((cfg.x.tile() - 1) * layer.stride + cfg.rx);
+    let filt_tile = cfg.f.tile() * cfg.rc * cfg.ry * cfg.rx;
+    let smem_bytes = 4 * (in_tile + filt_tile);
+
+    // Register estimate: bookkeeping + accumulators + staged operands;
+    // aggressive unrolling inflates live ranges.
+    let unroll_regs = if cfg.unroll_explicit || cfg.auto_unroll >= 256 {
+        (cfg.rc.min(8) * cfg.ry * cfg.rx).min(48)
+    } else {
+        4
+    };
+    let regs = 22 + 2 * reg_tile + unroll_regs;
+
+    let blocks = (layer.k / cfg.f.tile())
+        * (layer.out_h() / cfg.y.tile())
+        * (layer.out_w() / cfg.x.tile())
+        * layer.n;
+
+    KernelResources {
+        threads_per_block: threads,
+        smem_bytes,
+        regs_per_thread: regs,
+        blocks,
+        reg_tile,
+    }
+}
+
+/// Occupancy in [0,1]: fraction of the SM's thread capacity kept resident.
+pub fn occupancy(gpu: &GpuModel, r: &KernelResources) -> f64 {
+    let by_threads = gpu.max_threads_per_sm / r.threads_per_block.max(1);
+    let by_smem = if r.smem_bytes > 0 {
+        gpu.smem_per_sm_bytes / r.smem_bytes.max(1)
+    } else {
+        gpu.max_blocks_per_sm
+    };
+    let by_regs = gpu.regs_per_sm / (r.regs_per_thread * r.threads_per_block).max(1);
+    let blocks_per_sm = by_threads
+        .min(by_smem)
+        .min(by_regs)
+        .min(gpu.max_blocks_per_sm)
+        .max(0);
+    let active = (blocks_per_sm * r.threads_per_block) as f64;
+    (active / gpu.max_threads_per_sm as f64).min(1.0)
+}
+
+/// The full performance model. Returns kernel runtime in milliseconds.
+pub fn evaluate(
+    gpu: &GpuModel,
+    layer: &ConvLayer,
+    cfg: &DecodedConfig,
+    noise_key: u64,
+) -> Result<f64, MeasureError> {
+    let r = resources(layer, cfg);
+    if r.threads_per_block > gpu.max_threads_per_block {
+        return Err(MeasureError::TooManyThreads);
+    }
+    if r.smem_bytes > gpu.smem_per_block_bytes {
+        return Err(MeasureError::SharedMemOverflow);
+    }
+    if r.regs_per_thread > gpu.regs_per_thread_max {
+        return Err(MeasureError::RegisterOverflow);
+    }
+
+    let occ = occupancy(gpu, &r);
+
+    // --- compute-side efficiency ------------------------------------------
+    // Latency hiding: needs either occupancy or per-thread ILP.
+    let ilp = 1.0 - 1.0 / (1.0 + 0.55 * r.reg_tile as f64);
+    let lat_hide = (occ / 0.25).min(1.0) * 0.65 + ilp * 0.35;
+
+    // Warp granularity: blocks whose thread count is not a multiple of 32
+    // waste lanes in the tail warp.
+    let warp_eff = {
+        let t = r.threads_per_block as f64;
+        let warps = (t / 32.0).ceil() * 32.0;
+        (t / warps).max(0.25)
+    };
+
+    // Loop overhead: the inner reduction loop body is rc*ry*rx MACs; unroll
+    // eliminates branch/index overhead when it covers the trip count, but
+    // gigantic unroll factors thrash the icache.
+    let trips = (cfg.rc * cfg.ry * cfg.rx) as f64;
+    let unrolled = cfg.unroll_explicit || cfg.auto_unroll as f64 >= trips;
+    let mut loop_eff = if unrolled { 1.0 } else { 0.72 + 0.08 * (trips.log2() / 10.0).min(1.0) };
+    if unrolled && cfg.auto_unroll >= 1500 && trips > 64.0 {
+        loop_eff *= 0.93; // icache pressure
+    }
+
+    // Shared-memory bank conflicts: threads adjacent along x read
+    // consecutive floats (conflict-free); few x-threads serialize accesses.
+    let bank_eff = {
+        let xt = cfg.x.threads as f64;
+        (0.55 + 0.45 * (xt / 16.0).min(1.0)).min(1.0)
+    };
+
+    let compute_eff = (lat_hide * warp_eff * loop_eff * bank_eff).max(0.02);
+    let compute_s = layer.macs() as f64 / (gpu.peak_macs_per_s() * compute_eff);
+
+    // --- memory-side -------------------------------------------------------
+    // Input is re-read once per filter-block column; filters once per
+    // spatial block. Bigger tiles => more reuse => less traffic.
+    let f_blocks = (layer.k / cfg.f.tile()) as f64;
+    let sp_blocks = ((layer.out_h() / cfg.y.tile()) * (layer.out_w() / cfg.x.tile())) as f64;
+    let input_bytes = (layer.n * layer.c * layer.h * layer.w * 4) as f64 * f_blocks;
+    let filter_bytes = (layer.k * layer.c * layer.kh * layer.kw * 4) as f64 * sp_blocks;
+    let output_bytes = (layer.n * layer.k * layer.out_h() * layer.out_w() * 4) as f64;
+
+    // Global coalescing: contiguous-x thread groups of >=8 approach peak BW.
+    let coalesce = {
+        let xt = cfg.x.threads as f64;
+        (0.35 + 0.65 * (xt / 8.0).min(1.0)).min(1.0)
+    };
+    let mem_s =
+        (input_bytes + filter_bytes + output_bytes) / (gpu.mem_bw_gbps * 1e9 * coalesce);
+
+    // --- assembly ----------------------------------------------------------
+    // Too few blocks cannot fill the GPU ("tail effect").
+    let fill = ((r.blocks as f64) / (2.0 * gpu.sms as f64)).min(1.0).max(0.02);
+    let busy_s = compute_s.max(mem_s) / fill;
+    let total_s = busy_s + gpu.launch_overhead_us * 1e-6;
+
+    // Deterministic multiplicative log-normal noise (same config+key ⇒ same
+    // jitter, like re-reading a cached measurement).
+    let z = crate::util::rng::hash_unit(noise_key ^ hash64(0x5eed));
+    let z2 = crate::util::rng::hash_unit(noise_key.wrapping_mul(0x2545f491_4f6cdd1d));
+    let gauss =
+        (-2.0 * z.max(1e-12).ln()).sqrt() * (2.0 * std::f64::consts::PI * z2).cos();
+    let noisy = total_s * (gpu.noise_sigma * gauss).exp();
+
+    Ok(noisy * 1e3) // ms
+}
+
+/// Static validity check — the analogue of TVM's `verify_gpu_code` pass:
+/// resource limits that are knowable *without* running the kernel. All
+/// search agents screen candidates through this before proposing them for
+/// measurement (the paper's stack does the same inside TVM).
+pub fn static_valid(space: &DesignSpace, config: &Config) -> bool {
+    let gpu_limits = GpuModel::titan_xp();
+    let r = resources(&space.layer, &space.decode(config));
+    r.threads_per_block <= gpu_limits.max_threads_per_block
+        && r.smem_bytes <= gpu_limits.smem_per_block_bytes
+        && r.regs_per_thread <= gpu_limits.regs_per_thread_max
+}
+
+/// Score assigned to statically-invalid candidates during search — matches
+/// the cost model's failed-measurement target (log-GFLOPS space).
+pub const INVALID_SCORE: f64 = -4.0;
+
+/// Apply the static screen to a batch of predicted scores.
+pub fn screen_scores(space: &DesignSpace, configs: &[Config], scores: &mut [f64]) {
+    for (c, s) in configs.iter().zip(scores.iter_mut()) {
+        if !static_valid(space, c) {
+            *s = INVALID_SCORE;
+        }
+    }
+}
+
+/// Convenience: evaluate a `Config` against its design space.
+pub fn evaluate_config(
+    gpu: &GpuModel,
+    space: &DesignSpace,
+    config: &Config,
+    seed: u64,
+) -> Result<f64, MeasureError> {
+    let cfg = space.decode(config);
+    let key = hash64(space.flat_index(config)).wrapping_add(seed);
+    evaluate(gpu, &space.layer, &cfg, key)
+}
+
+/// GFLOPS achieved by a runtime for a layer — the fitness f(τ(Θ)).
+pub fn gflops(layer: &ConvLayer, runtime_ms: f64) -> f64 {
+    layer.flops() / (runtime_ms * 1e-3) / 1e9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::DesignSpace;
+    use crate::util::prop::forall;
+    use crate::util::rng::Pcg32;
+    use crate::workload::zoo;
+
+    fn setup() -> (GpuModel, DesignSpace) {
+        (GpuModel::titan_xp(), DesignSpace::for_conv(zoo::resnet18()[1].layer))
+    }
+
+    #[test]
+    fn peak_is_titan_xp_class() {
+        let gpu = GpuModel::titan_xp();
+        let tflops = 2.0 * gpu.peak_macs_per_s() / 1e12;
+        assert!((tflops - 12.15).abs() < 0.2, "{tflops}");
+    }
+
+    #[test]
+    fn deterministic_per_config() {
+        let (gpu, s) = setup();
+        let mut rng = Pcg32::seed_from(0);
+        for _ in 0..20 {
+            let c = s.random_config(&mut rng);
+            let a = evaluate_config(&gpu, &s, &c, 1);
+            let b = evaluate_config(&gpu, &s, &c, 1);
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn noise_varies_with_seed_but_is_small() {
+        let (gpu, s) = setup();
+        let mut rng = Pcg32::seed_from(1);
+        let mut c = s.random_config(&mut rng);
+        // find a valid config
+        while evaluate_config(&gpu, &s, &c, 0).is_err() {
+            c = s.random_config(&mut rng);
+        }
+        let a = evaluate_config(&gpu, &s, &c, 0).unwrap();
+        let b = evaluate_config(&gpu, &s, &c, 99).unwrap();
+        assert_ne!(a, b);
+        assert!((a / b - 1.0).abs() < 0.5, "noise too large: {a} vs {b}");
+    }
+
+    #[test]
+    fn some_configs_fail_like_real_hardware() {
+        let (gpu, s) = setup();
+        let mut rng = Pcg32::seed_from(3);
+        let mut fails = 0;
+        let n = 2000;
+        for _ in 0..n {
+            if evaluate_config(&gpu, &s, &s.random_config(&mut rng), 0).is_err() {
+                fails += 1;
+            }
+        }
+        let frac = fails as f64 / n as f64;
+        assert!(frac > 0.05 && frac < 0.9, "failure fraction {frac}");
+    }
+
+    #[test]
+    fn runtime_tail_is_heavy() {
+        // Best random configs should beat the median by a large factor —
+        // the premise of the whole autotuning problem.
+        let (gpu, s) = setup();
+        let mut rng = Pcg32::seed_from(4);
+        let mut times: Vec<f64> = Vec::new();
+        while times.len() < 3000 {
+            if let Ok(t) = evaluate_config(&gpu, &s, &s.random_config(&mut rng), 0) {
+                times.push(t);
+            }
+        }
+        let med = crate::util::stats::percentile(&times, 50.0);
+        let best = crate::util::stats::percentile(&times, 0.0);
+        assert!(med / best > 3.0, "med {med} best {best}");
+    }
+
+    #[test]
+    fn best_configs_achieve_reasonable_efficiency() {
+        // A well-tiled resnet18 3x3 layer should land in the multi-TFLOPS
+        // range on a 12 TFLOPS card (the paper's GFLOPS plots show multi-
+        // TFLOPS for these layers).
+        let (gpu, s) = setup();
+        let mut rng = Pcg32::seed_from(5);
+        let mut best = f64::INFINITY;
+        for _ in 0..20_000 {
+            if let Ok(t) = evaluate_config(&gpu, &s, &s.random_config(&mut rng), 0) {
+                best = best.min(t);
+            }
+        }
+        let gf = gflops(&s.layer, best);
+        assert!(gf > 1500.0, "best only {gf} GFLOPS");
+        assert!(gf < 12_500.0, "faster than peak: {gf} GFLOPS");
+    }
+
+    #[test]
+    fn occupancy_bounds_property() {
+        let (gpu, s) = setup();
+        forall(300, 0x0cc, |rng| {
+            let c = s.random_config(rng);
+            let r = resources(&s.layer, &s.decode(&c));
+            let o = occupancy(&gpu, &r);
+            assert!((0.0..=1.0).contains(&o), "occ {o}");
+        });
+    }
+
+    #[test]
+    fn more_threads_never_reduces_smem_or_resources_sanity() {
+        let (_, s) = setup();
+        forall(200, 0x5a5a, |rng| {
+            let c = s.random_config(rng);
+            let r = resources(&s.layer, &s.decode(&c));
+            assert!(r.threads_per_block >= 1);
+            assert!(r.smem_bytes >= 4);
+            assert!(r.regs_per_thread >= 22);
+            assert!(r.blocks >= 1);
+        });
+    }
+
+    #[test]
+    fn failure_reasons_are_reachable() {
+        let (gpu, s) = setup();
+        let mut rng = Pcg32::seed_from(6);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..30_000 {
+            if let Err(e) = evaluate_config(&gpu, &s, &s.random_config(&mut rng), 0) {
+                seen.insert(format!("{e:?}"));
+            }
+            if seen.len() == 3 {
+                break;
+            }
+        }
+        assert!(
+            seen.contains("TooManyThreads") && seen.contains("SharedMemOverflow"),
+            "{seen:?}"
+        );
+    }
+
+    #[test]
+    fn gflops_inverts_runtime() {
+        let l = zoo::resnet18()[1].layer;
+        let g1 = gflops(&l, 1.0);
+        let g2 = gflops(&l, 2.0);
+        assert!((g1 / g2 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn landscape_is_clustered_dominant_knobs() {
+        // Configs sharing tile_x / tile_f should have correlated runtimes:
+        // pin the dominant knobs, vary the rest; within-group variance must
+        // be well below across-group variance (the Fig 3 premise).
+        let (gpu, s) = setup();
+        let mut rng = Pcg32::seed_from(7);
+        let mut group_means = Vec::new();
+        let mut within = Vec::new();
+        for _ in 0..12 {
+            let base = s.random_config(&mut rng);
+            let mut runtimes = Vec::new();
+            for _ in 0..40 {
+                let mut c = base.clone();
+                // vary only non-dominant knobs (rc, ry, rx, unroll)
+                for d in 3..8 {
+                    c.idx[d] = rng.below(s.knobs[d].len()) as u16;
+                }
+                if let Ok(t) = evaluate_config(&gpu, &s, &c, 0) {
+                    runtimes.push(t.ln());
+                }
+            }
+            if runtimes.len() > 5 {
+                group_means.push(crate::util::stats::mean(&runtimes));
+                within.push(crate::util::stats::variance(&runtimes));
+            }
+        }
+        let across = crate::util::stats::variance(&group_means);
+        let within_mean = crate::util::stats::mean(&within);
+        assert!(
+            across > 1.5 * within_mean,
+            "across {across} within {within_mean}"
+        );
+    }
+}

@@ -1,0 +1,8 @@
+//! The simulated hardware substrate: an analytical Titan Xp model and the
+//! measurement interface + simulated wall-clock (DESIGN.md §2, §6).
+
+pub mod gpu;
+pub mod measure;
+
+pub use gpu::{evaluate, evaluate_config, gflops, screen_scores, static_valid, GpuModel, MeasureError, INVALID_SCORE};
+pub use measure::{Clock, MeasureCost, Measurement, Measurer, SimMeasurer};

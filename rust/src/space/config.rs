@@ -1,0 +1,76 @@
+//! Configurations Θ = (θ1..θn): one choice index per knob.
+
+/// A point in the design space. `idx[d]` selects a choice of knob `d`.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Config {
+    pub idx: Vec<u16>,
+}
+
+impl Config {
+    pub fn new(idx: Vec<u16>) -> Self {
+        Config { idx }
+    }
+
+    pub fn ndims(&self) -> usize {
+        self.idx.len()
+    }
+}
+
+/// Per-dimension direction actions of the RL agent (paper §4.1):
+/// decrement / stay / increment the choice index of each knob.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    Dec,
+    Stay,
+    Inc,
+}
+
+impl Direction {
+    pub fn from_index(i: usize) -> Self {
+        match i {
+            0 => Direction::Dec,
+            1 => Direction::Stay,
+            2 => Direction::Inc,
+            _ => panic!("invalid action index {i}"),
+        }
+    }
+
+    pub fn delta(&self) -> i32 {
+        match self {
+            Direction::Dec => -1,
+            Direction::Stay => 0,
+            Direction::Inc => 1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn direction_roundtrip() {
+        assert_eq!(Direction::from_index(0).delta(), -1);
+        assert_eq!(Direction::from_index(1).delta(), 0);
+        assert_eq!(Direction::from_index(2).delta(), 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn direction_out_of_range() {
+        Direction::from_index(3);
+    }
+
+    #[test]
+    fn config_equality_and_hash() {
+        use std::collections::HashSet;
+        let a = Config::new(vec![1, 2, 3]);
+        let b = Config::new(vec![1, 2, 3]);
+        let c = Config::new(vec![1, 2, 4]);
+        let mut set = HashSet::new();
+        set.insert(a.clone());
+        assert!(set.contains(&b));
+        assert!(!set.contains(&c));
+        assert_eq!(a.ndims(), 3);
+    }
+}

@@ -1,0 +1,103 @@
+//! Feature extraction for the cost model.
+//!
+//! AutoTVM feeds its boosted trees "knob features" plus derived loop/
+//! resource features. We extract 21 structural features from a decoded
+//! configuration + layer shape: log-scale tile extents, thread geometry,
+//! resource footprints and reuse ratios — everything predictive of runtime
+//! without *being* the simulator.
+
+use super::space::{DesignSpace, NDIMS};
+use super::config::Config;
+
+pub const NFEATURES: usize = 24;
+
+fn lg(x: i64) -> f32 {
+    (x.max(1) as f64).log2() as f32
+}
+
+/// Feature vector for one configuration. Layout (all f32):
+/// 0..8   normalized knob indices
+/// 8..17  log2 of: f.reg, f.vthread, f.threads, y.reg, y.vthread,
+///        y.threads, x.reg, x.vthread, x.threads
+/// 17     log2 threads per block
+/// 18     log2 output-tile volume (f*y*x)
+/// 19     log2 reduction-tile volume (rc*ry*rx)
+/// 20     log2 shared-memory floats per stage
+/// 21     log2 auto_unroll + 1
+/// 22     unroll_explicit
+/// 23     log2 blocks in grid
+pub fn features(space: &DesignSpace, config: &Config) -> Vec<f32> {
+    let mut f = Vec::with_capacity(NFEATURES);
+    f.extend(space.normalize(config));
+    debug_assert_eq!(f.len(), NDIMS);
+
+    let d = space.decode(config);
+    let l = &space.layer;
+    f.push(lg(d.f.reg));
+    f.push(lg(d.f.vthread));
+    f.push(lg(d.f.threads));
+    f.push(lg(d.y.reg));
+    f.push(lg(d.y.vthread));
+    f.push(lg(d.y.threads));
+    f.push(lg(d.x.reg));
+    f.push(lg(d.x.vthread));
+    f.push(lg(d.x.threads));
+
+    let threads = d.f.threads * d.y.threads * d.x.threads;
+    f.push(lg(threads));
+    f.push(lg(d.f.tile() * d.y.tile() * d.x.tile()));
+    f.push(lg(d.rc * d.ry * d.rx));
+
+    // staged shared memory floats: input tile + filter tile per reduction step
+    let in_tile = d.rc
+        * ((d.y.tile() - 1) * l.stride + d.ry)
+        * ((d.x.tile() - 1) * l.stride + d.rx);
+    let filt_tile = d.f.tile() * d.rc * d.ry * d.rx;
+    f.push(lg(in_tile + filt_tile));
+
+    f.push(lg(d.auto_unroll + 1));
+    f.push(if d.unroll_explicit { 1.0 } else { 0.0 });
+
+    let blocks = (l.k / d.f.tile()) * (l.out_h() / d.y.tile()) * (l.out_w() / d.x.tile());
+    f.push(lg(blocks));
+
+    debug_assert_eq!(f.len(), NFEATURES);
+    f
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::workload::zoo;
+
+    #[test]
+    fn feature_length_and_finiteness() {
+        let s = DesignSpace::for_conv(zoo::vgg16()[6].layer);
+        forall(200, 0xfea7, |rng| {
+            let c = s.random_config(rng);
+            let f = features(&s, &c);
+            assert_eq!(f.len(), NFEATURES);
+            assert!(f.iter().all(|v| v.is_finite()));
+        });
+    }
+
+    #[test]
+    fn features_distinguish_configs() {
+        let s = DesignSpace::for_conv(zoo::resnet18()[1].layer);
+        let mut rng = crate::util::rng::Pcg32::seed_from(9);
+        let a = s.random_config(&mut rng);
+        let mut b = a.clone();
+        b.idx[0] = if b.idx[0] == 0 { 1 } else { 0 };
+        assert_ne!(features(&s, &a), features(&s, &b));
+    }
+
+    #[test]
+    fn normalized_prefix_matches_space_normalize() {
+        let s = DesignSpace::for_conv(zoo::alexnet()[2].layer);
+        let mut rng = crate::util::rng::Pcg32::seed_from(4);
+        let c = s.random_config(&mut rng);
+        let f = features(&s, &c);
+        assert_eq!(&f[..8], s.normalize(&c).as_slice());
+    }
+}

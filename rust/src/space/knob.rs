@@ -1,0 +1,149 @@
+//! Knob definitions — the dimensions of the design space (paper Table 1).
+//!
+//! The conv2d CUDA template exposes eight knobs: six *tile* knobs (split
+//! factors over the output-channel / spatial / reduction axes) and two
+//! unroll knobs for the CodeGen phase. A knob is a named list of discrete
+//! choices; a configuration indexes one choice per knob.
+
+/// What a knob controls — used by the simulator and the feature extractor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KnobKind {
+    /// Tile size over a data axis (value = elements per tile).
+    TileF,
+    TileY,
+    TileX,
+    /// Tile size over a reduction axis.
+    TileRC,
+    TileRY,
+    TileRX,
+    /// Max loop trip count that CodeGen will auto-unroll.
+    AutoUnrollMaxStep,
+    /// Explicit unroll hint (0/1).
+    UnrollExplicit,
+}
+
+impl KnobKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            KnobKind::TileF => "tile_f",
+            KnobKind::TileY => "tile_y",
+            KnobKind::TileX => "tile_x",
+            KnobKind::TileRC => "tile_rc",
+            KnobKind::TileRY => "tile_ry",
+            KnobKind::TileRX => "tile_rx",
+            KnobKind::AutoUnrollMaxStep => "auto_unroll_max_step",
+            KnobKind::UnrollExplicit => "unroll_explicit",
+        }
+    }
+
+    pub fn is_tile(&self) -> bool {
+        matches!(
+            self,
+            KnobKind::TileF
+                | KnobKind::TileY
+                | KnobKind::TileX
+                | KnobKind::TileRC
+                | KnobKind::TileRY
+                | KnobKind::TileRX
+        )
+    }
+}
+
+/// One dimension of the design space.
+#[derive(Debug, Clone)]
+pub struct Knob {
+    pub kind: KnobKind,
+    /// Discrete choices (e.g. the divisors of the axis length for tiles).
+    pub choices: Vec<i64>,
+}
+
+impl Knob {
+    pub fn new(kind: KnobKind, choices: Vec<i64>) -> Self {
+        assert!(!choices.is_empty(), "knob {:?} has no choices", kind);
+        Knob { kind, choices }
+    }
+
+    pub fn len(&self) -> usize {
+        self.choices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.choices.is_empty()
+    }
+
+    pub fn value(&self, idx: usize) -> i64 {
+        self.choices[idx]
+    }
+}
+
+/// All positive divisors of `n`, ascending. Tile choices for an axis of
+/// length `n` are its divisors (TVM's `split` policy for conv templates).
+pub fn divisors(n: i64) -> Vec<i64> {
+    assert!(n > 0);
+    let mut small = Vec::new();
+    let mut large = Vec::new();
+    let mut d = 1;
+    while d * d <= n {
+        if n % d == 0 {
+            small.push(d);
+            if d != n / d {
+                large.push(n / d);
+            }
+        }
+        d += 1;
+    }
+    large.reverse();
+    small.extend(large);
+    small
+}
+
+/// Choices for the `auto_unroll_max_step` knob (TVM's conv2d CUDA template).
+pub fn unroll_choices() -> Vec<i64> {
+    vec![0, 4, 16, 64, 256, 512, 1500]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn divisors_of_12() {
+        assert_eq!(divisors(12), vec![1, 2, 3, 4, 6, 12]);
+    }
+
+    #[test]
+    fn divisors_of_1_and_prime() {
+        assert_eq!(divisors(1), vec![1]);
+        assert_eq!(divisors(13), vec![1, 13]);
+    }
+
+    #[test]
+    fn divisors_property_divide_and_sorted() {
+        forall(200, 0xd1f, |rng: &mut Pcg32| {
+            let n = rng.below(4000) as i64 + 1;
+            let ds = divisors(n);
+            assert!(ds.windows(2).all(|w| w[0] < w[1]), "not sorted for {n}");
+            assert!(ds.iter().all(|d| n % d == 0), "non-divisor for {n}");
+            assert_eq!(*ds.first().unwrap(), 1);
+            assert_eq!(*ds.last().unwrap(), n);
+            // divisor count parity: odd iff perfect square
+            let is_square = {
+                let r = (n as f64).sqrt().round() as i64;
+                r * r == n
+            };
+            assert_eq!(ds.len() % 2 == 1, is_square, "parity for {n}");
+        });
+    }
+
+    #[test]
+    fn knob_accessors() {
+        let k = Knob::new(KnobKind::TileX, divisors(8));
+        assert_eq!(k.len(), 4);
+        assert_eq!(k.value(3), 8);
+        assert_eq!(k.kind.name(), "tile_x");
+        assert!(k.kind.is_tile());
+        assert!(!KnobKind::UnrollExplicit.is_tile());
+    }
+}

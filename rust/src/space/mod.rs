@@ -1,0 +1,12 @@
+//! The design space S_Θ: knobs, configurations, features, PCA (Table 1).
+
+pub mod config;
+pub mod features;
+pub mod knob;
+pub mod pca;
+#[allow(clippy::module_inception)]
+pub mod space;
+
+pub use config::{Config, Direction};
+pub use knob::{Knob, KnobKind};
+pub use space::{DecodedConfig, DesignSpace, TilePair, NDIMS};

@@ -1,0 +1,172 @@
+//! 2-D PCA via power iteration — used to regenerate Figure 3 (the cluster
+//! structure of sampled configurations under dimensionality reduction).
+
+/// Project rows of `data` (n x d, row-major) onto their top two principal
+/// components. Returns n (x, y) pairs.
+pub fn project_2d(data: &[Vec<f32>]) -> Vec<(f32, f32)> {
+    let n = data.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let d = data[0].len();
+
+    // center
+    let mut mean = vec![0.0f64; d];
+    for row in data {
+        for (m, &v) in mean.iter_mut().zip(row) {
+            *m += v as f64;
+        }
+    }
+    for m in &mut mean {
+        *m /= n as f64;
+    }
+    let centered: Vec<Vec<f64>> = data
+        .iter()
+        .map(|row| row.iter().zip(&mean).map(|(&v, m)| v as f64 - m).collect())
+        .collect();
+
+    // covariance (d x d)
+    let mut cov = vec![vec![0.0f64; d]; d];
+    for row in &centered {
+        for i in 0..d {
+            for j in i..d {
+                cov[i][j] += row[i] * row[j];
+            }
+        }
+    }
+    for i in 0..d {
+        for j in 0..i {
+            cov[i][j] = cov[j][i];
+        }
+        for j in i..d {
+            cov[i][j] /= n as f64;
+            if j > i {
+                cov[j][i] = cov[i][j];
+            }
+        }
+    }
+
+    let pc1 = power_iterate(&cov, None);
+    let pc2 = power_iterate(&cov, Some(&pc1));
+
+    centered
+        .iter()
+        .map(|row| {
+            let x: f64 = row.iter().zip(&pc1).map(|(a, b)| a * b).sum();
+            let y: f64 = row.iter().zip(&pc2).map(|(a, b)| a * b).sum();
+            (x as f32, y as f32)
+        })
+        .collect()
+}
+
+/// Leading eigenvector of symmetric `m`, deflating `orth` if given.
+fn power_iterate(m: &[Vec<f64>], orth: Option<&[f64]>) -> Vec<f64> {
+    let d = m.len();
+    // deterministic quasi-random start
+    let mut v: Vec<f64> = (0..d).map(|i| ((i * 2654435761 + 1) % 97) as f64 / 97.0 - 0.5).collect();
+    normalize(&mut v);
+    for _ in 0..200 {
+        if let Some(o) = orth {
+            let dot: f64 = v.iter().zip(o).map(|(a, b)| a * b).sum();
+            for (vi, oi) in v.iter_mut().zip(o) {
+                *vi -= dot * oi;
+            }
+        }
+        let mut next = vec![0.0; d];
+        for i in 0..d {
+            for j in 0..d {
+                next[i] += m[i][j] * v[j];
+            }
+        }
+        if normalize(&mut next) < 1e-12 {
+            return v; // degenerate direction; keep previous
+        }
+        let delta: f64 = next.iter().zip(&v).map(|(a, b)| (a - b).abs()).sum();
+        v = next;
+        if delta < 1e-10 {
+            break;
+        }
+    }
+    if let Some(o) = orth {
+        let dot: f64 = v.iter().zip(o).map(|(a, b)| a * b).sum();
+        for (vi, oi) in v.iter_mut().zip(o) {
+            *vi -= dot * oi;
+        }
+        normalize(&mut v);
+    }
+    v
+}
+
+fn normalize(v: &mut [f64]) -> f64 {
+    let norm = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+    if norm > 0.0 {
+        for x in v.iter_mut() {
+            *x /= norm;
+        }
+    }
+    norm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn recovers_dominant_axis() {
+        // data stretched along a known direction in 4-D
+        let mut rng = Pcg32::seed_from(2);
+        let dir = [0.5f32, 0.5, 0.5, 0.5];
+        let data: Vec<Vec<f32>> = (0..500)
+            .map(|_| {
+                let t = rng.normal() as f32 * 10.0;
+                let noise: Vec<f32> = (0..4).map(|_| rng.normal() as f32 * 0.1).collect();
+                (0..4).map(|i| dir[i] * t + noise[i]).collect()
+            })
+            .collect();
+        let proj = project_2d(&data);
+        // variance along pc1 must dwarf pc2
+        let vx = crate::util::stats::variance(&proj.iter().map(|p| p.0 as f64).collect::<Vec<_>>());
+        let vy = crate::util::stats::variance(&proj.iter().map(|p| p.1 as f64).collect::<Vec<_>>());
+        assert!(vx > 50.0 * vy, "vx={vx} vy={vy}");
+    }
+
+    #[test]
+    fn projection_centers_at_origin() {
+        let data: Vec<Vec<f32>> = vec![
+            vec![1.0, 0.0],
+            vec![3.0, 1.0],
+            vec![5.0, 2.0],
+        ];
+        let proj = project_2d(&data);
+        let mx: f32 = proj.iter().map(|p| p.0).sum::<f32>() / 3.0;
+        assert!(mx.abs() < 1e-4);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        assert!(project_2d(&[]).is_empty());
+        let p = project_2d(&[vec![1.0, 2.0, 3.0]]);
+        assert_eq!(p.len(), 1);
+    }
+
+    #[test]
+    fn separated_clusters_stay_separated() {
+        // two blobs far apart in 8-D must be separated along pc1
+        let mut rng = Pcg32::seed_from(8);
+        let mut data = Vec::new();
+        for c in 0..2 {
+            for _ in 0..100 {
+                data.push(
+                    (0..8)
+                        .map(|_| c as f32 * 5.0 + rng.normal() as f32 * 0.3)
+                        .collect(),
+                );
+            }
+        }
+        let proj = project_2d(&data);
+        let m0: f32 = proj[..100].iter().map(|p| p.0).sum::<f32>() / 100.0;
+        let m1: f32 = proj[100..].iter().map(|p| p.0).sum::<f32>() / 100.0;
+        assert!((m0 - m1).abs() > 5.0, "m0={m0} m1={m1}");
+    }
+}

@@ -1,0 +1,336 @@
+//! The design space S_Θ for a conv task: eight knobs (paper Table 1).
+//!
+//! Output-axis tile knobs (`tile_f/y/x`) choose an ordered *triple*
+//! (register tile, virtual threads, threads) whose product divides the
+//! axis — mirroring TVM's multi-level `split` for the conv2d CUDA template
+//! (bf/vf/tf). This puts the per-task space size in the 10^8–10^10 range,
+//! the same regime the paper quotes (10^10): vastly more points than the
+//! ~10^3 measurements a tuner can afford.
+//! Reduction knobs (`tile_rc/ry/rx`) choose a divisor of the reduction
+//! axis; the two unroll knobs are categorical (Table 1).
+
+use super::config::{Config, Direction};
+use super::knob::{divisors, unroll_choices, Knob, KnobKind};
+use crate::util::rng::Pcg32;
+use crate::workload::ConvLayer;
+
+/// Decoded 3-level tile split for an output axis (TVM's bf/vf/tf).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TilePair {
+    /// Elements computed per thread along this axis (register tile).
+    pub reg: i64,
+    /// Virtual threads (strided register tiling — extra ILP, extra regs).
+    pub vthread: i64,
+    /// Hardware threads along this axis.
+    pub threads: i64,
+}
+
+impl TilePair {
+    pub fn tile(&self) -> i64 {
+        self.reg * self.vthread * self.threads
+    }
+
+    /// Per-thread work along this axis (drives ILP + register pressure).
+    pub fn work(&self) -> i64 {
+        self.reg * self.vthread
+    }
+}
+
+/// Encode a tile triple into a single knob value (base-65536 digits).
+fn encode_split(reg: i64, vthread: i64, threads: i64) -> i64 {
+    (reg * 65536 + vthread) * 65536 + threads
+}
+
+pub fn decode_pair(value: i64) -> TilePair {
+    TilePair {
+        reg: value / (65536 * 65536),
+        vthread: (value / 65536) % 65536,
+        threads: value % 65536,
+    }
+}
+
+/// All ordered triples (reg, vthread, threads) whose product divides
+/// `axis`, sorted by (total tile, threads, vthread) so Inc/Dec actions move
+/// to "slightly larger tile" — the action-space ordering the RL agent
+/// exploits.
+fn tile_pair_choices(axis: i64) -> Vec<i64> {
+    let mut triples = Vec::new();
+    for total in divisors(axis) {
+        for t in divisors(total) {
+            let rest = total / t; // reg * vthread
+            for vt in divisors(rest) {
+                triples.push((total, t, vt));
+            }
+        }
+    }
+    triples.sort();
+    triples
+        .into_iter()
+        .map(|(total, t, vt)| encode_split(total / t / vt, vt, t))
+        .collect()
+}
+
+/// A fully decoded configuration — what the simulator consumes.
+#[derive(Debug, Clone, Copy)]
+pub struct DecodedConfig {
+    pub f: TilePair,
+    pub y: TilePair,
+    pub x: TilePair,
+    pub rc: i64,
+    pub ry: i64,
+    pub rx: i64,
+    pub auto_unroll: i64,
+    pub unroll_explicit: bool,
+}
+
+/// The design space for one conv task.
+#[derive(Debug, Clone)]
+pub struct DesignSpace {
+    pub layer: ConvLayer,
+    pub knobs: Vec<Knob>,
+}
+
+pub const NDIMS: usize = 8;
+
+impl DesignSpace {
+    pub fn for_conv(layer: ConvLayer) -> Self {
+        let knobs = vec![
+            Knob::new(KnobKind::TileF, tile_pair_choices(layer.k)),
+            Knob::new(KnobKind::TileY, tile_pair_choices(layer.out_h())),
+            Knob::new(KnobKind::TileX, tile_pair_choices(layer.out_w())),
+            Knob::new(KnobKind::TileRC, divisors(layer.c)),
+            Knob::new(KnobKind::TileRY, divisors(layer.kh)),
+            Knob::new(KnobKind::TileRX, divisors(layer.kw)),
+            Knob::new(KnobKind::AutoUnrollMaxStep, unroll_choices()),
+            Knob::new(KnobKind::UnrollExplicit, vec![0, 1]),
+        ];
+        assert_eq!(knobs.len(), NDIMS);
+        DesignSpace { layer, knobs }
+    }
+
+    pub fn ndims(&self) -> usize {
+        self.knobs.len()
+    }
+
+    /// |S_Θ| — the number of points in the space.
+    pub fn size(&self) -> u64 {
+        self.knobs.iter().map(|k| k.len() as u64).product()
+    }
+
+    pub fn random_config(&self, rng: &mut Pcg32) -> Config {
+        Config::new(
+            self.knobs.iter().map(|k| rng.below(k.len()) as u16).collect(),
+        )
+    }
+
+    /// Flat mixed-radix index — compact identity for visited-sets.
+    pub fn flat_index(&self, c: &Config) -> u64 {
+        let mut acc = 0u64;
+        for (i, k) in self.knobs.iter().enumerate() {
+            acc = acc * k.len() as u64 + c.idx[i] as u64;
+        }
+        acc
+    }
+
+    pub fn config_of_flat(&self, mut flat: u64) -> Config {
+        let mut idx = vec![0u16; self.ndims()];
+        for (i, k) in self.knobs.iter().enumerate().rev() {
+            idx[i] = (flat % k.len() as u64) as u16;
+            flat /= k.len() as u64;
+        }
+        Config::new(idx)
+    }
+
+    /// Normalized coordinates in [0,1]^8 — the RL agent's state and the
+    /// metric space for k-means clustering.
+    pub fn normalize(&self, c: &Config) -> Vec<f32> {
+        c.idx
+            .iter()
+            .zip(&self.knobs)
+            .map(|(&i, k)| {
+                if k.len() <= 1 { 0.5 } else { i as f32 / (k.len() - 1) as f32 }
+            })
+            .collect()
+    }
+
+    /// Apply one per-dimension direction vector, clamping at the bounds
+    /// (the paper's "configuration updater"). Inc/Dec moves by a
+    /// dimension-proportional stride (len/16, min 1) so an episode's
+    /// horizon can traverse even the widest knob lists.
+    pub fn apply_actions(&self, c: &Config, dirs: &[Direction]) -> Config {
+        assert_eq!(dirs.len(), self.ndims());
+        let idx = c
+            .idx
+            .iter()
+            .zip(dirs)
+            .zip(&self.knobs)
+            .map(|((&i, d), k)| {
+                let step = (k.len() as i32 / 16).max(1);
+                (i as i32 + d.delta() * step).clamp(0, k.len() as i32 - 1) as u16
+            })
+            .collect();
+        Config::new(idx)
+    }
+
+    /// Random single-knob mutation (SA / GA move).
+    pub fn mutate(&self, c: &Config, rng: &mut Pcg32) -> Config {
+        let mut idx = c.idx.clone();
+        let d = rng.below(self.ndims());
+        let k = &self.knobs[d];
+        if k.len() > 1 {
+            let mut ni = rng.below(k.len()) as u16;
+            while ni == idx[d] {
+                ni = rng.below(k.len()) as u16;
+            }
+            idx[d] = ni;
+        }
+        Config::new(idx)
+    }
+
+    /// Decode a configuration for the simulator / feature extractor.
+    pub fn decode(&self, c: &Config) -> DecodedConfig {
+        let v = |d: usize| self.knobs[d].value(c.idx[d] as usize);
+        DecodedConfig {
+            f: decode_pair(v(0)),
+            y: decode_pair(v(1)),
+            x: decode_pair(v(2)),
+            rc: v(3),
+            ry: v(4),
+            rx: v(5),
+            auto_unroll: v(6),
+            unroll_explicit: v(7) != 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::workload::zoo;
+
+    fn space() -> DesignSpace {
+        DesignSpace::for_conv(zoo::resnet18()[1].layer) // 64->64 3x3 @56
+    }
+
+    #[test]
+    fn eight_knobs_table1() {
+        let s = space();
+        assert_eq!(s.ndims(), 8);
+        let names: Vec<_> = s.knobs.iter().map(|k| k.kind.name()).collect();
+        assert_eq!(
+            names,
+            vec![
+                "tile_f", "tile_y", "tile_x", "tile_rc", "tile_ry", "tile_rx",
+                "auto_unroll_max_step", "unroll_explicit"
+            ]
+        );
+    }
+
+    #[test]
+    fn space_is_vast() {
+        // Each task's space must dwarf any realistic measurement budget.
+        for t in zoo::resnet18().iter().chain(zoo::vgg16().iter()) {
+            let s = DesignSpace::for_conv(t.layer);
+            assert!(s.size() > 20_000, "{} only {}", t.id, s.size());
+        }
+        // and the largest are in the multi-million range
+        let max = zoo::vgg16()
+            .iter()
+            .map(|t| DesignSpace::for_conv(t.layer).size())
+            .max()
+            .unwrap();
+        assert!(max > 1_000_000, "max {max}");
+    }
+
+    #[test]
+    fn tile_pairs_divide_axis() {
+        let s = space();
+        for v in &s.knobs[0].choices {
+            let p = decode_pair(*v);
+            assert!(p.reg > 0 && p.threads > 0);
+            assert_eq!(s.layer.k % p.tile(), 0);
+        }
+    }
+
+    #[test]
+    fn tile_pairs_sorted_by_total_tile() {
+        let s = space();
+        let totals: Vec<i64> =
+            s.knobs[0].choices.iter().map(|v| decode_pair(*v).tile()).collect();
+        assert!(totals.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn flat_index_roundtrip_property() {
+        let s = space();
+        forall(300, 0xf1a7, |rng| {
+            let c = s.random_config(rng);
+            let flat = s.flat_index(&c);
+            assert!(flat < s.size());
+            assert_eq!(s.config_of_flat(flat), c);
+        });
+    }
+
+    #[test]
+    fn normalize_in_unit_cube() {
+        let s = space();
+        forall(100, 0x0123, |rng| {
+            let c = s.random_config(rng);
+            for v in s.normalize(&c) {
+                assert!((0.0..=1.0).contains(&v));
+            }
+        });
+    }
+
+    #[test]
+    fn apply_actions_clamps_at_bounds() {
+        let s = space();
+        let lo = Config::new(vec![0; 8]);
+        let stay_dec = vec![Direction::Dec; 8];
+        assert_eq!(s.apply_actions(&lo, &stay_dec), lo);
+        let hi = Config::new(s.knobs.iter().map(|k| (k.len() - 1) as u16).collect());
+        let inc = vec![Direction::Inc; 8];
+        assert_eq!(s.apply_actions(&hi, &inc), hi);
+    }
+
+    #[test]
+    fn apply_actions_moves_by_dim_proportional_stride() {
+        let s = space();
+        let c = Config::new(vec![2; 8]);
+        let mut dirs = vec![Direction::Stay; 8];
+        dirs[0] = Direction::Inc; // wide knob: stride = len/16
+        dirs[3] = Direction::Dec; // narrow knob (len < 16): stride = 1
+        let c2 = s.apply_actions(&c, &dirs);
+        let stride0 = (s.knobs[0].len() / 16).max(1) as u16;
+        assert!(stride0 > 1, "tile_f should be a wide knob");
+        assert_eq!(c2.idx[0], 2 + stride0);
+        assert_eq!(s.knobs[3].len(), 7); // divisors of 64
+        assert_eq!(c2.idx[3], 1);
+        assert_eq!(c2.idx[1], 2);
+    }
+
+    #[test]
+    fn mutate_changes_exactly_one_dim() {
+        let s = space();
+        forall(100, 0xabc, |rng| {
+            let c = s.random_config(rng);
+            let m = s.mutate(&c, rng);
+            let diff = c.idx.iter().zip(&m.idx).filter(|(a, b)| a != b).count();
+            assert_eq!(diff, 1);
+        });
+    }
+
+    #[test]
+    fn decode_consistency() {
+        let s = space();
+        let mut rng = Pcg32::seed_from(1);
+        let c = s.random_config(&mut rng);
+        let d = s.decode(&c);
+        assert_eq!(s.layer.k % d.f.tile(), 0);
+        assert_eq!(s.layer.out_h() % d.y.tile(), 0);
+        assert_eq!(s.layer.out_w() % d.x.tile(), 0);
+        assert_eq!(s.layer.c % d.rc, 0);
+        assert!(d.ry >= 1 && d.rx >= 1);
+    }
+}

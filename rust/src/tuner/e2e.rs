@@ -1,0 +1,114 @@
+//! End-to-end model tuning: run the per-task tuner over every conv task of
+//! a network and aggregate optimization time + inference time (the paper's
+//! Fig 9 / Tables 5–6 protocol).
+
+use super::{tune, MethodSpec, TuneResult, TunerConfig};
+use crate::runtime::Runtime;
+use crate::sim::Measurer;
+use crate::workload::{zoo, ConvTask};
+use std::sync::Arc;
+
+/// Aggregated outcome of tuning one whole network.
+#[derive(Debug, Clone)]
+pub struct ModelTuneResult {
+    pub model: String,
+    pub method: String,
+    pub tasks: Vec<TuneResult>,
+    /// Simulated end-to-end optimization wall-clock, seconds.
+    pub opt_time_s: f64,
+    /// Occurrence-weighted sum of best conv runtimes + non-conv residue.
+    pub inference_ms: f64,
+    pub n_measurements: usize,
+}
+
+impl ModelTuneResult {
+    pub fn opt_time_hours(&self) -> f64 {
+        self.opt_time_s / 3600.0
+    }
+}
+
+/// Tune every task of `model_name` with `method`.
+pub fn tune_model(
+    model_name: &str,
+    measurer: &dyn Measurer,
+    method: MethodSpec,
+    cfg: &TunerConfig,
+    runtime: Option<Arc<Runtime>>,
+) -> ModelTuneResult {
+    let tasks = zoo::model_tasks(model_name)
+        .unwrap_or_else(|| panic!("unknown model {model_name}"));
+    tune_tasks(model_name, &tasks, measurer, method, cfg, runtime)
+}
+
+/// Tune an explicit task list (used by the layer-subset experiments too).
+pub fn tune_tasks(
+    model_name: &str,
+    tasks: &[ConvTask],
+    measurer: &dyn Measurer,
+    method: MethodSpec,
+    cfg: &TunerConfig,
+    runtime: Option<Arc<Runtime>>,
+) -> ModelTuneResult {
+    let mut results = Vec::with_capacity(tasks.len());
+    for (i, task) in tasks.iter().enumerate() {
+        // per-task seed: decorrelate tasks but stay reproducible
+        let mut task_cfg = cfg.clone();
+        task_cfg.seed = cfg.seed.wrapping_add(i as u64 * 1031);
+        results.push(tune(task, measurer, method, &task_cfg, runtime.clone()));
+    }
+    let opt_time_s = results.iter().map(|r| r.clock.total_s()).sum();
+    let inference_ms = results
+        .iter()
+        .zip(tasks)
+        .map(|(r, t)| r.best_runtime_ms * t.occurrences as f64)
+        .sum::<f64>()
+        + zoo::non_conv_residue_ms(model_name);
+    let n_measurements = results.iter().map(|r| r.n_measurements).sum();
+    ModelTuneResult {
+        model: model_name.to_string(),
+        method: method.name(),
+        tasks: results,
+        opt_time_s,
+        inference_ms,
+        n_measurements,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::SimMeasurer;
+    use crate::tuner::TunerConfig;
+
+    #[test]
+    fn tunes_alexnet_end_to_end_small_budget() {
+        let meas = SimMeasurer::titan_xp(0);
+        let cfg = TunerConfig { max_trials: 120, ..Default::default() };
+        let r = tune_model("alexnet", &meas, MethodSpec::sa_as(), &cfg, None);
+        assert_eq!(r.tasks.len(), 5);
+        assert!(r.inference_ms > 0.1 && r.inference_ms < 100.0, "{}", r.inference_ms);
+        assert!(r.opt_time_s > 0.0);
+        assert_eq!(
+            r.n_measurements,
+            r.tasks.iter().map(|t| t.n_measurements).sum::<usize>()
+        );
+        // inference aggregates occurrence-weighted runtimes + residue
+        let conv_sum: f64 = r
+            .tasks
+            .iter()
+            .zip(crate::workload::zoo::alexnet())
+            .map(|(t, task)| t.best_runtime_ms * task.occurrences as f64)
+            .sum();
+        assert!((r.inference_ms - conv_sum - 0.11).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unknown_model_panics() {
+        let meas = SimMeasurer::titan_xp(0);
+        let cfg = TunerConfig::default();
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            tune_model("nonexistent", &meas, MethodSpec::autotvm(), &cfg, None)
+        }));
+        assert!(res.is_err());
+    }
+}

@@ -1,0 +1,461 @@
+//! The optimizing-compiler loop (paper Fig. 4a): search → sample → measure
+//! → update cost model → repeat, per conv task, with the simulated clock
+//! accounting that regenerates the paper's optimization-time results.
+
+pub mod e2e;
+
+use crate::coordinator::MeasureCoordinator;
+use crate::costmodel::CostModel;
+use crate::rl::PpoAgent;
+use crate::runtime::Runtime;
+use crate::sampling::{adaptive_sample, greedy_sample, SamplerKind};
+use crate::search::{
+    ga::GeneticAlgorithm, random::RandomSearch, sa::SimulatedAnnealing, Searcher,
+};
+use crate::sim::{Clock, Measurement, Measurer};
+use crate::space::{Config, DesignSpace};
+use crate::util::rng::Pcg32;
+use crate::workload::ConvTask;
+use std::collections::HashSet;
+use std::sync::Arc;
+
+/// Which search agent drives the tuner.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SearcherKind {
+    Sa,
+    Ga,
+    Random,
+    Rl,
+}
+
+/// A (searcher, sampler) pair — the paper's four evaluation arms plus the
+/// extra baselines.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MethodSpec {
+    pub searcher: SearcherKind,
+    pub sampler: SamplerKind,
+}
+
+impl MethodSpec {
+    /// AutoTVM (Chen et al. 2018b): parallel SA + ε-greedy top-k.
+    pub fn autotvm() -> Self {
+        MethodSpec { searcher: SearcherKind::Sa, sampler: SamplerKind::Greedy }
+    }
+
+    /// Ablation: RL search with AutoTVM's greedy sampling.
+    pub fn rl_only() -> Self {
+        MethodSpec { searcher: SearcherKind::Rl, sampler: SamplerKind::Greedy }
+    }
+
+    /// Ablation: SA search with adaptive sampling.
+    pub fn sa_as() -> Self {
+        MethodSpec { searcher: SearcherKind::Sa, sampler: SamplerKind::Adaptive }
+    }
+
+    /// RELEASE: RL search + adaptive sampling.
+    pub fn release() -> Self {
+        MethodSpec { searcher: SearcherKind::Rl, sampler: SamplerKind::Adaptive }
+    }
+
+    pub fn name(&self) -> String {
+        match (self.searcher, self.sampler) {
+            (SearcherKind::Sa, SamplerKind::Greedy) => "AutoTVM".into(),
+            (SearcherKind::Rl, SamplerKind::Greedy) => "RL".into(),
+            (SearcherKind::Sa, SamplerKind::Adaptive) => "SA+AS".into(),
+            (SearcherKind::Rl, SamplerKind::Adaptive) => "RELEASE".into(),
+            (s, p) => format!("{s:?}+{p}"),
+        }
+    }
+
+    pub fn parse(name: &str) -> Option<Self> {
+        match name.to_ascii_lowercase().as_str() {
+            "autotvm" | "sa" => Some(Self::autotvm()),
+            "rl" => Some(Self::rl_only()),
+            "sa+as" | "sa-as" | "sa_as" => Some(Self::sa_as()),
+            "release" | "rl+as" => Some(Self::release()),
+            "ga" => Some(MethodSpec { searcher: SearcherKind::Ga, sampler: SamplerKind::Greedy }),
+            "random" => {
+                Some(MethodSpec { searcher: SearcherKind::Random, sampler: SamplerKind::Greedy })
+            }
+            _ => None,
+        }
+    }
+}
+
+/// Tuning budget + convergence policy.
+#[derive(Debug, Clone)]
+pub struct TunerConfig {
+    /// Hardware-measurement budget per task (AutoTVM's n_trial).
+    pub max_trials: usize,
+    /// Greedy sampler's plan size (AutoTVM default 64).
+    pub plan_size: usize,
+    /// Convergence-based early termination: stop when the best fitness has
+    /// improved by less than `min_improve` (relative) over the last
+    /// `patience_meas` hardware measurements. `None` = run the full budget
+    /// (AutoTVM).
+    pub early_stop: Option<EarlyStop>,
+    /// Iterations before early stop may fire.
+    pub min_iters: usize,
+    pub seed: u64,
+    /// Measurement worker threads (the coordinator's pool).
+    pub measure_workers: usize,
+    /// For the adaptive sampler: also measure this many top-predicted
+    /// unvisited trajectory points per iteration (pure exploitation) on top
+    /// of the cluster representatives.
+    pub exploit_top: usize,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct EarlyStop {
+    /// Measurements without improvement before stopping (when the cost
+    /// model agrees nothing better is in sight).
+    pub patience_meas: usize,
+    pub min_improve: f64,
+}
+
+impl Default for TunerConfig {
+    fn default() -> Self {
+        TunerConfig {
+            max_trials: 1000,
+            plan_size: 64,
+            early_stop: Some(EarlyStop { patience_meas: 96, min_improve: 0.015 }),
+            min_iters: 5,
+            seed: 0,
+            measure_workers: 8,
+            exploit_top: 8,
+        }
+    }
+}
+
+impl TunerConfig {
+    /// AutoTVM's policy: fixed budget, no convergence exit.
+    pub fn autotvm_defaults() -> Self {
+        TunerConfig { early_stop: None, ..Default::default() }
+    }
+}
+
+/// One tuner iteration's record — the raw material for Figs 5–9.
+#[derive(Debug, Clone)]
+pub struct IterationRecord {
+    pub iter: usize,
+    pub n_measured: usize,
+    pub cum_measured: usize,
+    pub best_gflops: f64,
+    pub best_runtime_ms: f64,
+    /// Search steps this iteration + the step of convergence (Fig 5).
+    pub steps: usize,
+    pub steps_to_converge: usize,
+    /// Adaptive sampler's chosen k (0 for greedy).
+    pub sampler_k: usize,
+    /// Cumulative simulated clock after this iteration.
+    pub clock: Clock,
+}
+
+/// The outcome of tuning one task.
+#[derive(Debug, Clone)]
+pub struct TuneResult {
+    pub task_id: String,
+    pub method: String,
+    pub best_config: Option<Config>,
+    pub best_runtime_ms: f64,
+    pub best_gflops: f64,
+    pub n_measurements: usize,
+    pub clock: Clock,
+    pub iterations: Vec<IterationRecord>,
+    /// Trajectory snapshot of the final iteration (for Fig 3).
+    pub last_trajectory: Vec<Config>,
+}
+
+impl TuneResult {
+    pub fn opt_time_s(&self) -> f64 {
+        self.clock.total_s()
+    }
+
+    /// Mean steps-to-convergence across iterations (Fig 5 metric).
+    pub fn mean_steps_to_converge(&self) -> f64 {
+        if self.iterations.is_empty() {
+            return 0.0;
+        }
+        self.iterations.iter().map(|r| r.steps_to_converge as f64).sum::<f64>()
+            / self.iterations.len() as f64
+    }
+}
+
+fn make_searcher(
+    kind: SearcherKind,
+    runtime: Option<Arc<Runtime>>,
+    seed: u64,
+) -> Box<dyn Searcher> {
+    match kind {
+        SearcherKind::Sa => Box::new(SimulatedAnnealing::default()),
+        SearcherKind::Ga => Box::new(GeneticAlgorithm::default()),
+        SearcherKind::Random => Box::new(RandomSearch::default()),
+        SearcherKind::Rl => {
+            let rt = runtime.expect(
+                "RL searcher needs the PJRT runtime (artifacts/; run `make artifacts`)",
+            );
+            Box::new(PpoAgent::new(rt, seed as i32))
+        }
+    }
+}
+
+/// Tune one conv task with the given method. This is RELEASE's (and
+/// AutoTVM's) outer loop — Figure 4(a).
+pub fn tune(
+    task: &ConvTask,
+    measurer: &dyn Measurer,
+    method: MethodSpec,
+    cfg: &TunerConfig,
+    runtime: Option<Arc<Runtime>>,
+) -> TuneResult {
+    let space = DesignSpace::for_conv(task.layer);
+    let mut rng = Pcg32::seed_from(cfg.seed ^ 0x7e1ea5e);
+    let mut model = CostModel::new(cfg.seed);
+    let mut searcher = make_searcher(method.searcher, runtime, cfg.seed);
+    searcher.reset();
+    let coordinator = MeasureCoordinator::new(measurer, cfg.measure_workers);
+
+    let mut visited: HashSet<u64> = HashSet::new();
+    let mut best: Option<(Config, f64, f64)> = None; // (config, ms, gflops)
+    let mut iterations: Vec<IterationRecord> = Vec::new();
+    let mut clock = Clock::default();
+    let mut cum = 0usize;
+    let mut stall = 0usize;
+    let mut last_traj: Vec<Config> = Vec::new();
+    let measure_base = measurer.elapsed_s();
+    let model_base = model.spent_s.get();
+
+    let mut iter = 0usize;
+    while cum < cfg.max_trials {
+        iter += 1;
+
+        // 1. search: trajectory over the cost-model surface
+        let round = searcher.round(&space, &model, &visited, &mut rng);
+        clock.search_s += round.sim_time_s;
+        last_traj = round.trajectory.clone();
+
+        // 2. sample: pick which configs to really measure
+        let budget_left = cfg.max_trials - cum;
+        let (mut samples, k) = match method.sampler {
+            SamplerKind::Greedy => (
+                greedy_sample(
+                    &space,
+                    &round.trajectory,
+                    &round.scores,
+                    &visited,
+                    cfg.plan_size,
+                    crate::sampling::DEFAULT_EPSILON,
+                    &mut rng,
+                ),
+                0,
+            ),
+            SamplerKind::Adaptive => {
+                let r = adaptive_sample(&space, &round.trajectory, &visited, &mut rng);
+                let mut samples = r.samples;
+                let mut taken: HashSet<u64> =
+                    samples.iter().map(|c| space.flat_index(c)).collect();
+                // exploitation top-up: the highest-predicted unvisited
+                // trajectory points (the configs the compiler most wants
+                // to confirm on hardware)
+                for (c, _) in round.trajectory.iter().zip(&round.scores) {
+                    if samples.len() >= r.k + cfg.exploit_top {
+                        break;
+                    }
+                    let flat = space.flat_index(c);
+                    if !visited.contains(&flat) && taken.insert(flat) {
+                        samples.push(c.clone());
+                    }
+                }
+                // ε exploration: a few uniform-random configs keep the cost
+                // model from going blind outside the trajectory's basin
+                // (mirrors AutoTVM's ε-greedy exploration share)
+                let n_random = (samples.len() / 6).max(4);
+                let mut guard = 0;
+                let target = samples.len() + n_random;
+                while samples.len() < target && guard < 1000 {
+                    let c = space.random_config(&mut rng);
+                    let flat = space.flat_index(&c);
+                    if !visited.contains(&flat) && taken.insert(flat) {
+                        samples.push(c);
+                    }
+                    guard += 1;
+                }
+                (samples, r.k)
+            }
+        };
+        samples.truncate(budget_left);
+        if samples.is_empty() {
+            break;
+        }
+
+        // 3. measure on (simulated) hardware via the coordinator
+        let results: Vec<Measurement> = coordinator.measure(&space, &samples);
+        cum += results.len();
+        for m in &results {
+            visited.insert(space.flat_index(&m.config));
+            if let Some(ms) = m.runtime_ms {
+                if best.as_ref().map(|(_, b, _)| ms < *b).unwrap_or(true) {
+                    best = Some((m.config.clone(), ms, m.gflops));
+                }
+            }
+        }
+
+        // 4. update the cost model + feed the best configs back to the
+        //    searcher (warm starts / walker seeding)
+        let prev_best_gflops = iterations.last().map(|r| r.best_gflops).unwrap_or(0.0);
+        model.update(&space, &results);
+        {
+            let mut ranked: Vec<&Measurement> =
+                results.iter().filter(|m| m.ok()).collect();
+            ranked.sort_by(|a, b| b.gflops.partial_cmp(&a.gflops).unwrap());
+            let mut seeds: Vec<Config> =
+                ranked.iter().take(8).map(|m| m.config.clone()).collect();
+            if let Some((c, _, _)) = &best {
+                seeds.insert(0, c.clone());
+            }
+            searcher.seed(&seeds);
+        }
+
+        clock.measure_s = measurer.elapsed_s() - measure_base;
+        clock.model_s = model.spent_s.get() - model_base;
+
+        let (best_ms, best_gf) =
+            best.as_ref().map(|(_, ms, gf)| (*ms, *gf)).unwrap_or((f64::INFINITY, 0.0));
+        iterations.push(IterationRecord {
+            iter,
+            n_measured: results.len(),
+            cum_measured: cum,
+            best_gflops: best_gf,
+            best_runtime_ms: best_ms,
+            steps: round.steps,
+            steps_to_converge: round.steps_to_converge,
+            sampler_k: k,
+            clock,
+        });
+
+        // 5. convergence-based termination (RELEASE's policy). Two guards:
+        //    (a) fitness plateau for `patience` iterations, AND
+        //    (b) the cost model no longer predicts meaningfully better
+        //        configurations than the measured best (otherwise the
+        //        search is still on a promising scent — keep going, up to
+        //        a hard stall cap).
+        if let Some(es) = cfg.early_stop {
+            let improved = prev_best_gflops == 0.0
+                || best_gf > prev_best_gflops * (1.0 + es.min_improve);
+            stall = if improved { 0 } else { stall + results.len() };
+            let top_predicted = round.scores.first().copied().unwrap_or(0.0);
+            let model_satisfied = !model.is_trained()
+                || top_predicted <= (best_gf.max(1e-3)).ln() + 0.05;
+            let hard_cap = stall >= es.patience_meas * 3;
+            if iter >= cfg.min_iters
+                && stall >= es.patience_meas
+                && (model_satisfied || hard_cap)
+            {
+                break;
+            }
+        }
+    }
+
+    let (best_config, best_runtime_ms, best_gflops) = match best {
+        Some((c, ms, gf)) => (Some(c), ms, gf),
+        None => (None, f64::INFINITY, 0.0),
+    };
+    TuneResult {
+        task_id: task.id.clone(),
+        method: method.name(),
+        best_config,
+        best_runtime_ms,
+        best_gflops,
+        n_measurements: cum,
+        clock,
+        iterations,
+        last_trajectory: last_traj,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::SimMeasurer;
+    use crate::workload::zoo;
+
+    fn quick_cfg() -> TunerConfig {
+        TunerConfig { max_trials: 200, ..Default::default() }
+    }
+
+    #[test]
+    fn autotvm_tunes_a_task_and_uses_full_budget() {
+        let task = &zoo::resnet18()[5];
+        let meas = SimMeasurer::titan_xp(1);
+        let cfg = TunerConfig { max_trials: 200, early_stop: None, ..Default::default() };
+        let r = tune(task, &meas, MethodSpec::autotvm(), &cfg, None);
+        assert_eq!(r.n_measurements, 200);
+        assert!(r.best_gflops > 0.0);
+        assert!(r.best_runtime_ms.is_finite());
+        assert!(r.clock.measure_s > 0.0);
+        assert!(r.clock.total_s() > r.clock.measure_s);
+        assert!(!r.iterations.is_empty());
+        // cumulative measurements are monotone and match
+        let mut prev = 0;
+        for it in &r.iterations {
+            assert!(it.cum_measured > prev);
+            prev = it.cum_measured;
+        }
+        assert_eq!(prev, 200);
+    }
+
+    #[test]
+    fn sa_as_measures_fewer_per_iteration() {
+        let task = &zoo::resnet18()[5];
+        let meas_a = SimMeasurer::titan_xp(1);
+        let meas_b = SimMeasurer::titan_xp(1);
+        let cfg = quick_cfg();
+        let greedy = tune(task, &meas_a, MethodSpec::autotvm(), &cfg, None);
+        let adaptive = tune(task, &meas_b, MethodSpec::sa_as(), &cfg, None);
+        let g_per_iter = greedy.n_measurements as f64 / greedy.iterations.len() as f64;
+        let a_per_iter =
+            adaptive.n_measurements as f64 / adaptive.iterations.len() as f64;
+        assert!(
+            a_per_iter < g_per_iter,
+            "adaptive {a_per_iter}/iter vs greedy {g_per_iter}/iter"
+        );
+        // adaptive records its chosen k
+        assert!(adaptive.iterations.iter().all(|r| r.sampler_k >= 8));
+    }
+
+    #[test]
+    fn early_stop_cuts_measurements() {
+        let task = &zoo::alexnet()[3];
+        let meas_a = SimMeasurer::titan_xp(2);
+        let meas_b = SimMeasurer::titan_xp(2);
+        let full =
+            TunerConfig { max_trials: 800, early_stop: None, seed: 5, ..Default::default() };
+        let stop = TunerConfig { max_trials: 800, seed: 5, ..Default::default() };
+        let r_full = tune(task, &meas_a, MethodSpec::autotvm(), &full, None);
+        let r_stop = tune(task, &meas_b, MethodSpec::sa_as(), &stop, None);
+        assert!(r_stop.n_measurements < r_full.n_measurements);
+        assert!(r_stop.clock.total_s() < r_full.clock.total_s());
+        // and the found quality is in the same ballpark
+        assert!(r_stop.best_gflops > 0.55 * r_full.best_gflops);
+    }
+
+    #[test]
+    fn method_spec_parsing() {
+        assert_eq!(MethodSpec::parse("autotvm"), Some(MethodSpec::autotvm()));
+        assert_eq!(MethodSpec::parse("RELEASE"), Some(MethodSpec::release()));
+        assert_eq!(MethodSpec::parse("sa+as"), Some(MethodSpec::sa_as()));
+        assert_eq!(MethodSpec::parse("rl"), Some(MethodSpec::rl_only()));
+        assert!(MethodSpec::parse("nope").is_none());
+        assert_eq!(MethodSpec::release().name(), "RELEASE");
+    }
+
+    #[test]
+    fn deterministic_given_seeds() {
+        let task = &zoo::vgg16()[3];
+        let cfg = TunerConfig { max_trials: 120, seed: 9, ..Default::default() };
+        let a = tune(task, &SimMeasurer::titan_xp(3), MethodSpec::autotvm(), &cfg, None);
+        let b = tune(task, &SimMeasurer::titan_xp(3), MethodSpec::autotvm(), &cfg, None);
+        assert_eq!(a.best_runtime_ms, b.best_runtime_ms);
+        assert_eq!(a.n_measurements, b.n_measurements);
+    }
+}

@@ -1,0 +1,108 @@
+//! Minimal benchmark harness (criterion is not vendored; benches use
+//! `harness = false` and this module).
+//!
+//! `Bencher::iter` warms up, then runs timed batches until a wall-clock
+//! budget is spent, reporting median/mean ns per iteration.
+
+use std::time::{Duration, Instant};
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "bench {:<44} {:>12.1} ns/iter (median {:>12.1}, min {:>12.1}, n={})",
+            self.name, self.mean_ns, self.median_ns, self.min_ns, self.iters
+        );
+    }
+}
+
+pub struct Bencher {
+    warmup: Duration,
+    budget: Duration,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup: Duration::from_millis(200), budget: Duration::from_secs(2) }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher { warmup: Duration::from_millis(50), budget: Duration::from_millis(400) }
+    }
+
+    /// Time `f`, preventing the result from being optimized away via the
+    /// returned value sink.
+    pub fn iter<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> BenchResult {
+        // Warmup + calibrate batch size so one batch is ~1ms.
+        let start = Instant::now();
+        let mut calls = 0u64;
+        while start.elapsed() < self.warmup {
+            std::hint::black_box(f());
+            calls += 1;
+        }
+        let per_call = self.warmup.as_nanos() as f64 / calls.max(1) as f64;
+        let batch = ((1_000_000.0 / per_call).ceil() as u64).clamp(1, 1_000_000);
+
+        let mut samples = Vec::new();
+        let mut total_iters = 0u64;
+        let t0 = Instant::now();
+        while t0.elapsed() < self.budget && samples.len() < 200 {
+            let bstart = Instant::now();
+            for _ in 0..batch {
+                std::hint::black_box(f());
+            }
+            samples.push(bstart.elapsed().as_nanos() as f64 / batch as f64);
+            total_iters += batch;
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let result = BenchResult {
+            name: name.to_string(),
+            iters: total_iters,
+            mean_ns: mean,
+            median_ns: samples[samples.len() / 2],
+            min_ns: samples[0],
+        };
+        result.report();
+        result
+    }
+
+    /// Time a single long-running invocation (for end-to-end experiments).
+    pub fn once<T, F: FnOnce() -> T>(name: &str, f: F) -> (T, Duration) {
+        let t0 = Instant::now();
+        let out = f();
+        let dt = t0.elapsed();
+        println!("bench-once {:<39} {:>10.3} s", name, dt.as_secs_f64());
+        (out, dt)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bencher_measures_something_positive() {
+        let b = Bencher { warmup: Duration::from_millis(10), budget: Duration::from_millis(50) };
+        let r = b.iter("noop-ish", || std::hint::black_box(3u64).wrapping_mul(7));
+        assert!(r.mean_ns > 0.0);
+        assert!(r.iters > 0);
+        assert!(r.min_ns <= r.median_ns);
+    }
+
+    #[test]
+    fn once_returns_value_and_duration() {
+        let (v, dt) = Bencher::once("sum", || (0..1000u64).sum::<u64>());
+        assert_eq!(v, 499_500);
+        assert!(dt.as_nanos() > 0);
+    }
+}

@@ -1,0 +1,8 @@
+//! Shared infrastructure: RNG, statistics, parallel map, bench + property
+//! harnesses (the vendored crate set has no rand/rayon/criterion/proptest).
+
+pub mod bench;
+pub mod parallel;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,56 @@
+//! Tiny property-based-testing harness (proptest is not vendored).
+//!
+//! `forall(cases, seed, |rng| ...)` runs a closure over many RNG-derived
+//! inputs; on failure it panics with the case index + derived seed so the
+//! case can be replayed deterministically. No shrinking — failing seeds are
+//! already minimal to reproduce.
+
+use super::rng::Pcg32;
+
+/// Run `body` for `cases` deterministically-seeded cases. The body should
+/// draw its inputs from the provided RNG and assert its property.
+pub fn forall<F: FnMut(&mut Pcg32)>(cases: usize, seed: u64, mut body: F) {
+    for case in 0..cases {
+        let case_seed = seed
+            .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+            .wrapping_add(case as u64);
+        let mut rng = Pcg32::seed_from(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            body(&mut rng)
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property failed at case {case}/{cases} (replay seed {case_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        forall(50, 1, |rng| {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+            n += 1;
+        });
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed at case")]
+    fn failing_property_reports_case() {
+        forall(20, 2, |rng| {
+            assert!(rng.f64() < 0.5, "drew a large value");
+        });
+    }
+}

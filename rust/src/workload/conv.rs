@@ -1,0 +1,111 @@
+//! Convolution layer descriptions — the unit of tuning ("task" in AutoTVM
+//! terms). One task = one conv2d shape; the optimizing compiler tunes each
+//! task independently (paper Tables 3 & 4).
+
+/// A 2-D convolution workload (NCHW, batch 1 as in the paper's inference
+/// setting).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvLayer {
+    /// Batch size.
+    pub n: i64,
+    /// Input channels.
+    pub c: i64,
+    /// Input spatial height/width.
+    pub h: i64,
+    pub w: i64,
+    /// Output channels (number of filters).
+    pub k: i64,
+    /// Filter spatial size.
+    pub kh: i64,
+    pub kw: i64,
+    pub stride: i64,
+    pub pad: i64,
+}
+
+impl ConvLayer {
+    pub fn new(c: i64, h: i64, w: i64, k: i64, kh: i64, kw: i64, stride: i64, pad: i64) -> Self {
+        ConvLayer { n: 1, c, h, w, k, kh, kw, stride, pad }
+    }
+
+    /// Output spatial height.
+    pub fn out_h(&self) -> i64 {
+        (self.h + 2 * self.pad - self.kh) / self.stride + 1
+    }
+
+    /// Output spatial width.
+    pub fn out_w(&self) -> i64 {
+        (self.w + 2 * self.pad - self.kw) / self.stride + 1
+    }
+
+    /// Multiply-accumulate count for one forward pass.
+    pub fn macs(&self) -> i64 {
+        self.n * self.k * self.out_h() * self.out_w() * self.c * self.kh * self.kw
+    }
+
+    /// FLOPs (2 per MAC) — the numerator of the GFLOPS fitness metric.
+    pub fn flops(&self) -> f64 {
+        2.0 * self.macs() as f64
+    }
+
+    /// Bytes of unique data touched (input + filters + output), f32.
+    pub fn unique_bytes(&self) -> f64 {
+        let input = self.n * self.c * self.h * self.w;
+        let filt = self.k * self.c * self.kh * self.kw;
+        let out = self.n * self.k * self.out_h() * self.out_w();
+        4.0 * (input + filt + out) as f64
+    }
+
+    /// Arithmetic intensity (FLOPs per byte) — how compute-bound the layer is.
+    pub fn arithmetic_intensity(&self) -> f64 {
+        self.flops() / self.unique_bytes()
+    }
+}
+
+/// A named tuning task: a conv layer within a model.
+#[derive(Debug, Clone)]
+pub struct ConvTask {
+    /// e.g. "resnet18.c11"
+    pub id: String,
+    pub model: &'static str,
+    /// 1-based task index within the model (paper Table 4 convention).
+    pub index: usize,
+    pub layer: ConvLayer,
+    /// How many times this conv shape occurs in the network (end-to-end
+    /// inference time sums each task's best runtime x occurrences).
+    pub occurrences: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn output_dims_basic() {
+        // AlexNet conv1: 224x224x3, 64 filters 11x11 s4 p2 -> 55x55
+        let l = ConvLayer::new(3, 224, 224, 64, 11, 11, 4, 2);
+        assert_eq!(l.out_h(), 55);
+        assert_eq!(l.out_w(), 55);
+    }
+
+    #[test]
+    fn same_padding_keeps_dims() {
+        let l = ConvLayer::new(64, 56, 56, 64, 3, 3, 1, 1);
+        assert_eq!(l.out_h(), 56);
+        assert_eq!(l.out_w(), 56);
+    }
+
+    #[test]
+    fn macs_and_flops() {
+        let l = ConvLayer::new(64, 56, 56, 64, 3, 3, 1, 1);
+        let expect = 64i64 * 56 * 56 * 64 * 3 * 3;
+        assert_eq!(l.macs(), expect);
+        assert_eq!(l.flops(), 2.0 * expect as f64);
+    }
+
+    #[test]
+    fn intensity_is_positive_and_sane() {
+        let l = ConvLayer::new(256, 14, 14, 512, 3, 3, 1, 1);
+        let ai = l.arithmetic_intensity();
+        assert!(ai > 10.0 && ai < 10_000.0, "{ai}");
+    }
+}

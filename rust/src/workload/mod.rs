@@ -1,0 +1,7 @@
+//! Workloads: conv-layer tasks and the AlexNet / VGG-16 / ResNet-18 zoo
+//! (paper Tables 3 & 4).
+
+pub mod conv;
+pub mod zoo;
+
+pub use conv::{ConvLayer, ConvTask};

@@ -1,0 +1,163 @@
+//! The model zoo used in the paper's evaluation (Tables 3 & 4):
+//! AlexNet (5 conv tasks), VGG-16 (9), ResNet-18 (12), all at ImageNet
+//! resolution, batch 1, plus the L1–L8 layer subset of Table 4.
+
+use super::conv::{ConvLayer, ConvTask};
+
+fn task(
+    model: &'static str,
+    index: usize,
+    occurrences: usize,
+    c: i64,
+    hw: i64,
+    k: i64,
+    kern: i64,
+    stride: i64,
+    pad: i64,
+) -> ConvTask {
+    ConvTask {
+        id: format!("{model}.c{index}"),
+        model,
+        index,
+        layer: ConvLayer::new(c, hw, hw, k, kern, kern, stride, pad),
+        occurrences,
+    }
+}
+
+/// AlexNet (Krizhevsky et al., 2012): 5 distinct conv tasks.
+pub fn alexnet() -> Vec<ConvTask> {
+    vec![
+        task("alexnet", 1, 1, 3, 224, 64, 11, 4, 2),
+        task("alexnet", 2, 1, 64, 27, 192, 5, 1, 2),
+        task("alexnet", 3, 1, 192, 13, 384, 3, 1, 1),
+        task("alexnet", 4, 1, 384, 13, 256, 3, 1, 1),
+        task("alexnet", 5, 1, 256, 13, 256, 3, 1, 1),
+    ]
+}
+
+/// VGG-16 (Simonyan & Zisserman, 2014): 9 distinct conv shapes
+/// (13 conv layers share 9 unique shapes — AutoTVM tunes unique shapes).
+pub fn vgg16() -> Vec<ConvTask> {
+    vec![
+        task("vgg16", 1, 1, 3, 224, 64, 3, 1, 1),
+        task("vgg16", 2, 1, 64, 224, 64, 3, 1, 1),
+        task("vgg16", 3, 1, 64, 112, 128, 3, 1, 1),
+        task("vgg16", 4, 1, 128, 112, 128, 3, 1, 1),
+        task("vgg16", 5, 1, 128, 56, 256, 3, 1, 1),
+        task("vgg16", 6, 2, 256, 56, 256, 3, 1, 1),
+        task("vgg16", 7, 1, 256, 28, 512, 3, 1, 1),
+        task("vgg16", 8, 2, 512, 28, 512, 3, 1, 1),
+        task("vgg16", 9, 3, 512, 14, 512, 3, 1, 1),
+    ]
+}
+
+/// ResNet-18 (He et al., 2016): 12 distinct conv shapes as extracted by
+/// TVM's task extraction (3x3 main path + 1x1 downsample shortcuts).
+pub fn resnet18() -> Vec<ConvTask> {
+    vec![
+        task("resnet18", 1, 1, 3, 224, 64, 7, 2, 3),
+        task("resnet18", 2, 4, 64, 56, 64, 3, 1, 1),
+        task("resnet18", 3, 1, 64, 56, 64, 1, 1, 0),
+        task("resnet18", 4, 1, 64, 56, 128, 3, 2, 1),
+        task("resnet18", 5, 1, 64, 56, 128, 1, 2, 0),
+        task("resnet18", 6, 3, 128, 28, 128, 3, 1, 1),
+        task("resnet18", 7, 1, 128, 28, 256, 3, 2, 1),
+        task("resnet18", 8, 1, 128, 28, 256, 1, 2, 0),
+        task("resnet18", 9, 3, 256, 14, 256, 3, 1, 1),
+        task("resnet18", 10, 1, 256, 14, 512, 3, 2, 1),
+        task("resnet18", 11, 1, 256, 14, 512, 1, 2, 0),
+        task("resnet18", 12, 3, 512, 7, 512, 3, 1, 1),
+    ]
+}
+
+pub fn model_tasks(model: &str) -> Option<Vec<ConvTask>> {
+    match model {
+        "alexnet" => Some(alexnet()),
+        "vgg16" | "vgg-16" => Some(vgg16()),
+        "resnet18" | "resnet-18" => Some(resnet18()),
+        _ => None,
+    }
+}
+
+pub const MODELS: [&str; 3] = ["alexnet", "vgg16", "resnet18"];
+
+/// The L1–L8 layer subset of Table 4 (model, 1-based task index).
+pub fn layer_table() -> Vec<(&'static str, ConvTask)> {
+    let a = alexnet();
+    let v = vgg16();
+    let r = resnet18();
+    vec![
+        ("L1", a[0].clone()),  // AlexNet task 1
+        ("L2", a[3].clone()),  // AlexNet task 4
+        ("L3", v[0].clone()),  // VGG-16 task 1
+        ("L4", v[1].clone()),  // VGG-16 task 2
+        ("L5", v[3].clone()),  // VGG-16 task 4
+        ("L6", r[5].clone()),  // ResNet-18 task 6
+        ("L7", r[8].clone()),  // ResNet-18 task 9
+        ("L8", r[10].clone()), // ResNet-18 task 11
+    ]
+}
+
+/// Non-conv residue (pooling, fc, elementwise, softmax) added to end-to-end
+/// inference time, in milliseconds — small constants the tuner doesn't touch.
+pub fn non_conv_residue_ms(model: &str) -> f64 {
+    match model {
+        "alexnet" => 0.11,  // 3 fc layers dominate the residue
+        "vgg16" => 0.32,    // huge fc6/fc7
+        "resnet18" => 0.08, // gap + fc
+        _ => 0.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn task_counts_match_table3() {
+        assert_eq!(alexnet().len(), 5);
+        assert_eq!(vgg16().len(), 9);
+        assert_eq!(resnet18().len(), 12);
+    }
+
+    #[test]
+    fn resnet18_occurrence_weighted_layer_count() {
+        // 12 unique shapes cover the 21 conv layers of resnet18_v1
+        // (conv1 + 8 blocks x 2 + 4 projection shortcuts)
+        let total: usize = resnet18().iter().map(|t| t.occurrences).sum();
+        assert_eq!(total, 21);
+    }
+
+    #[test]
+    fn vgg16_occurrences_cover_13_convs() {
+        let total: usize = vgg16().iter().map(|t| t.occurrences).sum();
+        assert_eq!(total, 13);
+    }
+
+    #[test]
+    fn layer_table_matches_table4() {
+        let lt = layer_table();
+        assert_eq!(lt.len(), 8);
+        assert_eq!(lt[0].1.model, "alexnet");
+        assert_eq!(lt[0].1.index, 1);
+        assert_eq!(lt[1].1.index, 4);
+        assert_eq!(lt[5].1.model, "resnet18");
+        assert_eq!(lt[5].1.index, 6);
+        assert_eq!(lt[7].1.index, 11); // the Fig 7 layer
+    }
+
+    #[test]
+    fn all_shapes_have_valid_output_dims() {
+        for t in alexnet().into_iter().chain(vgg16()).chain(resnet18()) {
+            assert!(t.layer.out_h() > 0 && t.layer.out_w() > 0, "{}", t.id);
+            assert!(t.layer.macs() > 0, "{}", t.id);
+        }
+    }
+
+    #[test]
+    fn model_lookup() {
+        assert!(model_tasks("resnet18").is_some());
+        assert!(model_tasks("vgg-16").is_some());
+        assert!(model_tasks("inception").is_none());
+    }
+}

@@ -1,0 +1,122 @@
+//! Cross-module integration tests: the full tuner stack over the simulated
+//! hardware, the four evaluation arms, determinism, and clock accounting.
+
+use release::sim::{Measurer, SimMeasurer};
+use release::space::DesignSpace;
+use release::tuner::{e2e::tune_model, tune, MethodSpec, TunerConfig};
+use release::workload::zoo;
+
+fn quick(seed: u64) -> TunerConfig {
+    TunerConfig { max_trials: 160, seed, ..Default::default() }
+}
+
+#[test]
+fn all_non_rl_arms_tune_the_same_task() {
+    let task = &zoo::resnet18()[5];
+    for name in ["autotvm", "sa+as", "ga", "random"] {
+        let method = MethodSpec::parse(name).unwrap();
+        let meas = SimMeasurer::titan_xp(1);
+        let r = tune(task, &meas, method, &quick(1), None);
+        assert!(r.best_gflops > 0.0, "{name} found nothing");
+        assert!(r.n_measurements <= 160, "{name} overspent");
+        assert!(r.best_runtime_ms.is_finite());
+        assert!(r.clock.measure_s > 0.0);
+    }
+}
+
+#[test]
+fn guided_search_beats_pure_random_on_average() {
+    // With the same measurement budget, AutoTVM (model-guided SA) should
+    // beat random search on most seeds — the premise of autotuning.
+    let task = &zoo::vgg16()[6];
+    let mut wins = 0;
+    for seed in 0..5u64 {
+        let meas_a = SimMeasurer::titan_xp(seed);
+        let meas_b = SimMeasurer::titan_xp(seed);
+        let cfg = TunerConfig { max_trials: 256, early_stop: None, seed, ..Default::default() };
+        let guided = tune(task, &meas_a, MethodSpec::autotvm(), &cfg, None);
+        let random =
+            tune(task, &meas_b, MethodSpec::parse("random").unwrap(), &cfg, None);
+        if guided.best_gflops >= random.best_gflops {
+            wins += 1;
+        }
+    }
+    assert!(wins >= 3, "guided won only {wins}/5");
+}
+
+#[test]
+fn clock_is_monotone_and_dominated_by_measurement() {
+    let task = &zoo::alexnet()[2];
+    let meas = SimMeasurer::titan_xp(3);
+    let cfg = TunerConfig { max_trials: 256, early_stop: None, seed: 3, ..Default::default() };
+    let r = tune(task, &meas, MethodSpec::autotvm(), &cfg, None);
+    let mut prev = 0.0;
+    for it in &r.iterations {
+        assert!(it.clock.total_s() >= prev);
+        prev = it.clock.total_s();
+    }
+    let frac = r.clock.measure_fraction();
+    assert!(frac > 0.5, "measurement fraction {frac}");
+    // simulated device accounting matches the tuner's view
+    assert!((meas.elapsed_s() - r.clock.measure_s).abs() < 1e-6);
+}
+
+#[test]
+fn adaptive_sampling_reduces_measurements_on_equal_convergence_policy() {
+    let task = &zoo::resnet18()[8];
+    let mut greedy_total = 0usize;
+    let mut adaptive_total = 0usize;
+    for seed in 0..3u64 {
+        let cfg = TunerConfig { max_trials: 512, seed, ..Default::default() };
+        let m1 = SimMeasurer::titan_xp(seed + 10);
+        let m2 = SimMeasurer::titan_xp(seed + 10);
+        // both arms use the same convergence policy; only the sampler differs
+        greedy_total += tune(task, &m1, MethodSpec::autotvm(), &cfg, None).n_measurements;
+        adaptive_total += tune(task, &m2, MethodSpec::sa_as(), &cfg, None).n_measurements;
+    }
+    assert!(
+        adaptive_total < greedy_total,
+        "adaptive {adaptive_total} !< greedy {greedy_total}"
+    );
+}
+
+#[test]
+fn e2e_model_tuning_aggregates_consistently() {
+    let meas = SimMeasurer::titan_xp(4);
+    let cfg = TunerConfig { max_trials: 96, seed: 4, ..Default::default() };
+    let r = tune_model("alexnet", &meas, MethodSpec::sa_as(), &cfg, None);
+    assert_eq!(r.tasks.len(), 5);
+    let sum_s: f64 = r.tasks.iter().map(|t| t.clock.total_s()).sum();
+    assert!((r.opt_time_s - sum_s).abs() < 1e-9);
+    assert!(r.inference_ms > 0.0);
+    // every task produced a valid config in its own space
+    for (t, task) in r.tasks.iter().zip(zoo::alexnet()) {
+        let space = DesignSpace::for_conv(task.layer);
+        let c = t.best_config.as_ref().expect("has best");
+        assert!(space.flat_index(c) < space.size());
+    }
+}
+
+#[test]
+fn tuning_is_reproducible_across_runs() {
+    let task = &zoo::vgg16()[1];
+    let run = || {
+        let meas = SimMeasurer::titan_xp(99);
+        tune(task, &meas, MethodSpec::sa_as(), &quick(7), None)
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.best_runtime_ms, b.best_runtime_ms);
+    assert_eq!(a.n_measurements, b.n_measurements);
+    assert_eq!(a.iterations.len(), b.iterations.len());
+}
+
+#[test]
+fn different_measurement_seeds_change_results() {
+    // the simulated "hardware" has measurement noise: a different seed is a
+    // different day on the machine
+    let task = &zoo::vgg16()[1];
+    let a = tune(task, &SimMeasurer::titan_xp(1), MethodSpec::sa_as(), &quick(7), None);
+    let b = tune(task, &SimMeasurer::titan_xp(2), MethodSpec::sa_as(), &quick(7), None);
+    assert_ne!(a.best_runtime_ms, b.best_runtime_ms);
+}
