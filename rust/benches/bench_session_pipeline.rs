@@ -1,0 +1,52 @@
+//! Session-engine shape check: the pipelined multi-task schedule must cut
+//! e2e wall-clock well below the serial sum without changing what gets
+//! measured.
+//!
+//! Serial baseline: `e2e::tune_tasks` on ResNet-18 (SA + adaptive
+//! sampling, no artifacts needed). Pipelined: the same tuning policy
+//! through `tuner::session` at task_parallelism 4, device_slots 4,
+//! pipeline depth 2.
+//!
+//! `RELEASE_QUICK=1 cargo bench --bench bench_session_pipeline` for a fast
+//! pass.
+
+use release::sim::SimMeasurer;
+use release::tuner::e2e::tune_model;
+use release::tuner::session::{tune_model_session, SessionConfig};
+use release::tuner::{MethodSpec, TunerConfig};
+use release::util::bench::Bencher;
+
+fn main() {
+    let quick = std::env::var("RELEASE_QUICK").map(|v| v != "0").unwrap_or(false);
+    let trials = if quick { 96 } else { 400 };
+    let cfg = TunerConfig { max_trials: trials, seed: 5, ..Default::default() };
+
+    let meas_serial = SimMeasurer::titan_xp(17);
+    let (serial, _) = Bencher::once("serial tune_model(resnet18)", || {
+        tune_model("resnet18", &meas_serial, MethodSpec::sa_as(), &cfg, None)
+    });
+
+    let meas_pipe = SimMeasurer::titan_xp(17);
+    let scfg = SessionConfig::pipelined(cfg, 4);
+    let (pipe, _) = Bencher::once("pipelined session(resnet18, tp=4, depth=2)", || {
+        tune_model_session("resnet18", &meas_pipe, MethodSpec::sa_as(), &scfg, None)
+    });
+
+    let speedup = serial.opt_time_s / pipe.wall_s;
+    println!(
+        "\nSHAPE CHECK — serial sum {:.1} simulated min; pipelined wall {:.1} min \
+         ({speedup:.2}x)",
+        serial.opt_time_s / 60.0,
+        pipe.wall_s / 60.0
+    );
+    println!(
+        "measurements: serial {} vs pipelined {}",
+        serial.n_measurements, pipe.n_measurements
+    );
+    assert!(
+        speedup >= 1.5,
+        "pipelined session must be >= 1.5x below the serial sum, got {speedup:.2}x"
+    );
+    let nm = pipe.n_measurements as f64 / serial.n_measurements as f64;
+    assert!(nm > 0.5 && nm < 1.5, "measurement spend drifted: {nm:.2}x");
+}

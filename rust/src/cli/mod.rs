@@ -9,7 +9,8 @@
 
 use crate::report::{self, ExperimentConfig};
 use crate::sim::SimMeasurer;
-use crate::tuner::{tune, e2e::tune_model, MethodSpec, TunerConfig};
+use crate::tuner::session::{tune_model_session, SessionConfig};
+use crate::tuner::{tune, MethodSpec, TunerConfig};
 use crate::workload::zoo;
 use std::collections::HashMap;
 
@@ -27,6 +28,14 @@ TUNE OPTIONS:
   --trials N        measurement budget per task    (default: 1000)
   --seed N          RNG seed                       (default: 0)
   --no-early-stop   run the full budget
+
+SESSION OPTIONS (model tuning):
+  --task-parallelism N   concurrent task tuner loops       (default: 1)
+  --device-slots N       parallel device measurement slots (default: task-parallelism)
+  --pipeline-depth N     1 = serial, 2 = overlap search with measurement
+                         (default: 2 when task-parallelism > 1, else 1)
+  --budget-shares W,...  per-task trial shares, cycled over tasks and
+                         normalized to keep the total pool (default: even)
 ";
 
 /// Parse `--key value` pairs and positional args.
@@ -124,6 +133,35 @@ fn tuner_config(flags: &HashMap<String, String>) -> TunerConfig {
     cfg
 }
 
+fn session_config(flags: &HashMap<String, String>, tuner: TunerConfig) -> SessionConfig {
+    let parse = |key: &str| -> Option<usize> {
+        flags.get(key).map(|v| {
+            v.parse().unwrap_or_else(|_| panic!("--{key} must be an integer"))
+        })
+    };
+    let task_parallelism = parse("task-parallelism").unwrap_or(1).max(1);
+    let device_slots = parse("device-slots").unwrap_or(task_parallelism).max(1);
+    let pipeline_depth = parse("pipeline-depth")
+        .unwrap_or(if task_parallelism > 1 { 2 } else { 1 })
+        .max(1);
+    let budget_shares = flags.get("budget-shares").map(|v| {
+        v.split(',')
+            .map(|s| {
+                s.trim().parse::<f64>().unwrap_or_else(|_| {
+                    panic!("--budget-shares must be comma-separated numbers")
+                })
+            })
+            .collect()
+    });
+    SessionConfig {
+        tuner,
+        task_parallelism,
+        device_slots,
+        pipeline_depth,
+        budget_shares,
+    }
+}
+
 fn cmd_tune(flags: &HashMap<String, String>) -> i32 {
     let method = match MethodSpec::parse(
         flags.get("method").map(String::as_str).unwrap_or("release"),
@@ -172,11 +210,19 @@ fn cmd_tune(flags: &HashMap<String, String>) -> i32 {
         eprintln!("unknown --model {model}");
         return 2;
     }
-    println!("tuning {model} end-to-end with {}", method.name());
-    let r = tune_model(model, &meas, method, &cfg, runtime);
+    let scfg = session_config(flags, cfg);
+    println!(
+        "tuning {model} end-to-end with {} (task-parallelism {}, device slots {}, \
+         pipeline depth {})",
+        method.name(),
+        scfg.task_parallelism,
+        scfg.device_slots,
+        scfg.pipeline_depth
+    );
+    let r = tune_model_session(model, &meas, method, &scfg, runtime);
     let mut table = report::Table::new(
         &format!("{model} via {}", method.name()),
-        &["task", "best ms", "GFLOPS", "measurements", "opt min"],
+        &["task", "best ms", "GFLOPS", "measurements", "opt min", "wall min"],
     );
     for t in &r.tasks {
         table.row(vec![
@@ -185,12 +231,16 @@ fn cmd_tune(flags: &HashMap<String, String>) -> i32 {
             format!("{:.0}", t.best_gflops),
             t.n_measurements.to_string(),
             format!("{:.1}", t.clock.total_s() / 60.0),
+            format!("{:.1}", t.clock.wall_s / 60.0),
         ]);
     }
     table.print();
     println!(
-        "total: {:.2} simulated hours, inference {:.4} ms",
+        "total: {:.2} simulated hours serial, {:.2} h wall ({:.2}x schedule speedup), \
+         inference {:.4} ms",
         r.opt_time_hours(),
+        r.wall_hours(),
+        r.wall_speedup(),
         r.inference_ms
     );
     0
@@ -289,5 +339,27 @@ mod tests {
     #[test]
     fn empty_args_prints_usage() {
         assert_eq!(run(&[]), 2);
+    }
+
+    #[test]
+    fn session_flags_default_and_derive() {
+        let defaults = session_config(&HashMap::new(), TunerConfig::default());
+        assert_eq!(defaults.task_parallelism, 1);
+        assert_eq!(defaults.device_slots, 1);
+        assert_eq!(defaults.pipeline_depth, 1);
+
+        let mut flags = HashMap::new();
+        flags.insert("task-parallelism".to_string(), "4".to_string());
+        let s = session_config(&flags, TunerConfig::default());
+        assert_eq!(s.task_parallelism, 4);
+        assert_eq!(s.device_slots, 4); // follows task parallelism
+        assert_eq!(s.pipeline_depth, 2); // pipelining on once parallel
+
+        flags.insert("device-slots".to_string(), "2".to_string());
+        flags.insert("pipeline-depth".to_string(), "1".to_string());
+        flags.insert("budget-shares".to_string(), "2, 1,1".to_string());
+        let s = session_config(&flags, TunerConfig::default());
+        assert_eq!((s.device_slots, s.pipeline_depth), (2, 1));
+        assert_eq!(s.budget_shares, Some(vec![2.0, 1.0, 1.0]));
     }
 }

@@ -10,7 +10,35 @@
 use crate::sim::{Measurement, Measurer};
 use crate::space::{Config, DesignSpace};
 use std::sync::mpsc;
-use std::sync::Mutex;
+use std::sync::{Condvar, Mutex};
+
+/// Counting semaphore (std-only): globally bounds how many chunks are on
+/// the measurer at once, across every concurrent `measure` call. This is
+/// what makes one coordinator shared by many task tuners a *bounded*
+/// device-worker pool rather than a per-call one.
+struct Gate {
+    permits: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl Gate {
+    fn new(permits: usize) -> Self {
+        Gate { permits: Mutex::new(permits.max(1)), cv: Condvar::new() }
+    }
+
+    fn acquire(&self) {
+        let mut p = self.permits.lock().unwrap();
+        while *p == 0 {
+            p = self.cv.wait(p).unwrap();
+        }
+        *p -= 1;
+    }
+
+    fn release(&self) {
+        *self.permits.lock().unwrap() += 1;
+        self.cv.notify_one();
+    }
+}
 
 /// A worker-pool front-end over any `Measurer`.
 pub struct MeasureCoordinator<'m> {
@@ -20,11 +48,19 @@ pub struct MeasureCoordinator<'m> {
     chunk: usize,
     /// Total jobs dispatched (telemetry).
     jobs: Mutex<usize>,
+    /// Global bound on in-flight jobs across all concurrent callers.
+    gate: Gate,
 }
 
 impl<'m> MeasureCoordinator<'m> {
     pub fn new(measurer: &'m dyn Measurer, workers: usize) -> Self {
-        MeasureCoordinator { measurer, workers: workers.max(1), chunk: 8, jobs: Mutex::new(0) }
+        MeasureCoordinator {
+            measurer,
+            workers: workers.max(1),
+            chunk: 8,
+            jobs: Mutex::new(0),
+            gate: Gate::new(workers),
+        }
     }
 
     pub fn with_chunk(mut self, chunk: usize) -> Self {
@@ -39,18 +75,35 @@ impl<'m> MeasureCoordinator<'m> {
     /// Measure a batch, fanning chunks out to workers; results come back in
     /// submission order regardless of completion order.
     pub fn measure(&self, space: &DesignSpace, configs: &[Config]) -> Vec<Measurement> {
+        self.measure_timed(space, configs).0
+    }
+
+    /// Like `measure`, but also return the simulated device seconds this
+    /// batch cost — the per-batch attribution the tuner's clock (and the
+    /// session engine's wall model) account with, which elapsed-clock deltas
+    /// cannot provide once several tasks share one measurer.
+    pub fn measure_timed(
+        &self,
+        space: &DesignSpace,
+        configs: &[Config],
+    ) -> (Vec<Measurement>, f64) {
         if configs.is_empty() {
-            return Vec::new();
+            return (Vec::new(), 0.0);
         }
         let chunks: Vec<(usize, &[Config])> =
             configs.chunks(self.chunk).enumerate().collect();
-        *self.jobs.lock().unwrap() += chunks.len();
 
         if self.workers == 1 || chunks.len() == 1 {
-            return self.measurer.measure_batch(space, configs);
+            // single dispatch: the whole batch goes down as one job
+            *self.jobs.lock().unwrap() += 1;
+            self.gate.acquire();
+            let out = self.measurer.measure_batch_timed(space, configs);
+            self.gate.release();
+            return out;
         }
+        *self.jobs.lock().unwrap() += chunks.len();
 
-        let (tx, rx) = mpsc::channel::<(usize, Vec<Measurement>)>();
+        let (tx, rx) = mpsc::channel::<(usize, Vec<Measurement>, f64)>();
         let next = Mutex::new(0usize);
         std::thread::scope(|scope| {
             for _ in 0..self.workers.min(chunks.len()) {
@@ -69,8 +122,10 @@ impl<'m> MeasureCoordinator<'m> {
                         break;
                     }
                     let (pos, slice) = chunks[idx];
-                    let out = self.measurer.measure_batch(space, slice);
-                    if tx.send((pos, out)).is_err() {
+                    self.gate.acquire();
+                    let (out, secs) = self.measurer.measure_batch_timed(space, slice);
+                    self.gate.release();
+                    if tx.send((pos, out, secs)).is_err() {
                         break;
                     }
                 });
@@ -78,11 +133,20 @@ impl<'m> MeasureCoordinator<'m> {
         });
         drop(tx);
 
-        let mut buckets: Vec<Option<Vec<Measurement>>> = vec![None; chunks.len()];
-        for (pos, out) in rx {
-            buckets[pos] = Some(out);
+        let mut buckets: Vec<Option<(Vec<Measurement>, f64)>> = vec![None; chunks.len()];
+        for (pos, out, secs) in rx {
+            buckets[pos] = Some((out, secs));
         }
-        buckets.into_iter().flat_map(|b| b.expect("worker dropped a chunk")).collect()
+        // sum seconds in submission order so the total is bit-reproducible
+        // regardless of worker completion order
+        let mut total_secs = 0.0;
+        let mut all = Vec::with_capacity(configs.len());
+        for b in buckets {
+            let (out, secs) = b.expect("worker dropped a chunk");
+            total_secs += secs;
+            all.extend(out);
+        }
+        (all, total_secs)
     }
 }
 
@@ -135,6 +199,99 @@ mod tests {
         let coord = MeasureCoordinator::new(&meas, 1);
         let out = coord.measure(&space, &configs);
         assert_eq!(out.len(), configs.len());
+    }
+
+    #[test]
+    fn fast_path_counts_one_job() {
+        // regression: the single-dispatch fast path used to count one job
+        // per chunk, over-reporting jobs_dispatched with workers == 1
+        let (meas, space, configs) = setup();
+        let coord = MeasureCoordinator::new(&meas, 1).with_chunk(8);
+        let _ = coord.measure(&space, &configs); // 67 configs, one direct call
+        assert_eq!(coord.jobs_dispatched(), 1);
+        // a batch that fits one chunk is also a single job, even with a pool
+        let coord2 = MeasureCoordinator::new(&meas, 4).with_chunk(128);
+        let _ = coord2.measure(&space, &configs);
+        assert_eq!(coord2.jobs_dispatched(), 1);
+    }
+
+    #[test]
+    fn shared_pool_bounds_concurrency_across_callers() {
+        // the bound that makes one coordinator a *global* device-worker
+        // pool: two tasks measuring at once must never exceed `workers`
+        // concurrent jobs on the measurer
+        struct ProbeMeasurer {
+            active: Mutex<usize>,
+            peak: Mutex<usize>,
+        }
+        impl Measurer for ProbeMeasurer {
+            fn measure_batch_timed(
+                &self,
+                _space: &DesignSpace,
+                configs: &[Config],
+            ) -> (Vec<Measurement>, f64) {
+                let now = {
+                    let mut a = self.active.lock().unwrap();
+                    *a += 1;
+                    *a
+                };
+                {
+                    let mut p = self.peak.lock().unwrap();
+                    *p = (*p).max(now);
+                }
+                std::thread::sleep(std::time::Duration::from_millis(2));
+                let out = configs
+                    .iter()
+                    .map(|c| Measurement {
+                        config: c.clone(),
+                        runtime_ms: Some(1.0),
+                        error: None,
+                        gflops: 1.0,
+                    })
+                    .collect();
+                *self.active.lock().unwrap() -= 1;
+                (out, configs.len() as f64)
+            }
+            fn elapsed_s(&self) -> f64 {
+                0.0
+            }
+            fn count(&self) -> usize {
+                0
+            }
+        }
+
+        let probe = ProbeMeasurer { active: Mutex::new(0), peak: Mutex::new(0) };
+        let (_, space, configs) = setup();
+        let coord = MeasureCoordinator::new(&probe, 2).with_chunk(4);
+        std::thread::scope(|scope| {
+            for _ in 0..3 {
+                let coord = &coord;
+                let space = &space;
+                let configs = &configs;
+                scope.spawn(move || {
+                    let _ = coord.measure(space, configs);
+                });
+            }
+        });
+        let peak = *probe.peak.lock().unwrap();
+        assert!(peak <= 2, "pool bound violated: peak concurrency {peak}");
+        assert!(peak >= 1);
+    }
+
+    #[test]
+    fn timed_measure_attributes_device_seconds() {
+        let (meas, space, configs) = setup();
+        let solo = SimMeasurer::titan_xp(0);
+        let (_, serial_secs) = solo.measure_batch_timed(&space, &configs);
+        let coord = MeasureCoordinator::new(&meas, 8).with_chunk(4);
+        let before = meas.elapsed_s();
+        let (out, secs) = coord.measure_timed(&space, &configs);
+        assert_eq!(out.len(), configs.len());
+        // chunked dispatch attributes exactly the device seconds spent...
+        assert!((meas.elapsed_s() - before - secs).abs() < 1e-9);
+        // ...which equal the serial cost (parallel dispatch is free, the
+        // device clock is not)
+        assert!((secs - serial_secs).abs() < 1e-9);
     }
 
     #[test]

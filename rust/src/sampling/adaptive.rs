@@ -8,6 +8,7 @@
 //! the trajectory — removing redundancy while maximizing the information
 //! H_Θ of the sample set.
 
+use super::fill_random_unvisited;
 use super::kmeans::{kmeans, nearest_points};
 use crate::space::{Config, DesignSpace};
 use crate::util::rng::Pcg32;
@@ -117,6 +118,15 @@ pub fn adaptive_sample(
         }
         taken.insert(flat);
         samples.push(cand);
+    }
+
+    if samples.is_empty() {
+        // Every centroid was already visited and every mode-perturbation
+        // collided. Returning nothing would make the tuner abandon its
+        // remaining measurement budget, so fall back to unvisited
+        // uniform-random configs (the guard keeps a truly exhausted space
+        // from spinning; only then may the result stay empty).
+        fill_random_unvisited(space, visited, &mut taken, k, 4096, rng, &mut samples);
     }
 
     AdaptiveSampleResult { samples, k, replaced }
@@ -231,6 +241,45 @@ mod tests {
         let m = mode_config(&s, &[a, b.clone(), b, c]);
         assert_eq!(m.idx[0], 1); // 1 appears twice, 3 once, 0 once
         assert_eq!(m.idx[1], 1);
+    }
+
+    #[test]
+    fn empty_sample_falls_back_to_random_unvisited() {
+        use crate::space::{Knob, KnobKind};
+        use crate::workload::ConvLayer;
+        // A deliberately tiny 4-point space (two binary knobs): the lone
+        // centroid is visited and every single-knob perturbation of the mode
+        // collides with the visited set, which used to return an empty
+        // sample set and make the tuner abandon its remaining budget.
+        let layer = ConvLayer::new(4, 8, 8, 4, 1, 1, 1, 0);
+        let kinds = [
+            KnobKind::TileF,
+            KnobKind::TileY,
+            KnobKind::TileX,
+            KnobKind::TileRC,
+            KnobKind::TileRY,
+            KnobKind::TileRX,
+            KnobKind::AutoUnrollMaxStep,
+            KnobKind::UnrollExplicit,
+        ];
+        let knobs: Vec<Knob> = kinds
+            .iter()
+            .enumerate()
+            .map(|(d, &k)| Knob::new(k, if d < 2 { vec![0, 1] } else { vec![0] }))
+            .collect();
+        let s = DesignSpace { layer, knobs };
+        let a = Config::new(vec![0; 8]);
+        let mut b = a.clone();
+        b.idx[1] = 1;
+        let mut c = a.clone();
+        c.idx[0] = 1;
+        let visited: HashSet<u64> =
+            [&a, &b, &c].iter().map(|cc| s.flat_index(cc)).collect();
+        let traj = vec![a; 16];
+        let mut rng = Pcg32::seed_from(7);
+        let r = adaptive_sample(&s, &traj, &visited, &mut rng);
+        assert_eq!(r.samples.len(), 1, "exactly one unvisited config exists");
+        assert!(!visited.contains(&s.flat_index(&r.samples[0])));
     }
 
     #[test]

@@ -2,6 +2,7 @@
 //! cost model's predicted scores (Chen et al., 2018b). The paper's Fig 6
 //! compares adaptive sampling against exactly this policy.
 
+use super::fill_random_unvisited;
 use crate::space::{Config, DesignSpace};
 use crate::util::rng::Pcg32;
 use std::collections::HashSet;
@@ -41,15 +42,8 @@ pub fn greedy_sample(
         out.push(trajectory[i].clone());
     }
     // ε exploration: uniform random unvisited configs from the full space
-    let mut guard = 0;
-    while out.len() < plan_size && guard < plan_size * 100 {
-        let c = space.random_config(rng);
-        let flat = space.flat_index(&c);
-        if !visited.contains(&flat) && taken.insert(flat) {
-            out.push(c);
-        }
-        guard += 1;
-    }
+    let want = plan_size - out.len();
+    fill_random_unvisited(space, visited, &mut taken, want, plan_size * 100, rng, &mut out);
     out
 }
 

@@ -11,6 +11,65 @@ pub use adaptive::{adaptive_sample, mode_config, AdaptiveSampleResult};
 pub use greedy::{greedy_sample, DEFAULT_EPSILON, DEFAULT_PLAN_SIZE};
 pub use kmeans::{kmeans, nearest_points, KMeansResult};
 
+use crate::space::{Config, DesignSpace};
+use crate::util::rng::Pcg32;
+use std::collections::HashSet;
+
+/// Push up to `want` uniform-random configs onto `out`, skipping anything in
+/// `visited` or `taken` (accepted configs are added to `taken`). Bounded by
+/// `guard` draws so a nearly-exhausted space cannot spin forever. This is
+/// the shared exploration / fallback pool of both samplers and the tuner's
+/// ε-exploration share.
+pub fn fill_random_unvisited(
+    space: &DesignSpace,
+    visited: &HashSet<u64>,
+    taken: &mut HashSet<u64>,
+    want: usize,
+    guard: usize,
+    rng: &mut Pcg32,
+    out: &mut Vec<Config>,
+) {
+    let target = out.len() + want;
+    let mut draws = 0;
+    while out.len() < target && draws < guard {
+        let c = space.random_config(rng);
+        let flat = space.flat_index(&c);
+        if !visited.contains(&flat) && taken.insert(flat) {
+            out.push(c);
+        }
+        draws += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::zoo;
+
+    #[test]
+    fn fill_random_unvisited_respects_sets_and_guard() {
+        let space = DesignSpace::for_conv(zoo::alexnet()[2].layer);
+        let mut rng = Pcg32::seed_from(0);
+        let mut taken = HashSet::new();
+        let mut out = Vec::new();
+        // pre-visit a handful of configs; draws must avoid them
+        let visited: HashSet<u64> =
+            (0..32).map(|_| space.flat_index(&space.random_config(&mut rng))).collect();
+        fill_random_unvisited(&space, &visited, &mut taken, 16, 1000, &mut rng, &mut out);
+        assert_eq!(out.len(), 16);
+        let mut seen = HashSet::new();
+        for c in &out {
+            let f = space.flat_index(c);
+            assert!(!visited.contains(&f));
+            assert!(seen.insert(f), "duplicate config");
+            assert!(taken.contains(&f));
+        }
+        // a zero guard adds nothing
+        fill_random_unvisited(&space, &visited, &mut taken, 8, 0, &mut rng, &mut out);
+        assert_eq!(out.len(), 16);
+    }
+}
+
 /// Which sampler a tuner uses (paper ablations: Greedy vs Adaptive).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SamplerKind {

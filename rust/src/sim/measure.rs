@@ -62,6 +62,15 @@ impl MeasureCost {
 }
 
 /// Simulated optimization clock, split the way Figure 2 reports it.
+///
+/// `measure_s`, `search_s` and `model_s` are *resource* seconds: they sum
+/// what the device and the host each spent, regardless of overlap, so
+/// `total_s()` is the serial (un-pipelined) cost and `measure_s` stays
+/// device-serial. `wall_s` is the *elapsed* seconds under the schedule that
+/// actually ran: for the serial tuner it equals `total_s()`; the pipelined
+/// session engine (`tuner::session`) overlaps search with measurement and
+/// runs tasks concurrently, so there `wall_s < total_s()` — overlapped
+/// search time is counted once against the wall instead of twice.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct Clock {
     /// Seconds spent measuring on (simulated) hardware.
@@ -70,9 +79,12 @@ pub struct Clock {
     pub search_s: f64,
     /// Seconds spent fitting / querying the cost model.
     pub model_s: f64,
+    /// Elapsed wall-clock seconds under the executed schedule.
+    pub wall_s: f64,
 }
 
 impl Clock {
+    /// Serial (resource-sum) optimization seconds.
     pub fn total_s(&self) -> f64 {
         self.measure_s + self.search_s + self.model_s
     }
@@ -88,12 +100,29 @@ impl Clock {
         self.measure_s += other.measure_s;
         self.search_s += other.search_s;
         self.model_s += other.model_s;
+        self.wall_s += other.wall_s;
     }
 }
 
 /// Anything that can measure configurations "on hardware".
 pub trait Measurer: Send + Sync {
-    fn measure_batch(&self, space: &DesignSpace, configs: &[Config]) -> Vec<Measurement>;
+    /// Measure a batch and return the simulated device seconds it cost.
+    /// The attribution must be genuinely per-batch — NOT an `elapsed_s`
+    /// delta — because the coordinator fans chunks of one batch out to
+    /// concurrent workers (and the session engine measures many tasks over
+    /// one shared device), so wall-clock deltas would double-count
+    /// concurrent work.
+    fn measure_batch_timed(
+        &self,
+        space: &DesignSpace,
+        configs: &[Config],
+    ) -> (Vec<Measurement>, f64);
+
+    /// Convenience: measure and discard the timing.
+    fn measure_batch(&self, space: &DesignSpace, configs: &[Config]) -> Vec<Measurement> {
+        self.measure_batch_timed(space, configs).0
+    }
+
     /// Total simulated seconds spent measuring so far.
     fn elapsed_s(&self) -> f64;
     /// Total number of configs measured so far.
@@ -121,7 +150,11 @@ impl SimMeasurer {
 }
 
 impl Measurer for SimMeasurer {
-    fn measure_batch(&self, space: &DesignSpace, configs: &[Config]) -> Vec<Measurement> {
+    fn measure_batch_timed(
+        &self,
+        space: &DesignSpace,
+        configs: &[Config],
+    ) -> (Vec<Measurement>, f64) {
         let out: Vec<Measurement> = configs
             .iter()
             .map(|c| {
@@ -141,13 +174,15 @@ impl Measurer for SimMeasurer {
                 }
             })
             .collect();
+        // Exact per-batch attribution (not an elapsed_s delta): batches from
+        // concurrently tuned tasks interleave on the shared device clock.
         let secs = self
             .cost
             .batch_seconds(&out.iter().map(|m| m.runtime_ms).collect::<Vec<_>>());
         let mut st = self.state.lock().unwrap();
         st.0 += secs;
         st.1 += configs.len();
-        out
+        (out, secs)
     }
 
     fn elapsed_s(&self) -> f64 {
@@ -210,10 +245,30 @@ mod tests {
 
     #[test]
     fn clock_fractions() {
-        let mut clk = Clock { measure_s: 80.0, search_s: 15.0, model_s: 5.0 };
+        let mut clk = Clock {
+            measure_s: 80.0,
+            search_s: 15.0,
+            model_s: 5.0,
+            ..Default::default()
+        };
         assert!((clk.measure_fraction() - 0.8).abs() < 1e-12);
-        clk.add(&Clock { measure_s: 20.0, search_s: 0.0, model_s: 0.0 });
+        clk.add(&Clock { measure_s: 20.0, ..Default::default() });
         assert!((clk.total_s() - 120.0).abs() < 1e-12);
+        // wall time is tracked separately from the resource sums
+        clk.wall_s = 60.0;
+        assert!((clk.total_s() - 120.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn timed_batch_matches_elapsed_delta() {
+        let (m, s) = setup();
+        let mut rng = Pcg32::seed_from(2);
+        let configs: Vec<_> = (0..12).map(|_| s.random_config(&mut rng)).collect();
+        let before = m.elapsed_s();
+        let (out, secs) = m.measure_batch_timed(&s, &configs);
+        assert_eq!(out.len(), 12);
+        assert!(secs > 0.0);
+        assert!((m.elapsed_s() - before - secs).abs() < 1e-12);
     }
 
     #[test]

@@ -1,14 +1,21 @@
 //! The optimizing-compiler loop (paper Fig. 4a): search → sample → measure
 //! → update cost model → repeat, per conv task, with the simulated clock
 //! accounting that regenerates the paper's optimization-time results.
+//!
+//! The loop is decomposed into a [`TaskTuner`] with explicit `plan` (search
+//! + sample) and `absorb` (measure results → model update → bookkeeping)
+//! stages, so schedulers can pipeline them: [`tune`] runs the serial
+//! depth-1 schedule; [`session`] runs whole networks with task parallelism
+//! and search/measure overlap.
 
 pub mod e2e;
+pub mod session;
 
 use crate::coordinator::MeasureCoordinator;
 use crate::costmodel::CostModel;
 use crate::rl::PpoAgent;
 use crate::runtime::Runtime;
-use crate::sampling::{adaptive_sample, greedy_sample, SamplerKind};
+use crate::sampling::{adaptive_sample, fill_random_unvisited, greedy_sample, SamplerKind};
 use crate::search::{
     ga::GeneticAlgorithm, random::RandomSearch, sa::SimulatedAnnealing, Searcher,
 };
@@ -16,7 +23,7 @@ use crate::sim::{Clock, Measurement, Measurer};
 use crate::space::{Config, DesignSpace};
 use crate::util::rng::Pcg32;
 use crate::workload::ConvTask;
-use std::collections::HashSet;
+use std::collections::{HashSet, VecDeque};
 use std::sync::Arc;
 
 /// Which search agent drives the tuner.
@@ -147,6 +154,12 @@ pub struct IterationRecord {
     pub steps_to_converge: usize,
     /// Adaptive sampler's chosen k (0 for greedy).
     pub sampler_k: usize,
+    /// Host seconds of this iteration's plan stage (search + cost-model
+    /// queries) — the part a pipelined schedule can hide under measurement.
+    pub plan_host_s: f64,
+    /// Host seconds of this iteration's absorb stage (cost-model refit),
+    /// which needs the measurement results and cannot be hidden.
+    pub absorb_host_s: f64,
     /// Cumulative simulated clock after this iteration.
     pub clock: Clock,
 }
@@ -199,70 +212,151 @@ fn make_searcher(
     }
 }
 
-/// Tune one conv task with the given method. This is RELEASE's (and
-/// AutoTVM's) outer loop — Figure 4(a).
-pub fn tune(
-    task: &ConvTask,
-    measurer: &dyn Measurer,
+/// One batch of configurations produced by [`TaskTuner::plan`] — everything
+/// the absorb stage needs to account the iteration once the measurements
+/// come back from the device.
+#[derive(Debug, Clone)]
+pub struct PlannedBatch {
+    pub iter: usize,
+    pub configs: Vec<Config>,
+    pub sampler_k: usize,
+    /// Search seconds this batch's round cost — charged to the clock when
+    /// the batch is absorbed, so each IterationRecord carries exactly its
+    /// own batch's search time even when planning runs ahead (pipelining).
+    pub search_s: f64,
+    /// Cost-model query seconds spent during this batch's plan stage.
+    pub model_query_s: f64,
+    pub steps: usize,
+    pub steps_to_converge: usize,
+    /// Best cost-model score of the search round (early-stop guard (b)).
+    pub top_predicted: f64,
+}
+
+/// One task's tuning state with the Fig 4(a) loop split into two stages:
+/// `plan` runs search + sampling against the current cost model and stakes
+/// a claim on measurement budget; `absorb` ingests the batch's hardware
+/// results (model refit, searcher seeding, clock + convergence
+/// bookkeeping). The serial tuner strictly alternates the two; the session
+/// engine keeps planned batches in flight while the device measures, which
+/// is exactly the paper loop unrolled by one pipeline stage.
+pub struct TaskTuner {
+    pub space: DesignSpace,
+    task_id: String,
     method: MethodSpec,
-    cfg: &TunerConfig,
-    runtime: Option<Arc<Runtime>>,
-) -> TuneResult {
-    let space = DesignSpace::for_conv(task.layer);
-    let mut rng = Pcg32::seed_from(cfg.seed ^ 0x7e1ea5e);
-    let mut model = CostModel::new(cfg.seed);
-    let mut searcher = make_searcher(method.searcher, runtime, cfg.seed);
-    searcher.reset();
-    let coordinator = MeasureCoordinator::new(measurer, cfg.measure_workers);
+    cfg: TunerConfig,
+    rng: Pcg32,
+    model: CostModel,
+    searcher: Box<dyn Searcher>,
+    visited: HashSet<u64>,
+    /// Flat indices planned but not yet absorbed (nonempty only when the
+    /// caller pipelines) — excluded from sampling so no config is measured
+    /// twice even while its batch is still on the device.
+    in_flight: HashSet<u64>,
+    /// Configs claimed by planned-but-unabsorbed batches.
+    pending: usize,
+    best: Option<(Config, f64, f64)>, // (config, ms, gflops)
+    iterations: Vec<IterationRecord>,
+    clock: Clock,
+    cum: usize,
+    stall: usize,
+    last_traj: Vec<Config>,
+    iter: usize,
+    stopped: bool,
+}
 
-    let mut visited: HashSet<u64> = HashSet::new();
-    let mut best: Option<(Config, f64, f64)> = None; // (config, ms, gflops)
-    let mut iterations: Vec<IterationRecord> = Vec::new();
-    let mut clock = Clock::default();
-    let mut cum = 0usize;
-    let mut stall = 0usize;
-    let mut last_traj: Vec<Config> = Vec::new();
-    let measure_base = measurer.elapsed_s();
-    let model_base = model.spent_s.get();
+impl TaskTuner {
+    pub fn new(
+        task: &ConvTask,
+        method: MethodSpec,
+        cfg: &TunerConfig,
+        runtime: Option<Arc<Runtime>>,
+    ) -> Self {
+        let model = CostModel::new(cfg.seed);
+        let mut searcher = make_searcher(method.searcher, runtime, cfg.seed);
+        searcher.reset();
+        TaskTuner {
+            space: DesignSpace::for_conv(task.layer),
+            task_id: task.id.clone(),
+            method,
+            cfg: cfg.clone(),
+            rng: Pcg32::seed_from(cfg.seed ^ 0x7e1ea5e),
+            model,
+            searcher,
+            visited: HashSet::new(),
+            in_flight: HashSet::new(),
+            pending: 0,
+            best: None,
+            iterations: Vec::new(),
+            clock: Clock::default(),
+            cum: 0,
+            stall: 0,
+            last_traj: Vec::new(),
+            iter: 0,
+            stopped: false,
+        }
+    }
 
-    let mut iter = 0usize;
-    while cum < cfg.max_trials {
-        iter += 1;
+    /// Measurement budget not yet claimed by a planned batch.
+    fn budget_left(&self) -> usize {
+        self.cfg.max_trials.saturating_sub(self.cum + self.pending)
+    }
+
+    /// Run one search + sample stage. Returns `None` when the budget is
+    /// exhausted, convergence fired, or sampling produced nothing new.
+    pub fn plan(&mut self) -> Option<PlannedBatch> {
+        if self.stopped || self.budget_left() == 0 {
+            return None;
+        }
+        let iter = self.iter + 1;
+
+        // Configs to exclude from sampling: measured ones plus anything an
+        // in-flight batch already claimed.
+        let excluded_owned: HashSet<u64>;
+        let excluded: &HashSet<u64> = if self.in_flight.is_empty() {
+            &self.visited
+        } else {
+            excluded_owned = self.visited.union(&self.in_flight).copied().collect();
+            &excluded_owned
+        };
 
         // 1. search: trajectory over the cost-model surface
-        let round = searcher.round(&space, &model, &visited, &mut rng);
-        clock.search_s += round.sim_time_s;
-        last_traj = round.trajectory.clone();
+        let model_spent_before = self.model.spent_s.get();
+        let round = self.searcher.round(&self.space, &self.model, excluded, &mut self.rng);
+        self.last_traj = round.trajectory.clone();
 
         // 2. sample: pick which configs to really measure
-        let budget_left = cfg.max_trials - cum;
-        let (mut samples, k) = match method.sampler {
+        let budget_left = self.budget_left();
+        let (mut samples, k) = match self.method.sampler {
             SamplerKind::Greedy => (
                 greedy_sample(
-                    &space,
+                    &self.space,
                     &round.trajectory,
                     &round.scores,
-                    &visited,
-                    cfg.plan_size,
+                    excluded,
+                    self.cfg.plan_size,
                     crate::sampling::DEFAULT_EPSILON,
-                    &mut rng,
+                    &mut self.rng,
                 ),
                 0,
             ),
             SamplerKind::Adaptive => {
-                let r = adaptive_sample(&space, &round.trajectory, &visited, &mut rng);
+                let r = adaptive_sample(&self.space, &round.trajectory, excluded, &mut self.rng);
                 let mut samples = r.samples;
                 let mut taken: HashSet<u64> =
-                    samples.iter().map(|c| space.flat_index(c)).collect();
+                    samples.iter().map(|c| self.space.flat_index(c)).collect();
                 // exploitation top-up: the highest-predicted unvisited
                 // trajectory points (the configs the compiler most wants
-                // to confirm on hardware)
+                // to confirm on hardware). The cap is captured before the
+                // loop: when centroid give-ups left fewer than k cluster
+                // representatives, topping up to k + exploit_top would
+                // silently inflate the exploit share.
+                let exploit_cap = samples.len() + self.cfg.exploit_top;
                 for (c, _) in round.trajectory.iter().zip(&round.scores) {
-                    if samples.len() >= r.k + cfg.exploit_top {
+                    if samples.len() >= exploit_cap {
                         break;
                     }
-                    let flat = space.flat_index(c);
-                    if !visited.contains(&flat) && taken.insert(flat) {
+                    let flat = self.space.flat_index(c);
+                    if !excluded.contains(&flat) && taken.insert(flat) {
                         samples.push(c.clone());
                     }
                 }
@@ -270,107 +364,205 @@ pub fn tune(
                 // model from going blind outside the trajectory's basin
                 // (mirrors AutoTVM's ε-greedy exploration share)
                 let n_random = (samples.len() / 6).max(4);
-                let mut guard = 0;
-                let target = samples.len() + n_random;
-                while samples.len() < target && guard < 1000 {
-                    let c = space.random_config(&mut rng);
-                    let flat = space.flat_index(&c);
-                    if !visited.contains(&flat) && taken.insert(flat) {
-                        samples.push(c);
-                    }
-                    guard += 1;
-                }
+                fill_random_unvisited(
+                    &self.space,
+                    excluded,
+                    &mut taken,
+                    n_random,
+                    1000,
+                    &mut self.rng,
+                    &mut samples,
+                );
                 (samples, r.k)
             }
         };
         samples.truncate(budget_left);
+        let model_query_s = self.model.spent_s.get() - model_spent_before;
         if samples.is_empty() {
-            break;
+            // the round still happened: charge its host time even though it
+            // produced nothing to measure, and keep the serial invariant
+            // wall_s == total_s() intact
+            self.clock.search_s += round.sim_time_s;
+            self.clock.model_s += model_query_s;
+            self.clock.wall_s = self.clock.total_s();
+            return None;
         }
 
-        // 3. measure on (simulated) hardware via the coordinator
-        let results: Vec<Measurement> = coordinator.measure(&space, &samples);
-        cum += results.len();
+        self.iter = iter;
+        self.pending += samples.len();
+        for c in &samples {
+            self.in_flight.insert(self.space.flat_index(c));
+        }
+        Some(PlannedBatch {
+            iter,
+            configs: samples,
+            sampler_k: k,
+            search_s: round.sim_time_s,
+            model_query_s,
+            steps: round.steps,
+            steps_to_converge: round.steps_to_converge,
+            top_predicted: round.scores.first().copied().unwrap_or(0.0),
+        })
+    }
+
+    /// Ingest the measurements of one planned batch: visited/best tracking,
+    /// cost-model refit, searcher seeding, clock accounting, iteration
+    /// record, and the convergence policy.
+    pub fn absorb(&mut self, batch: PlannedBatch, results: Vec<Measurement>, device_s: f64) {
+        for c in &batch.configs {
+            self.in_flight.remove(&self.space.flat_index(c));
+        }
+        self.pending -= batch.configs.len();
+        self.cum += results.len();
         for m in &results {
-            visited.insert(space.flat_index(&m.config));
+            self.visited.insert(self.space.flat_index(&m.config));
             if let Some(ms) = m.runtime_ms {
-                if best.as_ref().map(|(_, b, _)| ms < *b).unwrap_or(true) {
-                    best = Some((m.config.clone(), ms, m.gflops));
+                if self.best.as_ref().map(|(_, b, _)| ms < *b).unwrap_or(true) {
+                    self.best = Some((m.config.clone(), ms, m.gflops));
                 }
             }
         }
 
-        // 4. update the cost model + feed the best configs back to the
-        //    searcher (warm starts / walker seeding)
-        let prev_best_gflops = iterations.last().map(|r| r.best_gflops).unwrap_or(0.0);
-        model.update(&space, &results);
+        // update the cost model + feed the best configs back to the
+        // searcher (warm starts / walker seeding)
+        let prev_best_gflops =
+            self.iterations.last().map(|r| r.best_gflops).unwrap_or(0.0);
+        let model_spent_before = self.model.spent_s.get();
+        self.model.update(&self.space, &results);
+        let model_fit_s = self.model.spent_s.get() - model_spent_before;
         {
             let mut ranked: Vec<&Measurement> =
                 results.iter().filter(|m| m.ok()).collect();
             ranked.sort_by(|a, b| b.gflops.partial_cmp(&a.gflops).unwrap());
             let mut seeds: Vec<Config> =
                 ranked.iter().take(8).map(|m| m.config.clone()).collect();
-            if let Some((c, _, _)) = &best {
+            if let Some((c, _, _)) = &self.best {
                 seeds.insert(0, c.clone());
             }
-            searcher.seed(&seeds);
+            self.searcher.seed(&seeds);
         }
 
-        clock.measure_s = measurer.elapsed_s() - measure_base;
-        clock.model_s = model.spent_s.get() - model_base;
+        // charge this batch's own plan-stage costs here so the iteration
+        // record (and the session wall model's deltas) attribute search and
+        // model-query time to the batch that incurred them, even when
+        // planning ran ahead of absorbing (pipelined schedules)
+        self.clock.search_s += batch.search_s;
+        self.clock.measure_s += device_s;
+        self.clock.model_s += batch.model_query_s + model_fit_s;
+        // serial wall; the session scheduler overwrites with the pipelined
+        // schedule's elapsed time
+        self.clock.wall_s = self.clock.total_s();
 
-        let (best_ms, best_gf) =
-            best.as_ref().map(|(_, ms, gf)| (*ms, *gf)).unwrap_or((f64::INFINITY, 0.0));
-        iterations.push(IterationRecord {
-            iter,
+        let (best_ms, best_gf) = self
+            .best
+            .as_ref()
+            .map(|(_, ms, gf)| (*ms, *gf))
+            .unwrap_or((f64::INFINITY, 0.0));
+        self.iterations.push(IterationRecord {
+            iter: batch.iter,
             n_measured: results.len(),
-            cum_measured: cum,
+            cum_measured: self.cum,
             best_gflops: best_gf,
             best_runtime_ms: best_ms,
-            steps: round.steps,
-            steps_to_converge: round.steps_to_converge,
-            sampler_k: k,
-            clock,
+            steps: batch.steps,
+            steps_to_converge: batch.steps_to_converge,
+            sampler_k: batch.sampler_k,
+            plan_host_s: batch.search_s + batch.model_query_s,
+            absorb_host_s: model_fit_s,
+            clock: self.clock,
         });
 
-        // 5. convergence-based termination (RELEASE's policy). Two guards:
+        // convergence-based termination (RELEASE's policy). Two guards:
         //    (a) fitness plateau for `patience` iterations, AND
         //    (b) the cost model no longer predicts meaningfully better
         //        configurations than the measured best (otherwise the
         //        search is still on a promising scent — keep going, up to
         //        a hard stall cap).
-        if let Some(es) = cfg.early_stop {
+        if let Some(es) = self.cfg.early_stop {
             let improved = prev_best_gflops == 0.0
                 || best_gf > prev_best_gflops * (1.0 + es.min_improve);
-            stall = if improved { 0 } else { stall + results.len() };
-            let top_predicted = round.scores.first().copied().unwrap_or(0.0);
-            let model_satisfied = !model.is_trained()
-                || top_predicted <= (best_gf.max(1e-3)).ln() + 0.05;
-            let hard_cap = stall >= es.patience_meas * 3;
-            if iter >= cfg.min_iters
-                && stall >= es.patience_meas
+            self.stall = if improved { 0 } else { self.stall + results.len() };
+            let model_satisfied = !self.model.is_trained()
+                || batch.top_predicted <= (best_gf.max(1e-3)).ln() + 0.05;
+            let hard_cap = self.stall >= es.patience_meas * 3;
+            if batch.iter >= self.cfg.min_iters
+                && self.stall >= es.patience_meas
                 && (model_satisfied || hard_cap)
             {
-                break;
+                self.stopped = true;
             }
         }
     }
 
-    let (best_config, best_runtime_ms, best_gflops) = match best {
-        Some((c, ms, gf)) => (Some(c), ms, gf),
-        None => (None, f64::INFINITY, 0.0),
-    };
-    TuneResult {
-        task_id: task.id.clone(),
-        method: method.name(),
-        best_config,
-        best_runtime_ms,
-        best_gflops,
-        n_measurements: cum,
-        clock,
-        iterations,
-        last_trajectory: last_traj,
+    /// Finalize into a [`TuneResult`].
+    pub fn finish(self) -> TuneResult {
+        let (best_config, best_runtime_ms, best_gflops) = match self.best {
+            Some((c, ms, gf)) => (Some(c), ms, gf),
+            None => (None, f64::INFINITY, 0.0),
+        };
+        TuneResult {
+            task_id: self.task_id,
+            method: self.method.name(),
+            best_config,
+            best_runtime_ms,
+            best_gflops,
+            n_measurements: self.cum,
+            clock: self.clock,
+            iterations: self.iterations,
+            last_trajectory: self.last_traj,
+        }
     }
+}
+
+/// Drive one task's plan → measure → absorb loop over `coordinator`,
+/// keeping up to `pipeline_depth` batches planned-or-measuring before the
+/// oldest is absorbed. Depth 1 is the serial Fig 4(a) loop. Depth 2
+/// double-buffers: batch i+1 is planned against the cost model as fitted
+/// through batch i-1 while batch i is still on the device, so search time
+/// hides under measurement time (the session wall model accounts the
+/// overlap; results already measured when convergence fires are still
+/// absorbed — that hardware time is spent either way).
+pub fn tune_with_coordinator(
+    task: &ConvTask,
+    coordinator: &MeasureCoordinator<'_>,
+    method: MethodSpec,
+    cfg: &TunerConfig,
+    runtime: Option<Arc<Runtime>>,
+    pipeline_depth: usize,
+) -> TuneResult {
+    let depth = pipeline_depth.max(1);
+    let mut tuner = TaskTuner::new(task, method, cfg, runtime);
+    let mut queue: VecDeque<(PlannedBatch, Vec<Measurement>, f64)> = VecDeque::new();
+    loop {
+        while queue.len() < depth {
+            match tuner.plan() {
+                Some(batch) => {
+                    let (results, secs) =
+                        coordinator.measure_timed(&tuner.space, &batch.configs);
+                    queue.push_back((batch, results, secs));
+                }
+                None => break,
+            }
+        }
+        match queue.pop_front() {
+            Some((batch, results, secs)) => tuner.absorb(batch, results, secs),
+            None => break,
+        }
+    }
+    tuner.finish()
+}
+
+/// Tune one conv task with the given method. This is RELEASE's (and
+/// AutoTVM's) outer loop — Figure 4(a), serial schedule.
+pub fn tune(
+    task: &ConvTask,
+    measurer: &dyn Measurer,
+    method: MethodSpec,
+    cfg: &TunerConfig,
+    runtime: Option<Arc<Runtime>>,
+) -> TuneResult {
+    let coordinator = MeasureCoordinator::new(measurer, cfg.measure_workers);
+    tune_with_coordinator(task, &coordinator, method, cfg, runtime, 1)
 }
 
 #[cfg(test)]

@@ -3,7 +3,9 @@
 
 use release::sim::{Measurer, SimMeasurer};
 use release::space::DesignSpace;
-use release::tuner::{e2e::tune_model, tune, MethodSpec, TunerConfig};
+use release::tuner::session::{tune_tasks_session, SessionConfig};
+use release::tuner::{e2e::tune_model, e2e::tune_tasks, tune, MethodSpec, TunerConfig};
+use release::util::prop::forall;
 use release::workload::zoo;
 
 fn quick(seed: u64) -> TunerConfig {
@@ -109,6 +111,71 @@ fn tuning_is_reproducible_across_runs() {
     assert_eq!(a.best_runtime_ms, b.best_runtime_ms);
     assert_eq!(a.n_measurements, b.n_measurements);
     assert_eq!(a.iterations.len(), b.iterations.len());
+}
+
+#[test]
+fn tune_never_exceeds_budget_property() {
+    // property: whatever (method, seed, budget) combination drives the
+    // tuner, it must never spend more hardware measurements than
+    // cfg.max_trials — including the adaptive sampler's top-up paths
+    let tasks = [zoo::alexnet()[2].clone(), zoo::resnet18()[5].clone()];
+    let methods = ["autotvm", "sa+as", "ga", "random"];
+    forall(8, 0xb06e7, |rng| {
+        let task = &tasks[rng.below(tasks.len())];
+        let method = MethodSpec::parse(methods[rng.below(methods.len())]).unwrap();
+        let max_trials = 24 + rng.below(140);
+        let seed = rng.next_u64();
+        let cfg = TunerConfig { max_trials, seed, ..Default::default() };
+        let meas = SimMeasurer::titan_xp(seed ^ 0x5eed);
+        let r = tune(task, &meas, method, &cfg, None);
+        assert!(
+            r.n_measurements <= max_trials,
+            "{} overspent: {} > {max_trials} (seed {seed})",
+            method.name(),
+            r.n_measurements
+        );
+        assert_eq!(r.n_measurements, meas.count(), "device count disagrees");
+    });
+}
+
+#[test]
+fn session_with_unit_parallelism_reproduces_serial_exactly() {
+    // the pipelined session engine at task_parallelism = 1 and pipeline
+    // depth 1 must be bit-identical to the serial tune_tasks path
+    let tasks = zoo::alexnet();
+    let cfg = TunerConfig { max_trials: 72, seed: 31, ..Default::default() };
+    let serial = tune_tasks(
+        "alexnet",
+        &tasks,
+        &SimMeasurer::titan_xp(8),
+        MethodSpec::sa_as(),
+        &cfg,
+        None,
+    );
+    let scfg = SessionConfig::serial(cfg);
+    let sess = tune_tasks_session(
+        "alexnet",
+        &tasks,
+        &SimMeasurer::titan_xp(8),
+        MethodSpec::sa_as(),
+        &scfg,
+        None,
+    );
+    assert_eq!(serial.n_measurements, sess.n_measurements);
+    assert_eq!(serial.inference_ms.to_bits(), sess.inference_ms.to_bits());
+    for (a, b) in serial.tasks.iter().zip(&sess.tasks) {
+        assert_eq!(a.best_runtime_ms.to_bits(), b.best_runtime_ms.to_bits());
+        assert_eq!(a.best_gflops.to_bits(), b.best_gflops.to_bits());
+        assert_eq!(a.best_config, b.best_config);
+        assert_eq!(a.n_measurements, b.n_measurements);
+        assert_eq!(a.iterations.len(), b.iterations.len());
+        assert_eq!(a.clock.measure_s.to_bits(), b.clock.measure_s.to_bits());
+        assert_eq!(a.clock.search_s.to_bits(), b.clock.search_s.to_bits());
+    }
+    // the serial schedule's replayed wall equals the resource sum (up to fp
+    // association in the replay)
+    let rel = (sess.wall_s - serial.opt_time_s).abs() / serial.opt_time_s;
+    assert!(rel < 1e-9, "wall {} vs serial sum {}", sess.wall_s, serial.opt_time_s);
 }
 
 #[test]

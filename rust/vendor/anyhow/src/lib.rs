@@ -1,0 +1,92 @@
+//! Minimal offline stand-in for the `anyhow` crate — just the API subset
+//! this repo uses (`anyhow!`, `Error`, `Result`, `Context`), with context
+//! layering but no backtraces or downcasting. Vendored so the workspace
+//! builds with no network access.
+
+use std::fmt;
+
+/// A type-erased error: the formatted message plus layered context.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { msg: message.to_string() }
+    }
+
+    fn wrap<C: fmt::Display>(mut self, context: C) -> Self {
+        self.msg = format!("{context}: {}", self.msg);
+        self
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+// NOTE: `Error` deliberately does not implement `std::error::Error`, so this
+// blanket conversion (the same shape real anyhow uses) stays coherent.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e.to_string())
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to any error that can convert into [`Error`].
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().wrap(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().wrap(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read_to_string("/definitely/not/a/file").context("reading")?;
+        Ok(())
+    }
+
+    #[test]
+    fn macro_and_context_layering() {
+        let e = anyhow!("bad value {}", 7);
+        assert_eq!(format!("{e}"), "bad value 7");
+        let err = io_fail().unwrap_err();
+        assert!(format!("{err}").starts_with("reading: "));
+    }
+
+    #[test]
+    fn std_errors_convert() {
+        let r: Result<i32> = "nope".parse::<i32>().map_err(Error::from);
+        assert!(r.is_err());
+    }
+}
