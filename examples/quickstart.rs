@@ -1,11 +1,13 @@
 //! Quickstart: tune one convolution layer with RELEASE and with the
-//! AutoTVM baseline, and compare.
+//! AutoTVM baseline, and compare. Runs out of the box — the PPO agent
+//! uses the pure-Rust native backend unless PJRT artifacts are built.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --offline --example quickstart
+//! cargo run --release --offline --example quickstart
 //! ```
 
-use release::report::runtime_if_available;
+use release::report::default_backend;
+use release::runtime::Backend;
 use release::sim::SimMeasurer;
 use release::tuner::{tune, MethodSpec, TunerConfig};
 use release::workload::zoo;
@@ -32,13 +34,11 @@ fn main() {
         at.clock.total_s() / 60.0
     );
 
-    // RELEASE: PPO search agent + adaptive sampling (needs artifacts/).
-    let Some(runtime) = runtime_if_available() else {
-        eprintln!("RELEASE needs AOT artifacts — run `make artifacts` first");
-        std::process::exit(1);
-    };
+    // RELEASE: PPO search agent + adaptive sampling.
+    let backend = default_backend();
+    println!("PPO backend: {}", backend.name());
     let meas = SimMeasurer::titan_xp(7);
-    let rel = tune(task, &meas, MethodSpec::release(), &cfg, Some(runtime));
+    let rel = tune(task, &meas, MethodSpec::release(), &cfg, Some(backend));
     println!(
         "RELEASE : {:.4} ms ({:>5.0} GFLOPS)  {:>4} measurements  {:>5.1} simulated min",
         rel.best_runtime_ms,

@@ -3,20 +3,21 @@
 //!
 //! 1. the AutoTVM baseline, serial schedule (one task at a time, searcher
 //!    stalled during measurement) — the paper's Table 5/6 protocol;
-//! 2. the paper's best arm through the pipelined tuning-session engine
-//!    (`tuner::session`): 4 task tuner loops over a shared measurement
-//!    coordinator, search overlapped with measurement (pipeline depth 2).
+//! 2. RELEASE (PPO + adaptive sampling) through the pipelined
+//!    tuning-session engine (`tuner::session`): 4 task tuner loops over a
+//!    shared measurement coordinator, search overlapped with measurement
+//!    (pipeline depth 2).
 //!
-//! With AOT artifacts present (`make artifacts`) the second arm is RELEASE
-//! (PPO + adaptive sampling, via the L1 Pallas kernels + L2 JAX graph over
-//! PJRT); without them it falls back to SA + adaptive sampling so the
-//! example runs out of the box.
+//! The PPO networks run on the pure-Rust native backend out of the box;
+//! with AOT artifacts present (`make artifacts`) they run as the L1
+//! Pallas kernels + L2 JAX graph over PJRT instead.
 //!
 //! ```bash
 //! cargo run --release --offline --example tune_resnet18_e2e [-- --quick]
 //! ```
 
-use release::report::{runtime_if_available, Table};
+use release::report::{default_backend, Table};
+use release::runtime::Backend;
 use release::sim::SimMeasurer;
 use release::tuner::session::{tune_model_session, SessionConfig};
 use release::tuner::{e2e::tune_model, MethodSpec, TunerConfig};
@@ -25,13 +26,9 @@ fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
     let trials = if quick { 192 } else { 1000 };
 
-    let runtime = runtime_if_available();
-    let method = if runtime.is_some() {
-        MethodSpec::release()
-    } else {
-        eprintln!("note: artifacts/ missing — using SA+AS instead of RELEASE");
-        MethodSpec::sa_as()
-    };
+    let backend = default_backend();
+    println!("PPO backend: {}", backend.name());
+    let method = MethodSpec::release();
 
     let at_cfg =
         TunerConfig { max_trials: trials, early_stop: None, seed: 0, ..Default::default() };
@@ -42,7 +39,7 @@ fn main() {
 
     let meas_rel = SimMeasurer::titan_xp(11);
     let scfg = SessionConfig::pipelined(rel_cfg, 4);
-    let rel = tune_model_session("resnet18", &meas_rel, method, &scfg, runtime);
+    let rel = tune_model_session("resnet18", &meas_rel, method, &scfg, Some(backend));
 
     let arm = rel.method.clone();
     let col_ms = format!("{arm} ms");

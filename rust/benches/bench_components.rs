@@ -1,11 +1,13 @@
 //! Component micro-benchmarks — the §Perf hot paths (EXPERIMENTS.md):
 //! simulator eval, feature extraction, GBT fit/predict, k-means, PCA,
-//! adaptive sampling, one SA round, and (if artifacts exist) the PJRT
-//! policy-forward / ppo-update calls.
+//! adaptive sampling, one SA round, the native-backend policy-forward /
+//! ppo-update calls, and (if artifacts exist) their PJRT equivalents.
 
 use release::costmodel::CostModel;
 use release::gbt::{Gbt, GbtParams};
+use release::nn::NativeBackend;
 use release::report::runtime_if_available;
+use release::runtime::Backend;
 use release::sampling::{adaptive_sample, kmeans};
 use release::search::{sa::SimulatedAnnealing, Searcher};
 use release::sim::{evaluate_config, GpuModel, Measurer, SimMeasurer};
@@ -84,27 +86,34 @@ fn main() {
         std::hint::black_box(sa_round.trajectory.len());
     }
 
-    // --- PJRT agent calls ----------------------------------------------------
+    // --- agent backend calls ------------------------------------------------
+    bench_backend(&b, "native", &NativeBackend::new());
     if let Some(rt) = runtime_if_available() {
-        let st = rt.ppo_init(1).expect("init");
-        let m = rt.manifest.clone();
-        let obs = vec![0.5f32; m.b_policy * m.ndims];
-        b.iter("pjrt policy_forward", || rt.policy_forward(&st, &obs).unwrap());
-
-        let bsz = m.b_rollout;
-        let obs_u = vec![0.5f32; bsz * m.ndims];
-        let actions = vec![1i32; bsz * m.ndims];
-        let old_logp = vec![-8.8f32; bsz];
-        let adv = vec![0.1f32; bsz];
-        let ret = vec![0.5f32; bsz];
-        let mask = vec![1.0f32; bsz];
-        let mut st2 = rt.ppo_init(2).expect("init");
-        let quick = Bencher::quick();
-        quick.iter("pjrt ppo_update(512 rollout)", || {
-            rt.ppo_update(&mut st2, &obs_u, &actions, &old_logp, &adv, &ret, &mask, 3)
-                .unwrap()
-        });
+        bench_backend(&b, "pjrt", rt.as_ref());
     } else {
         println!("bench pjrt: skipped (artifacts not built)");
     }
+}
+
+fn bench_backend(b: &Bencher, label: &str, be: &dyn Backend) {
+    let spec = be.spec().clone();
+    let st = be.ppo_init(1).expect("init");
+    let obs = vec![0.5f32; spec.b_policy * spec.ndims];
+    b.iter(&format!("{label} policy_forward"), || {
+        be.policy_forward(&st, &obs).unwrap()
+    });
+
+    let bsz = spec.b_rollout;
+    let obs_u = vec![0.5f32; bsz * spec.ndims];
+    let actions = vec![1i32; bsz * spec.ndims];
+    let old_logp = vec![-8.8f32; bsz];
+    let adv = vec![0.1f32; bsz];
+    let ret = vec![0.5f32; bsz];
+    let mask = vec![1.0f32; bsz];
+    let mut st2 = be.ppo_init(2).expect("init");
+    let quick = Bencher::quick();
+    quick.iter(&format!("{label} ppo_update(512 rollout)"), || {
+        be.ppo_update(&mut st2, &obs_u, &actions, &old_logp, &adv, &ret, &mask, 3)
+            .unwrap()
+    });
 }

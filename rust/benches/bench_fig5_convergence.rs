@@ -1,19 +1,22 @@
 //! Regenerates paper Figure 5: search steps per iteration to converge,
 //! simulated annealing vs the PPO agent, on layers L1–L8.
 //!
+//! The RL arm runs on whatever backend `default_backend()` selects —
+//! the pure-Rust `NativeBackend` out of the box (no artifacts needed),
+//! or PJRT after `make artifacts`.
+//!
 //! Paper shape to reproduce: RL needs substantially fewer steps (paper
 //! geomean: 2.88x).
 
-use release::report::{fig5, runtime_if_available, ExperimentConfig};
+use release::report::{default_backend, fig5, ExperimentConfig};
+use release::runtime::Backend;
 use release::util::bench::Bencher;
 
 fn main() {
-    let Some(rt) = runtime_if_available() else {
-        println!("skipped: artifacts not built (run `make artifacts`)");
-        return;
-    };
+    let backend = default_backend();
+    println!("fig5 RL arm on the `{}` backend", backend.name());
     let cfg = ExperimentConfig::from_env(0);
-    let (r, _) = Bencher::once("fig5", || fig5(&cfg, rt));
+    let (r, _) = Bencher::once("fig5", || fig5(&cfg, backend));
     println!(
         "\nSHAPE CHECK — steps-to-converge reduction (SA/RL): {:.2}x (paper: 2.88x)",
         r.step_reduction

@@ -1,19 +1,19 @@
 //! Regenerates paper Figure 6: number of hardware measurements per layer
-//! for SA, SA+AS, RL, RL+AS.
+//! for SA, SA+AS, RL, RL+AS (RL arms on `default_backend()` — native
+//! unless PJRT artifacts are built).
 //!
 //! Paper shape to reproduce: adaptive sampling cuts measurements for both
 //! searchers (paper: 1.98x for SA, 2.33x for RL).
 
-use release::report::{fig6, runtime_if_available, ExperimentConfig};
+use release::report::{default_backend, fig6, ExperimentConfig};
+use release::runtime::Backend;
 use release::util::bench::Bencher;
 
 fn main() {
-    let Some(rt) = runtime_if_available() else {
-        println!("skipped: artifacts not built (run `make artifacts`)");
-        return;
-    };
+    let backend = default_backend();
+    println!("fig6 RL arms on the `{}` backend", backend.name());
     let cfg = ExperimentConfig::from_env(0);
-    let (r, _) = Bencher::once("fig6", || fig6(&cfg, rt));
+    let (r, _) = Bencher::once("fig6", || fig6(&cfg, backend));
     println!(
         "\nSHAPE CHECK — measurement reduction: SA {:.2}x (paper 1.98x), RL {:.2}x (paper 2.33x)",
         r.sa_reduction, r.rl_reduction

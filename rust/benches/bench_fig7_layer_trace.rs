@@ -5,16 +5,15 @@
 //! Paper shape to reproduce: the +AS arms climb with far fewer
 //! measurements; RELEASE reaches good performance earliest.
 
-use release::report::{fig7, runtime_if_available, ExperimentConfig};
+use release::report::{default_backend, fig7, ExperimentConfig};
+use release::runtime::Backend;
 use release::util::bench::Bencher;
 
 fn main() {
-    let Some(rt) = runtime_if_available() else {
-        println!("skipped: artifacts not built (run `make artifacts`)");
-        return;
-    };
+    let backend = default_backend();
+    println!("fig7 RL arms on the `{}` backend", backend.name());
     let cfg = ExperimentConfig::from_env(0);
-    let (r, _) = Bencher::once("fig7", || fig7(&cfg, rt));
+    let (r, _) = Bencher::once("fig7", || fig7(&cfg, backend));
     println!("\nSHAPE CHECK — final (method, GFLOPS, measurements):");
     let mut autotvm = (0.0, 0usize);
     let mut release_arm = (0.0, 0usize);

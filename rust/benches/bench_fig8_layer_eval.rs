@@ -5,16 +5,15 @@
 //! faster (paper geomean 4.82x) at comparable-or-better output performance
 //! (paper 1.17x).
 
-use release::report::{fig8, runtime_if_available, ExperimentConfig};
+use release::report::{default_backend, fig8, ExperimentConfig};
+use release::runtime::Backend;
 use release::util::bench::Bencher;
 
 fn main() {
-    let Some(rt) = runtime_if_available() else {
-        println!("skipped: artifacts not built (run `make artifacts`)");
-        return;
-    };
+    let backend = default_backend();
+    println!("fig8 RELEASE arm on the `{}` backend", backend.name());
     let cfg = ExperimentConfig::from_env(0);
-    let (r, _) = Bencher::once("fig8", || fig8(&cfg, rt));
+    let (r, _) = Bencher::once("fig8", || fig8(&cfg, backend));
     println!(
         "\nSHAPE CHECK — opt-time speedup {:.2}x (paper 4.82x), perf ratio {:.2}x (paper 1.17x)",
         r.time_speedup, r.perf_ratio

@@ -9,16 +9,15 @@
 //! This is the heaviest bench (26 tasks x 4 arms) — use RELEASE_QUICK=1
 //! for a fast pass.
 
-use release::report::{fig9_tables56, runtime_if_available, ExperimentConfig};
+use release::report::{default_backend, fig9_tables56, ExperimentConfig};
+use release::runtime::Backend;
 use release::util::bench::Bencher;
 
 fn main() {
-    let Some(rt) = runtime_if_available() else {
-        println!("skipped: artifacts not built (run `make artifacts`)");
-        return;
-    };
+    let backend = default_backend();
+    println!("fig9 RL arms on the `{}` backend", backend.name());
     let cfg = ExperimentConfig::from_env(0);
-    let (r, _) = Bencher::once("fig9_tables56", || fig9_tables56(&cfg, rt));
+    let (r, _) = Bencher::once("fig9_tables56", || fig9_tables56(&cfg, backend));
     println!(
         "\nSHAPE CHECK — mean end-to-end optimization speedup: {:.2}x (paper 4.45x)",
         r.mean_speedup

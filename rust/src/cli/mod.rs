@@ -8,11 +8,13 @@
 //! ```
 
 use crate::report::{self, ExperimentConfig};
+use crate::runtime::{select_backend, Backend, BackendKind};
 use crate::sim::SimMeasurer;
 use crate::tuner::session::{tune_model_session, SessionConfig};
 use crate::tuner::{tune, MethodSpec, TunerConfig};
 use crate::workload::zoo;
 use std::collections::HashMap;
+use std::sync::Arc;
 
 const USAGE: &str = "\
 RELEASE — RL + adaptive-sampling optimizing compiler (paper reproduction)
@@ -25,6 +27,8 @@ USAGE:
 
 TUNE OPTIONS:
   --method <autotvm|rl|sa+as|release|ga|random>   (default: release)
+  --backend <auto|native|pjrt>  PPO backend for RL methods (default: auto —
+                                PJRT when artifacts exist, else native)
   --trials N        measurement budget per task    (default: 1000)
   --seed N          RNG seed                       (default: 0)
   --no-early-stop   run the full budget
@@ -82,10 +86,25 @@ pub fn run(args: &[String]) -> i32 {
     }
 }
 
+/// Resolve `--backend` (default auto). Errors are reported to the user,
+/// not panicked: `pjrt` without artifacts is an ordinary mistake.
+fn backend_from_flags(
+    flags: &HashMap<String, String>,
+) -> Result<Arc<dyn Backend>, String> {
+    let name = flags.get("backend").map(String::as_str).unwrap_or("auto");
+    let Some(kind) = BackendKind::parse(name) else {
+        return Err(format!("unknown --backend {name:?} (want auto|native|pjrt)"));
+    };
+    select_backend(kind).map_err(|e| format!("--backend {name}: {e}"))
+}
+
 fn cmd_info() -> i32 {
     println!("models:");
     for m in zoo::MODELS {
-        let tasks = zoo::model_tasks(m).unwrap();
+        let Some(tasks) = zoo::model_tasks(m) else {
+            eprintln!("  {m}: missing from the zoo (bug)");
+            continue;
+        };
         println!("  {m}: {} conv tasks", tasks.len());
         for t in &tasks {
             let space = crate::space::DesignSpace::for_conv(t.layer);
@@ -108,12 +127,13 @@ fn cmd_info() -> i32 {
     }
     let dir = crate::runtime::default_artifact_dir();
     println!(
-        "\nartifacts: {} ({})",
+        "\nbackends: native (pure-rust nn, always available); \
+         pjrt artifacts at {}: {}",
         dir.display(),
         if crate::runtime::Runtime::artifacts_present(&dir) {
             "present"
         } else {
-            "MISSING — run `make artifacts`"
+            "missing (run `make artifacts` to enable --backend pjrt)"
         }
     );
     0
@@ -173,15 +193,30 @@ fn cmd_tune(flags: &HashMap<String, String>) -> i32 {
         }
     };
     let cfg = tuner_config(flags);
-    let runtime = if method.searcher == crate::tuner::SearcherKind::Rl {
-        match report::runtime_if_available() {
-            Some(rt) => Some(rt),
-            None => {
-                eprintln!("RL methods need artifacts/ — run `make artifacts`");
+    let backend = if method.searcher == crate::tuner::SearcherKind::Rl {
+        match backend_from_flags(flags) {
+            Ok(be) => {
+                println!("PPO backend: {}", be.name());
+                Some(be)
+            }
+            Err(e) => {
+                eprintln!("{e}");
                 return 1;
             }
         }
     } else {
+        // Still validate an explicit --backend so a typo (or a pjrt
+        // request without artifacts) never passes silently.
+        if let Some(name) = flags.get("backend") {
+            if BackendKind::parse(name).is_none() {
+                eprintln!("unknown --backend {name:?} (want auto|native|pjrt)");
+                return 1;
+            }
+            eprintln!(
+                "note: --backend only affects RL methods; ignored for {}",
+                method.name()
+            );
+        }
         None
     };
     let meas = SimMeasurer::titan_xp(cfg.seed ^ 0xdead);
@@ -194,7 +229,7 @@ fn cmd_tune(flags: &HashMap<String, String>) -> i32 {
             return 2;
         };
         println!("tuning {} ({}) with {}", layer, task.id, method.name());
-        let r = tune(&task, &meas, method, &cfg, runtime);
+        let r = tune(&task, &meas, method, &cfg, backend);
         println!(
             "best: {:.4} ms ({:.0} GFLOPS) after {} measurements, {:.1} simulated min",
             r.best_runtime_ms,
@@ -207,7 +242,10 @@ fn cmd_tune(flags: &HashMap<String, String>) -> i32 {
 
     let model = flags.get("model").map(String::as_str).unwrap_or("resnet18");
     if zoo::model_tasks(model).is_none() {
-        eprintln!("unknown --model {model}");
+        eprintln!(
+            "unknown --model {model} (available: {})",
+            zoo::MODELS.join(", ")
+        );
         return 2;
     }
     let scfg = session_config(flags, cfg);
@@ -219,7 +257,7 @@ fn cmd_tune(flags: &HashMap<String, String>) -> i32 {
         scfg.device_slots,
         scfg.pipeline_depth
     );
-    let r = tune_model_session(model, &meas, method, &scfg, runtime);
+    let r = tune_model_session(model, &meas, method, &scfg, backend);
     let mut table = report::Table::new(
         &format!("{model} via {}", method.name()),
         &["task", "best ms", "GFLOPS", "measurements", "opt min", "wall min"],
@@ -258,51 +296,66 @@ fn cmd_experiment(pos: &[String], flags: &HashMap<String, String>) -> i32 {
     } else {
         ExperimentConfig::from_env(seed)
     };
-    let needs_rt = !matches!(which.as_str(), "fig2" | "fig3");
-    let runtime = if needs_rt {
-        match report::runtime_if_available() {
-            Some(rt) => Some(rt),
-            None => {
-                eprintln!("this experiment needs artifacts/ — run `make artifacts`");
+    // Experiments with an RL arm need a PPO backend; with the native
+    // backend always available this can only fail on an explicit
+    // `--backend pjrt` without artifacts — report it, never panic.
+    let needs_backend = matches!(
+        which.as_str(),
+        "fig5" | "fig6" | "fig7" | "fig8" | "fig9" | "table5" | "table6" | "all"
+    );
+    let backend = if needs_backend {
+        match backend_from_flags(flags) {
+            Ok(be) => {
+                println!("PPO backend: {}", be.name());
+                Some(be)
+            }
+            Err(e) => {
+                eprintln!("{e}");
                 return 1;
             }
         }
     } else {
+        if let Some(name) = flags.get("backend") {
+            if BackendKind::parse(name).is_none() {
+                eprintln!("unknown --backend {name:?} (want auto|native|pjrt)");
+                return 1;
+            }
+            eprintln!("note: --backend has no effect on this experiment");
+        }
         None
     };
-    match which.as_str() {
-        "fig2" => {
+    match (which.as_str(), backend) {
+        ("fig2", _) => {
             report::fig2(&cfg);
         }
-        "fig3" => {
+        ("fig3", _) => {
             report::fig3(&cfg);
         }
-        "fig5" => {
-            report::fig5(&cfg, runtime.unwrap());
+        ("fig5", Some(be)) => {
+            report::fig5(&cfg, be);
         }
-        "fig6" => {
-            report::fig6(&cfg, runtime.unwrap());
+        ("fig6", Some(be)) => {
+            report::fig6(&cfg, be);
         }
-        "fig7" => {
-            report::fig7(&cfg, runtime.unwrap());
+        ("fig7", Some(be)) => {
+            report::fig7(&cfg, be);
         }
-        "fig8" => {
-            report::fig8(&cfg, runtime.unwrap());
+        ("fig8", Some(be)) => {
+            report::fig8(&cfg, be);
         }
-        "fig9" | "table5" | "table6" => {
-            report::fig9_tables56(&cfg, runtime.unwrap());
+        ("fig9" | "table5" | "table6", Some(be)) => {
+            report::fig9_tables56(&cfg, be);
         }
-        "all" => {
-            let rt = runtime.unwrap();
+        ("all", Some(be)) => {
             report::fig2(&cfg);
             report::fig3(&cfg);
-            report::fig5(&cfg, rt.clone());
-            report::fig6(&cfg, rt.clone());
-            report::fig7(&cfg, rt.clone());
-            report::fig8(&cfg, rt.clone());
-            report::fig9_tables56(&cfg, rt);
+            report::fig5(&cfg, be.clone());
+            report::fig6(&cfg, be.clone());
+            report::fig7(&cfg, be.clone());
+            report::fig8(&cfg, be.clone());
+            report::fig9_tables56(&cfg, be);
         }
-        other => {
+        (other, _) => {
             eprintln!("unknown experiment {other:?}\n{USAGE}");
             return 2;
         }
@@ -339,6 +392,42 @@ mod tests {
     #[test]
     fn empty_args_prints_usage() {
         assert_eq!(run(&[]), 2);
+    }
+
+    #[test]
+    fn unknown_model_is_a_graceful_error() {
+        // used to panic inside zoo::model_tasks().unwrap(); must exit 2
+        let args: Vec<String> = ["tune", "--model", "inception"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        assert_eq!(run(&args), 2);
+    }
+
+    #[test]
+    fn bogus_backend_is_a_graceful_error() {
+        let args: Vec<String> = ["tune", "--model", "resnet18", "--backend", "tpu"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        assert_eq!(run(&args), 1);
+        // validated even when the method doesn't use a backend
+        let args: Vec<String> =
+            ["tune", "--model", "alexnet", "--method", "sa+as", "--backend", "tpu"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        assert_eq!(run(&args), 1);
+    }
+
+    #[test]
+    fn backend_flag_resolves_native() {
+        let mut flags = HashMap::new();
+        flags.insert("backend".to_string(), "native".to_string());
+        let be = backend_from_flags(&flags).unwrap();
+        assert_eq!(be.name(), "native");
+        // default (no flag) is auto, which always resolves
+        assert!(backend_from_flags(&HashMap::new()).is_ok());
     }
 
     #[test]

@@ -7,10 +7,13 @@
 //! - **L3 (this crate)**: the optimizing compiler — design space, search
 //!   algorithms (PPO / simulated annealing / GA / random), adaptive sampling
 //!   (k-means + knee + mode-replacement), boosted-tree cost model,
-//!   measurement coordination, and the simulated Titan Xp hardware.
-//! - **L2/L1 (python/, build-time only)**: the PPO policy/value networks and
-//!   their Pallas dense kernels, AOT-lowered to HLO text artifacts executed
-//!   from rust via PJRT (`runtime`).
+//!   measurement coordination, and the simulated Titan Xp hardware. The PPO
+//!   networks run on the pure-Rust `nn` backend by default (no external
+//!   dependencies), selected through the `runtime::Backend` trait.
+//! - **L2/L1 (python/, build-time only)**: the same PPO policy/value
+//!   networks and their Pallas dense kernels, AOT-lowered to HLO text
+//!   artifacts executed from rust via PJRT (`runtime::Runtime`) when
+//!   `make artifacts` has been run.
 //!
 //! See DESIGN.md for the system inventory and experiment index, and
 //! EXPERIMENTS.md for paper-vs-measured results.
@@ -19,6 +22,7 @@ pub mod cli;
 pub mod coordinator;
 pub mod costmodel;
 pub mod gbt;
+pub mod nn;
 pub mod report;
 pub mod rl;
 pub mod runtime;

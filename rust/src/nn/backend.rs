@@ -1,0 +1,283 @@
+//! [`NativeBackend`] — the pure-Rust [`Backend`] implementation.
+//!
+//! Stateless (the caller owns the `AgentState`), thread-safe, and always
+//! available: this is what un-gates the RL method arms everywhere the
+//! PJRT artifacts are absent. The `f32` interface matches the artifact
+//! runtime bit-for-bit in shape; arithmetic runs in f64 internally and is
+//! rounded at the boundary.
+
+use super::net::{self, NPARAMS};
+use super::ppo::{self, Batch, PpoConfig};
+use crate::runtime::{AgentSpec, AgentState, Backend, PpoStats};
+use anyhow::{anyhow, Result};
+
+pub struct NativeBackend {
+    spec: AgentSpec,
+    cfg: PpoConfig,
+}
+
+impl NativeBackend {
+    pub fn new() -> Self {
+        // AgentSpec::native() derives its loss/optimizer fields from
+        // PpoConfig::default(), so the two stay one source of truth.
+        NativeBackend { spec: AgentSpec::native(), cfg: PpoConfig::default() }
+    }
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+fn widen(xs: &[f32]) -> Vec<f64> {
+    xs.iter().map(|&x| x as f64).collect()
+}
+
+fn narrow(xs: &[f64]) -> Vec<f32> {
+    xs.iter().map(|&x| x as f32).collect()
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn spec(&self) -> &AgentSpec {
+        &self.spec
+    }
+
+    fn ppo_init(&self, seed: i32) -> Result<AgentState> {
+        let params = net::init(seed);
+        Ok(AgentState {
+            m: vec![0.0; params.len()],
+            v: vec![0.0; params.len()],
+            params,
+            t: 1.0,
+        })
+    }
+
+    fn policy_forward(
+        &self,
+        state: &AgentState,
+        obs: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let ndims = self.spec.ndims;
+        if state.params.len() != NPARAMS {
+            return Err(anyhow!(
+                "agent state has {} params, native net needs {NPARAMS}",
+                state.params.len()
+            ));
+        }
+        if obs.is_empty() || obs.len() % ndims != 0 {
+            return Err(anyhow!("obs len {} not a multiple of ndims {ndims}", obs.len()));
+        }
+        let b = obs.len() / ndims;
+        let cache = net::forward(&widen(&state.params), &widen(obs), b);
+        Ok((narrow(&cache.logp), narrow(&cache.value)))
+    }
+
+    fn ppo_update(
+        &self,
+        state: &mut AgentState,
+        obs: &[f32],
+        actions: &[i32],
+        old_logp: &[f32],
+        advantages: &[f32],
+        returns: &[f32],
+        mask: &[f32],
+        seed: i32,
+    ) -> Result<PpoStats> {
+        let s = &self.spec;
+        for (name, len) in [
+            ("params", state.params.len()),
+            ("m", state.m.len()),
+            ("v", state.v.len()),
+        ] {
+            if len != NPARAMS {
+                return Err(anyhow!(
+                    "agent state {name} has {len} entries, native net needs {NPARAMS}"
+                ));
+            }
+        }
+        let b = old_logp.len();
+        if b != s.b_rollout {
+            return Err(anyhow!("rollout has {b} rows, spec wants {}", s.b_rollout));
+        }
+        for (name, len, want) in [
+            ("obs", obs.len(), b * s.ndims),
+            ("actions", actions.len(), b * s.ndims),
+            ("advantages", advantages.len(), b),
+            ("returns", returns.len(), b),
+            ("mask", mask.len(), b),
+        ] {
+            if len != want {
+                return Err(anyhow!("{name} len {len} != {want}"));
+            }
+        }
+        if let Some(&a) = actions.iter().find(|&&a| a < 0 || a as usize >= s.nact) {
+            return Err(anyhow!("action {a} outside 0..{}", s.nact));
+        }
+
+        let mut params = widen(&state.params);
+        let mut m = widen(&state.m);
+        let mut v = widen(&state.v);
+        let mut t = state.t as f64;
+        let obs64 = widen(obs);
+        let old64 = widen(old_logp);
+        let adv64 = widen(advantages);
+        let ret64 = widen(returns);
+        let mask64 = widen(mask);
+        let batch = Batch {
+            obs: &obs64,
+            actions,
+            old_logp: &old64,
+            adv: &adv64,
+            ret: &ret64,
+            mask: &mask64,
+        };
+        let stats =
+            ppo::ppo_update(&mut params, &mut m, &mut v, &mut t, &batch, seed, &self.cfg);
+        state.params = narrow(&params);
+        state.m = narrow(&m);
+        state.v = narrow(&v);
+        state.t = t as f32;
+        Ok(PpoStats {
+            pg_loss: stats[0] as f32,
+            v_loss: stats[1] as f32,
+            entropy: stats[2] as f32,
+            approx_kl: stats[3] as f32,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::NDIMS;
+
+    fn rollout(
+        spec: &AgentSpec,
+    ) -> (Vec<f32>, Vec<i32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let b = spec.b_rollout;
+        let obs: Vec<f32> =
+            (0..b * spec.ndims).map(|i| ((i * 37) % 100) as f32 / 100.0).collect();
+        let actions: Vec<i32> = (0..b * spec.ndims).map(|i| (i % 3) as i32).collect();
+        let old_logp = vec![(1.0f32 / 3.0).ln() * spec.ndims as f32; b];
+        let adv: Vec<f32> =
+            (0..b).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        let ret = vec![0.5f32; b];
+        let mask = vec![1.0f32; b];
+        (obs, actions, old_logp, adv, ret, mask)
+    }
+
+    #[test]
+    fn init_matches_pjrt_contract() {
+        let be = NativeBackend::new();
+        let s = be.ppo_init(7).unwrap();
+        assert_eq!(s.params.len(), be.spec().nparams);
+        assert!(s.params.iter().all(|v| v.is_finite()));
+        assert!(s.m.iter().all(|&v| v == 0.0));
+        assert!(s.v.iter().all(|&v| v == 0.0));
+        assert_eq!(s.t, 1.0);
+        assert_ne!(be.ppo_init(8).unwrap().params, s.params);
+        assert_eq!(be.ppo_init(7).unwrap().params, s.params);
+    }
+
+    #[test]
+    fn policy_forward_normalizes_and_rejects_bad_shapes() {
+        let be = NativeBackend::new();
+        let st = be.ppo_init(1).unwrap();
+        let spec = be.spec().clone();
+        let obs: Vec<f32> = (0..spec.b_policy * spec.ndims)
+            .map(|i| (i % 10) as f32 / 10.0)
+            .collect();
+        let (logp, value) = be.policy_forward(&st, &obs).unwrap();
+        assert_eq!(logp.len(), spec.b_policy * spec.ndims * spec.nact);
+        assert_eq!(value.len(), spec.b_policy);
+        for chunk in logp.chunks(spec.nact) {
+            let p: f32 = chunk.iter().map(|l| l.exp()).sum();
+            assert!((p - 1.0).abs() < 1e-4, "sum {p}");
+        }
+        for &l in logp.iter().take(30) {
+            assert!((l.exp() - 1.0 / 3.0).abs() < 0.05);
+        }
+        assert!(be.policy_forward(&st, &obs[..NDIMS - 1]).is_err());
+        assert!(be.policy_forward(&st, &[]).is_err());
+    }
+
+    #[test]
+    fn ppo_update_moves_params_and_reports_stats() {
+        let be = NativeBackend::new();
+        let mut st = be.ppo_init(2).unwrap();
+        let before = st.params.clone();
+        let (obs, actions, old_logp, adv, ret, mask) = rollout(be.spec());
+        let stats = be
+            .ppo_update(&mut st, &obs, &actions, &old_logp, &adv, &ret, &mask, 3)
+            .unwrap();
+        assert_ne!(st.params, before);
+        assert!(stats.entropy > 7.0, "entropy {}", stats.entropy); // ~8*ln3
+        assert!(stats.v_loss >= 0.0);
+        // 3 epochs x 4 minibatches advanced the Adam counter
+        assert_eq!(st.t, 13.0);
+        let delta: f32 = st
+            .params
+            .iter()
+            .zip(&before)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max);
+        assert!(delta < 0.1, "suspiciously large step {delta}");
+    }
+
+    #[test]
+    fn ppo_update_rejects_malformed_rollouts() {
+        let be = NativeBackend::new();
+        let mut st = be.ppo_init(0).unwrap();
+        let (obs, mut actions, old_logp, adv, ret, mask) = rollout(be.spec());
+        // wrong rollout size
+        assert!(be
+            .ppo_update(&mut st, &obs, &actions, &old_logp[..8], &adv, &ret, &mask, 0)
+            .is_err());
+        // out-of-range action index
+        actions[5] = 9;
+        assert!(be
+            .ppo_update(&mut st, &obs, &actions, &old_logp, &adv, &ret, &mask, 0)
+            .is_err());
+        // agent state from a different topology (wrong param count)
+        actions[5] = 0;
+        st.m.truncate(10);
+        assert!(be
+            .ppo_update(&mut st, &obs, &actions, &old_logp, &adv, &ret, &mask, 0)
+            .is_err());
+    }
+
+    #[test]
+    fn same_seed_is_bit_identical_across_runs() {
+        // The determinism contract: identical seeds and inputs produce a
+        // bit-identical AgentState trajectory, run to run.
+        let run = || {
+            let be = NativeBackend::new();
+            let mut st = be.ppo_init(11).unwrap();
+            let (obs, actions, old_logp, adv, ret, mask) = rollout(be.spec());
+            for seed in 0..2 {
+                be.ppo_update(
+                    &mut st, &obs, &actions, &old_logp, &adv, &ret, &mask, seed,
+                )
+                .unwrap();
+            }
+            st
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.t, b.t);
+        for (x, y) in a.params.iter().zip(&b.params) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        for (x, y) in a.m.iter().zip(&b.m) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        for (x, y) in a.v.iter().zip(&b.v) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+}

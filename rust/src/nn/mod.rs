@@ -1,0 +1,40 @@
+//! Pure-Rust neural backend for the PPO search agent.
+//!
+//! This subsystem replaces the AOT-XLA/PJRT execution path with a
+//! dependency-free native implementation of the exact same computation,
+//! so every method arm of the paper — including RL ± adaptive sampling —
+//! runs offline, with no artifacts and no Python anywhere near the
+//! search path. The follow-up literature on this line (Chameleon,
+//! arXiv:2001.08743; HARL, arXiv:2211.11172) treats the RL policy as a
+//! small, cheap MLP whose training cost is negligible next to hardware
+//! measurement; that is precisely the regime where a native CPU
+//! implementation is the right production architecture.
+//!
+//! Layout and semantics mirror `python/compile/model.py` one-to-one:
+//!
+//! - [`net`] — the policy/value networks (shared first layer, tanh MLP,
+//!   per-dimension `{dec, stay, inc}` log-softmax heads) over the flat
+//!   parameter vector of `param_layout()`, with hand-written reverse-mode
+//!   gradients for the fixed topology;
+//! - [`ops`] — the dense-tensor primitives (matmul, bias, tanh,
+//!   grouped log-softmax) and their backward pieces;
+//! - [`adam`] — the Adam optimizer step;
+//! - [`ppo`] — the full clipped-PPO update (advantage normalization,
+//!   epoch shuffling, minibatch loss + gradient, Adam), producing the
+//!   same averaged `PpoStats` as the XLA artifact;
+//! - [`backend`] — [`NativeBackend`], the always-available
+//!   [`crate::runtime::Backend`] implementation.
+//!
+//! All internal arithmetic is f64 (the `f32` `AgentState` is converted at
+//! the backend boundary): the nets are tiny, so the cost is negligible,
+//! and it makes the finite-difference gradient checks in this module
+//! airtight (relative error ~1e-9, asserted < 1e-3).
+
+pub mod adam;
+pub mod backend;
+pub mod net;
+pub mod ops;
+pub mod ppo;
+
+pub use backend::NativeBackend;
+pub use net::NPARAMS;

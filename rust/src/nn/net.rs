@@ -1,0 +1,276 @@
+//! The PPO policy/value networks over a flat parameter vector, with
+//! hand-written reverse-mode gradients for the fixed topology.
+//!
+//! Mirrors `python/compile/model.py` exactly (paper §4.1):
+//!
+//! ```text
+//! h      = tanh(obs @ w0 + b0)            shared first layer
+//! hp     = tanh(h @ wp1 + bp1)            policy head
+//! logp   = log_softmax(hp @ wp2 + bp2)    [B, NDIMS, NACT]
+//! hv     = tanh(h @ wv1 + bv1)            value head
+//! value  = hv @ wv2 + bv2                 [B]
+//! ```
+//!
+//! The parameter layout (offsets in the flat vector) matches model.py's
+//! `param_layout()`, so a native `AgentState` and a PJRT `AgentState` are
+//! interchangeable representations of the same network.
+
+use super::ops;
+use crate::space::NDIMS;
+use crate::util::rng::Pcg32;
+
+/// Width of the shared trunk (model.py HIDDEN).
+pub const HIDDEN: usize = 128;
+/// Width of each head (model.py HEAD).
+pub const HEAD: usize = 64;
+/// Actions per dimension: {decrement, stay, increment}.
+pub const NACT: usize = 3;
+
+// Flat-vector offsets, in model.py `_SHAPES` order.
+pub const W0: usize = 0;
+pub const B0: usize = W0 + NDIMS * HIDDEN;
+pub const WP1: usize = B0 + HIDDEN;
+pub const BP1: usize = WP1 + HIDDEN * HEAD;
+pub const WP2: usize = BP1 + HEAD;
+pub const BP2: usize = WP2 + HEAD * (NDIMS * NACT);
+pub const WV1: usize = BP2 + NDIMS * NACT;
+pub const BV1: usize = WV1 + HIDDEN * HEAD;
+pub const WV2: usize = BV1 + HEAD;
+pub const BV2: usize = WV2 + HEAD;
+/// Total parameter count (matches the PJRT manifest's `nparams`).
+pub const NPARAMS: usize = BV2 + 1;
+
+/// `(name, offset, fan_in, size)` of every tensor — the native
+/// `param_layout()`. Biases report `fan_in = 0` (zero-initialized).
+pub fn param_layout() -> [(&'static str, usize, usize, usize); 10] {
+    [
+        ("w0", W0, NDIMS, NDIMS * HIDDEN),
+        ("b0", B0, 0, HIDDEN),
+        ("wp1", WP1, HIDDEN, HIDDEN * HEAD),
+        ("bp1", BP1, 0, HEAD),
+        ("wp2", WP2, HEAD, HEAD * (NDIMS * NACT)),
+        ("bp2", BP2, 0, NDIMS * NACT),
+        ("wv1", WV1, HIDDEN, HIDDEN * HEAD),
+        ("bv1", BV1, 0, HEAD),
+        ("wv2", WV2, HEAD, HEAD),
+        ("bv2", BV2, 0, 1),
+    ]
+}
+
+/// Fresh parameters: scaled-normal weights (std = 1/sqrt(fan_in)), the
+/// policy output layer shrunk 100x so the initial policy is near-uniform
+/// (standard PPO practice, same as model.py's `ppo_init`), zero biases.
+pub fn init(seed: i32) -> Vec<f32> {
+    let mut rng = Pcg32::seed_from(seed as u64);
+    let mut params = vec![0.0f32; NPARAMS];
+    for (name, off, fan_in, size) in param_layout() {
+        if fan_in == 0 {
+            continue; // bias: stays zero
+        }
+        let mut std = 1.0 / (fan_in as f64).sqrt();
+        if name == "wp2" {
+            std *= 0.01;
+        }
+        for v in &mut params[off..off + size] {
+            *v = (rng.normal() * std) as f32;
+        }
+    }
+    params
+}
+
+/// Forward activations kept for the backward pass.
+pub struct ForwardCache {
+    /// Shared trunk, `[b, HIDDEN]`.
+    pub h: Vec<f64>,
+    /// Policy head hidden, `[b, HEAD]`.
+    pub hp: Vec<f64>,
+    /// Value head hidden, `[b, HEAD]`.
+    pub hv: Vec<f64>,
+    /// Per-dimension action log-probs, `[b, NDIMS * NACT]`.
+    pub logp: Vec<f64>,
+    /// State values, `[b]`.
+    pub value: Vec<f64>,
+}
+
+/// Run both networks on `obs` (`[b, NDIMS]`, row-major).
+pub fn forward(params: &[f64], obs: &[f64], b: usize) -> ForwardCache {
+    debug_assert_eq!(params.len(), NPARAMS);
+    debug_assert_eq!(obs.len(), b * NDIMS);
+    let mut h = ops::matmul(obs, &params[W0..B0], b, NDIMS, HIDDEN);
+    ops::add_bias(&mut h, &params[B0..WP1]);
+    ops::tanh_inplace(&mut h);
+
+    let mut hp = ops::matmul(&h, &params[WP1..BP1], b, HIDDEN, HEAD);
+    ops::add_bias(&mut hp, &params[BP1..WP2]);
+    ops::tanh_inplace(&mut hp);
+
+    let mut logp = ops::matmul(&hp, &params[WP2..BP2], b, HEAD, NDIMS * NACT);
+    ops::add_bias(&mut logp, &params[BP2..WV1]);
+    ops::log_softmax_groups(&mut logp, NACT);
+
+    let mut hv = ops::matmul(&h, &params[WV1..BV1], b, HIDDEN, HEAD);
+    ops::add_bias(&mut hv, &params[BV1..WV2]);
+    ops::tanh_inplace(&mut hv);
+
+    let wv2 = &params[WV2..BV2];
+    let bv2 = params[BV2];
+    let value: Vec<f64> = hv
+        .chunks(HEAD)
+        .map(|row| row.iter().zip(wv2).map(|(x, w)| x * w).sum::<f64>() + bv2)
+        .collect();
+
+    ForwardCache { h, hp, hv, logp, value }
+}
+
+/// Reverse-mode through the whole net. `d_logp` is the loss gradient wrt
+/// the log-probs (`[b, NDIMS * NACT]`), `d_value` wrt the values (`[b]`).
+/// Returns the gradient wrt the flat parameter vector.
+pub fn backward(
+    params: &[f64],
+    obs: &[f64],
+    b: usize,
+    cache: &ForwardCache,
+    d_logp: &[f64],
+    d_value: &[f64],
+) -> Vec<f64> {
+    let nout = NDIMS * NACT;
+    let mut grad = vec![0.0; NPARAMS];
+
+    // log-softmax -> logits
+    let d_logits = ops::log_softmax_backward(d_logp, &cache.logp, NACT);
+
+    // policy head, layer 2
+    grad[WP2..BP2].copy_from_slice(&ops::matmul_grad_b(&cache.hp, &d_logits, b, HEAD, nout));
+    grad[BP2..WV1].copy_from_slice(&ops::bias_grad(&d_logits, nout));
+    let d_hp = ops::matmul_grad_a(&d_logits, &params[WP2..BP2], b, HEAD, nout);
+    let d_hp_pre = ops::tanh_backward(&d_hp, &cache.hp);
+
+    // policy head, layer 1
+    grad[WP1..BP1].copy_from_slice(&ops::matmul_grad_b(&cache.h, &d_hp_pre, b, HIDDEN, HEAD));
+    grad[BP1..WP2].copy_from_slice(&ops::bias_grad(&d_hp_pre, HEAD));
+    let d_h_policy = ops::matmul_grad_a(&d_hp_pre, &params[WP1..BP1], b, HIDDEN, HEAD);
+
+    // value head, output layer: value = hv @ wv2 + bv2
+    let wv2 = &params[WV2..BV2];
+    let mut d_hv = vec![0.0; b * HEAD];
+    for ((d_hv_row, hv_row), &dv) in
+        d_hv.chunks_mut(HEAD).zip(cache.hv.chunks(HEAD)).zip(d_value)
+    {
+        for (o, &w) in d_hv_row.iter_mut().zip(wv2) {
+            *o = dv * w;
+        }
+        for (g, &x) in grad[WV2..BV2].iter_mut().zip(hv_row) {
+            *g += dv * x;
+        }
+        grad[BV2] += dv;
+    }
+    let d_hv_pre = ops::tanh_backward(&d_hv, &cache.hv);
+
+    // value head, layer 1
+    grad[WV1..BV1].copy_from_slice(&ops::matmul_grad_b(&cache.h, &d_hv_pre, b, HIDDEN, HEAD));
+    grad[BV1..WV2].copy_from_slice(&ops::bias_grad(&d_hv_pre, HEAD));
+    let d_h_value = ops::matmul_grad_a(&d_hv_pre, &params[WV1..BV1], b, HIDDEN, HEAD);
+
+    // shared trunk: both heads' gradients meet here
+    let d_h: Vec<f64> =
+        d_h_policy.iter().zip(&d_h_value).map(|(a, c)| a + c).collect();
+    let d_h_pre = ops::tanh_backward(&d_h, &cache.h);
+    grad[W0..B0].copy_from_slice(&ops::matmul_grad_b(obs, &d_h_pre, b, NDIMS, HIDDEN));
+    grad[B0..WP1].copy_from_slice(&ops::bias_grad(&d_h_pre, HIDDEN));
+    grad
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_matches_the_pjrt_manifest_constants() {
+        // model.py: 19289 parameters for the 8-knob conv template
+        assert_eq!(NPARAMS, 19289);
+        let layout = param_layout();
+        let total: usize = layout.iter().map(|(_, _, _, size)| size).sum();
+        assert_eq!(total, NPARAMS);
+        // offsets are contiguous and in model.py order
+        let mut off = 0;
+        for (_, o, _, size) in layout {
+            assert_eq!(o, off);
+            off += size;
+        }
+    }
+
+    #[test]
+    fn init_is_scaled_and_near_uniform_policy() {
+        let p = init(7);
+        assert_eq!(p.len(), NPARAMS);
+        assert!(p.iter().all(|v| v.is_finite()));
+        // biases zero
+        assert!(p[B0..WP1].iter().all(|&v| v == 0.0));
+        assert!(p[BP1..WP2].iter().all(|&v| v == 0.0));
+        // wp2 shrunk 100x relative to wv2's scale
+        let rms = |s: &[f32]| {
+            (s.iter().map(|&v| (v as f64).powi(2)).sum::<f64>() / s.len() as f64).sqrt()
+        };
+        assert!(rms(&p[WP2..BP2]) < rms(&p[WV1..BV1]) * 0.1);
+        // deterministic per seed, distinct across seeds
+        assert_eq!(init(7), p);
+        assert_ne!(init(8), p);
+        // fresh policy is near-uniform: each group ~ 1/3
+        let pf: Vec<f64> = p.iter().map(|&v| v as f64).collect();
+        let obs: Vec<f64> = (0..4 * NDIMS).map(|i| (i % 10) as f64 / 10.0).collect();
+        let cache = forward(&pf, &obs, 4);
+        for &lp in &cache.logp {
+            assert!((lp.exp() - 1.0 / 3.0).abs() < 0.05, "logp {lp}");
+        }
+    }
+
+    #[test]
+    fn forward_log_probs_normalize() {
+        let pf: Vec<f64> = init(3).iter().map(|&v| v as f64).collect();
+        let obs: Vec<f64> = (0..6 * NDIMS).map(|i| ((i * 31) % 97) as f64 / 97.0).collect();
+        let cache = forward(&pf, &obs, 6);
+        assert_eq!(cache.logp.len(), 6 * NDIMS * NACT);
+        assert_eq!(cache.value.len(), 6);
+        for group in cache.logp.chunks(NACT) {
+            let s: f64 = group.iter().map(|v| v.exp()).sum();
+            assert!((s - 1.0).abs() < 1e-9);
+        }
+        assert!(cache.value.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn full_net_gradient_matches_finite_differences() {
+        // loss = sum(c_lp * logp) + sum(c_v * value), random coefficients;
+        // checks parameter indices sampled from every tensor region.
+        let mut rng = Pcg32::seed_from(11);
+        let mut pf: Vec<f64> = init(5).iter().map(|&v| v as f64).collect();
+        let b = 5;
+        let obs: Vec<f64> = (0..b * NDIMS).map(|_| rng.f64()).collect();
+        let c_lp: Vec<f64> = (0..b * NDIMS * NACT).map(|_| rng.normal()).collect();
+        let c_v: Vec<f64> = (0..b).map(|_| rng.normal()).collect();
+        let loss = |params: &[f64]| -> f64 {
+            let cache = forward(params, &obs, b);
+            cache.logp.iter().zip(&c_lp).map(|(x, c)| x * c).sum::<f64>()
+                + cache.value.iter().zip(&c_v).map(|(x, c)| x * c).sum::<f64>()
+        };
+        let cache = forward(&pf, &obs, b);
+        let grad = backward(&pf, &obs, b, &cache, &c_lp, &c_v);
+
+        let eps = 1e-6;
+        for (name, off, _, size) in param_layout() {
+            for probe in 0..8 {
+                let i = off + (probe * 997) % size;
+                let keep = pf[i];
+                pf[i] = keep + eps;
+                let up = loss(&pf);
+                pf[i] = keep - eps;
+                let dn = loss(&pf);
+                pf[i] = keep;
+                let num = (up - dn) / (2.0 * eps);
+                let denom = grad[i].abs().max(num.abs()).max(1e-8);
+                let rel = (grad[i] - num).abs() / denom;
+                assert!(rel < 1e-3, "{name}[{i}]: analytic {} numeric {num}", grad[i]);
+            }
+        }
+    }
+}

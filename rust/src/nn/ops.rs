@@ -1,0 +1,237 @@
+//! Dense-tensor primitives (f64) and their reverse-mode backward pieces.
+//!
+//! Everything operates on flat row-major slices with explicit dimensions —
+//! the tensors here are small (the widest matmul is 128x64), so simple
+//! cache-friendly loops that the compiler can autovectorize beat any
+//! cleverness.
+
+/// `a [m x k] @ b [k x n] -> [m x n]`.
+pub fn matmul(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    let mut out = vec![0.0; m * n];
+    for (orow, arow) in out.chunks_mut(n).zip(a.chunks(k)) {
+        for (p, &av) in arow.iter().enumerate() {
+            let brow = &b[p * n..(p + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+    out
+}
+
+/// Gradient wrt `a` of `a @ b`: `dout [m x n] @ b^T -> [m x k]`.
+pub fn matmul_grad_a(dout: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
+    debug_assert_eq!(dout.len(), m * n);
+    debug_assert_eq!(b.len(), k * n);
+    let mut da = vec![0.0; m * k];
+    for (darow, drow) in da.chunks_mut(k).zip(dout.chunks(n)) {
+        for (p, d) in darow.iter_mut().enumerate() {
+            let brow = &b[p * n..(p + 1) * n];
+            *d = drow.iter().zip(brow).map(|(x, y)| x * y).sum();
+        }
+    }
+    da
+}
+
+/// Gradient wrt `b` of `a @ b`: `a^T [k x m] @ dout [m x n] -> [k x n]`.
+pub fn matmul_grad_b(a: &[f64], dout: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(dout.len(), m * n);
+    let mut db = vec![0.0; k * n];
+    for (arow, drow) in a.chunks(k).zip(dout.chunks(n)) {
+        for (p, &av) in arow.iter().enumerate() {
+            let brow = &mut db[p * n..(p + 1) * n];
+            for (o, &dv) in brow.iter_mut().zip(drow) {
+                *o += av * dv;
+            }
+        }
+    }
+    db
+}
+
+/// Add a bias row to every row of `x [rows x n]` in place.
+pub fn add_bias(x: &mut [f64], bias: &[f64]) {
+    let n = bias.len();
+    debug_assert_eq!(x.len() % n, 0);
+    for row in x.chunks_mut(n) {
+        for (v, &b) in row.iter_mut().zip(bias) {
+            *v += b;
+        }
+    }
+}
+
+/// Bias gradient: column sums of `dout [rows x n]`.
+pub fn bias_grad(dout: &[f64], n: usize) -> Vec<f64> {
+    debug_assert_eq!(dout.len() % n, 0);
+    let mut g = vec![0.0; n];
+    for row in dout.chunks(n) {
+        for (o, &d) in g.iter_mut().zip(row) {
+            *o += d;
+        }
+    }
+    g
+}
+
+/// Elementwise tanh in place.
+pub fn tanh_inplace(x: &mut [f64]) {
+    for v in x.iter_mut() {
+        *v = v.tanh();
+    }
+}
+
+/// Backward through tanh given the *output* `y = tanh(x)`:
+/// `dx = dout * (1 - y^2)`.
+pub fn tanh_backward(dout: &[f64], y: &[f64]) -> Vec<f64> {
+    debug_assert_eq!(dout.len(), y.len());
+    dout.iter().zip(y).map(|(&d, &t)| d * (1.0 - t * t)).collect()
+}
+
+/// Log-softmax over consecutive groups of `group` entries, in place
+/// (numerically stable: shift by the group max).
+pub fn log_softmax_groups(x: &mut [f64], group: usize) {
+    debug_assert_eq!(x.len() % group, 0);
+    for g in x.chunks_mut(group) {
+        let max = g.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let lse = g.iter().map(|v| (v - max).exp()).sum::<f64>().ln() + max;
+        for v in g.iter_mut() {
+            *v -= lse;
+        }
+    }
+}
+
+/// Backward through grouped log-softmax: given `dlp` (gradient wrt the
+/// log-probs) and the forward output `lp`, the logit gradient per group is
+/// `dz_k = dlp_k - softmax_k * sum_j dlp_j`.
+pub fn log_softmax_backward(dlp: &[f64], lp: &[f64], group: usize) -> Vec<f64> {
+    debug_assert_eq!(dlp.len(), lp.len());
+    debug_assert_eq!(lp.len() % group, 0);
+    let mut dz = vec![0.0; lp.len()];
+    for ((dzg, dg), lg) in
+        dz.chunks_mut(group).zip(dlp.chunks(group)).zip(lp.chunks(group))
+    {
+        let dsum: f64 = dg.iter().sum();
+        for ((o, &d), &l) in dzg.iter_mut().zip(dg).zip(lg) {
+            *o = d - l.exp() * dsum;
+        }
+    }
+    dz
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn randv(rng: &mut Pcg32, n: usize) -> Vec<f64> {
+        (0..n).map(|_| rng.normal() * 0.5).collect()
+    }
+
+    /// Central finite difference of `f` wrt `x[i]`.
+    fn fdiff(x: &mut [f64], i: usize, f: &mut dyn FnMut(&[f64]) -> f64) -> f64 {
+        let eps = 1e-6;
+        let keep = x[i];
+        x[i] = keep + eps;
+        let up = f(x);
+        x[i] = keep - eps;
+        let dn = f(x);
+        x[i] = keep;
+        (up - dn) / (2.0 * eps)
+    }
+
+    fn assert_close(analytic: f64, numeric: f64) {
+        let denom = analytic.abs().max(numeric.abs()).max(1e-8);
+        let rel = (analytic - numeric).abs() / denom;
+        assert!(rel < 1e-3, "grad mismatch: analytic {analytic} numeric {numeric}");
+    }
+
+    #[test]
+    fn matmul_matches_reference() {
+        // 2x3 @ 3x2, computed by hand
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let b = [1.0, 0.5, -1.0, 2.0, 0.0, 1.0];
+        let c = matmul(&a, &b, 2, 3, 2);
+        assert_eq!(c, vec![-1.0, 7.5, -1.0, 18.0]);
+    }
+
+    #[test]
+    fn matmul_grads_match_finite_differences() {
+        let (m, k, n) = (3, 4, 5);
+        let mut rng = Pcg32::seed_from(1);
+        let mut a = randv(&mut rng, m * k);
+        let mut b = randv(&mut rng, k * n);
+        // scalar loss: fixed random linear functional of the output
+        let c = randv(&mut rng, m * n);
+        let dout = c.clone(); // dL/dout = c
+        let da = matmul_grad_a(&dout, &b, m, k, n);
+        let db = matmul_grad_b(&a, &dout, m, k, n);
+        {
+            let b2 = b.clone();
+            let mut f = |x: &[f64]| -> f64 {
+                matmul(x, &b2, m, k, n).iter().zip(&c).map(|(v, w)| v * w).sum()
+            };
+            for i in 0..m * k {
+                assert_close(da[i], fdiff(&mut a, i, &mut f));
+            }
+        }
+        {
+            let a2 = a.clone();
+            let mut f = |x: &[f64]| -> f64 {
+                matmul(&a2, x, m, k, n).iter().zip(&c).map(|(v, w)| v * w).sum()
+            };
+            for i in 0..k * n {
+                assert_close(db[i], fdiff(&mut b, i, &mut f));
+            }
+        }
+    }
+
+    #[test]
+    fn bias_and_tanh_grads_match_finite_differences() {
+        let n = 4;
+        let rows = 3;
+        let mut rng = Pcg32::seed_from(2);
+        let x = randv(&mut rng, rows * n);
+        let mut bias = randv(&mut rng, n);
+        let c = randv(&mut rng, rows * n);
+        // loss = sum_ij c_ij * tanh(x_ij + b_j)
+        let mut forward = |bv: &[f64]| -> f64 {
+            let mut y = x.clone();
+            add_bias(&mut y, bv);
+            tanh_inplace(&mut y);
+            y.iter().zip(&c).map(|(v, w)| v * w).sum()
+        };
+        let mut y = x.clone();
+        add_bias(&mut y, &bias);
+        tanh_inplace(&mut y);
+        let dpre = tanh_backward(&c, &y);
+        let dbias = bias_grad(&dpre, n);
+        for i in 0..n {
+            assert_close(dbias[i], fdiff(&mut bias, i, &mut forward));
+        }
+    }
+
+    #[test]
+    fn log_softmax_normalizes_and_grad_matches() {
+        let group = 3;
+        let mut rng = Pcg32::seed_from(3);
+        let mut z = randv(&mut rng, 2 * group);
+        let c = randv(&mut rng, 2 * group);
+        let mut lp = z.clone();
+        log_softmax_groups(&mut lp, group);
+        for g in lp.chunks(group) {
+            let p: f64 = g.iter().map(|v| v.exp()).sum();
+            assert!((p - 1.0).abs() < 1e-12, "group sums to {p}");
+        }
+        let dz = log_softmax_backward(&c, &lp, group);
+        let mut f = |x: &[f64]| -> f64 {
+            let mut l = x.to_vec();
+            log_softmax_groups(&mut l, group);
+            l.iter().zip(&c).map(|(v, w)| v * w).sum()
+        };
+        for i in 0..z.len() {
+            let num = fdiff(&mut z, i, &mut f);
+            assert_close(dz[i], num);
+        }
+    }
+}

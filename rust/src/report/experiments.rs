@@ -6,7 +6,7 @@
 //! of each result (who wins, by roughly what factor).
 
 use super::table::{fmt_f, results_dir, Table};
-use crate::runtime::Runtime;
+use crate::runtime::{select_backend, Backend, BackendKind, Runtime};
 use crate::sim::SimMeasurer;
 use crate::space::{pca, DesignSpace};
 use crate::tuner::{
@@ -69,7 +69,8 @@ impl ExperimentConfig {
     }
 }
 
-/// Load the PJRT runtime if artifacts exist (RL arms need it).
+/// Load the PJRT runtime if artifacts exist (PJRT-specific paths only —
+/// the RL experiment drivers now take any [`Backend`]).
 pub fn runtime_if_available() -> Option<Arc<Runtime>> {
     let dir = crate::runtime::default_artifact_dir();
     if Runtime::artifacts_present(&dir) {
@@ -77,6 +78,13 @@ pub fn runtime_if_available() -> Option<Arc<Runtime>> {
     } else {
         None
     }
+}
+
+/// The backend every experiment driver runs the RL arms on: PJRT when
+/// artifacts are present and load, else the always-available native `nn`
+/// backend — so the full figure suite runs offline.
+pub fn default_backend() -> Arc<dyn Backend> {
+    select_backend(BackendKind::Auto).expect("auto backend selection cannot fail")
 }
 
 fn save(table: &Table, name: &str) {
@@ -203,7 +211,7 @@ pub struct Fig5Result {
 }
 
 /// Steps-to-convergence per search round: SA vs RL on layers L1–L8.
-pub fn fig5(cfg: &ExperimentConfig, runtime: Arc<Runtime>) -> Fig5Result {
+pub fn fig5(cfg: &ExperimentConfig, backend: Arc<dyn Backend>) -> Fig5Result {
     let mut table = Table::new(
         "Fig 5 — search steps per iteration to converge (SA vs RL)",
         &["layer", "SA steps", "RL steps", "reduction"],
@@ -222,7 +230,7 @@ pub fn fig5(cfg: &ExperimentConfig, runtime: Arc<Runtime>) -> Fig5Result {
         c_rl.early_stop = None; // same #iterations for a like-for-like mean
         let r_sa = tune(task, &m1, MethodSpec::autotvm(), &c_sa, None);
         let r_rl =
-            tune(task, &m2, MethodSpec::rl_only(), &c_rl, Some(runtime.clone()));
+            tune(task, &m2, MethodSpec::rl_only(), &c_rl, Some(backend.clone()));
         let sa_steps = r_sa.mean_steps_to_converge();
         let rl_steps = r_rl.mean_steps_to_converge();
         let ratio = sa_steps / rl_steps.max(1.0);
@@ -253,7 +261,7 @@ pub struct Fig6Result {
 
 /// Hardware measurements used per layer, with and without adaptive
 /// sampling, for both searchers.
-pub fn fig6(cfg: &ExperimentConfig, runtime: Arc<Runtime>) -> Fig6Result {
+pub fn fig6(cfg: &ExperimentConfig, backend: Arc<dyn Backend>) -> Fig6Result {
     let mut table = Table::new(
         "Fig 6 — hardware measurements per layer",
         &["layer", "SA", "SA+AS", "RL", "RL+AS", "SA red.", "RL red."],
@@ -279,7 +287,7 @@ pub fn fig6(cfg: &ExperimentConfig, runtime: Arc<Runtime>) -> Fig6Result {
             c.max_trials = c.max_trials.max(640);
             c.seed = seed;
             let rt = if method.searcher == crate::tuner::SearcherKind::Rl {
-                Some(runtime.clone())
+                Some(backend.clone())
             } else {
                 None
             };
@@ -326,7 +334,7 @@ pub struct Fig7Result {
 
 /// Output-performance trace vs number of hardware measurements for the
 /// ResNet-18 11th task (paper Fig. 7), all four arms.
-pub fn fig7(cfg: &ExperimentConfig, runtime: Arc<Runtime>) -> Fig7Result {
+pub fn fig7(cfg: &ExperimentConfig, backend: Arc<dyn Backend>) -> Fig7Result {
     let task = &zoo::resnet18()[10]; // 11th layer, 1-based (= L8)
     let arms = [
         MethodSpec::autotvm(),
@@ -347,7 +355,7 @@ pub fn fig7(cfg: &ExperimentConfig, runtime: Arc<Runtime>) -> Fig7Result {
         c.max_trials = c.max_trials.max(640);
         c.seed = cfg.seed;
         let rt = if method.searcher == crate::tuner::SearcherKind::Rl {
-            Some(runtime.clone())
+            Some(backend.clone())
         } else {
             None
         };
@@ -377,7 +385,7 @@ pub struct Fig8Result {
 }
 
 /// Per-layer optimization time + output performance: RELEASE vs AutoTVM.
-pub fn fig8(cfg: &ExperimentConfig, runtime: Arc<Runtime>) -> Fig8Result {
+pub fn fig8(cfg: &ExperimentConfig, backend: Arc<dyn Backend>) -> Fig8Result {
     let mut table = Table::new(
         "Fig 8 — per-layer: AutoTVM vs RELEASE (opt time, output perf)",
         &[
@@ -401,7 +409,7 @@ pub fn fig8(cfg: &ExperimentConfig, runtime: Arc<Runtime>) -> Fig8Result {
         let mut c2 = cfg.cfg_for(MethodSpec::release());
         c2.seed = seed;
         let at = tune(task, &m1, MethodSpec::autotvm(), &c1, None);
-        let rl = tune(task, &m2, MethodSpec::release(), &c2, Some(runtime.clone()));
+        let rl = tune(task, &m2, MethodSpec::release(), &c2, Some(backend.clone()));
         let speedup = at.clock.total_s() / rl.clock.total_s().max(1e-9);
         let ratio = rl.best_gflops / at.best_gflops.max(1e-9);
         speedups.push(speedup);
@@ -445,7 +453,7 @@ pub struct Fig9Result {
 
 /// End-to-end evaluation on AlexNet / VGG-16 / ResNet-18 for all four arms
 /// (paper Fig. 9 + Tables 5 and 6).
-pub fn fig9_tables56(cfg: &ExperimentConfig, runtime: Arc<Runtime>) -> Fig9Result {
+pub fn fig9_tables56(cfg: &ExperimentConfig, backend: Arc<dyn Backend>) -> Fig9Result {
     let arms = [
         MethodSpec::autotvm(),
         MethodSpec::rl_only(),
@@ -470,7 +478,7 @@ pub fn fig9_tables56(cfg: &ExperimentConfig, runtime: Arc<Runtime>) -> Fig9Resul
             let mut c = cfg.cfg_for(method);
             c.seed = cfg.seed.wrapping_add(mi as u64 * 17);
             let rt = if method.searcher == crate::tuner::SearcherKind::Rl {
-                Some(runtime.clone())
+                Some(backend.clone())
             } else {
                 None
             };

@@ -5,7 +5,7 @@ pub mod experiments;
 pub mod table;
 
 pub use experiments::{
-    fig2, fig3, fig5, fig6, fig7, fig8, fig9_tables56, runtime_if_available,
-    ExperimentConfig,
+    default_backend, fig2, fig3, fig5, fig6, fig7, fig8, fig9_tables56,
+    runtime_if_available, ExperimentConfig,
 };
 pub use table::{results_dir, Table};

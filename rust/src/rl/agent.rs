@@ -1,13 +1,16 @@
 //! The RELEASE search agent (paper §4.1): PPO walkers over the design
 //! space, driven from rust, with the policy/value networks and the whole
-//! clipped-PPO + Adam update executing as AOT-compiled XLA artifacts.
+//! clipped-PPO + Adam update executing behind the [`Backend`] trait —
+//! the pure-Rust `nn` backend by default, or the AOT-XLA artifacts when
+//! PJRT is selected.
 //!
 //! Per search round:
 //!   1. `b_policy` parallel walkers start from random configurations;
-//!   2. for each of H steps, one `policy_forward` PJRT call yields per-dim
-//!      {dec, stay, inc} distributions; actions are sampled in rust and the
-//!      configuration updater applies them (an all-stay action ends the
-//!      episode — "the agent ends the episode after reaching convergence");
+//!   2. for each of H steps, one `policy_forward` backend call yields
+//!      per-dim {dec, stay, inc} distributions; actions are sampled in rust
+//!      and the configuration updater applies them (an all-stay action ends
+//!      the episode — "the agent ends the episode after reaching
+//!      convergence");
 //!   3. rewards are the cost model's predicted fitness (the surrogate
 //!      reward of §4.1) queried per step;
 //!   4. GAE(γ=0.9, λ=0.99) runs host-side; one `ppo_update` call trains
@@ -20,7 +23,7 @@
 
 use super::gae::gae;
 use crate::costmodel::CostModel;
-use crate::runtime::{AgentState, Runtime};
+use crate::runtime::{AgentState, Backend};
 use crate::search::{dedup_top, SearchRound, Searcher};
 use crate::space::{Config, DesignSpace, Direction};
 use crate::util::rng::Pcg32;
@@ -55,7 +58,7 @@ impl Default for PpoAgentParams {
 }
 
 pub struct PpoAgent {
-    runtime: Arc<Runtime>,
+    backend: Arc<dyn Backend>,
     pub params: PpoAgentParams,
     state: Option<AgentState>,
     init_seed: i32,
@@ -66,9 +69,9 @@ pub struct PpoAgent {
 }
 
 impl PpoAgent {
-    pub fn new(runtime: Arc<Runtime>, seed: i32) -> Self {
+    pub fn new(backend: Arc<dyn Backend>, seed: i32) -> Self {
         PpoAgent {
-            runtime,
+            backend,
             params: PpoAgentParams::default(),
             state: None,
             init_seed: seed,
@@ -77,15 +80,14 @@ impl PpoAgent {
         }
     }
 
-    fn ensure_state(&mut self) -> &mut AgentState {
+    fn ensure_state(&mut self) {
         if self.state.is_none() {
             self.state = Some(
-                self.runtime
+                self.backend
                     .ppo_init(self.init_seed)
-                    .expect("ppo_init artifact execution failed"),
+                    .expect("ppo_init backend execution failed"),
             );
         }
-        self.state.as_mut().unwrap()
     }
 
     /// Sample one categorical action per dimension from flattened
@@ -143,7 +145,7 @@ impl Searcher for PpoAgent {
         _visited: &HashSet<u64>,
         rng: &mut Pcg32,
     ) -> SearchRound {
-        let m = self.runtime.manifest.clone();
+        let m = self.backend.spec().clone();
         let b = m.b_policy;
         let ndims = m.ndims;
         let horizon = m.b_rollout / m.b_policy;
@@ -194,7 +196,7 @@ impl Searcher for PpoAgent {
                     configs.iter().flat_map(|c| space.normalize(c)).collect();
                 let state = self.state.as_ref().unwrap();
                 let (logp, value) = self
-                    .runtime
+                    .backend
                     .policy_forward(state, &obs)
                     .expect("policy_forward failed");
                 let (dirs, lp, acts) =
@@ -243,7 +245,7 @@ impl Searcher for PpoAgent {
                 configs.iter().flat_map(|c| space.normalize(c)).collect();
             let state = self.state.as_ref().unwrap();
             let (_, vlast) = self
-                .runtime
+                .backend
                 .policy_forward(state, &obs)
                 .expect("policy_forward failed");
             for i in 0..b {
@@ -274,7 +276,7 @@ impl Searcher for PpoAgent {
             // per step, which IS time-major rows of t*b + i already)
             self.update_seed = self.update_seed.wrapping_add(1);
             let state = self.state.as_mut().unwrap();
-            self.runtime
+            self.backend
                 .ppo_update(
                     state,
                     &all_obs,
@@ -307,17 +309,12 @@ impl Searcher for PpoAgent {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime::default_artifact_dir;
+    use crate::nn::NativeBackend;
     use crate::sim::{Measurer, SimMeasurer};
     use crate::workload::zoo;
 
-    fn runtime() -> Option<Arc<Runtime>> {
-        let dir = default_artifact_dir();
-        if !Runtime::artifacts_present(&dir) {
-            eprintln!("skipping: artifacts not built");
-            return None;
-        }
-        Some(Arc::new(Runtime::load(&dir).unwrap()))
+    fn backend() -> Arc<dyn Backend> {
+        Arc::new(NativeBackend::new())
     }
 
     #[test]
@@ -340,7 +337,6 @@ mod tests {
 
     #[test]
     fn round_produces_trajectory_and_converges() {
-        let Some(rt) = runtime() else { return };
         let space = DesignSpace::for_conv(zoo::resnet18()[5].layer);
         let meas = SimMeasurer::titan_xp(0);
         let mut rng = Pcg32::seed_from(1);
@@ -348,7 +344,7 @@ mod tests {
         let train: Vec<_> = (0..150).map(|_| space.random_config(&mut rng)).collect();
         cm.update(&space, &meas.measure_batch(&space, &train));
 
-        let mut agent = PpoAgent::new(rt, 42);
+        let mut agent = PpoAgent::new(backend(), 42);
         agent.params.max_batches = 6;
         let r = agent.round(&space, &cm, &HashSet::new(), &mut rng);
         assert!(!r.trajectory.is_empty());
@@ -364,7 +360,6 @@ mod tests {
     fn policy_improves_on_model_surface_across_rounds() {
         // After a few rounds of PPO against a trained cost model, the best
         // score the agent reaches should not degrade (information reuse).
-        let Some(rt) = runtime() else { return };
         let space = DesignSpace::for_conv(zoo::resnet18()[1].layer);
         let meas = SimMeasurer::titan_xp(0);
         let mut rng = Pcg32::seed_from(2);
@@ -372,7 +367,7 @@ mod tests {
         let train: Vec<_> = (0..250).map(|_| space.random_config(&mut rng)).collect();
         cm.update(&space, &meas.measure_batch(&space, &train));
 
-        let mut agent = PpoAgent::new(rt, 7);
+        let mut agent = PpoAgent::new(backend(), 7);
         agent.params.max_batches = 5;
         agent.params.min_batches = 5; // fixed batches for comparability
         let r1 = agent.round(&space, &cm, &HashSet::new(), &mut rng);

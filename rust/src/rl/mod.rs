@@ -1,5 +1,6 @@
 //! The reinforcement-learning search agent (paper §4.1): PPO driven from
-//! rust over AOT XLA artifacts, GAE host-side.
+//! rust over a [`crate::runtime::Backend`] (native `nn` networks by
+//! default, AOT XLA artifacts via PJRT when selected), GAE host-side.
 
 pub mod agent;
 pub mod gae;

@@ -1,16 +1,28 @@
-//! PJRT runtime: loads the AOT HLO-text artifacts produced by
-//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//! PPO execution backends.
 //!
-//! This is the only place rust touches XLA. Python never runs on the
-//! search path — artifacts are compiled once by `make artifacts` and the
-//! `xla` crate (PJRT C API) executes them from here.
+//! The search agent drives its policy/value networks through the
+//! [`Backend`] trait — three entry points (`ppo_init`, `policy_forward`,
+//! `ppo_update`) over a flat `f32` parameter vector — with two
+//! interchangeable implementations:
+//!
+//! - [`crate::nn::NativeBackend`]: the pure-Rust networks + PPO update
+//!   (`nn/`), always available, the default;
+//! - [`Runtime`]: the PJRT artifact runtime, which executes the AOT HLO
+//!   text produced by `python/compile/aot.py` on the CPU PJRT client.
+//!   This is the only place rust touches XLA; it gates on `make
+//!   artifacts` having been run.
+//!
+//! [`select_backend`] picks between them ([`BackendKind::Auto`] prefers
+//! PJRT artifacts when present, else native), so every RL arm of the
+//! paper runs offline out of the box.
 
 pub mod manifest;
 
 use anyhow::{anyhow, Context as _, Result};
+use std::collections::hash_map::Entry;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 pub use manifest::Manifest;
@@ -40,12 +52,166 @@ pub struct PpoStats {
     pub approx_kl: f32,
 }
 
+/// Network shapes + Table 2 hyperparameters a PPO backend commits to —
+/// the backend-neutral subset of the artifact [`Manifest`].
+#[derive(Debug, Clone)]
+pub struct AgentSpec {
+    pub ndims: usize,
+    pub nact: usize,
+    pub nparams: usize,
+    /// Parallel episode walkers per `policy_forward` call.
+    pub b_policy: usize,
+    /// Transitions per `ppo_update` call.
+    pub b_rollout: usize,
+    pub minibatch: usize,
+    pub n_epochs: usize,
+    pub adam_lr: f64,
+    pub discount: f64,
+    pub gae_lambda: f64,
+    pub clip: f64,
+    pub vf_coef: f64,
+    pub ent_coef: f64,
+}
+
+impl AgentSpec {
+    /// The native backend's spec: model.py's topology constants + the
+    /// paper's Table 2 hyperparameters. The loss/optimizer values come
+    /// from `nn::ppo::PpoConfig::default()` — one source of truth shared
+    /// with the update code and its gradient-check tests.
+    pub fn native() -> Self {
+        let ppo = crate::nn::ppo::PpoConfig::default();
+        AgentSpec {
+            ndims: crate::space::NDIMS,
+            nact: crate::nn::net::NACT,
+            nparams: crate::nn::NPARAMS,
+            b_policy: 64,
+            b_rollout: 512,
+            minibatch: ppo.minibatch,
+            n_epochs: ppo.n_epochs,
+            adam_lr: ppo.adam.lr,
+            discount: 0.9,
+            gae_lambda: 0.99,
+            clip: ppo.clip,
+            vf_coef: ppo.vf_coef,
+            ent_coef: ppo.ent_coef,
+        }
+    }
+
+    pub fn from_manifest(m: &Manifest) -> Self {
+        AgentSpec {
+            ndims: m.ndims,
+            nact: m.nact,
+            nparams: m.nparams,
+            b_policy: m.b_policy,
+            b_rollout: m.b_rollout,
+            minibatch: m.minibatch,
+            n_epochs: m.n_epochs,
+            adam_lr: m.adam_lr,
+            discount: m.discount,
+            gae_lambda: m.gae_lambda,
+            clip: m.clip,
+            vf_coef: m.vf_coef,
+            ent_coef: m.ent_coef,
+        }
+    }
+
+    /// Episode horizon: steps per walker per rollout.
+    pub fn horizon(&self) -> usize {
+        self.b_rollout / self.b_policy
+    }
+}
+
+/// A PPO execution backend: everything the search agent needs from its
+/// policy/value networks. Implementations must be thread-safe — the
+/// session engine shares one backend across task-parallel tuner loops.
+pub trait Backend: Send + Sync {
+    /// Short identifier ("native" / "pjrt") for logs and CLI output.
+    fn name(&self) -> &'static str;
+
+    /// Shapes + hyperparameters this backend was built for.
+    fn spec(&self) -> &AgentSpec;
+
+    /// Fresh parameters + zeroed Adam state.
+    fn ppo_init(&self, seed: i32) -> Result<AgentState>;
+
+    /// Per-dim action log-probs + values for `obs` (row-major
+    /// `[b_policy, ndims]`); returns `(logp [b_policy * ndims * nact],
+    /// value [b_policy])`.
+    fn policy_forward(&self, state: &AgentState, obs: &[f32])
+        -> Result<(Vec<f32>, Vec<f32>)>;
+
+    /// One full PPO update (`n_epochs` x minibatches + Adam). Mutates
+    /// `state` in place and returns the averaged loss stats.
+    #[allow(clippy::too_many_arguments)]
+    fn ppo_update(
+        &self,
+        state: &mut AgentState,
+        obs: &[f32],
+        actions: &[i32],
+        old_logp: &[f32],
+        advantages: &[f32],
+        returns: &[f32],
+        mask: &[f32],
+        seed: i32,
+    ) -> Result<PpoStats>;
+}
+
+/// Which backend to run the PPO agent on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// PJRT when artifacts are present and load, else native.
+    Auto,
+    /// The pure-Rust `nn/` backend (always available).
+    Native,
+    /// The PJRT artifact runtime (requires `make artifacts`).
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn parse(name: &str) -> Option<Self> {
+        match name.to_ascii_lowercase().as_str() {
+            "auto" => Some(BackendKind::Auto),
+            "native" | "nn" | "rust" => Some(BackendKind::Native),
+            "pjrt" | "xla" => Some(BackendKind::Pjrt),
+            _ => None,
+        }
+    }
+}
+
+/// Construct the requested backend. `Native` and `Auto` always succeed
+/// (`Auto` falls back to native when artifacts are absent or fail to
+/// load); `Pjrt` errors when the artifacts are missing.
+pub fn select_backend(kind: BackendKind) -> Result<Arc<dyn Backend>> {
+    match kind {
+        BackendKind::Native => Ok(Arc::new(crate::nn::NativeBackend::new())),
+        BackendKind::Pjrt => {
+            let rt = Runtime::load_default()
+                .context("PJRT backend unavailable (run `make artifacts`)")?;
+            Ok(Arc::new(rt))
+        }
+        BackendKind::Auto => {
+            let dir = default_artifact_dir();
+            if Runtime::artifacts_present(&dir) {
+                match Runtime::load(&dir) {
+                    Ok(rt) => return Ok(Arc::new(rt)),
+                    Err(e) => eprintln!(
+                        "warning: artifacts present but PJRT load failed ({e}); \
+                         falling back to the native backend"
+                    ),
+                }
+            }
+            Ok(Arc::new(crate::nn::NativeBackend::new()))
+        }
+    }
+}
+
 /// Loaded artifacts + PJRT client. One compiled executable per entry point.
 pub struct Runtime {
     client: xla::PjRtClient,
     exes: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
     dir: PathBuf,
     pub manifest: Manifest,
+    spec: AgentSpec,
 }
 
 impl Runtime {
@@ -56,11 +222,13 @@ impl Runtime {
         manifest.validate()?;
         let client = xla::PjRtClient::cpu()
             .map_err(|e| anyhow!("PjRtClient::cpu failed: {e:?}"))?;
+        let spec = AgentSpec::from_manifest(&manifest);
         Ok(Runtime {
             client,
             exes: Mutex::new(HashMap::new()),
             dir: dir.to_path_buf(),
             manifest,
+            spec,
         })
     }
 
@@ -79,7 +247,7 @@ impl Runtime {
         f: impl FnOnce(&xla::PjRtLoadedExecutable) -> Result<T>,
     ) -> Result<T> {
         let mut exes = self.exes.lock().unwrap();
-        if !exes.contains_key(name) {
+        if let Entry::Vacant(slot) = exes.entry(name.to_string()) {
             let path = self.dir.join(format!("{name}.hlo.txt"));
             let path_str = path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?;
             let proto = xla::HloModuleProto::from_text_file(path_str)
@@ -89,7 +257,7 @@ impl Runtime {
                 .client
                 .compile(&comp)
                 .with_context(|| format!("compiling {name}"))?;
-            exes.insert(name.to_string(), exe);
+            slot.insert(exe);
         }
         f(exes.get(name).unwrap())
     }
@@ -130,10 +298,41 @@ impl Runtime {
         Ok(lit.to_vec::<f32>()?)
     }
 
-    // ------------------------------------------------------------ agent API
+    // --------------------------------------------------- measurement kernels
+
+    /// Execute one AOT'd tiled-matmul variant, wall-clock timing the
+    /// execution (the *real measurement* path of DESIGN.md §2).
+    pub fn run_matmul(
+        &self,
+        variant: &str,
+        x: &[f32],
+        w: &[f32],
+    ) -> Result<(Vec<f32>, Duration)> {
+        let n = self.manifest.matmul_m as i64;
+        let xin = Self::f32_input(x, &[n, n])?;
+        let win = Self::f32_input(w, &[n, n])?;
+        let t0 = Instant::now();
+        let out = self.run(variant, &[xin, win])?;
+        let dt = t0.elapsed();
+        Ok((Self::to_f32(&out[0])?, dt))
+    }
+
+    pub fn matmul_variants(&self) -> &[String] {
+        &self.manifest.matmul_variants
+    }
+}
+
+impl Backend for Runtime {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn spec(&self) -> &AgentSpec {
+        &self.spec
+    }
 
     /// `ppo_init(seed)` — fresh parameters + zeroed Adam state.
-    pub fn ppo_init(&self, seed: i32) -> Result<AgentState> {
+    fn ppo_init(&self, seed: i32) -> Result<AgentState> {
         let out = self.run("ppo_init", &[Self::i32_input(&[seed], &[1])?])?;
         if out.len() != 3 {
             return Err(anyhow!("ppo_init returned {} outputs", out.len()));
@@ -154,10 +353,7 @@ impl Runtime {
         Ok(state)
     }
 
-    /// `policy_forward(params, obs)` — per-dim action log-probs + values.
-    /// obs is row-major [b_policy, ndims]; returns
-    /// (logp [b_policy * ndims * nact], value [b_policy]).
-    pub fn policy_forward(
+    fn policy_forward(
         &self,
         state: &AgentState,
         obs: &[f32],
@@ -174,9 +370,8 @@ impl Runtime {
     }
 
     /// One full PPO update (3 epochs x minibatches + Adam) in a single XLA
-    /// call. Mutates `state` in place and returns the averaged loss stats.
-    #[allow(clippy::too_many_arguments)]
-    pub fn ppo_update(
+    /// call.
+    fn ppo_update(
         &self,
         state: &mut AgentState,
         obs: &[f32],
@@ -215,29 +410,6 @@ impl Runtime {
         let s = Self::to_f32(&out[3])?;
         Ok(PpoStats { pg_loss: s[0], v_loss: s[1], entropy: s[2], approx_kl: s[3] })
     }
-
-    // --------------------------------------------------- measurement kernels
-
-    /// Execute one AOT'd tiled-matmul variant, wall-clock timing the
-    /// execution (the *real measurement* path of DESIGN.md §2).
-    pub fn run_matmul(
-        &self,
-        variant: &str,
-        x: &[f32],
-        w: &[f32],
-    ) -> Result<(Vec<f32>, Duration)> {
-        let n = self.manifest.matmul_m as i64;
-        let xin = Self::f32_input(x, &[n, n])?;
-        let win = Self::f32_input(w, &[n, n])?;
-        let t0 = Instant::now();
-        let out = self.run(variant, &[xin, win])?;
-        let dt = t0.elapsed();
-        Ok((Self::to_f32(&out[0])?, dt))
-    }
-
-    pub fn matmul_variants(&self) -> &[String] {
-        &self.manifest.matmul_variants
-    }
 }
 
 #[cfg(test)]
@@ -251,6 +423,46 @@ mod tests {
             return None;
         }
         Some(Runtime::load(&dir).expect("runtime load"))
+    }
+
+    #[test]
+    fn backend_kind_parses() {
+        assert_eq!(BackendKind::parse("native"), Some(BackendKind::Native));
+        assert_eq!(BackendKind::parse("PJRT"), Some(BackendKind::Pjrt));
+        assert_eq!(BackendKind::parse("auto"), Some(BackendKind::Auto));
+        assert_eq!(BackendKind::parse("tpu"), None);
+    }
+
+    #[test]
+    fn native_and_auto_selection_always_succeed() {
+        let native = select_backend(BackendKind::Native).unwrap();
+        assert_eq!(native.name(), "native");
+        assert_eq!(native.spec().nparams, crate::nn::NPARAMS);
+        // Auto never fails: PJRT when artifacts exist, else native.
+        let auto = select_backend(BackendKind::Auto).unwrap();
+        assert!(auto.name() == "native" || auto.name() == "pjrt");
+    }
+
+    #[test]
+    fn pjrt_selection_errors_without_artifacts() {
+        if Runtime::artifacts_present(&default_artifact_dir()) {
+            return; // artifacts built: nothing to assert here
+        }
+        let err = select_backend(BackendKind::Pjrt).unwrap_err();
+        assert!(format!("{err}").contains("PJRT backend unavailable"));
+    }
+
+    #[test]
+    fn native_spec_matches_table2() {
+        let s = AgentSpec::native();
+        assert_eq!(s.ndims, crate::space::NDIMS);
+        assert_eq!(s.nact, 3);
+        assert_eq!(s.b_rollout % s.b_policy, 0);
+        assert_eq!(s.horizon(), 8);
+        assert_eq!(s.adam_lr, 1e-3);
+        assert_eq!(s.discount, 0.9);
+        assert_eq!(s.gae_lambda, 0.99);
+        assert_eq!(s.clip, 0.3);
     }
 
     #[test]

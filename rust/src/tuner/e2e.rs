@@ -3,7 +3,7 @@
 //! Fig 9 / Tables 5–6 protocol).
 
 use super::{tune, MethodSpec, TuneResult, TunerConfig};
-use crate::runtime::Runtime;
+use crate::runtime::Backend;
 use crate::sim::Measurer;
 use crate::workload::{zoo, ConvTask};
 use std::sync::Arc;
@@ -50,11 +50,11 @@ pub fn tune_model(
     measurer: &dyn Measurer,
     method: MethodSpec,
     cfg: &TunerConfig,
-    runtime: Option<Arc<Runtime>>,
+    backend: Option<Arc<dyn Backend>>,
 ) -> ModelTuneResult {
     let tasks = zoo::model_tasks(model_name)
         .unwrap_or_else(|| panic!("unknown model {model_name}"));
-    tune_tasks(model_name, &tasks, measurer, method, cfg, runtime)
+    tune_tasks(model_name, &tasks, measurer, method, cfg, backend)
 }
 
 /// Tune an explicit task list (used by the layer-subset experiments too).
@@ -64,12 +64,12 @@ pub fn tune_tasks(
     measurer: &dyn Measurer,
     method: MethodSpec,
     cfg: &TunerConfig,
-    runtime: Option<Arc<Runtime>>,
+    backend: Option<Arc<dyn Backend>>,
 ) -> ModelTuneResult {
     let mut results = Vec::with_capacity(tasks.len());
     for (i, task) in tasks.iter().enumerate() {
         let task_cfg = per_task_config(cfg, i);
-        results.push(tune(task, measurer, method, &task_cfg, runtime.clone()));
+        results.push(tune(task, measurer, method, &task_cfg, backend.clone()));
     }
     aggregate(model_name, method, tasks, results, None)
 }

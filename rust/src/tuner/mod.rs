@@ -14,7 +14,7 @@ pub mod session;
 use crate::coordinator::MeasureCoordinator;
 use crate::costmodel::CostModel;
 use crate::rl::PpoAgent;
-use crate::runtime::Runtime;
+use crate::runtime::Backend;
 use crate::sampling::{adaptive_sample, fill_random_unvisited, greedy_sample, SamplerKind};
 use crate::search::{
     ga::GeneticAlgorithm, random::RandomSearch, sa::SimulatedAnnealing, Searcher,
@@ -196,7 +196,7 @@ impl TuneResult {
 
 fn make_searcher(
     kind: SearcherKind,
-    runtime: Option<Arc<Runtime>>,
+    backend: Option<Arc<dyn Backend>>,
     seed: u64,
 ) -> Box<dyn Searcher> {
     match kind {
@@ -204,10 +204,10 @@ fn make_searcher(
         SearcherKind::Ga => Box::new(GeneticAlgorithm::default()),
         SearcherKind::Random => Box::new(RandomSearch::default()),
         SearcherKind::Rl => {
-            let rt = runtime.expect(
-                "RL searcher needs the PJRT runtime (artifacts/; run `make artifacts`)",
+            let be = backend.expect(
+                "RL searcher needs a PPO backend (runtime::select_backend)",
             );
-            Box::new(PpoAgent::new(rt, seed as i32))
+            Box::new(PpoAgent::new(be, seed as i32))
         }
     }
 }
@@ -269,10 +269,10 @@ impl TaskTuner {
         task: &ConvTask,
         method: MethodSpec,
         cfg: &TunerConfig,
-        runtime: Option<Arc<Runtime>>,
+        backend: Option<Arc<dyn Backend>>,
     ) -> Self {
         let model = CostModel::new(cfg.seed);
-        let mut searcher = make_searcher(method.searcher, runtime, cfg.seed);
+        let mut searcher = make_searcher(method.searcher, backend, cfg.seed);
         searcher.reset();
         TaskTuner {
             space: DesignSpace::for_conv(task.layer),
@@ -527,11 +527,11 @@ pub fn tune_with_coordinator(
     coordinator: &MeasureCoordinator<'_>,
     method: MethodSpec,
     cfg: &TunerConfig,
-    runtime: Option<Arc<Runtime>>,
+    backend: Option<Arc<dyn Backend>>,
     pipeline_depth: usize,
 ) -> TuneResult {
     let depth = pipeline_depth.max(1);
-    let mut tuner = TaskTuner::new(task, method, cfg, runtime);
+    let mut tuner = TaskTuner::new(task, method, cfg, backend);
     let mut queue: VecDeque<(PlannedBatch, Vec<Measurement>, f64)> = VecDeque::new();
     loop {
         while queue.len() < depth {
@@ -559,10 +559,10 @@ pub fn tune(
     measurer: &dyn Measurer,
     method: MethodSpec,
     cfg: &TunerConfig,
-    runtime: Option<Arc<Runtime>>,
+    backend: Option<Arc<dyn Backend>>,
 ) -> TuneResult {
     let coordinator = MeasureCoordinator::new(measurer, cfg.measure_workers);
-    tune_with_coordinator(task, &coordinator, method, cfg, runtime, 1)
+    tune_with_coordinator(task, &coordinator, method, cfg, backend, 1)
 }
 
 #[cfg(test)]

@@ -41,7 +41,7 @@
 use super::e2e::{self, ModelTuneResult};
 use super::{tune_with_coordinator, MethodSpec, TuneResult, TunerConfig};
 use crate::coordinator::MeasureCoordinator;
-use crate::runtime::Runtime;
+use crate::runtime::Backend;
 use crate::sim::Measurer;
 use crate::util::stats::argmin;
 use crate::workload::{zoo, ConvTask};
@@ -153,11 +153,11 @@ pub fn tune_model_session(
     measurer: &dyn Measurer,
     method: MethodSpec,
     scfg: &SessionConfig,
-    runtime: Option<Arc<Runtime>>,
+    backend: Option<Arc<dyn Backend>>,
 ) -> ModelTuneResult {
     let tasks = zoo::model_tasks(model_name)
         .unwrap_or_else(|| panic!("unknown model {model_name}"));
-    tune_tasks_session(model_name, &tasks, measurer, method, scfg, runtime)
+    tune_tasks_session(model_name, &tasks, measurer, method, scfg, backend)
 }
 
 /// Tune an explicit task list under the session schedule.
@@ -167,7 +167,7 @@ pub fn tune_tasks_session(
     measurer: &dyn Measurer,
     method: MethodSpec,
     scfg: &SessionConfig,
-    runtime: Option<Arc<Runtime>>,
+    backend: Option<Arc<dyn Backend>>,
 ) -> ModelTuneResult {
     let n = tasks.len();
     let budgets = task_budgets(scfg, n);
@@ -193,7 +193,7 @@ pub fn tune_tasks_session(
                 &coordinator,
                 method,
                 &cfgs[i],
-                runtime.clone(),
+                backend.clone(),
                 depth,
             ));
         }
@@ -208,7 +208,7 @@ pub fn tune_tasks_session(
         let next = Mutex::new(0usize);
         std::thread::scope(|scope| {
             for _ in 0..tp {
-                let rt = runtime.clone();
+                let be = backend.clone();
                 let slots = &slots;
                 let next = &next;
                 let coordinator = &coordinator;
@@ -228,7 +228,7 @@ pub fn tune_tasks_session(
                         coordinator,
                         method,
                         &cfgs[i],
-                        rt.clone(),
+                        be.clone(),
                         depth,
                     );
                     slots.lock().unwrap()[i] = Some(r);

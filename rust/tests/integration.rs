@@ -1,15 +1,23 @@
 //! Cross-module integration tests: the full tuner stack over the simulated
-//! hardware, the four evaluation arms, determinism, and clock accounting.
+//! hardware, the four evaluation arms (RL on the native backend),
+//! determinism, and clock accounting.
 
+use release::nn::NativeBackend;
+use release::runtime::Backend;
 use release::sim::{Measurer, SimMeasurer};
 use release::space::DesignSpace;
 use release::tuner::session::{tune_tasks_session, SessionConfig};
 use release::tuner::{e2e::tune_model, e2e::tune_tasks, tune, MethodSpec, TunerConfig};
 use release::util::prop::forall;
 use release::workload::zoo;
+use std::sync::Arc;
 
 fn quick(seed: u64) -> TunerConfig {
     TunerConfig { max_trials: 160, seed, ..Default::default() }
+}
+
+fn native_backend() -> Arc<dyn Backend> {
+    Arc::new(NativeBackend::new())
 }
 
 #[test]
@@ -24,6 +32,69 @@ fn all_non_rl_arms_tune_the_same_task() {
         assert!(r.best_runtime_ms.is_finite());
         assert!(r.clock.measure_s > 0.0);
     }
+}
+
+#[test]
+fn rl_arms_tune_end_to_end_on_the_native_backend() {
+    // The paper's RL and RELEASE arms, no XLA artifacts anywhere: the
+    // pure-Rust backend must carry a full tune loop per method.
+    let task = &zoo::resnet18()[5];
+    for name in ["rl", "release"] {
+        let method = MethodSpec::parse(name).unwrap();
+        let meas = SimMeasurer::titan_xp(1);
+        let cfg = TunerConfig { max_trials: 96, seed: 1, ..Default::default() };
+        let r = tune(task, &meas, method, &cfg, Some(native_backend()));
+        assert!(r.best_gflops > 0.0, "{name} found nothing");
+        assert!(r.n_measurements <= 96, "{name} overspent");
+        assert!(r.best_runtime_ms.is_finite());
+        assert!(r.clock.search_s > 0.0 && r.clock.measure_s > 0.0);
+        // the Fig 5 metric is populated
+        assert!(r.iterations.iter().all(|it| it.steps_to_converge <= it.steps));
+    }
+}
+
+#[test]
+fn session_engine_runs_rl_method_without_artifacts() {
+    // The pipelined multi-task session engine with the RL method on the
+    // native backend (the acceptance bar of PR 2's tentpole).
+    let cfg = TunerConfig { max_trials: 48, seed: 2, ..Default::default() };
+    let scfg = SessionConfig::pipelined(cfg, 2);
+    let r = tune_tasks_session(
+        "alexnet",
+        &zoo::alexnet(),
+        &SimMeasurer::titan_xp(3),
+        MethodSpec::release(),
+        &scfg,
+        Some(native_backend()),
+    );
+    assert_eq!(r.tasks.len(), 5);
+    for t in &r.tasks {
+        assert!(t.best_gflops > 0.0, "{} found nothing", t.task_id);
+        assert!(t.n_measurements <= 48);
+    }
+    assert!(r.inference_ms.is_finite() && r.inference_ms > 0.0);
+    assert!(r.wall_s > 0.0 && r.wall_s <= r.opt_time_s + 1e-9);
+}
+
+#[test]
+fn rl_beats_random_under_equal_trial_budget() {
+    // PpoAgent smoke test: with the same measurement budget, the PPO agent
+    // (cost-model-guided) must beat uniform random search on most seeds.
+    let task = &zoo::alexnet()[3];
+    let mut wins = 0;
+    for seed in 0..3u64 {
+        let meas_a = SimMeasurer::titan_xp(seed + 50);
+        let meas_b = SimMeasurer::titan_xp(seed + 50);
+        let cfg =
+            TunerConfig { max_trials: 160, early_stop: None, seed, ..Default::default() };
+        let rl = tune(task, &meas_a, MethodSpec::rl_only(), &cfg, Some(native_backend()));
+        let rnd =
+            tune(task, &meas_b, MethodSpec::parse("random").unwrap(), &cfg, None);
+        if rl.best_gflops >= rnd.best_gflops {
+            wins += 1;
+        }
+    }
+    assert!(wins >= 2, "RL won only {wins}/3 against random");
 }
 
 #[test]
