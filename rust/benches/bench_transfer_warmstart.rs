@@ -1,0 +1,51 @@
+//! Transfer warm-start shape check: on a seeded ResNet-18 session, tasks
+//! warm-started from sibling artifacts must reach 95% of the cold-start
+//! best GFLOPS in at least 25% fewer measured configs, while `--transfer
+//! off` stays bit-identical to the baseline engine (pinned by the
+//! integration tests; this bench asserts the warm-start win).
+//!
+//! `RELEASE_QUICK=1 cargo bench --bench bench_transfer_warmstart` for the
+//! CI smoke pass.
+
+use release::report::{transfer_warmstart, ExperimentConfig};
+use release::transfer::TransferMode;
+use release::util::bench::Bencher;
+
+fn main() {
+    let quick = std::env::var("RELEASE_QUICK").map(|v| v != "0").unwrap_or(false);
+    let cfg = if quick {
+        ExperimentConfig::quick(0)
+    } else {
+        ExperimentConfig::paper(0)
+    };
+
+    let (r, _) = Bencher::once("transfer warm-start (resnet18, cold vs warm)", || {
+        transfer_warmstart(&cfg, TransferMode::Model, None)
+    });
+
+    let reduction = r.reduction();
+    println!(
+        "\nSHAPE CHECK — {} warm-started tasks ({} reached the 95% bar); \
+         configs-to-target {} cold vs {} warm ({:.0}% fewer); quality \
+         geomean {:.3}x",
+        r.n_eligible,
+        r.n_reached,
+        r.cold_configs_to_target,
+        r.warm_configs_to_target,
+        reduction * 100.0,
+        r.quality_ratio_geomean
+    );
+    assert!(
+        r.n_eligible >= 8,
+        "expected most of resnet18's 12 tasks to find donors, got {}",
+        r.n_eligible
+    );
+    assert!(
+        reduction >= 0.25,
+        "warm start must cut configs-to-target by >= 25%, got {:.0}% \
+         ({} cold vs {} warm)",
+        reduction * 100.0,
+        r.cold_configs_to_target,
+        r.warm_configs_to_target
+    );
+}

@@ -4,12 +4,13 @@
 //! release info
 //! release tune --model resnet18 [--method release] [--trials 1000] [--seed 0]
 //! release tune --layer L8 [--method autotvm] ...
-//! release experiment <fig2|fig3|fig5|fig6|fig7|fig8|fig9|all> [--quick] [--seed 0]
+//! release experiment <fig2|fig3|fig5|fig6|fig7|fig8|fig9|transfer|all> [--quick] [--seed 0]
 //! ```
 
 use crate::report::{self, ExperimentConfig};
 use crate::runtime::{select_backend, Backend, BackendKind};
 use crate::sim::SimMeasurer;
+use crate::transfer::{TransferConfig, TransferMode};
 use crate::tuner::session::{tune_model_session, SessionConfig};
 use crate::tuner::{tune, MethodSpec, TunerConfig};
 use crate::workload::zoo;
@@ -23,7 +24,7 @@ USAGE:
   release info
   release tune --model <alexnet|vgg16|resnet18> [options]
   release tune --layer <L1..L8> [options]
-  release experiment <fig2|fig3|fig5|fig6|fig7|fig8|fig9|all> [--quick] [--seed N]
+  release experiment <fig2|fig3|fig5|fig6|fig7|fig8|fig9|transfer|all> [--quick] [--seed N]
 
 TUNE OPTIONS:
   --method <autotvm|rl|sa+as|release|ga|random>   (default: release)
@@ -40,6 +41,11 @@ SESSION OPTIONS (model tuning):
                          (default: 2 when task-parallelism > 1, else 1)
   --budget-shares W,...  per-task trial shares, cycled over tasks and
                          normalized to keep the total pool (default: even)
+  --transfer <off|model|policy|both>
+                         cross-task transfer: completed tasks warm-start
+                         queued siblings (cost-model pairs and/or PPO
+                         policy); off = bit-identical baseline (default)
+  --transfer-topk N      donors consulted per task (default: 3)
 ";
 
 /// Parse `--key value` pairs and positional args.
@@ -173,12 +179,21 @@ fn session_config(flags: &HashMap<String, String>, tuner: TunerConfig) -> Sessio
             })
             .collect()
     });
+    let mut transfer = TransferConfig::off();
+    if let Some(v) = flags.get("transfer") {
+        transfer.mode = TransferMode::parse(v)
+            .unwrap_or_else(|| panic!("--transfer must be off|model|policy|both"));
+    }
+    if let Some(k) = parse("transfer-topk") {
+        transfer.topk = k.max(1);
+    }
     SessionConfig {
         tuner,
         task_parallelism,
         device_slots,
         pipeline_depth,
         budget_shares,
+        transfer,
     }
 }
 
@@ -249,18 +264,29 @@ fn cmd_tune(flags: &HashMap<String, String>) -> i32 {
         return 2;
     }
     let scfg = session_config(flags, cfg);
+    if scfg.transfer.mode.policy_enabled()
+        && method.searcher != crate::tuner::SearcherKind::Rl
+    {
+        eprintln!(
+            "note: --transfer {} includes policy warm-start, which only \
+             affects RL methods; {} will use the cost-model channel only",
+            scfg.transfer.mode.name(),
+            method.name()
+        );
+    }
     println!(
         "tuning {model} end-to-end with {} (task-parallelism {}, device slots {}, \
-         pipeline depth {})",
+         pipeline depth {}, transfer {})",
         method.name(),
         scfg.task_parallelism,
         scfg.device_slots,
-        scfg.pipeline_depth
+        scfg.pipeline_depth,
+        scfg.transfer.mode.name()
     );
     let r = tune_model_session(model, &meas, method, &scfg, backend);
     let mut table = report::Table::new(
         &format!("{model} via {}", method.name()),
-        &["task", "best ms", "GFLOPS", "measurements", "opt min", "wall min"],
+        &["task", "best ms", "GFLOPS", "measurements", "opt min", "wall min", "donors"],
     );
     for t in &r.tasks {
         table.row(vec![
@@ -270,6 +296,10 @@ fn cmd_tune(flags: &HashMap<String, String>) -> i32 {
             t.n_measurements.to_string(),
             format!("{:.1}", t.clock.total_s() / 60.0),
             format!("{:.1}", t.clock.wall_s / 60.0),
+            t.transfer
+                .as_ref()
+                .map(|s| s.donors.len().to_string())
+                .unwrap_or_else(|| "-".into()),
         ]);
     }
     table.print();
@@ -296,13 +326,23 @@ fn cmd_experiment(pos: &[String], flags: &HashMap<String, String>) -> i32 {
     } else {
         ExperimentConfig::from_env(seed)
     };
+    // `experiment transfer` defaults to the cost-model channel (runs on any
+    // method); ask for policy/both to exercise the RL warm-start too.
+    let tmode = flags
+        .get("transfer")
+        .map(|v| {
+            TransferMode::parse(v).unwrap_or_else(|| {
+                panic!("--transfer must be model|policy|both for this experiment")
+            })
+        })
+        .unwrap_or(TransferMode::Model);
     // Experiments with an RL arm need a PPO backend; with the native
     // backend always available this can only fail on an explicit
     // `--backend pjrt` without artifacts — report it, never panic.
     let needs_backend = matches!(
         which.as_str(),
         "fig5" | "fig6" | "fig7" | "fig8" | "fig9" | "table5" | "table6" | "all"
-    );
+    ) || (which.as_str() == "transfer" && tmode.policy_enabled());
     let backend = if needs_backend {
         match backend_from_flags(flags) {
             Ok(be) => {
@@ -345,6 +385,13 @@ fn cmd_experiment(pos: &[String], flags: &HashMap<String, String>) -> i32 {
         }
         ("fig9" | "table5" | "table6", Some(be)) => {
             report::fig9_tables56(&cfg, be);
+        }
+        ("transfer", be) => {
+            if tmode.is_off() {
+                eprintln!("--transfer off measures nothing; want model|policy|both");
+                return 2;
+            }
+            report::transfer_warmstart(&cfg, tmode, be);
         }
         ("all", Some(be)) => {
             report::fig2(&cfg);
@@ -450,5 +497,19 @@ mod tests {
         let s = session_config(&flags, TunerConfig::default());
         assert_eq!((s.device_slots, s.pipeline_depth), (2, 1));
         assert_eq!(s.budget_shares, Some(vec![2.0, 1.0, 1.0]));
+    }
+
+    #[test]
+    fn transfer_flags_parse_and_default_off() {
+        let defaults = session_config(&HashMap::new(), TunerConfig::default());
+        assert!(defaults.transfer.mode.is_off());
+        assert_eq!(defaults.transfer.topk, 3);
+
+        let mut flags = HashMap::new();
+        flags.insert("transfer".to_string(), "both".to_string());
+        flags.insert("transfer-topk".to_string(), "5".to_string());
+        let s = session_config(&flags, TunerConfig::default());
+        assert_eq!(s.transfer.mode, TransferMode::Both);
+        assert_eq!(s.transfer.topk, 5);
     }
 }

@@ -9,6 +9,7 @@
 use crate::gbt::{Gbt, GbtParams};
 use crate::sim::Measurement;
 use crate::space::{features::features, Config, DesignSpace};
+use crate::util::rng::hash_unit;
 
 /// Time model for what fitting/querying would cost on the paper's host —
 /// drives the simulated `Clock::model_s` (the non-measurement slice of
@@ -35,6 +36,16 @@ pub struct CostModel {
     /// (features, log-gflops target) training pairs accumulated so far.
     xs: Vec<Vec<f32>>,
     ys: Vec<f32>,
+    /// Transferred pairs from sibling tasks (features already re-extracted
+    /// in *this* task's space) with their base sample weights — folded into
+    /// fits via deterministic Bernoulli thinning, decaying as native
+    /// measurements accumulate (see [`CostModel::seed_transfer`]).
+    t_xs: Vec<Vec<f32>>,
+    t_ys: Vec<f32>,
+    t_w: Vec<f32>,
+    /// Native measurements over which a transferred pair's effective weight
+    /// halves.
+    pub transfer_half_life: f64,
     best_gflops: f64,
     pub time: ModelTimeCost,
     /// Simulated seconds spent fitting + predicting.
@@ -42,8 +53,19 @@ pub struct CostModel {
     n_fits: usize,
 }
 
-/// Fitness of a failed config in log-GFLOPS space.
-const FAIL_TARGET: f32 = -4.0;
+/// Fitness of a failed config in log-GFLOPS space (public so transfer
+/// artifacts can encode failures with the model's own convention).
+pub const FAIL_TARGET: f32 = -4.0;
+
+/// Log-GFLOPS target for one measurement — the single encoding shared by
+/// online updates and published transfer artifacts.
+pub fn measurement_target(m: &Measurement) -> f32 {
+    if m.gflops > 0.0 {
+        (m.gflops.max(1e-3)).ln() as f32
+    } else {
+        FAIL_TARGET
+    }
+}
 
 impl CostModel {
     pub fn new(seed: u64) -> Self {
@@ -52,6 +74,10 @@ impl CostModel {
             params: GbtParams { seed, ..Default::default() },
             xs: Vec::new(),
             ys: Vec::new(),
+            t_xs: Vec::new(),
+            t_ys: Vec::new(),
+            t_w: Vec::new(),
+            transfer_half_life: 128.0,
             best_gflops: 0.0,
             time: ModelTimeCost::default(),
             spent_s: std::cell::Cell::new(0.0),
@@ -80,20 +106,86 @@ impl CostModel {
     pub fn update(&mut self, space: &DesignSpace, results: &[Measurement]) {
         for m in results {
             self.xs.push(features(space, &m.config));
+            self.ys.push(measurement_target(m));
             if m.gflops > 0.0 {
-                self.ys.push((m.gflops.max(1e-3)).ln() as f32);
                 self.best_gflops = self.best_gflops.max(m.gflops);
-            } else {
-                self.ys.push(FAIL_TARGET);
             }
         }
-        if self.xs.len() >= 8 {
-            self.gbt = Some(Gbt::fit(&self.xs, &self.ys, &self.params));
+        self.refit();
+    }
+
+    /// Fold sibling-task training pairs into this model (cross-task
+    /// transfer). `xs` rows must already be featurized in *this* task's
+    /// design space; `weights` in (0, 1] scale each pair's influence.
+    /// Fits immediately, so the first search round runs model-guided.
+    ///
+    /// Weighting is realized as deterministic Bernoulli thinning: at each
+    /// fit, pair `i` participates iff `hash(seed, i) < w_i * decay`, where
+    /// `decay` halves every [`CostModel::transfer_half_life`] native
+    /// measurements — transferred evidence fades exactly as genuine
+    /// measurements take over.
+    pub fn seed_transfer(&mut self, xs: Vec<Vec<f32>>, ys: Vec<f32>, weights: Vec<f32>) {
+        assert_eq!(xs.len(), ys.len());
+        assert_eq!(xs.len(), weights.len());
+        self.t_xs.extend(xs);
+        self.t_ys.extend(ys);
+        self.t_w.extend(weights);
+        self.refit();
+    }
+
+    /// Transferred pairs held (before thinning).
+    pub fn n_transferred(&self) -> usize {
+        self.t_xs.len()
+    }
+
+    /// Refit the ensemble on native rows plus the thinned transferred rows.
+    /// With no (surviving) transferred pairs this is exactly the baseline
+    /// fit — same rows, same order, same tree RNG, and no row cloning.
+    fn refit(&mut self) {
+        let decay =
+            0.5f64.powf(self.xs.len() as f64 / self.transfer_half_life.max(1.0));
+        let mut included: Vec<usize> = Vec::new();
+        for (i, w) in self.t_w.iter().enumerate() {
+            let w_eff = (*w as f64) * decay;
+            let u = hash_unit(
+                self.params
+                    .seed
+                    .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+                    .wrapping_add(i as u64),
+            );
+            // pairs whose weight decayed below 1e-3 are dropped outright:
+            // past that point native evidence owns the model completely
+            if w_eff >= 1e-3 && u < w_eff {
+                included.push(i);
+            }
+        }
+        if included.is_empty() {
+            if self.xs.len() >= 8 {
+                self.gbt = Some(Gbt::fit(&self.xs, &self.ys, &self.params));
+                self.n_fits += 1;
+                self.spent_s.set(
+                    self.spent_s.get()
+                        + self.time.fit_base_s
+                        + self.time.fit_per_sample_s * self.xs.len() as f64,
+                );
+            }
+            return;
+        }
+        let mut data: Vec<Vec<f32>> = Vec::with_capacity(included.len() + self.xs.len());
+        let mut y: Vec<f32> = Vec::with_capacity(included.len() + self.ys.len());
+        for &i in &included {
+            data.push(self.t_xs[i].clone());
+            y.push(self.t_ys[i]);
+        }
+        data.extend(self.xs.iter().cloned());
+        y.extend(self.ys.iter().cloned());
+        if data.len() >= 8 {
+            self.gbt = Some(Gbt::fit(&data, &y, &self.params));
             self.n_fits += 1;
             self.spent_s.set(
                 self.spent_s.get()
                     + self.time.fit_base_s
-                    + self.time.fit_per_sample_s * self.xs.len() as f64,
+                    + self.time.fit_per_sample_s * data.len() as f64,
             );
         }
     }
@@ -196,6 +288,74 @@ mod tests {
         let mf = crate::util::stats::mean(&fail_p);
         let mo = crate::util::stats::mean(&ok_p);
         assert!(mf < mo, "fail {mf} ok {mo}");
+    }
+
+    #[test]
+    fn transferred_pairs_train_the_model_before_any_measurement() {
+        let (space, meas) = setup();
+        let mut rng = Pcg32::seed_from(11);
+        // "donor" data measured in the same space (the remapping path is
+        // covered by transfer::tests; here the model mechanics are on trial)
+        let train: Vec<_> = (0..200).map(|_| space.random_config(&mut rng)).collect();
+        let measured = meas.measure_batch(&space, &train);
+        let xs: Vec<Vec<f32>> =
+            train.iter().map(|c| features(&space, c)).collect();
+        let ys: Vec<f32> = measured.iter().map(measurement_target).collect();
+
+        let mut cm = CostModel::new(5);
+        assert!(!cm.is_trained());
+        cm.seed_transfer(xs, ys, vec![1.0; 200]);
+        assert!(cm.is_trained(), "seeding must fit immediately");
+        assert_eq!(cm.n_transferred(), 200);
+        assert_eq!(cm.n_samples(), 0, "no native samples yet");
+        assert!(cm.spent_s.get() > 0.0, "seed fit must charge model time");
+
+        // the seeded surface ranks held-out configs in this space
+        let test: Vec<_> = (0..150).map(|_| space.random_config(&mut rng)).collect();
+        let tm = meas.measure_batch(&space, &test);
+        let valid: Vec<usize> = (0..test.len()).filter(|&i| tm[i].ok()).collect();
+        let preds = cm.predict_batch(&space, &test);
+        let p: Vec<f64> = valid.iter().map(|&i| preds[i]).collect();
+        let y: Vec<f64> = valid.iter().map(|&i| tm[i].gflops.ln()).collect();
+        let rho = spearman(&p, &y);
+        assert!(rho > 0.4, "seeded spearman {rho}");
+    }
+
+    #[test]
+    fn transferred_weight_decays_to_zero_as_native_samples_accumulate() {
+        let (space, meas) = setup();
+        let mut rng = Pcg32::seed_from(12);
+        let donor: Vec<_> = (0..100).map(|_| space.random_config(&mut rng)).collect();
+        let xs: Vec<Vec<f32>> = donor.iter().map(|c| features(&space, c)).collect();
+        // adversarial donor targets: constant nonsense the native data
+        // must eventually override completely
+        let donor_ys = vec![3.0f32; 100];
+
+        // cm_a: seeded then natively trained; cm_b: native only
+        let mut cm_a = CostModel::new(6);
+        cm_a.transfer_half_life = 16.0;
+        cm_a.seed_transfer(xs, donor_ys, vec![1.0; 100]);
+        let mut cm_b = CostModel::new(6);
+        cm_b.transfer_half_life = 16.0;
+
+        let probe: Vec<_> = (0..50).map(|_| space.random_config(&mut rng)).collect();
+        let seeded_mean: f64 =
+            cm_a.predict_batch(&space, &probe).iter().sum::<f64>() / 50.0;
+        assert!((seeded_mean - 3.0).abs() < 0.5, "seeded mean {seeded_mean}");
+
+        // 256 native measurements = 16 half-lives: every transferred pair's
+        // effective weight falls below the 1e-3 cutoff, so the two models
+        // refit on identical rows — predictions agree bit-for-bit
+        let batch: Vec<_> = (0..256).map(|_| space.random_config(&mut rng)).collect();
+        let measured = meas.measure_batch(&space, &batch);
+        cm_a.update(&space, &measured);
+        cm_b.update(&space, &measured);
+        let pa = cm_a.predict_batch(&space, &probe);
+        let pb = cm_b.predict_batch(&space, &probe);
+        for (a, b) in pa.iter().zip(&pb) {
+            assert_eq!(a.to_bits(), b.to_bits(), "donor residue survived decay");
+        }
+        assert_eq!(cm_a.n_transferred(), 100); // held, just no longer fitted on
     }
 
     #[test]

@@ -30,6 +30,7 @@ pub mod sampling;
 pub mod search;
 pub mod sim;
 pub mod space;
+pub mod transfer;
 pub mod tuner;
 pub mod util;
 pub mod workload;

@@ -252,6 +252,28 @@ mod tests {
     }
 
     #[test]
+    fn warm_state_adopts_params_and_restarts_adam() {
+        // Cross-task policy transfer contract: donor params carry over
+        // verbatim, optimizer state restarts, topology mismatches error.
+        let be = NativeBackend::new();
+        let donor = be.ppo_init(3).unwrap();
+        let warm = be.warm_state(donor.params.clone()).unwrap();
+        assert_eq!(warm.params, donor.params);
+        assert!(warm.m.iter().all(|&v| v == 0.0));
+        assert!(warm.v.iter().all(|&v| v == 0.0));
+        assert_eq!(warm.t, 1.0);
+        // a warm state drives policy_forward exactly like the donor state
+        let spec = be.spec().clone();
+        let obs: Vec<f32> = (0..spec.b_policy * spec.ndims)
+            .map(|i| (i % 10) as f32 / 10.0)
+            .collect();
+        let (lp_donor, _) = be.policy_forward(&donor, &obs).unwrap();
+        let (lp_warm, _) = be.policy_forward(&warm, &obs).unwrap();
+        assert_eq!(lp_donor, lp_warm);
+        assert!(be.warm_state(vec![0.0; 17]).is_err());
+    }
+
+    #[test]
     fn same_seed_is_bit_identical_across_runs() {
         // The determinism contract: identical seeds and inputs produce a
         // bit-identical AgentState trajectory, run to run.

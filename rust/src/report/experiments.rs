@@ -9,6 +9,8 @@ use super::table::{fmt_f, results_dir, Table};
 use crate::runtime::{select_backend, Backend, BackendKind, Runtime};
 use crate::sim::SimMeasurer;
 use crate::space::{pca, DesignSpace};
+use crate::transfer::{TransferConfig, TransferMode};
+use crate::tuner::session::{tune_model_session, SessionConfig};
 use crate::tuner::{
     e2e::tune_model, tune, MethodSpec, TuneResult, TunerConfig,
 };
@@ -519,6 +521,152 @@ pub fn fig9_tables56(cfg: &ExperimentConfig, backend: Arc<dyn Backend>) -> Fig9R
     save(&opt_table, "table5_opt_time");
     save(&perf_table, "table6_inference_time");
     Fig9Result { opt_table, perf_table, mean_speedup: gm, infer_ratios }
+}
+
+// =============================================== Cross-task transfer warm-start
+
+pub struct TransferWarmstartResult {
+    pub table: Table,
+    /// Tasks that consumed at least one donor (eligible for the metric).
+    pub n_eligible: usize,
+    /// Eligible tasks whose warm run reached the target at all.
+    pub n_reached: usize,
+    /// Measured configs to reach 95% of the cold-start best GFLOPS, summed
+    /// over eligible tasks: cold vs warm (unreached warm tasks count their
+    /// whole measurement spend).
+    pub cold_configs_to_target: usize,
+    pub warm_configs_to_target: usize,
+    /// Geomean warm/cold best-GFLOPS ratio across all tasks (quality parity).
+    pub quality_ratio_geomean: f64,
+}
+
+impl TransferWarmstartResult {
+    /// Fractional reduction in measured configs-to-target (the headline:
+    /// >= 0.25 is the PR's acceptance bar).
+    pub fn reduction(&self) -> f64 {
+        if self.cold_configs_to_target == 0 {
+            return 0.0;
+        }
+        1.0 - self.warm_configs_to_target as f64 / self.cold_configs_to_target as f64
+    }
+}
+
+/// Measured configs after which `r` first reached `target` GFLOPS.
+fn configs_to_reach(r: &TuneResult, target: f64) -> Option<usize> {
+    r.iterations
+        .iter()
+        .find(|it| it.best_gflops >= target)
+        .map(|it| it.cum_measured)
+}
+
+/// Cross-task transfer warm-start on ResNet-18: tune the full network cold
+/// (`--transfer off`, the bit-identical baseline) and warm (the requested
+/// mode), then compare how many measured configs each task needed to reach
+/// 95% of its own cold-start best GFLOPS. Both runs share the measurer
+/// seed, the tuner seeds and the serial schedule, so the only difference
+/// is the transfer overlay. Policy-enabled modes run the RELEASE (RL)
+/// method and need a backend; model-only runs SA+AS and does not.
+pub fn transfer_warmstart(
+    cfg: &ExperimentConfig,
+    mode: TransferMode,
+    backend: Option<Arc<dyn Backend>>,
+) -> TransferWarmstartResult {
+    assert!(!mode.is_off(), "transfer experiment needs an enabled mode");
+    let model = "resnet18";
+    let method = if mode.policy_enabled() {
+        MethodSpec::release()
+    } else {
+        MethodSpec::sa_as()
+    };
+    let backend = if method.searcher == crate::tuner::SearcherKind::Rl {
+        Some(backend.unwrap_or_else(default_backend))
+    } else {
+        None
+    };
+    // bounded independently of the paper-scale budget: the metric needs
+    // several iterations per task, not a full 1000-trial run
+    let trials = if cfg.quick { 160 } else { 400 };
+    let tuner = TunerConfig { max_trials: trials, seed: cfg.seed, ..Default::default() };
+
+    let cold_scfg = SessionConfig::serial(tuner.clone());
+    let cold = tune_model_session(
+        model,
+        &SimMeasurer::titan_xp(cfg.seed ^ 0x7ab5),
+        method,
+        &cold_scfg,
+        backend.clone(),
+    );
+    let mut warm_scfg = SessionConfig::serial(tuner);
+    warm_scfg.transfer = TransferConfig::with_mode(mode);
+    let warm = tune_model_session(
+        model,
+        &SimMeasurer::titan_xp(cfg.seed ^ 0x7ab5),
+        method,
+        &warm_scfg,
+        backend,
+    );
+
+    let mut table = Table::new(
+        &format!(
+            "Cross-task transfer warm-start — {model} via {} (mode: {})",
+            method.name(),
+            mode.name()
+        ),
+        &["task", "donors", "cold→95%", "warm→95%", "cold best", "warm best"],
+    );
+    let mut cold_sum = 0usize;
+    let mut warm_sum = 0usize;
+    let mut n_eligible = 0usize;
+    let mut n_reached = 0usize;
+    let mut quality = Vec::new();
+    for (c, w) in cold.tasks.iter().zip(&warm.tasks) {
+        let donors = w.transfer.as_ref().map(|t| t.donors.len()).unwrap_or(0);
+        let target = 0.95 * c.best_gflops;
+        let ct = configs_to_reach(c, target).unwrap_or(c.n_measurements);
+        let wt = configs_to_reach(w, target);
+        if donors > 0 {
+            n_eligible += 1;
+            cold_sum += ct;
+            match wt {
+                Some(x) => {
+                    warm_sum += x;
+                    n_reached += 1;
+                }
+                None => warm_sum += w.n_measurements,
+            }
+        }
+        quality.push(w.best_gflops / c.best_gflops.max(1e-9));
+        table.row(vec![
+            c.task_id.clone(),
+            donors.to_string(),
+            ct.to_string(),
+            wt.map(|x| x.to_string()).unwrap_or_else(|| "—".into()),
+            fmt_f(c.best_gflops, 0),
+            fmt_f(w.best_gflops, 0),
+        ]);
+    }
+    table.print();
+    save(&table, "transfer_warmstart");
+    let result = TransferWarmstartResult {
+        table,
+        n_eligible,
+        n_reached,
+        cold_configs_to_target: cold_sum,
+        warm_configs_to_target: warm_sum,
+        quality_ratio_geomean: geomean(&quality),
+    };
+    println!(
+        "warm-started tasks: {}/{} ({} reached the 95% bar); configs-to-target \
+         {} cold vs {} warm ({:.0}% fewer); quality geomean {:.3}x",
+        warm.n_warm_started(),
+        warm.tasks.len(),
+        result.n_reached,
+        result.cold_configs_to_target,
+        result.warm_configs_to_target,
+        result.reduction() * 100.0,
+        result.quality_ratio_geomean
+    );
+    result
 }
 
 #[cfg(test)]

@@ -6,6 +6,7 @@ pub mod table;
 
 pub use experiments::{
     default_backend, fig2, fig3, fig5, fig6, fig7, fig8, fig9_tables56,
-    runtime_if_available, ExperimentConfig,
+    runtime_if_available, transfer_warmstart, ExperimentConfig,
+    TransferWarmstartResult,
 };
 pub use table::{results_dir, Table};

@@ -138,6 +138,19 @@ impl Searcher for PpoAgent {
         self.seed_configs = configs.to_vec();
     }
 
+    /// Cross-task policy transfer: continue from a donor's parameters
+    /// (validated upstream via `Backend::warm_state`) instead of `ppo_init`.
+    /// A topology mismatch is ignored — the agent then initializes fresh.
+    fn warm_start(&mut self, state: AgentState) {
+        if state.params.len() == self.backend.spec().nparams {
+            self.state = Some(state);
+        }
+    }
+
+    fn export_state(&self) -> Option<AgentState> {
+        self.state.clone()
+    }
+
     fn round(
         &mut self,
         space: &DesignSpace,

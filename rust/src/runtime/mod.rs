@@ -134,6 +134,24 @@ pub trait Backend: Send + Sync {
     /// Fresh parameters + zeroed Adam state.
     fn ppo_init(&self, seed: i32) -> Result<AgentState>;
 
+    /// Build an agent state around externally-supplied parameters
+    /// (cross-task policy warm-start): the policy continues from the donor
+    /// while the Adam moments restart. Works on every backend because the
+    /// flat parameter layout is part of the [`AgentSpec`] contract; errors
+    /// on a topology mismatch.
+    fn warm_state(&self, params: Vec<f32>) -> Result<AgentState> {
+        let want = self.spec().nparams;
+        if params.len() != want {
+            return Err(anyhow!(
+                "warm-start params have {} entries, backend {} needs {want}",
+                params.len(),
+                self.name()
+            ));
+        }
+        let n = params.len();
+        Ok(AgentState { params, m: vec![0.0; n], v: vec![0.0; n], t: 1.0 })
+    }
+
     /// Per-dim action log-probs + values for `obs` (row-major
     /// `[b_policy, ndims]`); returns `(logp [b_policy * ndims * nact],
     /// value [b_policy])`.

@@ -24,7 +24,10 @@ pub fn greedy_sample(
 ) -> Vec<Config> {
     assert_eq!(trajectory.len(), scores.len());
     let mut order: Vec<usize> = (0..trajectory.len()).collect();
-    order.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+    // a NaN score (poisoned model output) must neither panic the sampler
+    // nor win an exploitation slot: rank it like the worst possible score
+    let key = |v: f64| if v.is_nan() { f64::NEG_INFINITY } else { v };
+    order.sort_by(|&a, &b| key(scores[b]).total_cmp(&key(scores[a])));
 
     let n_random = ((plan_size as f64 * epsilon).round() as usize).min(plan_size);
     let n_top = plan_size - n_random;
@@ -96,6 +99,28 @@ mod tests {
         let traj_set: HashSet<u64> = traj.iter().map(|c| s.flat_index(c)).collect();
         let fresh = out.iter().filter(|c| !traj_set.contains(&s.flat_index(c))).count();
         assert!(fresh >= 10, "only {fresh} random picks");
+    }
+
+    #[test]
+    fn nan_scores_do_not_panic_or_win_slots() {
+        // regression for the partial_cmp().unwrap() comparator: NaN must
+        // neither panic nor displace the genuinely best-scored configs
+        let s = space();
+        let mut rng = Pcg32::seed_from(5);
+        let traj: Vec<Config> = (0..32).map(|_| s.random_config(&mut rng)).collect();
+        let mut scores: Vec<f64> = (0..32).map(|i| i as f64).collect();
+        scores[3] = f64::NAN;
+        scores[17] = f64::NAN;
+        let out = greedy_sample(&s, &traj, &scores, &HashSet::new(), 10, 0.0, &mut rng);
+        assert_eq!(out.len(), 10);
+        let distinct: HashSet<u64> = out.iter().map(|c| s.flat_index(c)).collect();
+        assert_eq!(distinct.len(), out.len());
+        // the top-scored config still makes the cut; the NaN-scored ones
+        // rank like the worst score and are left out
+        let got: HashSet<u64> = out.iter().map(|c| s.flat_index(c)).collect();
+        assert!(got.contains(&s.flat_index(&traj[31])));
+        assert!(!got.contains(&s.flat_index(&traj[3])));
+        assert!(!got.contains(&s.flat_index(&traj[17])));
     }
 
     #[test]

@@ -11,6 +11,7 @@ pub mod random;
 pub mod sa;
 
 use crate::costmodel::CostModel;
+use crate::runtime::AgentState;
 use crate::space::{Config, DesignSpace};
 use crate::util::rng::Pcg32;
 use std::collections::HashSet;
@@ -51,6 +52,16 @@ pub trait Searcher {
     /// Feed back the best measured configurations so far — searchers may
     /// warm-start from them (information reuse, paper Eq. 3). Default: ignore.
     fn seed(&mut self, _configs: &[Config]) {}
+
+    /// Adopt a donor agent state (cross-task policy transfer). Only learned
+    /// searchers have portable state; the default ignores it.
+    fn warm_start(&mut self, _state: AgentState) {}
+
+    /// Export internal agent state for publication to a transfer registry.
+    /// Default: nothing to export.
+    fn export_state(&self) -> Option<AgentState> {
+        None
+    }
 }
 
 /// Deduplicate a scored trajectory, keeping the best-scored `cap` entries

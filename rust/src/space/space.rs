@@ -172,6 +172,17 @@ impl DesignSpace {
         Config::new(idx)
     }
 
+    /// Concrete knob values of a configuration — the space-independent
+    /// identity used for cross-task transfer (a sibling space can remap
+    /// values it also offers, where plain indices would be meaningless).
+    pub fn knob_values(&self, c: &Config) -> Vec<i64> {
+        self.knobs
+            .iter()
+            .zip(&c.idx)
+            .map(|(k, &i)| k.value(i as usize))
+            .collect()
+    }
+
     /// Random single-knob mutation (SA / GA move).
     pub fn mutate(&self, c: &Config, rng: &mut Pcg32) -> Config {
         let mut idx = c.idx.clone();

@@ -1,0 +1,488 @@
+//! Cross-task transfer: warm-starting a conv task's tuner from the
+//! artifacts of already-finished sibling tasks (Chameleon / HARL style).
+//!
+//! The tasks of one network are near-siblings in shape, yet the baseline
+//! engine tunes each from scratch. This module closes that gap with three
+//! mechanisms, all behind the session engine's [`TransferRegistry`]:
+//!
+//! 1. **Shape similarity** ([`similarity`]): a normalized log-shape
+//!    distance over [`ConvLayer`]s ranks finished tasks as donors for a
+//!    recipient and orders a session's tasks into a curriculum
+//!    ([`curriculum_order`]: most-connected shapes first, so the best
+//!    donors exist as early as possible).
+//! 2. **Cost-model transfer**: a donor's measured `(knob values,
+//!    log-GFLOPS)` pairs are remapped into the recipient's `DesignSpace`
+//!    where knob-compatible ([`KnobMapper`]), re-featurized there, and
+//!    folded into the recipient's first GBT fits with a decaying sample
+//!    weight — the recipient's very first search round runs against a
+//!    trained surface instead of an uninformative prior.
+//! 3. **Policy transfer**: the PPO agent of an RL recipient starts from
+//!    the similarity-weighted average of its nearest donors' parameter
+//!    vectors instead of `ppo_init`. `AgentState`'s flat layout is
+//!    backend-portable by construction, so this works identically on the
+//!    native and PJRT backends (validated via `Backend::warm_state`).
+//!
+//! With [`TransferMode::Off`] none of this runs and the session engine is
+//! bit-identical to the baseline — pinned by the integration tests.
+
+pub mod registry;
+
+pub use registry::{TaskArtifact, TransferEvent, TransferRegistry};
+
+use crate::space::features::features;
+use crate::space::{Config, DesignSpace};
+use crate::workload::{ConvLayer, ConvTask};
+use std::collections::HashMap;
+
+/// Which transfer channels a session enables.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransferMode {
+    /// No transfer: the engine behaves exactly like the baseline.
+    Off,
+    /// Cost-model pair transfer only.
+    Model,
+    /// PPO policy warm-start only.
+    Policy,
+    /// Both channels.
+    Both,
+}
+
+impl TransferMode {
+    pub fn parse(name: &str) -> Option<Self> {
+        match name.to_ascii_lowercase().as_str() {
+            "off" | "none" => Some(TransferMode::Off),
+            "model" | "costmodel" => Some(TransferMode::Model),
+            "policy" | "ppo" => Some(TransferMode::Policy),
+            "both" | "all" | "on" => Some(TransferMode::Both),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransferMode::Off => "off",
+            TransferMode::Model => "model",
+            TransferMode::Policy => "policy",
+            TransferMode::Both => "both",
+        }
+    }
+
+    pub fn is_off(&self) -> bool {
+        matches!(self, TransferMode::Off)
+    }
+
+    pub fn model_enabled(&self) -> bool {
+        matches!(self, TransferMode::Model | TransferMode::Both)
+    }
+
+    pub fn policy_enabled(&self) -> bool {
+        matches!(self, TransferMode::Policy | TransferMode::Both)
+    }
+}
+
+/// Session-level transfer policy.
+#[derive(Debug, Clone)]
+pub struct TransferConfig {
+    pub mode: TransferMode,
+    /// Donors consulted per recipient (nearest first).
+    pub topk: usize,
+    /// Cap on remapped donor pairs folded into a recipient's cost model.
+    pub max_pairs: usize,
+    /// Donors below this shape similarity are ignored.
+    pub min_similarity: f64,
+}
+
+impl Default for TransferConfig {
+    fn default() -> Self {
+        TransferConfig {
+            mode: TransferMode::Off,
+            topk: 3,
+            max_pairs: 512,
+            min_similarity: 0.35,
+        }
+    }
+}
+
+impl TransferConfig {
+    pub fn off() -> Self {
+        TransferConfig::default()
+    }
+
+    pub fn with_mode(mode: TransferMode) -> Self {
+        TransferConfig { mode, ..Default::default() }
+    }
+}
+
+/// Log-shape coordinates of a conv layer — the metric space for task
+/// similarity. Kernel extent and stride matter as much as channel/spatial
+/// scale, so every component enters in log scale.
+pub fn shape_vec(l: &ConvLayer) -> [f64; 8] {
+    [
+        (l.c as f64).ln(),
+        (l.h as f64).ln(),
+        (l.w as f64).ln(),
+        (l.k as f64).ln(),
+        (l.kh as f64).ln(),
+        (l.kw as f64).ln(),
+        (l.stride as f64).ln(),
+        ((l.pad + 1) as f64).ln(),
+    ]
+}
+
+/// Normalized log-shape distance: RMS of the per-component log ratios.
+/// 0 for identical shapes; ~0.5 for the 2x-channels/half-spatial siblings
+/// that dominate ResNet/VGG.
+pub fn shape_distance(a: &ConvLayer, b: &ConvLayer) -> f64 {
+    let va = shape_vec(a);
+    let vb = shape_vec(b);
+    let ss: f64 = va.iter().zip(&vb).map(|(x, y)| (x - y) * (x - y)).sum();
+    (ss / va.len() as f64).sqrt()
+}
+
+/// Similarity in (0, 1]: 1 for identical shapes, falling off with the
+/// normalized log-shape distance.
+pub fn similarity(a: &ConvLayer, b: &ConvLayer) -> f64 {
+    1.0 / (1.0 + shape_distance(a, b))
+}
+
+/// Order a session's tasks into a transfer curriculum: most-connected
+/// shapes (largest summed similarity to the rest of the network) first, so
+/// the tasks that make the best donors finish earliest. Ties break toward
+/// the original order. Returns a permutation of `0..tasks.len()`.
+pub fn curriculum_order(tasks: &[ConvTask]) -> Vec<usize> {
+    let n = tasks.len();
+    let mut connectivity = vec![0.0f64; n];
+    for i in 0..n {
+        for j in 0..n {
+            if i != j {
+                connectivity[i] += similarity(&tasks[i].layer, &tasks[j].layer);
+            }
+        }
+    }
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| {
+        connectivity[b].total_cmp(&connectivity[a]).then(a.cmp(&b))
+    });
+    order
+}
+
+/// Maps concrete knob *values* from any donor space into a recipient
+/// [`DesignSpace`]'s index space. A donor config is knob-compatible when
+/// every dimension's value exists verbatim among the recipient knob's
+/// choices (e.g. a tile triple over a 64-long axis maps into any axis it
+/// divides); incompatible configs are dropped.
+pub struct KnobMapper {
+    maps: Vec<HashMap<i64, u16>>,
+}
+
+impl KnobMapper {
+    pub fn new(recipient: &DesignSpace) -> Self {
+        let maps = recipient
+            .knobs
+            .iter()
+            .map(|k| {
+                k.choices
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &v)| (v, i as u16))
+                    .collect::<HashMap<i64, u16>>()
+            })
+            .collect();
+        KnobMapper { maps }
+    }
+
+    /// Remap one donor config's knob values; `None` when any dimension's
+    /// value does not exist in the recipient space.
+    pub fn remap(&self, values: &[i64]) -> Option<Config> {
+        if values.len() != self.maps.len() {
+            return None;
+        }
+        let mut idx = Vec::with_capacity(values.len());
+        for (v, map) in values.iter().zip(&self.maps) {
+            idx.push(*map.get(v)?);
+        }
+        Some(Config::new(idx))
+    }
+}
+
+/// Everything a recipient tuner applies before its first iteration.
+#[derive(Debug, Clone, Default)]
+pub struct TransferPlan {
+    /// Donor task ids, nearest first.
+    pub donor_ids: Vec<String>,
+    /// Re-featurized cost-model pairs in the *recipient's* space:
+    /// (feature row, log-GFLOPS target, sample weight).
+    pub pairs: Vec<(Vec<f32>, f32, f32)>,
+    /// Remapped donor-best configs (searcher exploitation seeds).
+    pub seed_configs: Vec<Config>,
+    /// Similarity-averaged donor policy parameters (RL warm-start).
+    pub policy_params: Option<Vec<f32>>,
+}
+
+impl TransferPlan {
+    pub fn is_empty(&self) -> bool {
+        self.pairs.is_empty() && self.seed_configs.is_empty() && self.policy_params.is_none()
+    }
+}
+
+/// Condensed record of what a task consumed — carried on its `TuneResult`.
+#[derive(Debug, Clone)]
+pub struct TransferSummary {
+    pub mode: TransferMode,
+    pub donors: Vec<String>,
+    pub n_pairs: usize,
+    pub n_seed_configs: usize,
+    pub policy_warm: bool,
+}
+
+/// Consult the registry for `task` and assemble its [`TransferPlan`].
+/// Returns `None` when transfer is off or no qualifying donor exists yet.
+pub fn build_plan(
+    registry: &TransferRegistry,
+    task: &ConvTask,
+    space: &DesignSpace,
+    cfg: &TransferConfig,
+) -> Option<TransferPlan> {
+    if cfg.mode.is_off() {
+        return None;
+    }
+    let donors = registry.donors_for(task, cfg.topk, cfg.min_similarity);
+    if donors.is_empty() {
+        return None;
+    }
+    let mapper = KnobMapper::new(space);
+    let mut plan = TransferPlan {
+        donor_ids: donors.iter().map(|(_, a)| a.task_id.clone()).collect(),
+        ..Default::default()
+    };
+
+    if cfg.mode.model_enabled() {
+        // Nearest donors contribute first; weight = shape similarity, so a
+        // far sibling's pairs enter the first fits softly and decay away
+        // fastest as native measurements accumulate.
+        'donors: for (sim, artifact) in &donors {
+            let w = sim.clamp(0.05, 1.0) as f32;
+            for (values, target) in &artifact.pairs {
+                if plan.pairs.len() >= cfg.max_pairs {
+                    break 'donors;
+                }
+                if let Some(config) = mapper.remap(values) {
+                    plan.pairs.push((features(space, &config), *target, w));
+                }
+            }
+        }
+        for (_, artifact) in &donors {
+            for values in &artifact.best_values {
+                if plan.seed_configs.len() >= 8 {
+                    break;
+                }
+                if let Some(config) = mapper.remap(values) {
+                    plan.seed_configs.push(config);
+                }
+            }
+        }
+    }
+
+    if cfg.mode.policy_enabled() {
+        let mut acc: Vec<f64> = Vec::new();
+        let mut wsum = 0.0f64;
+        for (sim, artifact) in &donors {
+            let Some(state) = &artifact.agent_state else { continue };
+            if acc.is_empty() {
+                acc = vec![0.0; state.params.len()];
+            } else if acc.len() != state.params.len() {
+                continue; // different topology — not portable
+            }
+            for (a, p) in acc.iter_mut().zip(&state.params) {
+                *a += sim * *p as f64;
+            }
+            wsum += sim;
+        }
+        if wsum > 0.0 {
+            plan.policy_params =
+                Some(acc.iter().map(|a| (a / wsum) as f32).collect());
+        }
+    }
+
+    if plan.is_empty() {
+        None
+    } else {
+        Some(plan)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::AgentState;
+    use crate::util::rng::Pcg32;
+    use crate::workload::zoo;
+
+    #[test]
+    fn mode_parsing_and_channels() {
+        assert_eq!(TransferMode::parse("off"), Some(TransferMode::Off));
+        assert_eq!(TransferMode::parse("MODEL"), Some(TransferMode::Model));
+        assert_eq!(TransferMode::parse("policy"), Some(TransferMode::Policy));
+        assert_eq!(TransferMode::parse("both"), Some(TransferMode::Both));
+        assert_eq!(TransferMode::parse("sideways"), None);
+        assert!(TransferMode::Off.is_off());
+        assert!(TransferMode::Model.model_enabled());
+        assert!(!TransferMode::Model.policy_enabled());
+        assert!(TransferMode::Both.model_enabled() && TransferMode::Both.policy_enabled());
+        assert_eq!(TransferMode::Both.name(), "both");
+    }
+
+    #[test]
+    fn similarity_is_reflexive_symmetric_and_discriminates() {
+        let tasks = zoo::resnet18();
+        let a = &tasks[1].layer; // 64x56x56 3x3
+        let b = &tasks[5].layer; // 128x28x28 3x3 (nearest sibling class)
+        let stem = &tasks[0].layer; // 3x224x224 7x7 s2
+        assert!((similarity(a, a) - 1.0).abs() < 1e-12);
+        assert!((similarity(a, b) - similarity(b, a)).abs() < 1e-12);
+        assert!(similarity(a, b) > similarity(a, stem), "sibling must beat stem");
+        assert!(shape_distance(a, b) > 0.0);
+    }
+
+    #[test]
+    fn curriculum_puts_connected_body_shapes_before_the_stem() {
+        let tasks = zoo::resnet18();
+        let order = curriculum_order(&tasks);
+        // a permutation
+        let mut sorted = order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..tasks.len()).collect::<Vec<_>>());
+        // the 3-channel 7x7 stem is the least-connected shape: never first
+        let stem_pos = order.iter().position(|&i| i == 0).unwrap();
+        assert!(stem_pos > 0, "stem scheduled first: {order:?}");
+    }
+
+    #[test]
+    fn knob_mapper_roundtrips_within_one_space_and_rejects_foreign_values() {
+        let space = DesignSpace::for_conv(zoo::resnet18()[1].layer);
+        let mapper = KnobMapper::new(&space);
+        let mut rng = Pcg32::seed_from(3);
+        for _ in 0..50 {
+            let c = space.random_config(&mut rng);
+            let values = space.knob_values(&c);
+            assert_eq!(mapper.remap(&values), Some(c));
+        }
+        // a value no knob offers is rejected
+        let c = space.random_config(&mut rng);
+        let mut values = space.knob_values(&c);
+        values[3] = 999_983; // prime, divides nothing
+        assert_eq!(mapper.remap(&values), None);
+        // wrong arity is rejected
+        assert_eq!(mapper.remap(&values[..4]), None);
+    }
+
+    #[test]
+    fn sibling_spaces_share_many_knob_values() {
+        // 64->64 3x3 @56 values remap into 128->128 3x3 @28 where divisors
+        // overlap: a healthy fraction must survive for transfer to matter.
+        let donor = DesignSpace::for_conv(zoo::resnet18()[1].layer);
+        let recipient = DesignSpace::for_conv(zoo::resnet18()[5].layer);
+        let mapper = KnobMapper::new(&recipient);
+        let mut rng = Pcg32::seed_from(4);
+        let mut mapped = 0;
+        let total = 300;
+        for _ in 0..total {
+            let c = donor.random_config(&mut rng);
+            if mapper.remap(&donor.knob_values(&c)).is_some() {
+                mapped += 1;
+            }
+        }
+        assert!(mapped * 10 >= total, "only {mapped}/{total} remapped");
+    }
+
+    fn artifact_for(task: &ConvTask, n_pairs: usize, with_state: bool) -> TaskArtifact {
+        let space = DesignSpace::for_conv(task.layer);
+        let mut rng = Pcg32::seed_from(7);
+        let mut pairs = Vec::new();
+        let mut best_values = Vec::new();
+        for i in 0..n_pairs {
+            let c = space.random_config(&mut rng);
+            let values = space.knob_values(&c);
+            if i < 16 {
+                best_values.push(values.clone());
+            }
+            pairs.push((values, 1.0 + i as f32 * 0.01));
+        }
+        TaskArtifact {
+            task_id: task.id.clone(),
+            layer: task.layer,
+            pairs,
+            best_values,
+            agent_state: with_state.then(|| AgentState {
+                params: vec![0.5; 64],
+                m: vec![0.0; 64],
+                v: vec![0.0; 64],
+                t: 1.0,
+            }),
+            best_gflops: 100.0,
+        }
+    }
+
+    #[test]
+    fn build_plan_assembles_pairs_seeds_and_policy() {
+        let tasks = zoo::resnet18();
+        let recipient = &tasks[5];
+        let space = DesignSpace::for_conv(recipient.layer);
+        let reg = TransferRegistry::new();
+        reg.publish(artifact_for(&tasks[1], 64, true));
+        reg.publish(artifact_for(&tasks[8], 64, true));
+
+        let cfg = TransferConfig::with_mode(TransferMode::Both);
+        let plan = build_plan(&reg, recipient, &space, &cfg).expect("plan");
+        assert_eq!(plan.donor_ids.len(), 2);
+        assert!(!plan.pairs.is_empty(), "no donor pairs survived remapping");
+        assert!(plan.pairs.iter().all(|(f, _, w)| {
+            f.len() == crate::space::features::NFEATURES && *w > 0.0 && *w <= 1.0
+        }));
+        assert!(!plan.seed_configs.is_empty());
+        let params = plan.policy_params.as_ref().expect("averaged policy");
+        assert_eq!(params.len(), 64);
+        assert!(params.iter().all(|p| (*p - 0.5).abs() < 1e-6));
+    }
+
+    #[test]
+    fn build_plan_respects_mode_and_caps() {
+        let tasks = zoo::resnet18();
+        let recipient = &tasks[5];
+        let space = DesignSpace::for_conv(recipient.layer);
+        let reg = TransferRegistry::new();
+        reg.publish(artifact_for(&tasks[1], 400, true));
+
+        // off => None without consulting donors
+        assert!(build_plan(&reg, recipient, &space, &TransferConfig::off()).is_none());
+
+        // policy-only: no pairs, no seeds
+        let pol = build_plan(
+            &reg,
+            recipient,
+            &space,
+            &TransferConfig::with_mode(TransferMode::Policy),
+        )
+        .expect("policy plan");
+        assert!(pol.pairs.is_empty() && pol.seed_configs.is_empty());
+        assert!(pol.policy_params.is_some());
+
+        // model-only honors max_pairs
+        let cfg = TransferConfig {
+            mode: TransferMode::Model,
+            max_pairs: 16,
+            ..Default::default()
+        };
+        let plan = build_plan(&reg, recipient, &space, &cfg).expect("model plan");
+        assert!(plan.pairs.len() <= 16);
+        assert!(plan.policy_params.is_none());
+
+        // no qualifying donor (absurd similarity bar) => None
+        let strict = TransferConfig {
+            mode: TransferMode::Both,
+            min_similarity: 0.9999,
+            ..Default::default()
+        };
+        assert!(build_plan(&reg, recipient, &space, &strict).is_none());
+    }
+}

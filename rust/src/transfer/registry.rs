@@ -1,0 +1,192 @@
+//! The session-owned transfer registry: completed tasks publish their
+//! search artifacts; queued tasks consult it when they start.
+//!
+//! The registry is append-only and publication happens strictly *after* a
+//! task's tuning loop has finished, so under task-parallelism a consulting
+//! task can only ever see donors that are fully done — there is no
+//! read-your-own-writes channel. Every publish/consult is recorded in an
+//! event log so tests can audit exactly that discipline.
+
+use super::similarity;
+use crate::runtime::AgentState;
+use crate::workload::{ConvLayer, ConvTask};
+use std::sync::{Arc, Mutex};
+
+/// What a finished task leaves behind for its siblings.
+#[derive(Debug, Clone)]
+pub struct TaskArtifact {
+    pub task_id: String,
+    pub layer: ConvLayer,
+    /// Measured training pairs: concrete knob values per dimension plus the
+    /// cost-model target (log-GFLOPS; failures use the fail target). Knob
+    /// *values* — not indices — so a recipient with a different `DesignSpace`
+    /// can remap them where knob-compatible.
+    pub pairs: Vec<(Vec<i64>, f32)>,
+    /// Knob values of the best measured configs, best first.
+    pub best_values: Vec<Vec<i64>>,
+    /// Final PPO agent state (RL methods only). The flat parameter layout is
+    /// backend-portable by construction, so a native-backend donor can
+    /// warm-start a PJRT recipient and vice versa.
+    pub agent_state: Option<AgentState>,
+    pub best_gflops: f64,
+}
+
+/// Audit-log entry: the order of publishes and consults as they happened.
+#[derive(Debug, Clone)]
+pub enum TransferEvent {
+    Published { task: String },
+    Consulted { task: String, donors: Vec<String> },
+}
+
+struct Inner {
+    artifacts: Vec<Arc<TaskArtifact>>,
+    events: Vec<TransferEvent>,
+}
+
+/// Thread-safe store of completed-task artifacts, shared by every tuner
+/// loop of a session (`&TransferRegistry` is `Sync`; one lock guards both
+/// the artifact list and the event log so the log order is truthful).
+pub struct TransferRegistry {
+    inner: Mutex<Inner>,
+}
+
+impl TransferRegistry {
+    pub fn new() -> Self {
+        TransferRegistry {
+            inner: Mutex::new(Inner { artifacts: Vec::new(), events: Vec::new() }),
+        }
+    }
+
+    /// Publish a finished task's artifact. Call only after the task's
+    /// tuning loop has fully completed.
+    pub fn publish(&self, artifact: TaskArtifact) {
+        let mut g = self.inner.lock().unwrap();
+        g.events.push(TransferEvent::Published { task: artifact.task_id.clone() });
+        g.artifacts.push(Arc::new(artifact));
+    }
+
+    /// Completed donors for `task`, ranked by shape similarity (best first),
+    /// filtered to `min_similarity`, at most `topk`. The read is logged as a
+    /// `Consulted` event under the same lock that guards the artifact list.
+    pub fn donors_for(
+        &self,
+        task: &ConvTask,
+        topk: usize,
+        min_similarity: f64,
+    ) -> Vec<(f64, Arc<TaskArtifact>)> {
+        let mut g = self.inner.lock().unwrap();
+        let mut ranked: Vec<(f64, Arc<TaskArtifact>)> = g
+            .artifacts
+            .iter()
+            .filter(|a| a.task_id != task.id)
+            .map(|a| (similarity(&task.layer, &a.layer), a.clone()))
+            .filter(|(s, _)| *s >= min_similarity)
+            .collect();
+        ranked.sort_by(|a, b| {
+            b.0.total_cmp(&a.0).then_with(|| a.1.task_id.cmp(&b.1.task_id))
+        });
+        ranked.truncate(topk);
+        g.events.push(TransferEvent::Consulted {
+            task: task.id.clone(),
+            donors: ranked.iter().map(|(_, a)| a.task_id.clone()).collect(),
+        });
+        ranked
+    }
+
+    /// Number of published artifacts.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().artifacts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Task ids published so far, in publication order.
+    pub fn published_ids(&self) -> Vec<String> {
+        self.inner
+            .lock()
+            .unwrap()
+            .artifacts
+            .iter()
+            .map(|a| a.task_id.clone())
+            .collect()
+    }
+
+    /// Snapshot of the publish/consult audit log, in event order.
+    pub fn events(&self) -> Vec<TransferEvent> {
+        self.inner.lock().unwrap().events.clone()
+    }
+}
+
+impl Default for TransferRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::zoo;
+
+    fn artifact(task: &ConvTask) -> TaskArtifact {
+        TaskArtifact {
+            task_id: task.id.clone(),
+            layer: task.layer,
+            pairs: Vec::new(),
+            best_values: Vec::new(),
+            agent_state: None,
+            best_gflops: 1.0,
+        }
+    }
+
+    #[test]
+    fn donors_exclude_self_and_rank_by_similarity() {
+        let tasks = zoo::resnet18();
+        let reg = TransferRegistry::new();
+        for t in &tasks[..4] {
+            reg.publish(artifact(t));
+        }
+        assert_eq!(reg.len(), 4);
+        // task 1 (index 1: 64x56x56 3x3) asks for donors: itself excluded
+        let donors = reg.donors_for(&tasks[1], 8, 0.0);
+        assert!(donors.iter().all(|(_, a)| a.task_id != tasks[1].id));
+        // similarity sorted descending
+        assert!(donors.windows(2).all(|w| w[0].0 >= w[1].0));
+        // topk respected
+        assert_eq!(reg.donors_for(&tasks[1], 2, 0.0).len(), 2);
+    }
+
+    #[test]
+    fn event_log_orders_publishes_before_consults() {
+        let tasks = zoo::alexnet();
+        let reg = TransferRegistry::new();
+        reg.publish(artifact(&tasks[0]));
+        let _ = reg.donors_for(&tasks[1], 4, 0.0);
+        reg.publish(artifact(&tasks[1]));
+        let ev = reg.events();
+        assert_eq!(ev.len(), 3);
+        assert!(matches!(&ev[0], TransferEvent::Published { task } if *task == tasks[0].id));
+        match &ev[1] {
+            TransferEvent::Consulted { task, donors } => {
+                assert_eq!(*task, tasks[1].id);
+                assert_eq!(donors, &vec![tasks[0].id.clone()]);
+            }
+            other => panic!("expected consult, got {other:?}"),
+        }
+        assert_eq!(reg.published_ids(), vec![tasks[0].id.clone(), tasks[1].id.clone()]);
+    }
+
+    #[test]
+    fn min_similarity_filters_far_shapes() {
+        let tasks = zoo::resnet18();
+        let reg = TransferRegistry::new();
+        // task 0 is the 3-channel 7x7 stem — far from every 3x3 body shape
+        reg.publish(artifact(&tasks[0]));
+        let close = reg.donors_for(&tasks[1], 8, 0.95);
+        assert!(close.is_empty(), "stem should not pass a 0.95 similarity bar");
+        let loose = reg.donors_for(&tasks[1], 8, 0.0);
+        assert_eq!(loose.len(), 1);
+    }
+}

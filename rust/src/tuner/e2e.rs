@@ -42,6 +42,15 @@ impl ModelTuneResult {
         }
         self.opt_time_s / self.wall_s
     }
+
+    /// How many tasks consumed cross-task transfer (had at least one donor
+    /// when they started). Always 0 outside transfer-enabled sessions.
+    pub fn n_warm_started(&self) -> usize {
+        self.tasks
+            .iter()
+            .filter(|t| t.transfer.as_ref().map(|s| !s.donors.is_empty()).unwrap_or(false))
+            .count()
+    }
 }
 
 /// Tune every task of `model_name` with `method`.

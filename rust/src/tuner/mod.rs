@@ -21,6 +21,10 @@ use crate::search::{
 };
 use crate::sim::{Clock, Measurement, Measurer};
 use crate::space::{Config, DesignSpace};
+use crate::transfer::{
+    self, TaskArtifact, TransferConfig, TransferPlan, TransferRegistry,
+    TransferSummary,
+};
 use crate::util::rng::Pcg32;
 use crate::workload::ConvTask;
 use std::collections::{HashSet, VecDeque};
@@ -177,6 +181,8 @@ pub struct TuneResult {
     pub iterations: Vec<IterationRecord>,
     /// Trajectory snapshot of the final iteration (for Fig 3).
     pub last_trajectory: Vec<Config>,
+    /// What cross-task transfer this task consumed (None when tuned cold).
+    pub transfer: Option<TransferSummary>,
 }
 
 impl TuneResult {
@@ -262,6 +268,11 @@ pub struct TaskTuner {
     last_traj: Vec<Config>,
     iter: usize,
     stopped: bool,
+    /// Record (knob values, target) per measurement for the transfer
+    /// registry. Off unless the task runs inside a transfer-enabled session.
+    record_pairs: bool,
+    artifact_pairs: Vec<(Vec<i64>, f32)>,
+    transfer: Option<TransferSummary>,
 }
 
 impl TaskTuner {
@@ -293,6 +304,93 @@ impl TaskTuner {
             last_traj: Vec::new(),
             iter: 0,
             stopped: false,
+            record_pairs: false,
+            artifact_pairs: Vec::new(),
+            transfer: None,
+        }
+    }
+
+    /// Record measured (knob values, target) pairs so [`Self::export_artifact`]
+    /// can publish them. Call before the first `plan`.
+    pub fn enable_artifact_recording(&mut self) {
+        self.record_pairs = true;
+    }
+
+    /// Apply a cross-task [`TransferPlan`] before the first iteration:
+    /// seed the cost model with re-featurized donor pairs (the seed fit's
+    /// host time is charged to the clock like any other model fit), hand
+    /// remapped donor-best configs to the searcher, and warm-start the RL
+    /// policy from the averaged donor parameters — validated through the
+    /// backend so a topology mismatch degrades to a cold start instead of
+    /// corrupting the agent.
+    pub fn apply_transfer(
+        &mut self,
+        plan: &TransferPlan,
+        backend: Option<&Arc<dyn Backend>>,
+    ) {
+        let spent_before = self.model.spent_s.get();
+        if !plan.pairs.is_empty() {
+            let mut xs = Vec::with_capacity(plan.pairs.len());
+            let mut ys = Vec::with_capacity(plan.pairs.len());
+            let mut ws = Vec::with_capacity(plan.pairs.len());
+            for (x, y, w) in &plan.pairs {
+                xs.push(x.clone());
+                ys.push(*y);
+                ws.push(*w);
+            }
+            self.model.seed_transfer(xs, ys, ws);
+        }
+        if !plan.seed_configs.is_empty() {
+            self.searcher.seed(&plan.seed_configs);
+        }
+        let mut policy_warm = false;
+        if let (Some(params), Some(be)) = (&plan.policy_params, backend) {
+            match be.warm_state(params.clone()) {
+                Ok(state) => {
+                    self.searcher.warm_start(state);
+                    policy_warm = true;
+                }
+                Err(e) => eprintln!("warning: policy warm-start skipped: {e}"),
+            }
+        }
+        // the seed fit happened before any IterationRecord exists: charge
+        // it to the clock now so serial wall stays equal to the total
+        self.clock.model_s += self.model.spent_s.get() - spent_before;
+        self.clock.wall_s = self.clock.total_s();
+        self.transfer = Some(TransferSummary {
+            mode: if plan.policy_params.is_some() && !plan.pairs.is_empty() {
+                transfer::TransferMode::Both
+            } else if plan.policy_params.is_some() {
+                transfer::TransferMode::Policy
+            } else {
+                transfer::TransferMode::Model
+            },
+            donors: plan.donor_ids.clone(),
+            n_pairs: plan.pairs.len(),
+            n_seed_configs: plan.seed_configs.len(),
+            policy_warm,
+        });
+    }
+
+    /// Package this task's search state for the transfer registry. Call
+    /// after the tuning loop has finished, before [`Self::finish`].
+    pub fn export_artifact(&self) -> TaskArtifact {
+        let mut order: Vec<usize> = (0..self.artifact_pairs.len()).collect();
+        order.sort_by(|&a, &b| {
+            self.artifact_pairs[b].1.total_cmp(&self.artifact_pairs[a].1)
+        });
+        let best_values: Vec<Vec<i64>> = order
+            .iter()
+            .take(16)
+            .map(|&i| self.artifact_pairs[i].0.clone())
+            .collect();
+        TaskArtifact {
+            task_id: self.task_id.clone(),
+            layer: self.space.layer,
+            pairs: self.artifact_pairs.clone(),
+            best_values,
+            agent_state: self.searcher.export_state(),
+            best_gflops: self.best.as_ref().map(|(_, _, gf)| *gf).unwrap_or(0.0),
         }
     }
 
@@ -416,6 +514,12 @@ impl TaskTuner {
         self.cum += results.len();
         for m in &results {
             self.visited.insert(self.space.flat_index(&m.config));
+            if self.record_pairs {
+                self.artifact_pairs.push((
+                    self.space.knob_values(&m.config),
+                    crate::costmodel::measurement_target(m),
+                ));
+            }
             if let Some(ms) = m.runtime_ms {
                 if self.best.as_ref().map(|(_, b, _)| ms < *b).unwrap_or(true) {
                     self.best = Some((m.config.clone(), ms, m.gflops));
@@ -433,7 +537,12 @@ impl TaskTuner {
         {
             let mut ranked: Vec<&Measurement> =
                 results.iter().filter(|m| m.ok()).collect();
-            ranked.sort_by(|a, b| b.gflops.partial_cmp(&a.gflops).unwrap());
+            // a NaN-fitness measurement (pathological measurer) must not
+            // panic the tuner — and must rank like the worst fitness, never
+            // surface as a searcher seed
+            let key =
+                |v: f64| if v.is_nan() { f64::NEG_INFINITY } else { v };
+            ranked.sort_by(|a, b| key(b.gflops).total_cmp(&key(a.gflops)));
             let mut seeds: Vec<Config> =
                 ranked.iter().take(8).map(|m| m.config.clone()).collect();
             if let Some((c, _, _)) = &self.best {
@@ -510,6 +619,7 @@ impl TaskTuner {
             clock: self.clock,
             iterations: self.iterations,
             last_trajectory: self.last_traj,
+            transfer: self.transfer,
         }
     }
 }
@@ -530,8 +640,32 @@ pub fn tune_with_coordinator(
     backend: Option<Arc<dyn Backend>>,
     pipeline_depth: usize,
 ) -> TuneResult {
+    tune_with_coordinator_transfer(task, coordinator, method, cfg, backend, pipeline_depth, None)
+}
+
+/// [`tune_with_coordinator`] plus the cross-task transfer overlay: when a
+/// registry is supplied the task consults it before its first iteration
+/// (cost-model pairs / policy warm-start, per the [`TransferConfig`] mode)
+/// and publishes its own artifact after the loop completes — strictly
+/// after, so concurrent siblings can never observe a half-tuned donor.
+/// With `transfer = None` this is byte-for-byte the baseline loop.
+pub fn tune_with_coordinator_transfer(
+    task: &ConvTask,
+    coordinator: &MeasureCoordinator<'_>,
+    method: MethodSpec,
+    cfg: &TunerConfig,
+    backend: Option<Arc<dyn Backend>>,
+    pipeline_depth: usize,
+    transfer: Option<(&TransferRegistry, &TransferConfig)>,
+) -> TuneResult {
     let depth = pipeline_depth.max(1);
-    let mut tuner = TaskTuner::new(task, method, cfg, backend);
+    let mut tuner = TaskTuner::new(task, method, cfg, backend.clone());
+    if let Some((registry, tcfg)) = transfer {
+        tuner.enable_artifact_recording();
+        if let Some(plan) = transfer::build_plan(registry, task, &tuner.space, tcfg) {
+            tuner.apply_transfer(&plan, backend.as_ref());
+        }
+    }
     let mut queue: VecDeque<(PlannedBatch, Vec<Measurement>, f64)> = VecDeque::new();
     loop {
         while queue.len() < depth {
@@ -548,6 +682,9 @@ pub fn tune_with_coordinator(
             Some((batch, results, secs)) => tuner.absorb(batch, results, secs),
             None => break,
         }
+    }
+    if let Some((registry, _)) = transfer {
+        registry.publish(tuner.export_artifact());
     }
     tuner.finish()
 }
@@ -629,6 +766,34 @@ mod tests {
         assert!(r_stop.clock.total_s() < r_full.clock.total_s());
         // and the found quality is in the same ballpark
         assert!(r_stop.best_gflops > 0.55 * r_full.best_gflops);
+    }
+
+    #[test]
+    fn nan_fitness_measurement_survives_ranking() {
+        // regression: the absorb-stage ranking used partial_cmp().unwrap(),
+        // which panics the tuner the moment a pathological measurer reports
+        // a NaN fitness. total_cmp must rank it deterministically instead.
+        let task = &zoo::alexnet()[2];
+        let cfg = TunerConfig { max_trials: 64, ..Default::default() };
+        let mut tuner = TaskTuner::new(task, MethodSpec::autotvm(), &cfg, None);
+        let batch = tuner.plan().expect("first batch");
+        let mut results: Vec<Measurement> = batch
+            .configs
+            .iter()
+            .map(|c| Measurement {
+                config: c.clone(),
+                runtime_ms: Some(1.0),
+                error: None,
+                gflops: 1.0,
+            })
+            .collect();
+        results[0].gflops = f64::NAN; // poisoned fitness, "successful" run
+        let n = results.len();
+        tuner.absorb(batch, results, 1.0); // must not panic
+        let r = tuner.finish();
+        assert_eq!(r.n_measurements, n);
+        assert!(r.best_runtime_ms.is_finite());
+        assert_eq!(r.iterations.len(), 1);
     }
 
     #[test]

@@ -39,10 +39,11 @@
 //! bit-identical to the serial path — the determinism tests pin that.
 
 use super::e2e::{self, ModelTuneResult};
-use super::{tune_with_coordinator, MethodSpec, TuneResult, TunerConfig};
+use super::{tune_with_coordinator_transfer, MethodSpec, TuneResult, TunerConfig};
 use crate::coordinator::MeasureCoordinator;
 use crate::runtime::Backend;
 use crate::sim::Measurer;
+use crate::transfer::{curriculum_order, TransferConfig, TransferRegistry};
 use crate::util::stats::argmin;
 use crate::workload::{zoo, ConvTask};
 use std::collections::VecDeque;
@@ -67,6 +68,13 @@ pub struct SessionConfig {
     /// with every task keeping at least one measurement so the aggregate
     /// inference time stays finite. `None` gives every task `max_trials`.
     pub budget_shares: Option<Vec<f64>>,
+    /// Cross-task transfer policy. [`crate::transfer::TransferMode::Off`]
+    /// (the default) keeps the engine bit-identical to the baseline; any
+    /// other mode routes completed-task artifacts through a
+    /// [`TransferRegistry`] and reorders execution into a transfer
+    /// curriculum (most-connected shapes first) while results stay in
+    /// task order.
+    pub transfer: TransferConfig,
 }
 
 impl Default for SessionConfig {
@@ -77,6 +85,7 @@ impl Default for SessionConfig {
             device_slots: 1,
             pipeline_depth: 1,
             budget_shares: None,
+            transfer: TransferConfig::off(),
         }
     }
 }
@@ -95,7 +104,7 @@ impl SessionConfig {
             task_parallelism: tp.max(1),
             device_slots: tp.max(1),
             pipeline_depth: 2,
-            budget_shares: None,
+            ..Default::default()
         }
     }
 }
@@ -124,7 +133,9 @@ fn task_budgets(scfg: &SessionConfig, n: usize) -> Vec<usize> {
     order.sort_by(|&a, &b| {
         let fa = raw[a] - raw[a].floor();
         let fb = raw[b] - raw[b].floor();
-        fb.partial_cmp(&fa).unwrap().then(a.cmp(&b))
+        // total_cmp: NaN shares are clamped above, but a poisoned remainder
+        // must never panic the apportionment
+        fb.total_cmp(&fa).then(a.cmp(&b))
     });
     for &i in order.iter().take(pool.saturating_sub(assigned)) {
         budgets[i] += 1;
@@ -169,6 +180,22 @@ pub fn tune_tasks_session(
     scfg: &SessionConfig,
     backend: Option<Arc<dyn Backend>>,
 ) -> ModelTuneResult {
+    tune_tasks_session_observed(model_name, tasks, measurer, method, scfg, backend, None)
+}
+
+/// [`tune_tasks_session`] with an externally-owned [`TransferRegistry`], so
+/// callers (tests, benches, reports) can audit the publish/consult event
+/// log after the run. When `registry` is `None` and transfer is enabled, a
+/// session-local registry is used.
+pub fn tune_tasks_session_observed(
+    model_name: &str,
+    tasks: &[ConvTask],
+    measurer: &dyn Measurer,
+    method: MethodSpec,
+    scfg: &SessionConfig,
+    backend: Option<Arc<dyn Backend>>,
+    registry: Option<&TransferRegistry>,
+) -> ModelTuneResult {
     let n = tasks.len();
     let budgets = task_budgets(scfg, n);
     let cfgs: Vec<TunerConfig> = (0..n)
@@ -179,6 +206,26 @@ pub fn tune_tasks_session(
         })
         .collect();
 
+    // Transfer overlay. Per-task seeds stay tied to the *original* task
+    // index, so `--transfer off` is bit-identical to the baseline and the
+    // curriculum reorders only *when* tasks run, never their RNG streams.
+    let local_registry;
+    let reg: Option<&TransferRegistry> = if scfg.transfer.mode.is_off() {
+        None
+    } else if let Some(r) = registry {
+        Some(r)
+    } else {
+        local_registry = TransferRegistry::new();
+        Some(&local_registry)
+    };
+    // Execution order: the transfer curriculum runs the most-connected
+    // shapes first so the best donors are published as early as possible.
+    let order: Vec<usize> = if reg.is_some() {
+        curriculum_order(tasks)
+    } else {
+        (0..n).collect()
+    };
+
     let depth = scfg.pipeline_depth.max(1);
     let device_slots = scfg.device_slots.max(1);
     let workers = scfg.tuner.measure_workers.max(device_slots);
@@ -187,25 +234,30 @@ pub fn tune_tasks_session(
 
     let mut results: Vec<Option<TuneResult>> = (0..n).map(|_| None).collect();
     if tp <= 1 {
-        for (i, task) in tasks.iter().enumerate() {
-            results[i] = Some(tune_with_coordinator(
-                task,
+        for &i in &order {
+            results[i] = Some(tune_with_coordinator_transfer(
+                &tasks[i],
                 &coordinator,
                 method,
                 &cfgs[i],
                 backend.clone(),
                 depth,
+                reg.map(|r| (r, &scfg.transfer)),
             ));
         }
     } else {
         // Each worker thread owns whole tasks (a task's tuner state is
-        // thread-local); only the coordinator and the result slots are
-        // shared. Per-task outcomes are independent of the interleaving:
-        // each task has its own RNG/model/searcher and the simulated device
-        // is deterministic per config, so the schedule changes *when*
-        // things run, never *what* they compute.
+        // thread-local); only the coordinator, the transfer registry and
+        // the result slots are shared. Without transfer, per-task outcomes
+        // are independent of the interleaving: each task has its own
+        // RNG/model/searcher and the simulated device is deterministic per
+        // config, so the schedule changes *when* things run, never *what*
+        // they compute. With transfer enabled, the donor set a task sees
+        // depends on which siblings completed first — the budget and
+        // registry disciplines are pinned by property tests instead.
         let slots = Mutex::new(&mut results);
         let next = Mutex::new(0usize);
+        let order = &order;
         std::thread::scope(|scope| {
             for _ in 0..tp {
                 let be = backend.clone();
@@ -213,23 +265,26 @@ pub fn tune_tasks_session(
                 let next = &next;
                 let coordinator = &coordinator;
                 let cfgs = &cfgs;
+                let transfer = &scfg.transfer;
                 scope.spawn(move || loop {
-                    let i = {
+                    let pos = {
                         let mut g = next.lock().unwrap();
-                        let i = *g;
+                        let pos = *g;
                         *g += 1;
-                        i
+                        pos
                     };
-                    if i >= tasks.len() {
+                    if pos >= order.len() {
                         break;
                     }
-                    let r = tune_with_coordinator(
+                    let i = order[pos];
+                    let r = tune_with_coordinator_transfer(
                         &tasks[i],
                         coordinator,
                         method,
                         &cfgs[i],
                         be.clone(),
                         depth,
+                        reg.map(|r| (r, transfer)),
                     );
                     slots.lock().unwrap()[i] = Some(r);
                 });
@@ -242,10 +297,14 @@ pub fn tune_tasks_session(
     // Replay the recorded per-iteration costs through the session's lanes
     // and device slots to get the schedule's elapsed (wall) time — both the
     // per-task totals and each iteration's wall snapshot (the serial values
-    // recorded during tuning don't describe the pipelined schedule).
-    let deltas: Vec<Vec<IterCost>> = results.iter().map(iteration_deltas).collect();
+    // recorded during tuning don't describe the pipelined schedule). Tasks
+    // enter the replay in *execution* order (the transfer curriculum when
+    // enabled), and the walls map back to original task indices.
+    let deltas: Vec<Vec<IterCost>> =
+        order.iter().map(|&i| iteration_deltas(&results[i])).collect();
     let (wall_s, task_walls, iter_walls) = schedule_wall(&deltas, tp, device_slots, depth);
-    for ((r, w), iw) in results.iter_mut().zip(task_walls).zip(iter_walls) {
+    for ((&i, w), iw) in order.iter().zip(task_walls).zip(iter_walls) {
+        let r = &mut results[i];
         r.clock.wall_s = w;
         for (rec, t) in r.iterations.iter_mut().zip(iw) {
             rec.clock.wall_s = t;
@@ -461,7 +520,7 @@ mod tests {
             task_parallelism: 4,
             device_slots: 4,
             pipeline_depth: 1,
-            budget_shares: None,
+            ..Default::default()
         };
         let sess = tune_tasks_session(
             "alexnet",
@@ -556,6 +615,24 @@ mod tests {
         assert_eq!(b.iter().sum::<usize>(), 300);
         // degenerate shares fall back to the flat budget
         scfg.budget_shares = Some(vec![0.0]);
+        assert_eq!(task_budgets(&scfg, 2), vec![100, 100]);
+    }
+
+    #[test]
+    fn nan_budget_share_does_not_panic_apportionment() {
+        // regression for the partial_cmp().unwrap() remainder comparator:
+        // a NaN share is clamped to zero weight and the pool stays exact
+        let mut scfg = SessionConfig::serial(TunerConfig {
+            max_trials: 100,
+            ..Default::default()
+        });
+        scfg.budget_shares = Some(vec![f64::NAN, 1.0, 2.0]);
+        let b = task_budgets(&scfg, 3);
+        assert_eq!(b.iter().sum::<usize>(), 300, "{b:?}");
+        assert!(b[0] >= 1, "{b:?}");
+        assert!(b[2] > b[1], "{b:?}");
+        // all-NaN shares degrade to the flat budget
+        scfg.budget_shares = Some(vec![f64::NAN]);
         assert_eq!(task_budgets(&scfg, 2), vec![100, 100]);
     }
 

@@ -1,0 +1,88 @@
+//! Shared fixtures for the integration-test binaries: one place for the
+//! seeded design spaces, cheap tuner configs, deterministic measurers and
+//! backend constructors that every test file used to copy-paste.
+//!
+//! Include with `mod common;` from a test file under `rust/tests/`.
+
+#![allow(dead_code)] // each test binary uses its own subset of the harness
+
+use release::nn::NativeBackend;
+use release::runtime::Backend;
+use release::sim::SimMeasurer;
+use release::space::DesignSpace;
+use release::tuner::e2e::ModelTuneResult;
+use release::tuner::TunerConfig;
+use release::workload::{ConvLayer, ConvTask};
+use std::sync::Arc;
+
+/// A deliberately small conv layer whose design space is a few thousand
+/// points — large enough to search, small enough that a whole tune loop
+/// runs in milliseconds.
+pub fn tiny_layer() -> ConvLayer {
+    ConvLayer::new(16, 8, 8, 16, 3, 3, 1, 1)
+}
+
+/// The seeded tiny design space.
+pub fn tiny_space() -> DesignSpace {
+    DesignSpace::for_conv(tiny_layer())
+}
+
+/// A small family of sibling conv tasks (power-of-two shape neighbours, so
+/// their knob values remap into each other) — the transfer-test workload.
+pub fn sibling_tasks() -> Vec<ConvTask> {
+    let layers = [
+        ConvLayer::new(32, 14, 14, 32, 3, 3, 1, 1),
+        ConvLayer::new(64, 7, 7, 64, 3, 3, 1, 1),
+        ConvLayer::new(32, 14, 14, 64, 3, 3, 1, 1),
+    ];
+    layers
+        .iter()
+        .enumerate()
+        .map(|(i, &layer)| ConvTask {
+            id: format!("tiny.c{}", i + 1),
+            model: "tiny",
+            index: i + 1,
+            layer,
+            occurrences: 1,
+        })
+        .collect()
+}
+
+/// Cheap tuner policy: small budget, default convergence, explicit seed.
+pub fn quick_cfg(seed: u64) -> TunerConfig {
+    TunerConfig { max_trials: 160, seed, ..Default::default() }
+}
+
+/// [`quick_cfg`] with an explicit measurement budget.
+pub fn quick_cfg_trials(seed: u64, max_trials: usize) -> TunerConfig {
+    TunerConfig { max_trials, seed, ..Default::default() }
+}
+
+/// The deterministic simulated Titan Xp (same seed = same "day" on the
+/// machine: identical runtimes for identical configs).
+pub fn measurer(seed: u64) -> SimMeasurer {
+    SimMeasurer::titan_xp(seed)
+}
+
+/// The always-available pure-Rust PPO backend.
+pub fn native_backend() -> Arc<dyn Backend> {
+    Arc::new(NativeBackend::new())
+}
+
+/// Assert two model-tune results describe bitwise-identical per-task
+/// outcomes (schedules may differ in wall time; results must not).
+pub fn assert_tasks_bitwise_equal(a: &ModelTuneResult, b: &ModelTuneResult) {
+    assert_eq!(a.tasks.len(), b.tasks.len());
+    assert_eq!(a.n_measurements, b.n_measurements);
+    assert_eq!(a.inference_ms.to_bits(), b.inference_ms.to_bits());
+    for (x, y) in a.tasks.iter().zip(&b.tasks) {
+        assert_eq!(x.best_runtime_ms.to_bits(), y.best_runtime_ms.to_bits());
+        assert_eq!(x.best_gflops.to_bits(), y.best_gflops.to_bits());
+        assert_eq!(x.best_config, y.best_config);
+        assert_eq!(x.n_measurements, y.n_measurements);
+        assert_eq!(x.iterations.len(), y.iterations.len());
+        assert_eq!(x.clock.measure_s.to_bits(), y.clock.measure_s.to_bits());
+        assert_eq!(x.clock.search_s.to_bits(), y.clock.search_s.to_bits());
+        assert_eq!(x.clock.model_s.to_bits(), y.clock.model_s.to_bits());
+    }
+}

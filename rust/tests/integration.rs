@@ -1,32 +1,26 @@
 //! Cross-module integration tests: the full tuner stack over the simulated
 //! hardware, the four evaluation arms (RL on the native backend),
 //! determinism, and clock accounting.
+//!
+//! Fixtures (tuner configs, measurers, backends, bitwise assertions) come
+//! from the shared `common` harness.
 
-use release::nn::NativeBackend;
-use release::runtime::Backend;
-use release::sim::{Measurer, SimMeasurer};
+mod common;
+
+use common::{measurer, native_backend, quick_cfg, quick_cfg_trials};
 use release::space::DesignSpace;
 use release::tuner::session::{tune_tasks_session, SessionConfig};
 use release::tuner::{e2e::tune_model, e2e::tune_tasks, tune, MethodSpec, TunerConfig};
 use release::util::prop::forall;
 use release::workload::zoo;
-use std::sync::Arc;
-
-fn quick(seed: u64) -> TunerConfig {
-    TunerConfig { max_trials: 160, seed, ..Default::default() }
-}
-
-fn native_backend() -> Arc<dyn Backend> {
-    Arc::new(NativeBackend::new())
-}
 
 #[test]
 fn all_non_rl_arms_tune_the_same_task() {
     let task = &zoo::resnet18()[5];
     for name in ["autotvm", "sa+as", "ga", "random"] {
         let method = MethodSpec::parse(name).unwrap();
-        let meas = SimMeasurer::titan_xp(1);
-        let r = tune(task, &meas, method, &quick(1), None);
+        let meas = measurer(1);
+        let r = tune(task, &meas, method, &quick_cfg(1), None);
         assert!(r.best_gflops > 0.0, "{name} found nothing");
         assert!(r.n_measurements <= 160, "{name} overspent");
         assert!(r.best_runtime_ms.is_finite());
@@ -41,8 +35,8 @@ fn rl_arms_tune_end_to_end_on_the_native_backend() {
     let task = &zoo::resnet18()[5];
     for name in ["rl", "release"] {
         let method = MethodSpec::parse(name).unwrap();
-        let meas = SimMeasurer::titan_xp(1);
-        let cfg = TunerConfig { max_trials: 96, seed: 1, ..Default::default() };
+        let meas = measurer(1);
+        let cfg = quick_cfg_trials(1, 96);
         let r = tune(task, &meas, method, &cfg, Some(native_backend()));
         assert!(r.best_gflops > 0.0, "{name} found nothing");
         assert!(r.n_measurements <= 96, "{name} overspent");
@@ -57,12 +51,12 @@ fn rl_arms_tune_end_to_end_on_the_native_backend() {
 fn session_engine_runs_rl_method_without_artifacts() {
     // The pipelined multi-task session engine with the RL method on the
     // native backend (the acceptance bar of PR 2's tentpole).
-    let cfg = TunerConfig { max_trials: 48, seed: 2, ..Default::default() };
+    let cfg = quick_cfg_trials(2, 48);
     let scfg = SessionConfig::pipelined(cfg, 2);
     let r = tune_tasks_session(
         "alexnet",
         &zoo::alexnet(),
-        &SimMeasurer::titan_xp(3),
+        &measurer(3),
         MethodSpec::release(),
         &scfg,
         Some(native_backend()),
@@ -83,8 +77,8 @@ fn rl_beats_random_under_equal_trial_budget() {
     let task = &zoo::alexnet()[3];
     let mut wins = 0;
     for seed in 0..3u64 {
-        let meas_a = SimMeasurer::titan_xp(seed + 50);
-        let meas_b = SimMeasurer::titan_xp(seed + 50);
+        let meas_a = measurer(seed + 50);
+        let meas_b = measurer(seed + 50);
         let cfg =
             TunerConfig { max_trials: 160, early_stop: None, seed, ..Default::default() };
         let rl = tune(task, &meas_a, MethodSpec::rl_only(), &cfg, Some(native_backend()));
@@ -104,8 +98,8 @@ fn guided_search_beats_pure_random_on_average() {
     let task = &zoo::vgg16()[6];
     let mut wins = 0;
     for seed in 0..5u64 {
-        let meas_a = SimMeasurer::titan_xp(seed);
-        let meas_b = SimMeasurer::titan_xp(seed);
+        let meas_a = measurer(seed);
+        let meas_b = measurer(seed);
         let cfg = TunerConfig { max_trials: 256, early_stop: None, seed, ..Default::default() };
         let guided = tune(task, &meas_a, MethodSpec::autotvm(), &cfg, None);
         let random =
@@ -120,7 +114,7 @@ fn guided_search_beats_pure_random_on_average() {
 #[test]
 fn clock_is_monotone_and_dominated_by_measurement() {
     let task = &zoo::alexnet()[2];
-    let meas = SimMeasurer::titan_xp(3);
+    let meas = measurer(3);
     let cfg = TunerConfig { max_trials: 256, early_stop: None, seed: 3, ..Default::default() };
     let r = tune(task, &meas, MethodSpec::autotvm(), &cfg, None);
     let mut prev = 0.0;
@@ -131,6 +125,7 @@ fn clock_is_monotone_and_dominated_by_measurement() {
     let frac = r.clock.measure_fraction();
     assert!(frac > 0.5, "measurement fraction {frac}");
     // simulated device accounting matches the tuner's view
+    use release::sim::Measurer as _;
     assert!((meas.elapsed_s() - r.clock.measure_s).abs() < 1e-6);
 }
 
@@ -140,9 +135,9 @@ fn adaptive_sampling_reduces_measurements_on_equal_convergence_policy() {
     let mut greedy_total = 0usize;
     let mut adaptive_total = 0usize;
     for seed in 0..3u64 {
-        let cfg = TunerConfig { max_trials: 512, seed, ..Default::default() };
-        let m1 = SimMeasurer::titan_xp(seed + 10);
-        let m2 = SimMeasurer::titan_xp(seed + 10);
+        let cfg = quick_cfg_trials(seed, 512);
+        let m1 = measurer(seed + 10);
+        let m2 = measurer(seed + 10);
         // both arms use the same convergence policy; only the sampler differs
         greedy_total += tune(task, &m1, MethodSpec::autotvm(), &cfg, None).n_measurements;
         adaptive_total += tune(task, &m2, MethodSpec::sa_as(), &cfg, None).n_measurements;
@@ -155,13 +150,16 @@ fn adaptive_sampling_reduces_measurements_on_equal_convergence_policy() {
 
 #[test]
 fn e2e_model_tuning_aggregates_consistently() {
-    let meas = SimMeasurer::titan_xp(4);
-    let cfg = TunerConfig { max_trials: 96, seed: 4, ..Default::default() };
+    let meas = measurer(4);
+    let cfg = quick_cfg_trials(4, 96);
     let r = tune_model("alexnet", &meas, MethodSpec::sa_as(), &cfg, None);
     assert_eq!(r.tasks.len(), 5);
     let sum_s: f64 = r.tasks.iter().map(|t| t.clock.total_s()).sum();
     assert!((r.opt_time_s - sum_s).abs() < 1e-9);
     assert!(r.inference_ms > 0.0);
+    // no transfer ran: every task tuned cold
+    assert_eq!(r.n_warm_started(), 0);
+    assert!(r.tasks.iter().all(|t| t.transfer.is_none()));
     // every task produced a valid config in its own space
     for (t, task) in r.tasks.iter().zip(zoo::alexnet()) {
         let space = DesignSpace::for_conv(task.layer);
@@ -174,8 +172,8 @@ fn e2e_model_tuning_aggregates_consistently() {
 fn tuning_is_reproducible_across_runs() {
     let task = &zoo::vgg16()[1];
     let run = || {
-        let meas = SimMeasurer::titan_xp(99);
-        tune(task, &meas, MethodSpec::sa_as(), &quick(7), None)
+        let meas = measurer(99);
+        tune(task, &meas, MethodSpec::sa_as(), &quick_cfg(7), None)
     };
     let a = run();
     let b = run();
@@ -197,7 +195,7 @@ fn tune_never_exceeds_budget_property() {
         let max_trials = 24 + rng.below(140);
         let seed = rng.next_u64();
         let cfg = TunerConfig { max_trials, seed, ..Default::default() };
-        let meas = SimMeasurer::titan_xp(seed ^ 0x5eed);
+        let meas = measurer(seed ^ 0x5eed);
         let r = tune(task, &meas, method, &cfg, None);
         assert!(
             r.n_measurements <= max_trials,
@@ -205,6 +203,7 @@ fn tune_never_exceeds_budget_property() {
             method.name(),
             r.n_measurements
         );
+        use release::sim::Measurer as _;
         assert_eq!(r.n_measurements, meas.count(), "device count disagrees");
     });
 }
@@ -214,11 +213,11 @@ fn session_with_unit_parallelism_reproduces_serial_exactly() {
     // the pipelined session engine at task_parallelism = 1 and pipeline
     // depth 1 must be bit-identical to the serial tune_tasks path
     let tasks = zoo::alexnet();
-    let cfg = TunerConfig { max_trials: 72, seed: 31, ..Default::default() };
+    let cfg = quick_cfg_trials(31, 72);
     let serial = tune_tasks(
         "alexnet",
         &tasks,
-        &SimMeasurer::titan_xp(8),
+        &measurer(8),
         MethodSpec::sa_as(),
         &cfg,
         None,
@@ -227,22 +226,12 @@ fn session_with_unit_parallelism_reproduces_serial_exactly() {
     let sess = tune_tasks_session(
         "alexnet",
         &tasks,
-        &SimMeasurer::titan_xp(8),
+        &measurer(8),
         MethodSpec::sa_as(),
         &scfg,
         None,
     );
-    assert_eq!(serial.n_measurements, sess.n_measurements);
-    assert_eq!(serial.inference_ms.to_bits(), sess.inference_ms.to_bits());
-    for (a, b) in serial.tasks.iter().zip(&sess.tasks) {
-        assert_eq!(a.best_runtime_ms.to_bits(), b.best_runtime_ms.to_bits());
-        assert_eq!(a.best_gflops.to_bits(), b.best_gflops.to_bits());
-        assert_eq!(a.best_config, b.best_config);
-        assert_eq!(a.n_measurements, b.n_measurements);
-        assert_eq!(a.iterations.len(), b.iterations.len());
-        assert_eq!(a.clock.measure_s.to_bits(), b.clock.measure_s.to_bits());
-        assert_eq!(a.clock.search_s.to_bits(), b.clock.search_s.to_bits());
-    }
+    common::assert_tasks_bitwise_equal(&serial, &sess);
     // the serial schedule's replayed wall equals the resource sum (up to fp
     // association in the replay)
     let rel = (sess.wall_s - serial.opt_time_s).abs() / serial.opt_time_s;
@@ -254,7 +243,7 @@ fn different_measurement_seeds_change_results() {
     // the simulated "hardware" has measurement noise: a different seed is a
     // different day on the machine
     let task = &zoo::vgg16()[1];
-    let a = tune(task, &SimMeasurer::titan_xp(1), MethodSpec::sa_as(), &quick(7), None);
-    let b = tune(task, &SimMeasurer::titan_xp(2), MethodSpec::sa_as(), &quick(7), None);
+    let a = tune(task, &measurer(1), MethodSpec::sa_as(), &quick_cfg(7), None);
+    let b = tune(task, &measurer(2), MethodSpec::sa_as(), &quick_cfg(7), None);
     assert_ne!(a.best_runtime_ms, b.best_runtime_ms);
 }

@@ -1,0 +1,259 @@
+//! Cross-task transfer integration tests: the `--transfer off` overlay is
+//! bit-identical to the baseline engine, warm-started siblings actually
+//! consume donors, the RL policy warm-start engages end-to-end, and the
+//! registry/budget disciplines hold under every (method, seed, mode,
+//! parallelism) combination the property test throws at the session.
+
+mod common;
+
+use common::{assert_tasks_bitwise_equal, measurer, native_backend, quick_cfg_trials, sibling_tasks};
+use release::transfer::{TransferConfig, TransferEvent, TransferMode, TransferRegistry};
+use release::tuner::session::{
+    tune_tasks_session, tune_tasks_session_observed, SessionConfig,
+};
+use release::tuner::{e2e::tune_tasks, MethodSpec, TunerConfig};
+use release::util::prop::forall;
+use release::workload::zoo;
+use std::collections::HashSet;
+
+#[test]
+fn transfer_off_is_bit_identical_to_baseline_engine() {
+    // The transfer subsystem must be a pure overlay: with --transfer off
+    // (the default) the session engine produces bit-identical TuneResults
+    // to the pre-transfer engine — pinned against the serial path and the
+    // task-parallel depth-1 schedule.
+    let tasks = zoo::alexnet();
+    let cfg = quick_cfg_trials(31, 64);
+    let serial = tune_tasks(
+        "alexnet",
+        &tasks,
+        &measurer(9),
+        MethodSpec::sa_as(),
+        &cfg,
+        None,
+    );
+    let off_serial = tune_tasks_session(
+        "alexnet",
+        &tasks,
+        &measurer(9),
+        MethodSpec::sa_as(),
+        &SessionConfig::serial(cfg.clone()),
+        None,
+    );
+    assert_tasks_bitwise_equal(&serial, &off_serial);
+    assert!(off_serial.tasks.iter().all(|t| t.transfer.is_none()));
+
+    let scfg = SessionConfig {
+        tuner: cfg,
+        task_parallelism: 4,
+        device_slots: 4,
+        pipeline_depth: 1,
+        ..Default::default()
+    };
+    let off_parallel = tune_tasks_session(
+        "alexnet",
+        &tasks,
+        &measurer(9),
+        MethodSpec::sa_as(),
+        &scfg,
+        None,
+    );
+    assert_tasks_bitwise_equal(&serial, &off_parallel);
+}
+
+#[test]
+fn model_transfer_feeds_donor_pairs_to_later_tasks() {
+    let tasks = sibling_tasks();
+    let cfg = quick_cfg_trials(5, 64);
+
+    let cold = tune_tasks_session(
+        "tiny",
+        &tasks,
+        &measurer(21),
+        MethodSpec::sa_as(),
+        &SessionConfig::serial(cfg.clone()),
+        None,
+    );
+    let mut scfg = SessionConfig::serial(cfg);
+    scfg.transfer = TransferConfig::with_mode(TransferMode::Model);
+    let registry = TransferRegistry::new();
+    let warm = tune_tasks_session_observed(
+        "tiny",
+        &tasks,
+        &measurer(21),
+        MethodSpec::sa_as(),
+        &scfg,
+        None,
+        Some(&registry),
+    );
+
+    // every task published; all but the curriculum-first consumed donors
+    assert_eq!(registry.len(), tasks.len());
+    assert_eq!(warm.n_warm_started(), tasks.len() - 1);
+    for t in &warm.tasks {
+        if let Some(s) = &t.transfer {
+            assert!(!s.donors.is_empty());
+            assert!(s.n_pairs > 0, "{}: donors but no remapped pairs", t.task_id);
+            assert!(!s.policy_warm, "model mode must not touch the policy");
+        }
+        assert!(t.best_gflops > 0.0, "{} found nothing", t.task_id);
+        assert!(t.n_measurements <= 64);
+    }
+    // the curriculum-first task ran cold: bitwise equal to the cold run
+    let first = warm
+        .tasks
+        .iter()
+        .position(|t| t.transfer.is_none())
+        .expect("one task must run cold");
+    assert_eq!(
+        warm.tasks[first].best_runtime_ms.to_bits(),
+        cold.tasks[first].best_runtime_ms.to_bits()
+    );
+    assert_eq!(warm.tasks[first].n_measurements, cold.tasks[first].n_measurements);
+    // ...and the warm-started ones genuinely searched differently
+    let changed = warm.tasks.iter().zip(&cold.tasks).any(|(w, c)| {
+        w.transfer.is_some()
+            && (w.n_measurements != c.n_measurements
+                || w.best_runtime_ms.to_bits() != c.best_runtime_ms.to_bits()
+                || w.iterations.len() != c.iterations.len())
+    });
+    assert!(changed, "transfer enabled but every task tuned identically to cold");
+}
+
+#[test]
+fn transfer_session_is_deterministic_at_unit_parallelism() {
+    // with tp = 1 the curriculum and donor sets are fixed, so a transfer
+    // session is exactly reproducible run to run
+    let tasks = sibling_tasks();
+    let run = || {
+        let mut scfg = SessionConfig::serial(quick_cfg_trials(3, 48));
+        scfg.transfer = TransferConfig::with_mode(TransferMode::Model);
+        tune_tasks_session(
+            "tiny",
+            &tasks,
+            &measurer(33),
+            MethodSpec::sa_as(),
+            &scfg,
+            None,
+        )
+    };
+    let a = run();
+    let b = run();
+    assert_tasks_bitwise_equal(&a, &b);
+}
+
+#[test]
+fn policy_transfer_warm_starts_the_rl_agent() {
+    // RELEASE (RL) method, policy-only transfer: later tasks must adopt
+    // the averaged donor parameters (policy_warm) and still tune fine.
+    let tasks = sibling_tasks();
+    let mut scfg = SessionConfig::serial(quick_cfg_trials(7, 32));
+    scfg.transfer = TransferConfig::with_mode(TransferMode::Policy);
+    let registry = TransferRegistry::new();
+    let r = tune_tasks_session_observed(
+        "tiny",
+        &tasks,
+        &measurer(41),
+        MethodSpec::release(),
+        &scfg,
+        Some(native_backend()),
+        Some(&registry),
+    );
+    assert_eq!(registry.len(), tasks.len());
+    assert_eq!(r.n_warm_started(), tasks.len() - 1);
+    for t in &r.tasks {
+        assert!(t.best_gflops > 0.0, "{} found nothing", t.task_id);
+        if let Some(s) = &t.transfer {
+            assert!(s.policy_warm, "{}: donors but no policy warm-start", t.task_id);
+            assert_eq!(s.n_pairs, 0, "policy mode must not seed the cost model");
+        }
+    }
+}
+
+#[test]
+fn transfer_budget_and_registry_discipline_property() {
+    // Property: across methods, seeds, transfer modes, parallelism and
+    // pipeline depth, (a) no task ever exceeds its measurement budget and
+    // (b) every donor a task reads was published by a *completed* task
+    // before the read — no read-your-own-writes under task-parallelism.
+    let tasks = sibling_tasks();
+    let methods = [MethodSpec::autotvm(), MethodSpec::sa_as()];
+    let modes = [
+        TransferMode::Off,
+        TransferMode::Model,
+        TransferMode::Policy,
+        TransferMode::Both,
+    ];
+    forall(6, 0x7a5f, |rng| {
+        let mode = modes[rng.below(modes.len())];
+        // one case in four exercises the RL arm (policy transfer end to end)
+        let use_rl = rng.bool(0.25);
+        let method = if use_rl {
+            MethodSpec::release()
+        } else {
+            methods[rng.below(methods.len())]
+        };
+        let backend = if use_rl { Some(native_backend()) } else { None };
+        let max_trials = 24 + rng.below(41);
+        let seed = rng.next_u64();
+        let scfg = SessionConfig {
+            tuner: TunerConfig { max_trials, seed, ..Default::default() },
+            task_parallelism: 1 + rng.below(3),
+            device_slots: 1 + rng.below(2),
+            pipeline_depth: 1 + rng.below(2),
+            budget_shares: None,
+            transfer: TransferConfig::with_mode(mode),
+        };
+        let registry = TransferRegistry::new();
+        let r = tune_tasks_session_observed(
+            "tiny",
+            &tasks,
+            &measurer(seed ^ 0x5eed),
+            method,
+            &scfg,
+            backend,
+            Some(&registry),
+        );
+        // (a) budget discipline, transfer or not
+        for t in &r.tasks {
+            assert!(
+                t.n_measurements <= max_trials,
+                "{} overspent: {} > {max_trials} (seed {seed}, mode {})",
+                t.task_id,
+                t.n_measurements,
+                mode.name()
+            );
+        }
+        // (b) registry discipline: replay the event log
+        let events = registry.events();
+        if mode.is_off() {
+            assert!(events.is_empty(), "off mode must never touch the registry");
+        } else {
+            let mut published: HashSet<String> = HashSet::new();
+            let mut n_published = 0;
+            for e in events {
+                match e {
+                    TransferEvent::Published { task } => {
+                        assert!(published.insert(task), "double publish");
+                        n_published += 1;
+                    }
+                    TransferEvent::Consulted { task, donors } => {
+                        assert!(
+                            !donors.contains(&task),
+                            "{task} read its own artifact"
+                        );
+                        for d in &donors {
+                            assert!(
+                                published.contains(d),
+                                "{task} read donor {d} before it completed \
+                                 (seed {seed}, tp {})",
+                                scfg.task_parallelism
+                            );
+                        }
+                    }
+                }
+            }
+            assert_eq!(n_published, tasks.len(), "every task must publish once");
+        }
+    });
+}
