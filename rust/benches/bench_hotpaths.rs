@@ -1,0 +1,363 @@
+//! Hot-path benchmark of the model-side tuning loop: featurize / GBT fit /
+//! GBT predict / adaptive-sampling (k-means knee sweep) / PPO update —
+//! plus a quick end-to-end session — at `--threads 1` vs all cores, and a
+//! heap-allocation audit of one serial tuning round (flat-buffer path vs
+//! the pre-refactor `Vec<Vec<_>>` pipeline it replaced, re-enacted here).
+//!
+//! Writes `BENCH_hotpaths.json` (the first point of the perf trajectory;
+//! CI uploads it per PR) and asserts the acceptance bars:
+//!   - combined featurize+fit+predict+kmeans wall-clock speedup >= 1.5x at
+//!     `threads = available_parallelism` vs 1 (when >= 4 cores are
+//!     available; scaled down on smaller hosts),
+//!   - >= 2x fewer heap allocations per tuning round on the serial path.
+//!
+//! `RELEASE_QUICK=1 cargo bench --bench bench_hotpaths` for the CI smoke.
+
+use release::costmodel::{measurement_target, CostModel};
+use release::gbt::{Binner, BinnedMatrix, Gbt, GbtParams, Tree, TreeParams};
+use release::nn::NativeBackend;
+use release::runtime::Backend;
+use release::sampling::adaptive_sample;
+use release::sim::{Measurer, SimMeasurer};
+use release::space::features::{features, features_fill, NFEATURES};
+use release::space::{Config, DesignSpace};
+use release::tuner::{tune, MethodSpec, TunerConfig};
+use release::util::matrix::FeatureMatrix;
+use release::util::parallel::{default_threads, par_rows_mut, set_threads, threads};
+use release::util::rng::Pcg32;
+use release::workload::zoo;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::collections::HashSet;
+use std::io::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+// --- counting allocator -----------------------------------------------------
+
+struct CountingAlloc;
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+// --- timing -----------------------------------------------------------------
+
+/// Best-of-`reps` wall seconds of `f` (after one warmup run).
+fn time_best<T>(reps: usize, mut f: impl FnMut() -> T) -> f64 {
+    std::hint::black_box(f());
+    let mut best = f64::INFINITY;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        let dt = t0.elapsed().as_secs_f64();
+        if dt < best {
+            best = dt;
+        }
+    }
+    best
+}
+
+struct Stage {
+    name: &'static str,
+    serial_s: f64,
+    parallel_s: f64,
+}
+
+impl Stage {
+    fn speedup(&self) -> f64 {
+        self.serial_s / self.parallel_s.max(1e-12)
+    }
+}
+
+fn main() {
+    let quick = std::env::var("RELEASE_QUICK").map(|v| v != "0").unwrap_or(false);
+    let hi = default_threads();
+    let reps = if quick { 2 } else { 3 };
+    let n_feat: usize = if quick { 16384 } else { 32768 };
+    let n_train: usize = if quick { 2048 } else { 4096 };
+    let n_points: usize = if quick { 4096 } else { 8192 };
+    println!(
+        "bench_hotpaths: {} mode, {hi} hardware threads, batch {n_feat}, \
+         train {n_train}, kmeans points {n_points}",
+        if quick { "quick" } else { "full" }
+    );
+
+    let space = DesignSpace::for_conv(zoo::resnet18()[5].layer);
+    let mut rng = Pcg32::seed_from(0);
+    let configs: Vec<Config> =
+        (0..n_feat).map(|_| space.random_config(&mut rng)).collect();
+    let train_cfgs = &configs[..n_train];
+    let meas = SimMeasurer::titan_xp(0);
+    let measured = meas.measure_batch(&space, train_cfgs);
+    let ys: Vec<f32> = measured.iter().map(measurement_target).collect();
+    let fit_params = GbtParams { n_trees: 64, ..Default::default() };
+
+    // --- stage kernels (each honors the global --threads knob) -------------
+    let featurize = |cfgs: &[Config]| {
+        let mut m = FeatureMatrix::new(NFEATURES);
+        m.resize_rows(cfgs.len());
+        par_rows_mut(m.as_mut_slice(), NFEATURES, threads(), |i, row| {
+            features_fill(&space, &cfgs[i], row);
+        });
+        m
+    };
+    let train_m = featurize(train_cfgs);
+    let feat_m = featurize(&configs);
+    let gbt = Gbt::fit_matrix(&train_m, &ys, &fit_params);
+    let traj: Vec<Config> = configs[..n_points].to_vec();
+
+    let mut stages: Vec<Stage> = Vec::new();
+    for (name, kernel) in [
+        ("featurize", 0usize),
+        ("gbt_fit", 1),
+        ("gbt_predict", 2),
+        ("kmeans_knee", 3),
+    ] {
+        let run = |nthreads: usize| {
+            set_threads(nthreads);
+            let s = match kernel {
+                0 => time_best(reps, || featurize(&configs).len()),
+                1 => time_best(reps, || {
+                    Gbt::fit_matrix(&train_m, &ys, &fit_params).n_trees()
+                }),
+                2 => time_best(reps, || gbt.predict_matrix(&feat_m).len()),
+                _ => time_best(reps, || {
+                    let mut r = Pcg32::seed_from(7);
+                    adaptive_sample(&space, &traj, &HashSet::new(), &mut r).k
+                }),
+            };
+            set_threads(0);
+            s
+        };
+        let serial_s = run(1);
+        let parallel_s = run(hi);
+        let st = Stage { name, serial_s, parallel_s };
+        println!(
+            "stage {:<12} serial {:>9.2} ms   threads={hi} {:>9.2} ms   {:>5.2}x",
+            st.name,
+            st.serial_s * 1e3,
+            st.parallel_s * 1e3,
+            st.speedup()
+        );
+        stages.push(st);
+    }
+
+    // PPO update: serial by design (the fixed-topology reverse-mode core);
+    // reported for the trajectory, not part of the combined-speedup bar.
+    let be = NativeBackend::new();
+    let spec = be.spec().clone();
+    let bsz = spec.b_rollout;
+    let obs_u = vec![0.5f32; bsz * spec.ndims];
+    let actions = vec![1i32; bsz * spec.ndims];
+    let old_logp = vec![-8.8f32; bsz];
+    let adv = vec![0.1f32; bsz];
+    let ret = vec![0.5f32; bsz];
+    let mask = vec![1.0f32; bsz];
+    let mut st = be.ppo_init(1).expect("ppo_init");
+    let ppo_s = time_best(reps, || {
+        be.ppo_update(&mut st, &obs_u, &actions, &old_logp, &adv, &ret, &mask, 3)
+            .unwrap()
+    });
+    println!("stage {:<12} {:>9.2} ms (serial-by-design)", "ppo_update", ppo_s * 1e3);
+
+    // --- allocation audit: one serial tuning round --------------------------
+    set_threads(1);
+    let audit_n = 512;
+    let audit_cfgs = &configs[..audit_n];
+    let audit_meas = meas.measure_batch(&space, audit_cfgs);
+    let probe = &configs[n_feat - audit_n..];
+    let audit_params = GbtParams::default(); // the cost model's real config
+
+    // pre-refactor pipeline, re-enacted: per-config feature Vecs, fresh
+    // Vec<Vec<u8>> binning, per-tree cloned sub-matrices, per-config
+    // normalize Vecs for the sampler
+    let naive_allocs = {
+        let before = allocs();
+        let rows: Vec<Vec<f32>> =
+            audit_cfgs.iter().map(|c| features(&space, c)).collect();
+        let targets: Vec<f32> = audit_meas.iter().map(measurement_target).collect();
+        let binner = Binner::fit(&rows, NFEATURES);
+        let binned_rows: Vec<Vec<u8>> =
+            rows.iter().map(|r| binner.bin_row(r)).collect();
+        let base = targets.iter().sum::<f32>() / targets.len() as f32;
+        let mut pred = vec![base; targets.len()];
+        let mut trng = Pcg32::seed_from(audit_params.seed ^ 0x6b7);
+        let tparams = TreeParams {
+            max_depth: audit_params.max_depth,
+            min_samples_leaf: audit_params.min_samples_leaf,
+            lambda: audit_params.lambda,
+            gamma: 1e-6,
+        };
+        let mut trees = Vec::new();
+        for _ in 0..audit_params.n_trees {
+            let res: Vec<f32> =
+                targets.iter().zip(&pred).map(|(t, p)| t - p).collect();
+            let keep =
+                ((targets.len() as f32 * audit_params.subsample) as usize).max(10);
+            let mut order: Vec<u32> = (0..targets.len() as u32).collect();
+            trng.shuffle(&mut order);
+            order.truncate(keep);
+            // the old path cloned every drawn row into a fresh sub-matrix:
+            let sub_rows: Vec<Vec<u8>> = order
+                .iter()
+                .map(|&i| binned_rows[i as usize].clone())
+                .collect();
+            let sub_res: Vec<f32> =
+                order.iter().map(|&i| res[i as usize]).collect();
+            let mut sub_binned = BinnedMatrix::new(NFEATURES);
+            for r in &sub_rows {
+                sub_binned.push_binned_row(r);
+            }
+            let idx: Vec<u32> = (0..keep as u32).collect();
+            let tree = Tree::fit(&sub_binned, &sub_res, idx, &binner, &tparams);
+            for (p, row) in pred.iter_mut().zip(&rows) {
+                *p += audit_params.learning_rate * tree.predict(row);
+            }
+            trees.push(tree);
+        }
+        // old predict path: featurize every probe config into its own Vec
+        let probe_rows: Vec<Vec<f32>> =
+            probe.iter().map(|c| features(&space, c)).collect();
+        let mut preds = vec![base; probe_rows.len()];
+        for t in &trees {
+            for (p, row) in preds.iter_mut().zip(&probe_rows) {
+                *p += audit_params.learning_rate * t.predict(row);
+            }
+        }
+        std::hint::black_box(&preds);
+        // old sampler path: per-config normalize Vecs feeding the sweep
+        let points: Vec<Vec<f32>> =
+            traj.iter().map(|c| space.normalize(c)).collect();
+        std::hint::black_box(points.len());
+        let mut r = Pcg32::seed_from(7);
+        let s = adaptive_sample(&space, &traj, &HashSet::new(), &mut r);
+        std::hint::black_box(s.k);
+        allocs() - before
+    };
+
+    // the flat path: exactly what one tuning round runs today
+    let flat_allocs = {
+        let before = allocs();
+        let mut cm = CostModel::new(audit_params.seed);
+        cm.update(&space, &audit_meas);
+        let preds = cm.predict_batch(&space, probe);
+        std::hint::black_box(preds.len());
+        let mut r = Pcg32::seed_from(7);
+        let s = adaptive_sample(&space, &traj, &HashSet::new(), &mut r);
+        std::hint::black_box(s.k);
+        allocs() - before
+    };
+    set_threads(0);
+    let alloc_ratio = naive_allocs as f64 / flat_allocs.max(1) as f64;
+    println!(
+        "allocs per serial round: pre-refactor pipeline {naive_allocs}, \
+         flat-buffer path {flat_allocs} ({alloc_ratio:.2}x fewer)"
+    );
+
+    // --- quick end-to-end session (sanity: the wiring pays off in situ) -----
+    let e2e_task = &zoo::resnet18()[5];
+    let e2e_cfg = TunerConfig { max_trials: 96, seed: 3, ..Default::default() };
+    set_threads(1);
+    let t0 = Instant::now();
+    let r1 = tune(e2e_task, &SimMeasurer::titan_xp(3), MethodSpec::sa_as(), &e2e_cfg, None);
+    let e2e_serial_s = t0.elapsed().as_secs_f64();
+    set_threads(hi);
+    let t0 = Instant::now();
+    let rn = tune(e2e_task, &SimMeasurer::titan_xp(3), MethodSpec::sa_as(), &e2e_cfg, None);
+    let e2e_parallel_s = t0.elapsed().as_secs_f64();
+    set_threads(0);
+    assert_eq!(
+        r1.best_gflops.to_bits(),
+        rn.best_gflops.to_bits(),
+        "e2e tune must be bit-identical across thread counts"
+    );
+    println!(
+        "e2e tune (sa+as, 96 trials): serial {:.2}s, threads={hi} {:.2}s",
+        e2e_serial_s, e2e_parallel_s
+    );
+
+    // --- combined bar + JSON -------------------------------------------------
+    let combined_serial: f64 = stages.iter().map(|s| s.serial_s).sum();
+    let combined_parallel: f64 = stages.iter().map(|s| s.parallel_s).sum();
+    let combined = combined_serial / combined_parallel.max(1e-12);
+    println!(
+        "combined model loop (featurize+fit+predict+kmeans): {:.2}x at {hi} threads",
+        combined
+    );
+
+    let mut json = String::from("{\n");
+    json.push_str(&format!("  \"threads\": {hi},\n  \"quick\": {quick},\n"));
+    json.push_str(&format!(
+        "  \"sizes\": {{\"featurize\": {n_feat}, \"train\": {n_train}, \
+         \"kmeans_points\": {n_points}}},\n"
+    ));
+    json.push_str("  \"stages\": {\n");
+    for (i, s) in stages.iter().enumerate() {
+        json.push_str(&format!(
+            "    \"{}\": {{\"serial_ms\": {:.3}, \"parallel_ms\": {:.3}, \"speedup\": {:.3}}}{}\n",
+            s.name,
+            s.serial_s * 1e3,
+            s.parallel_s * 1e3,
+            s.speedup(),
+            if i + 1 < stages.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  },\n");
+    json.push_str(&format!("  \"ppo_update_ms\": {:.3},\n", ppo_s * 1e3));
+    json.push_str(&format!(
+        "  \"e2e_tune\": {{\"serial_s\": {:.3}, \"parallel_s\": {:.3}}},\n",
+        e2e_serial_s, e2e_parallel_s
+    ));
+    json.push_str(&format!("  \"combined_speedup\": {combined:.3},\n"));
+    json.push_str(&format!(
+        "  \"allocs\": {{\"naive_round\": {naive_allocs}, \
+         \"flat_round\": {flat_allocs}, \"ratio\": {alloc_ratio:.3}}}\n"
+    ));
+    json.push_str("}\n");
+    let mut f = std::fs::File::create("BENCH_hotpaths.json").expect("write json");
+    f.write_all(json.as_bytes()).expect("write json");
+    println!("wrote BENCH_hotpaths.json");
+
+    // --- acceptance bars -----------------------------------------------------
+    assert!(
+        alloc_ratio >= 2.0,
+        "flat serial path must allocate >= 2x less per round: \
+         naive {naive_allocs} vs flat {flat_allocs} ({alloc_ratio:.2}x)"
+    );
+    if hi >= 4 {
+        assert!(
+            combined >= 1.5,
+            "combined model-loop speedup {combined:.2}x < 1.5x at {hi} threads"
+        );
+    } else if hi >= 2 {
+        assert!(
+            combined >= 1.1,
+            "combined model-loop speedup {combined:.2}x < 1.1x at {hi} threads"
+        );
+        println!("note: < 4 hardware threads; 1.5x bar scaled to 1.1x");
+    } else {
+        println!("note: single hardware thread; speedup bar skipped");
+    }
+}

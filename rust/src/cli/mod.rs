@@ -32,6 +32,9 @@ TUNE OPTIONS:
                                 PJRT when artifacts exist, else native)
   --trials N        measurement budget per task    (default: 1000)
   --seed N          RNG seed                       (default: 0)
+  --threads N       worker threads for the model-side hot paths (featurize,
+                    GBT fit/predict, k-means); results are bit-identical at
+                    any value (default: available parallelism)
   --no-early-stop   run the full budget
 
 SESSION OPTIONS (model tuning):
@@ -187,6 +190,8 @@ fn session_config(flags: &HashMap<String, String>, tuner: TunerConfig) -> Sessio
     if let Some(k) = parse("transfer-topk") {
         transfer.topk = k.max(1);
     }
+    let threads =
+        parse("threads").unwrap_or_else(crate::util::parallel::default_threads).max(1);
     SessionConfig {
         tuner,
         task_parallelism,
@@ -194,6 +199,7 @@ fn session_config(flags: &HashMap<String, String>, tuner: TunerConfig) -> Sessio
         pipeline_depth,
         budget_shares,
         transfer,
+        threads,
     }
 }
 
@@ -237,6 +243,11 @@ fn cmd_tune(flags: &HashMap<String, String>) -> i32 {
     let meas = SimMeasurer::titan_xp(cfg.seed ^ 0xdead);
 
     if let Some(layer) = flags.get("layer") {
+        // single-task path bypasses the session engine: apply --threads here
+        if let Some(t) = flags.get("threads") {
+            let t: usize = t.parse().expect("--threads must be an integer");
+            crate::util::parallel::set_threads(t.max(1));
+        }
         let Some((_, task)) =
             zoo::layer_table().into_iter().find(|(n, _)| n.eq_ignore_ascii_case(layer))
         else {
@@ -497,6 +508,20 @@ mod tests {
         let s = session_config(&flags, TunerConfig::default());
         assert_eq!((s.device_slots, s.pipeline_depth), (2, 1));
         assert_eq!(s.budget_shares, Some(vec![2.0, 1.0, 1.0]));
+    }
+
+    #[test]
+    fn threads_flag_parses_and_defaults_to_available_parallelism() {
+        let defaults = session_config(&HashMap::new(), TunerConfig::default());
+        assert_eq!(defaults.threads, crate::util::parallel::default_threads());
+        let mut flags = HashMap::new();
+        flags.insert("threads".to_string(), "3".to_string());
+        let s = session_config(&flags, TunerConfig::default());
+        assert_eq!(s.threads, 3);
+        // 0 clamps to 1 (a session always has one worker)
+        flags.insert("threads".to_string(), "0".to_string());
+        let s = session_config(&flags, TunerConfig::default());
+        assert_eq!(s.threads, 1);
     }
 
     #[test]

@@ -5,11 +5,26 @@
 //! Targets are log-GFLOPS; failed measurements contribute fitness 0 (mapped
 //! to a large negative log target), teaching the model to avoid invalid
 //! regions — exactly the role the XGBoost model plays in AutoTVM.
+//!
+//! §Perf (the model-side hot path): training rows live in a flat
+//! [`FeatureMatrix`]; their quantile binning is maintained *incrementally*
+//! (only new rows are binned; columns re-bin only when their edges
+//! actually move) so a refit stops re-doing O(n x d) work it did last
+//! round. Feature extraction is memoized per configuration in a flat-arena
+//! cache keyed by the config's flat index — the SA/GA/RL searchers query
+//! overlapping config sets every round, and each row is computed once.
+//! Batches large enough to amortize a thread spawn featurize in parallel
+//! (per-row independent => bit-identical at any thread count).
 
-use crate::gbt::{Gbt, GbtParams};
+use crate::gbt::{BinnedMatrix, Gbt, GbtParams, IncrementalBinner};
 use crate::sim::Measurement;
-use crate::space::{features::features, Config, DesignSpace};
+use crate::space::features::{features_fill, features_into, NFEATURES};
+use crate::space::{Config, DesignSpace};
+use crate::util::matrix::FeatureMatrix;
+use crate::util::parallel::{par_rows_mut, threads};
 use crate::util::rng::hash_unit;
+use std::cell::RefCell;
+use std::collections::HashMap;
 
 /// Time model for what fitting/querying would cost on the paper's host —
 /// drives the simulated `Clock::model_s` (the non-measurement slice of
@@ -29,20 +44,64 @@ impl Default for ModelTimeCost {
     }
 }
 
+/// Entries the feature cache holds before it resets (bounds memory on very
+/// long sessions; a reset only costs re-featurization, never correctness).
+const FEATURE_CACHE_CAP: usize = 1 << 16;
+
+/// Batches at least this large featurize in parallel, bypassing the cache
+/// (the memo lookup would serialize them anyway). Thread-count independent.
+const PAR_FEATURIZE_MIN: usize = 1024;
+
+/// Flat-arena feature memo: config flat-index -> row in `rows`.
+struct FeatureCache {
+    map: HashMap<u64, u32>,
+    rows: FeatureMatrix,
+}
+
+impl FeatureCache {
+    fn new() -> Self {
+        FeatureCache { map: HashMap::new(), rows: FeatureMatrix::new(NFEATURES) }
+    }
+
+    /// Row index for `c`, featurizing on first sight.
+    fn intern(&mut self, space: &DesignSpace, c: &Config) -> usize {
+        let key = space.flat_index(c);
+        if let Some(&ix) = self.map.get(&key) {
+            return ix as usize;
+        }
+        if self.map.len() >= FEATURE_CACHE_CAP {
+            self.map.clear();
+            self.rows.clear();
+        }
+        let ix = self.rows.len();
+        self.rows.push_row_with(|out| features_into(space, c, out));
+        self.map.insert(key, ix as u32);
+        ix
+    }
+}
+
 /// Online-trained surrogate of f(τ(Θ)).
 pub struct CostModel {
     gbt: Option<Gbt>,
     params: GbtParams,
-    /// (features, log-gflops target) training pairs accumulated so far.
-    xs: Vec<Vec<f32>>,
+    /// Native training rows (flat n x NFEATURES) and log-gflops targets.
+    feats: FeatureMatrix,
     ys: Vec<f32>,
+    /// Incremental quantile binning of the native rows; `binned` always
+    /// covers rows `[0, binned.len())` of `feats` under `inc`'s edges.
+    inc: IncrementalBinner,
+    binned: BinnedMatrix,
     /// Transferred pairs from sibling tasks (features already re-extracted
     /// in *this* task's space) with their base sample weights — folded into
     /// fits via deterministic Bernoulli thinning, decaying as native
     /// measurements accumulate (see [`CostModel::seed_transfer`]).
-    t_xs: Vec<Vec<f32>>,
+    t_feats: FeatureMatrix,
     t_ys: Vec<f32>,
     t_w: Vec<f32>,
+    /// Reusable staging buffers for transfer-mode fits (the concatenated
+    /// thinned-transfer + native view) — flat copies, no per-row clones.
+    t_scratch_x: FeatureMatrix,
+    t_scratch_y: Vec<f32>,
     /// Native measurements over which a transferred pair's effective weight
     /// halves.
     pub transfer_half_life: f64,
@@ -51,6 +110,11 @@ pub struct CostModel {
     /// Simulated seconds spent fitting + predicting.
     pub spent_s: std::cell::Cell<f64>,
     n_fits: usize,
+    /// Feature memo + per-call row staging (interior mutability keeps the
+    /// `&self` predict signature; the model is per-task, never shared
+    /// across threads).
+    cache: RefCell<FeatureCache>,
+    scratch: RefCell<FeatureMatrix>,
 }
 
 /// Fitness of a failed config in log-GFLOPS space (public so transfer
@@ -72,16 +136,22 @@ impl CostModel {
         CostModel {
             gbt: None,
             params: GbtParams { seed, ..Default::default() },
-            xs: Vec::new(),
+            feats: FeatureMatrix::new(NFEATURES),
             ys: Vec::new(),
-            t_xs: Vec::new(),
+            inc: IncrementalBinner::new(NFEATURES),
+            binned: BinnedMatrix::new(NFEATURES),
+            t_feats: FeatureMatrix::new(NFEATURES),
             t_ys: Vec::new(),
             t_w: Vec::new(),
+            t_scratch_x: FeatureMatrix::new(NFEATURES),
+            t_scratch_y: Vec::new(),
             transfer_half_life: 128.0,
             best_gflops: 0.0,
             time: ModelTimeCost::default(),
             spent_s: std::cell::Cell::new(0.0),
             n_fits: 0,
+            cache: RefCell::new(FeatureCache::new()),
+            scratch: RefCell::new(FeatureMatrix::new(NFEATURES)),
         }
     }
 
@@ -91,7 +161,7 @@ impl CostModel {
     }
 
     pub fn n_samples(&self) -> usize {
-        self.xs.len()
+        self.feats.len()
     }
 
     pub fn n_fits(&self) -> usize {
@@ -104,11 +174,15 @@ impl CostModel {
 
     /// Ingest a batch of measurements and refit.
     pub fn update(&mut self, space: &DesignSpace, results: &[Measurement]) {
-        for m in results {
-            self.xs.push(features(space, &m.config));
-            self.ys.push(measurement_target(m));
-            if m.gflops > 0.0 {
-                self.best_gflops = self.best_gflops.max(m.gflops);
+        {
+            let mut cache = self.cache.borrow_mut();
+            for m in results {
+                let ix = cache.intern(space, &m.config);
+                self.feats.push_row(cache.rows.row(ix));
+                self.ys.push(measurement_target(m));
+                if m.gflops > 0.0 {
+                    self.best_gflops = self.best_gflops.max(m.gflops);
+                }
             }
         }
         self.refit();
@@ -127,7 +201,9 @@ impl CostModel {
     pub fn seed_transfer(&mut self, xs: Vec<Vec<f32>>, ys: Vec<f32>, weights: Vec<f32>) {
         assert_eq!(xs.len(), ys.len());
         assert_eq!(xs.len(), weights.len());
-        self.t_xs.extend(xs);
+        for r in &xs {
+            self.t_feats.push_row(r);
+        }
         self.t_ys.extend(ys);
         self.t_w.extend(weights);
         self.refit();
@@ -135,15 +211,19 @@ impl CostModel {
 
     /// Transferred pairs held (before thinning).
     pub fn n_transferred(&self) -> usize {
-        self.t_xs.len()
+        self.t_feats.len()
     }
 
     /// Refit the ensemble on native rows plus the thinned transferred rows.
     /// With no (surviving) transferred pairs this is exactly the baseline
-    /// fit — same rows, same order, same tree RNG, and no row cloning.
+    /// fit — same rows, same order, same tree RNG — served through the
+    /// incremental binning (only the new batch's rows get binned; columns
+    /// re-bin only when their quantile edges moved). Transfer-mode fits
+    /// stage the concatenated view in reusable flat buffers instead of
+    /// cloning every row.
     fn refit(&mut self) {
         let decay =
-            0.5f64.powf(self.xs.len() as f64 / self.transfer_half_life.max(1.0));
+            0.5f64.powf(self.feats.len() as f64 / self.transfer_half_life.max(1.0));
         let mut included: Vec<usize> = Vec::new();
         for (i, w) in self.t_w.iter().enumerate() {
             let w_eff = (*w as f64) * decay;
@@ -160,32 +240,47 @@ impl CostModel {
             }
         }
         if included.is_empty() {
-            if self.xs.len() >= 8 {
-                self.gbt = Some(Gbt::fit(&self.xs, &self.ys, &self.params));
+            if self.feats.len() >= 8 {
+                let changed = self.inc.absorb(&self.feats, self.binned.len());
+                for &f in &changed {
+                    self.binned.rebin_feature(self.inc.binner(), &self.feats, f);
+                }
+                for i in self.binned.len()..self.feats.len() {
+                    self.binned.push_row(self.inc.binner(), self.feats.row(i));
+                }
+                self.gbt = Some(Gbt::fit_prebinned(
+                    &self.feats,
+                    &self.ys,
+                    self.inc.binner(),
+                    &self.binned,
+                    &self.params,
+                ));
                 self.n_fits += 1;
                 self.spent_s.set(
                     self.spent_s.get()
                         + self.time.fit_base_s
-                        + self.time.fit_per_sample_s * self.xs.len() as f64,
+                        + self.time.fit_per_sample_s * self.feats.len() as f64,
                 );
             }
             return;
         }
-        let mut data: Vec<Vec<f32>> = Vec::with_capacity(included.len() + self.xs.len());
-        let mut y: Vec<f32> = Vec::with_capacity(included.len() + self.ys.len());
+        self.t_scratch_x.clear();
+        self.t_scratch_y.clear();
         for &i in &included {
-            data.push(self.t_xs[i].clone());
-            y.push(self.t_ys[i]);
+            self.t_scratch_x.push_row(self.t_feats.row(i));
+            self.t_scratch_y.push(self.t_ys[i]);
         }
-        data.extend(self.xs.iter().cloned());
-        y.extend(self.ys.iter().cloned());
-        if data.len() >= 8 {
-            self.gbt = Some(Gbt::fit(&data, &y, &self.params));
+        for i in 0..self.feats.len() {
+            self.t_scratch_x.push_row(self.feats.row(i));
+        }
+        self.t_scratch_y.extend_from_slice(&self.ys);
+        if self.t_scratch_y.len() >= 8 {
+            self.gbt = Some(Gbt::fit_matrix(&self.t_scratch_x, &self.t_scratch_y, &self.params));
             self.n_fits += 1;
             self.spent_s.set(
                 self.spent_s.get()
                     + self.time.fit_base_s
-                    + self.time.fit_per_sample_s * data.len() as f64,
+                    + self.time.fit_per_sample_s * self.t_scratch_y.len() as f64,
             );
         }
     }
@@ -200,26 +295,50 @@ impl CostModel {
         self.spent_s.set(
             self.spent_s.get() + self.time.predict_per_k_s * configs.len() as f64 / 1000.0,
         );
-        match &self.gbt {
-            None => vec![0.0; configs.len()],
-            Some(gbt) => {
-                let rows: Vec<Vec<f32>> =
-                    configs.iter().map(|c| features(space, c)).collect();
-                gbt.predict_batch(&rows).into_iter().map(|v| v as f64).collect()
+        let Some(gbt) = &self.gbt else {
+            return vec![0.0; configs.len()];
+        };
+        let mut scratch = self.scratch.borrow_mut();
+        scratch.clear();
+        if configs.len() >= PAR_FEATURIZE_MIN {
+            // huge batches: parallel per-row featurize straight into the
+            // staging matrix (bypassing the memo, whose lookups would
+            // serialize the sweep); rows are disjoint => bit-identical
+            scratch.resize_rows(configs.len());
+            par_rows_mut(scratch.as_mut_slice(), NFEATURES, threads(), |i, row| {
+                features_fill(space, &configs[i], row);
+            });
+        } else {
+            let mut cache = self.cache.borrow_mut();
+            for c in configs {
+                let ix = cache.intern(space, c);
+                scratch.push_row(cache.rows.row(ix));
             }
         }
+        gbt.predict_matrix(&scratch).into_iter().map(|v| v as f64).collect()
     }
 
     /// Best measured fitness so far (GFLOPS).
     pub fn best_gflops(&self) -> f64 {
         self.best_gflops
     }
+
+    /// Test hook: the memoized feature row for `config` (interned on first
+    /// use) — pinned byte-identical to `features()` by the cache tests.
+    #[cfg(test)]
+    fn cached_row(&self, space: &DesignSpace, config: &Config) -> Vec<f32> {
+        let mut cache = self.cache.borrow_mut();
+        let ix = cache.intern(space, config);
+        cache.rows.row(ix).to_vec()
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::gbt::Binner;
     use crate::sim::{Measurer, SimMeasurer};
+    use crate::space::features::features;
     use crate::util::rng::Pcg32;
     use crate::util::stats::spearman;
     use crate::workload::zoo;
@@ -368,5 +487,108 @@ mod tests {
         assert!(cm.best_gflops() > 0.0);
         assert!(cm.spent_s.get() > 0.0);
         assert_eq!(cm.n_fits(), 1);
+    }
+
+    #[test]
+    fn feature_cache_rows_byte_identical_to_direct_features() {
+        // the memo contract under mutation/visited-style churn: random
+        // configs, mutation chains revisiting neighbours, repeated interns
+        // across model updates — every cached row must equal features()
+        // byte for byte
+        let (space, meas) = setup();
+        let mut rng = Pcg32::seed_from(21);
+        let mut cm = CostModel::new(21);
+        let mut chain = space.random_config(&mut rng);
+        for round in 0..4 {
+            let mut batch = Vec::new();
+            for _ in 0..40 {
+                chain = if rng.bool(0.5) {
+                    space.mutate(&chain, &mut rng)
+                } else {
+                    space.random_config(&mut rng)
+                };
+                batch.push(chain.clone());
+            }
+            // interleave predicts (interning) with updates (refits)
+            let _ = cm.predict_batch(&space, &batch);
+            cm.update(&space, &meas.measure_batch(&space, &batch[..8]));
+            for c in &batch {
+                let cached = cm.cached_row(&space, c);
+                let direct = features(&space, c);
+                assert_eq!(cached.len(), direct.len());
+                for (a, b) in cached.iter().zip(&direct) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "round {round}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn incremental_binning_matches_scratch_fit_across_updates() {
+        // after every update, the incrementally-maintained binned matrix
+        // must equal binning all native rows from scratch — and the fitted
+        // ensemble must predict bit-identically to a scratch fit
+        let (space, meas) = setup();
+        let mut rng = Pcg32::seed_from(23);
+        let mut cm = CostModel::new(23);
+        let probe: Vec<_> = (0..64).map(|_| space.random_config(&mut rng)).collect();
+        for _ in 0..4 {
+            let batch: Vec<_> =
+                (0..48).map(|_| space.random_config(&mut rng)).collect();
+            cm.update(&space, &meas.measure_batch(&space, &batch));
+
+            let scratch_binner = Binner::fit_matrix(&cm.feats);
+            assert_eq!(scratch_binner, *cm.inc.binner());
+            assert_eq!(cm.binned.len(), cm.feats.len());
+            for i in 0..cm.feats.len() {
+                assert_eq!(
+                    cm.binned.row(i),
+                    scratch_binner.bin_row(cm.feats.row(i)).as_slice()
+                );
+            }
+
+            let scratch_gbt = Gbt::fit_matrix(&cm.feats, &cm.ys, &cm.params);
+            let a = cm.predict_batch(&space, &probe);
+            let b: Vec<f32> = probe
+                .iter()
+                .map(|c| {
+                    let row = features(&space, c);
+                    scratch_gbt.predict(&row)
+                })
+                .collect();
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.to_bits(), (*y as f64).to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn large_batch_parallel_featurize_matches_cached_path() {
+        // >= PAR_FEATURIZE_MIN configs take the parallel no-memo path; the
+        // predictions must be bit-identical to the cached path and to
+        // single-config predicts, at any thread count
+        let (space, meas) = setup();
+        let mut rng = Pcg32::seed_from(25);
+        let mut cm = CostModel::new(25);
+        let train: Vec<_> = (0..128).map(|_| space.random_config(&mut rng)).collect();
+        cm.update(&space, &meas.measure_batch(&space, &train));
+
+        let big: Vec<_> = (0..PAR_FEATURIZE_MIN + 37)
+            .map(|_| space.random_config(&mut rng))
+            .collect();
+        let _knob = crate::util::parallel::thread_knob_guard();
+        crate::util::parallel::set_threads(4);
+        let par = cm.predict_batch(&space, &big);
+        crate::util::parallel::set_threads(1);
+        let ser = cm.predict_batch(&space, &big);
+        crate::util::parallel::set_threads(0);
+        for (a, b) in par.iter().zip(&ser) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // spot-check against the small-batch (cached) path
+        for i in (0..big.len()).step_by(173) {
+            let one = cm.predict(&space, &big[i]);
+            assert_eq!(one.to_bits(), par[i].to_bits());
+        }
     }
 }

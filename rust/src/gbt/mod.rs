@@ -4,4 +4,4 @@ pub mod forest;
 pub mod tree;
 
 pub use forest::{Gbt, GbtParams};
-pub use tree::{Binner, Tree, TreeParams};
+pub use tree::{Binner, BinnedMatrix, IncrementalBinner, Tree, TreeParams};

@@ -4,11 +4,23 @@
 //! Features are pre-binned into at most `MAX_BINS` quantile buckets; split
 //! finding scans per-bin gradient histograms (like LightGBM/XGBoost's hist
 //! mode), which keeps training O(n_features x n_bins) per node.
+//!
+//! §Perf: the binned data lives in a flat [`BinnedMatrix`] (one `Vec<u8>`,
+//! n x d) shared by every tree of an ensemble; trees fit through *index
+//! slices* into it, so per-tree row subsampling selects indices instead of
+//! cloning rows. [`IncrementalBinner`] keeps the bin edges (and the binned
+//! matrix, via targeted column re-bins) up to date as training batches
+//! arrive, bit-identical to re-fitting from scratch on the concatenated
+//! data. Per-feature histograms build in parallel on wide nodes; per-bucket
+//! accumulation order stays row order, so any thread count produces the
+//! same splits.
+
+use crate::util::matrix::FeatureMatrix;
 
 pub const MAX_BINS: usize = 32;
 
 /// Per-feature bin edges computed from the training matrix.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Binner {
     /// edges[f] = ascending thresholds; bin = #edges < value.
     pub edges: Vec<Vec<f32>>,
@@ -17,20 +29,24 @@ pub struct Binner {
 impl Binner {
     /// Quantile binning over column-major access of row-major data.
     pub fn fit(data: &[Vec<f32>], nfeatures: usize) -> Self {
+        Self::fit_matrix(&FeatureMatrix::from_rows(nfeatures, data))
+    }
+
+    /// Quantile binning over a flat row-major matrix.
+    pub fn fit_matrix(data: &FeatureMatrix) -> Self {
+        let nfeatures = data.dim();
         let mut edges = Vec::with_capacity(nfeatures);
+        let mut col: Vec<f32> = Vec::with_capacity(data.len());
         for f in 0..nfeatures {
-            let mut col: Vec<f32> = data.iter().map(|r| r[f]).collect();
-            col.sort_by(|a, b| a.partial_cmp(b).unwrap());
-            col.dedup();
-            let e = if col.len() <= MAX_BINS {
-                // midpoints between distinct values
-                col.windows(2).map(|w| (w[0] + w[1]) / 2.0).collect()
-            } else {
-                (1..MAX_BINS)
-                    .map(|i| col[i * col.len() / MAX_BINS])
-                    .collect()
-            };
-            edges.push(e);
+            col.clear();
+            col.extend((0..data.len()).map(|i| data.get(i, f)));
+            col.sort_by(|a, b| a.total_cmp(b));
+            // dedup under the SAME total order the sort (and the
+            // incremental binner's binary search) use — PartialEq would
+            // treat NaNs as distinct and -0.0 == 0.0, silently breaking
+            // the incremental == from-scratch contract on poisoned input
+            col.dedup_by(|a, b| a.total_cmp(b) == std::cmp::Ordering::Equal);
+            edges.push(edges_from_sorted_distinct(&col));
         }
         Binner { edges }
     }
@@ -52,6 +68,143 @@ impl Binner {
 
     pub fn nfeatures(&self) -> usize {
         self.edges.len()
+    }
+}
+
+/// Edges for one feature given its ascending distinct values.
+fn edges_from_sorted_distinct(col: &[f32]) -> Vec<f32> {
+    if col.len() <= MAX_BINS {
+        // midpoints between distinct values
+        col.windows(2).map(|w| (w[0] + w[1]) / 2.0).collect()
+    } else {
+        (1..MAX_BINS)
+            .map(|i| col[i * col.len() / MAX_BINS])
+            .collect()
+    }
+}
+
+/// Flat row-major `n x d` matrix of bin indices — the u8 twin of
+/// [`FeatureMatrix`] (kept concrete rather than generic: the two types
+/// share only trivial accessors, and their push paths differ — raw rows
+/// bin through a [`Binner`] here). One allocation for the whole ensemble;
+/// reused (and grown in place) across refits.
+#[derive(Debug, Clone)]
+pub struct BinnedMatrix {
+    data: Vec<u8>,
+    dim: usize,
+}
+
+impl BinnedMatrix {
+    pub fn new(dim: usize) -> Self {
+        assert!(dim > 0, "row width must be positive");
+        BinnedMatrix { data: Vec::new(), dim }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len() / self.dim
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Drop all rows, keeping the allocation.
+    pub fn clear(&mut self) {
+        self.data.clear();
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[u8] {
+        &self.data[i * self.dim..(i + 1) * self.dim]
+    }
+
+    #[inline]
+    pub fn get(&self, row: usize, col: usize) -> u8 {
+        self.data[row * self.dim + col]
+    }
+
+    /// Append one raw feature row, binned through `binner` — no temporary
+    /// per-row allocation.
+    pub fn push_row(&mut self, binner: &Binner, row: &[f32]) {
+        debug_assert_eq!(row.len(), self.dim);
+        debug_assert_eq!(binner.nfeatures(), self.dim);
+        for (f, &v) in row.iter().enumerate() {
+            self.data.push(binner.bin(f, v));
+        }
+    }
+
+    /// Append one already-binned row (benchmark/emulation path).
+    pub fn push_binned_row(&mut self, bins: &[u8]) {
+        debug_assert_eq!(bins.len(), self.dim);
+        self.data.extend_from_slice(bins);
+    }
+
+    /// Re-bin one feature column of every stored row against updated
+    /// edges (the incremental-binning repair path: only columns whose
+    /// quantiles actually moved get rewritten).
+    pub fn rebin_feature(&mut self, binner: &Binner, data: &FeatureMatrix, f: usize) {
+        debug_assert!(self.len() <= data.len());
+        for i in 0..self.len() {
+            self.data[i * self.dim + f] = binner.bin(f, data.get(i, f));
+        }
+    }
+}
+
+/// Maintains [`Binner`] edges incrementally as training rows accumulate:
+/// per-feature sorted distinct values are merged batch by batch, and edges
+/// are recomputed only for features whose distinct set grew — producing
+/// exactly the edges [`Binner::fit_matrix`] would compute from scratch on
+/// the full data (pinned by tests).
+#[derive(Debug, Clone)]
+pub struct IncrementalBinner {
+    /// Ascending distinct values seen so far, per feature.
+    distinct: Vec<Vec<f32>>,
+    binner: Binner,
+}
+
+impl IncrementalBinner {
+    pub fn new(nfeatures: usize) -> Self {
+        IncrementalBinner {
+            distinct: vec![Vec::new(); nfeatures],
+            binner: Binner { edges: vec![Vec::new(); nfeatures] },
+        }
+    }
+
+    pub fn binner(&self) -> &Binner {
+        &self.binner
+    }
+
+    pub fn nfeatures(&self) -> usize {
+        self.distinct.len()
+    }
+
+    /// Absorb rows `[from, data.len())` of `data`; returns the features
+    /// whose edges changed (whose stored bin columns must be re-binned).
+    pub fn absorb(&mut self, data: &FeatureMatrix, from: usize) -> Vec<usize> {
+        debug_assert_eq!(data.dim(), self.nfeatures());
+        let mut changed = Vec::new();
+        for (f, col) in self.distinct.iter_mut().enumerate() {
+            let mut grew = false;
+            for i in from..data.len() {
+                let v = data.get(i, f);
+                if let Err(pos) = col.binary_search_by(|x| x.total_cmp(&v)) {
+                    col.insert(pos, v);
+                    grew = true;
+                }
+            }
+            if grew {
+                let edges = edges_from_sorted_distinct(col);
+                if edges != self.binner.edges[f] {
+                    self.binner.edges[f] = edges;
+                    changed.push(f);
+                }
+            }
+        }
+        changed
     }
 }
 
@@ -91,29 +244,52 @@ impl Default for TreeParams {
     }
 }
 
+/// Per-feature gradient histogram of one node.
+#[derive(Clone, Copy)]
+struct FeatureHist {
+    sum: [f64; MAX_BINS],
+    cnt: [u32; MAX_BINS],
+}
+
+const EMPTY_HIST: FeatureHist = FeatureHist { sum: [0.0; MAX_BINS], cnt: [0; MAX_BINS] };
+
+/// Below this rows x features workload a node's histograms build serially:
+/// scoped-thread spawn costs tens of microseconds, so only nodes with
+/// >= ~256k bucket updates can win from splitting. Independent of the
+/// thread count, so the parallel/serial choice never changes results.
+const PAR_HIST_MIN_WORK: usize = 1 << 18;
+
 impl Tree {
-    /// Fit to residuals: squared-error objective => gradient = residual,
-    /// hessian = 1; leaf value = sum(res)/(n + lambda).
+    /// Fit to residuals over the rows selected by `idx` (in `idx` order):
+    /// squared-error objective => gradient = residual, hessian = 1; leaf
+    /// value = sum(res)/(n + lambda). Subsampling callers pass the drawn
+    /// index set — no row cloning.
     pub fn fit(
-        binned: &[Vec<u8>],
+        binned: &BinnedMatrix,
         residuals: &[f32],
+        idx: Vec<u32>,
         binner: &Binner,
         params: &TreeParams,
     ) -> Self {
         let mut tree = Tree { nodes: Vec::new() };
-        let idx: Vec<u32> = (0..binned.len() as u32).collect();
-        tree.build(binned, residuals, binner, params, idx, 0);
+        // one histogram buffer for the whole tree: each node reads its
+        // histograms to completion before recursing, so children can
+        // clear + reuse the allocation
+        let mut hist: Vec<FeatureHist> = Vec::new();
+        tree.build(binned, residuals, binner, params, idx, 0, &mut hist);
         tree
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn build(
         &mut self,
-        binned: &[Vec<u8>],
+        binned: &BinnedMatrix,
         res: &[f32],
         binner: &Binner,
         params: &TreeParams,
         idx: Vec<u32>,
         depth: usize,
+        hist: &mut Vec<FeatureHist>,
     ) -> usize {
         let n = idx.len();
         let sum: f64 = idx.iter().map(|&i| res[i as usize] as f64).sum();
@@ -133,30 +309,43 @@ impl Tree {
         let mut best: Option<(usize, u8, f64)> = None; // (feature, bin, gain)
         // Build ALL per-feature histograms in one pass over the node's rows
         // (§Perf: one sequential sweep of the binned matrix instead of nf
-        // re-reads — ~3x faster split finding).
-        let mut hist_sum = vec![[0f64; MAX_BINS]; nf];
-        let mut hist_cnt = vec![[0u32; MAX_BINS]; nf];
-        for &i in &idx {
-            let row = &binned[i as usize];
-            let r = res[i as usize] as f64;
-            for f in 0..nf {
-                let b = row[f] as usize;
-                hist_sum[f][b] += r;
-                hist_cnt[f][b] += 1;
+        // re-reads — ~3x faster split finding). Wide nodes distribute the
+        // features over threads; each (feature, bin) bucket still
+        // accumulates in `idx` order, so the histograms are bit-identical
+        // to the serial sweep.
+        hist.clear();
+        hist.resize(nf, EMPTY_HIST);
+        let nthreads = crate::util::parallel::threads();
+        if nthreads > 1 && n * nf >= PAR_HIST_MIN_WORK {
+            crate::util::parallel::par_indexed_mut(&mut hist[..], nthreads, |f, h| {
+                for &i in &idx {
+                    let b = binned.get(i as usize, f) as usize;
+                    h.sum[b] += res[i as usize] as f64;
+                    h.cnt[b] += 1;
+                }
+            });
+        } else {
+            for &i in &idx {
+                let row = binned.row(i as usize);
+                let r = res[i as usize] as f64;
+                for (h, &bv) in hist.iter_mut().zip(row) {
+                    let b = bv as usize;
+                    h.sum[b] += r;
+                    h.cnt[b] += 1;
+                }
             }
         }
-        for f in 0..nf {
+        for (f, h) in hist.iter().enumerate() {
             let nbins = binner.edges[f].len() + 1;
             if nbins <= 1 {
                 continue;
             }
-            let (hist_sum, hist_cnt) = (&hist_sum[f], &hist_cnt[f]);
             let mut ls = 0.0f64;
             let mut lc = 0usize;
             // split "bin <= b" vs ">": scan prefix sums
             for b in 0..nbins - 1 {
-                ls += hist_sum[b];
-                lc += hist_cnt[b] as usize;
+                ls += h.sum[b];
+                lc += h.cnt[b] as usize;
                 let rc = n - lc;
                 if lc < params.min_samples_leaf || rc < params.min_samples_leaf {
                     continue;
@@ -176,15 +365,15 @@ impl Tree {
         };
 
         let (left_idx, right_idx): (Vec<u32>, Vec<u32>) =
-            idx.into_iter().partition(|&i| binned[i as usize][f] <= b);
+            idx.into_iter().partition(|&i| binned.get(i as usize, f) <= b);
 
         // threshold for un-binned prediction: upper edge of bin b
         let threshold = binner.edges[f][b as usize];
 
         let me = self.nodes.len();
         self.nodes.push(leaf(0.0)); // placeholder
-        let left = self.build(binned, res, binner, params, left_idx, depth + 1) as u32;
-        let right = self.build(binned, res, binner, params, right_idx, depth + 1) as u32;
+        let left = self.build(binned, res, binner, params, left_idx, depth + 1, hist) as u32;
+        let right = self.build(binned, res, binner, params, right_idx, depth + 1, hist) as u32;
         self.nodes[me] = Node { feature: f as u16, threshold, left, right };
         me
     }
@@ -223,6 +412,18 @@ mod tests {
         (xs, ys)
     }
 
+    fn bin_all(binner: &Binner, xs: &[Vec<f32>]) -> BinnedMatrix {
+        let mut m = BinnedMatrix::new(binner.nfeatures());
+        for r in xs {
+            m.push_row(binner, r);
+        }
+        m
+    }
+
+    fn all_idx(n: usize) -> Vec<u32> {
+        (0..n as u32).collect()
+    }
+
     #[test]
     fn binner_monotone_and_in_range() {
         let (xs, _) = make_data(500, |a, b| a + b);
@@ -244,11 +445,116 @@ mod tests {
     }
 
     #[test]
+    fn binner_nan_values_do_not_panic() {
+        // regression for the partial_cmp().unwrap() column sort: a NaN
+        // feature value (poisoned featurizer) must produce a deterministic
+        // binner instead of a panic, and bins must stay in range
+        let mut xs = vec![vec![0.0f32, 1.0], vec![2.0, f32::NAN], vec![1.0, 3.0]];
+        xs.push(vec![f32::NAN, 2.0]);
+        let binner = Binner::fit(&xs, 2);
+        for f in 0..2 {
+            for row in &xs {
+                assert!((binner.bin(f, row[f]) as usize) < MAX_BINS);
+            }
+            // NaN compares false against every threshold: lands in bin 0
+            assert_eq!(binner.bin(f, f32::NAN), 0);
+        }
+        // and the incremental binner agrees with from-scratch even on
+        // poisoned columns (both dedup under the same total order);
+        // NaN edges make derived PartialEq useless — compare bitwise
+        let m = crate::util::matrix::FeatureMatrix::from_rows(2, &xs);
+        let mut inc = IncrementalBinner::new(2);
+        inc.absorb(&m, 0);
+        let scratch = Binner::fit_matrix(&m);
+        for f in 0..2 {
+            let (a, b) = (&inc.binner().edges[f], &scratch.edges[f]);
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn binned_matrix_matches_bin_row() {
+        let (xs, _) = make_data(200, |a, b| a * b);
+        let binner = Binner::fit(&xs, 2);
+        let m = bin_all(&binner, &xs);
+        assert_eq!(m.len(), 200);
+        assert_eq!(m.dim(), 2);
+        for (i, r) in xs.iter().enumerate() {
+            assert_eq!(m.row(i), binner.bin_row(r).as_slice());
+            for f in 0..2 {
+                assert_eq!(m.get(i, f), binner.bin(f, r[f]));
+            }
+        }
+    }
+
+    #[test]
+    fn incremental_binner_matches_from_scratch_on_concatenated_data() {
+        // the incremental-binning contract: absorbing batches one by one
+        // (with targeted column re-bins) must be indistinguishable from
+        // fitting a fresh Binner + BinnedMatrix on all rows seen so far
+        let mut rng = Pcg32::seed_from(9);
+        let dim = 4;
+        let mut data = crate::util::matrix::FeatureMatrix::new(dim);
+        let mut inc = IncrementalBinner::new(dim);
+        let mut binned = BinnedMatrix::new(dim);
+        for batch in 0..5 {
+            let from = data.len();
+            let batch_rows = 30 + batch * 17;
+            for _ in 0..batch_rows {
+                // quantized values so later batches repeat earlier ones
+                // (exercising the "edges unchanged" fast path) plus fresh
+                // values (exercising re-bins)
+                data.push_row_with(|out| {
+                    for _ in 0..dim {
+                        out.push((rng.below(40 + batch * 25) as f32) * 0.25);
+                    }
+                });
+            }
+            let changed = inc.absorb(&data, from);
+            for &f in &changed {
+                binned.rebin_feature(inc.binner(), &data, f);
+            }
+            for i in from..data.len() {
+                binned.push_row(inc.binner(), data.row(i));
+            }
+
+            let scratch_binner = Binner::fit_matrix(&data);
+            assert_eq!(
+                scratch_binner, *inc.binner(),
+                "edges diverged after batch {batch}"
+            );
+            for i in 0..data.len() {
+                let direct = scratch_binner.bin_row(data.row(i));
+                assert_eq!(binned.row(i), direct.as_slice(), "row {i} batch {batch}");
+            }
+        }
+    }
+
+    #[test]
+    fn incremental_binner_skips_unchanged_features() {
+        let dim = 2;
+        let mut data = crate::util::matrix::FeatureMatrix::new(dim);
+        // feature 0 constant, feature 1 varying
+        data.push_row(&[1.0, 0.0]);
+        data.push_row(&[1.0, 1.0]);
+        let mut inc = IncrementalBinner::new(dim);
+        let changed = inc.absorb(&data, 0);
+        assert_eq!(changed, vec![1], "constant feature has no edges to change");
+        // a repeat batch changes nothing at all
+        data.push_row(&[1.0, 1.0]);
+        let changed = inc.absorb(&data, 2);
+        assert!(changed.is_empty());
+    }
+
+    #[test]
     fn tree_fits_a_step_function() {
         let (xs, ys) = make_data(400, |a, _| if a > 0.5 { 3.0 } else { -1.0 });
         let binner = Binner::fit(&xs, 2);
-        let binned: Vec<Vec<u8>> = xs.iter().map(|r| binner.bin_row(r)).collect();
-        let tree = Tree::fit(&binned, &ys, &binner, &TreeParams::default());
+        let binned = bin_all(&binner, &xs);
+        let tree = Tree::fit(&binned, &ys, all_idx(400), &binner, &TreeParams::default());
         let mut err = 0.0;
         for (x, y) in xs.iter().zip(&ys) {
             err += (tree.predict(x) - y).abs() as f64;
@@ -260,9 +566,9 @@ mod tests {
     fn tree_respects_max_depth() {
         let (xs, ys) = make_data(2000, |a, b| (10.0 * a).sin() + b);
         let binner = Binner::fit(&xs, 2);
-        let binned: Vec<Vec<u8>> = xs.iter().map(|r| binner.bin_row(r)).collect();
+        let binned = bin_all(&binner, &xs);
         let params = TreeParams { max_depth: 2, ..Default::default() };
-        let tree = Tree::fit(&binned, &ys, &binner, &params);
+        let tree = Tree::fit(&binned, &ys, all_idx(2000), &binner, &params);
         // depth 2 => at most 7 nodes
         assert!(tree.n_nodes() <= 7, "{}", tree.n_nodes());
     }
@@ -272,10 +578,75 @@ mod tests {
         let xs = vec![vec![0.0f32], vec![1.0], vec![2.0]];
         let ys = vec![5.0f32, 5.0, 5.0];
         let binner = Binner::fit(&xs, 1);
-        let binned: Vec<Vec<u8>> = xs.iter().map(|r| binner.bin_row(r)).collect();
-        let tree = Tree::fit(&binned, &ys, &binner, &TreeParams::default());
+        let binned = bin_all(&binner, &xs);
+        let tree = Tree::fit(&binned, &ys, all_idx(3), &binner, &TreeParams::default());
         assert_eq!(tree.n_nodes(), 1);
         // shrunk towards zero by lambda: 15/(3+1)
         assert!((tree.predict(&[0.5]) - 3.75).abs() < 1e-5);
+    }
+
+    #[test]
+    fn index_slice_fit_equals_cloned_subset_fit() {
+        // the clone-free subsampling contract: fitting through an index
+        // slice into the full binned matrix must produce exactly the tree
+        // that fitting on a physically-gathered copy of those rows does
+        let (xs, ys) = make_data(600, |a, b| (7.0 * a).sin() - b * b);
+        let binner = Binner::fit(&xs, 2);
+        let binned = bin_all(&binner, &xs);
+        let mut rng = Pcg32::seed_from(3);
+        let mut order: Vec<u32> = (0..600u32).collect();
+        rng.shuffle(&mut order);
+        order.truncate(400);
+
+        let sliced =
+            Tree::fit(&binned, &ys, order.clone(), &binner, &TreeParams::default());
+
+        // reference: gather the selected rows/residuals into fresh buffers
+        let sub_rows: Vec<Vec<f32>> =
+            order.iter().map(|&i| xs[i as usize].clone()).collect();
+        let sub_res: Vec<f32> = order.iter().map(|&i| ys[i as usize]).collect();
+        let sub_binned = bin_all(&binner, &sub_rows);
+        let gathered = Tree::fit(
+            &sub_binned,
+            &sub_res,
+            all_idx(400),
+            &binner,
+            &TreeParams::default(),
+        );
+
+        assert_eq!(sliced.n_nodes(), gathered.n_nodes());
+        for x in xs.iter().take(50) {
+            assert_eq!(sliced.predict(x).to_bits(), gathered.predict(x).to_bits());
+        }
+    }
+
+    #[test]
+    fn parallel_histograms_match_serial() {
+        // large enough that n * nf crosses PAR_HIST_MIN_WORK at the root
+        let nf = 24;
+        let n = PAR_HIST_MIN_WORK / nf + 64;
+        let mut rng = Pcg32::seed_from(5);
+        let xs: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..nf).map(|_| rng.f32()).collect())
+            .collect();
+        let ys: Vec<f32> =
+            xs.iter().map(|r| r.iter().sum::<f32>() + r[0] * 3.0).collect();
+        let binner = Binner::fit(&xs, nf);
+        let binned = bin_all(&binner, &xs);
+        assert!(n * nf >= PAR_HIST_MIN_WORK);
+        // shallow trees keep this test fast at ~11k rows
+        let params = TreeParams { max_depth: 3, ..Default::default() };
+
+        let _knob = crate::util::parallel::thread_knob_guard();
+        crate::util::parallel::set_threads(1);
+        let serial = Tree::fit(&binned, &ys, all_idx(n), &binner, &params);
+        crate::util::parallel::set_threads(4);
+        let par = Tree::fit(&binned, &ys, all_idx(n), &binner, &params);
+        crate::util::parallel::set_threads(0);
+
+        assert_eq!(serial.n_nodes(), par.n_nodes());
+        for x in xs.iter().take(64) {
+            assert_eq!(serial.predict(x).to_bits(), par.predict(x).to_bits());
+        }
     }
 }

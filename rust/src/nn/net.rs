@@ -96,21 +96,19 @@ pub struct ForwardCache {
 pub fn forward(params: &[f64], obs: &[f64], b: usize) -> ForwardCache {
     debug_assert_eq!(params.len(), NPARAMS);
     debug_assert_eq!(obs.len(), b * NDIMS);
+    // fused bias+tanh sweeps (bit-identical to the add-then-tanh pair)
     let mut h = ops::matmul(obs, &params[W0..B0], b, NDIMS, HIDDEN);
-    ops::add_bias(&mut h, &params[B0..WP1]);
-    ops::tanh_inplace(&mut h);
+    ops::bias_tanh_inplace(&mut h, &params[B0..WP1]);
 
     let mut hp = ops::matmul(&h, &params[WP1..BP1], b, HIDDEN, HEAD);
-    ops::add_bias(&mut hp, &params[BP1..WP2]);
-    ops::tanh_inplace(&mut hp);
+    ops::bias_tanh_inplace(&mut hp, &params[BP1..WP2]);
 
     let mut logp = ops::matmul(&hp, &params[WP2..BP2], b, HEAD, NDIMS * NACT);
     ops::add_bias(&mut logp, &params[BP2..WV1]);
     ops::log_softmax_groups(&mut logp, NACT);
 
     let mut hv = ops::matmul(&h, &params[WV1..BV1], b, HIDDEN, HEAD);
-    ops::add_bias(&mut hv, &params[BV1..WV2]);
-    ops::tanh_inplace(&mut hv);
+    ops::bias_tanh_inplace(&mut hv, &params[BV1..WV2]);
 
     let wv2 = &params[WV2..BV2];
     let bv2 = params[BV2];

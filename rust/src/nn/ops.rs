@@ -5,16 +5,43 @@
 //! cache-friendly loops that the compiler can autovectorize beat any
 //! cleverness.
 
+/// Output rows/cols per cache block of the matmul (closes the ROADMAP
+/// blocked-matmul item: both operand panels of a block stay L1-resident).
+const MM_BLOCK: usize = 16;
+
 /// `a [m x k] @ b [k x n] -> [m x n]`.
+///
+/// §Perf: `b` is transposed once into a scratch panel so every output
+/// element is a unit-stride dot product, computed over `MM_BLOCK`-square
+/// output blocks for cache residency. Each element still accumulates in
+/// ascending-`p` order — the same summation order as the naive loop — so
+/// results are bit-identical to the previous implementation.
 pub fn matmul(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
+    // pack b^T: bt[j * k + p] = b[p * n + j]
+    let mut bt = vec![0.0; k * n];
+    for (p, brow) in b.chunks(n).enumerate() {
+        for (j, &bv) in brow.iter().enumerate() {
+            bt[j * k + p] = bv;
+        }
+    }
     let mut out = vec![0.0; m * n];
-    for (orow, arow) in out.chunks_mut(n).zip(a.chunks(k)) {
-        for (p, &av) in arow.iter().enumerate() {
-            let brow = &b[p * n..(p + 1) * n];
-            for (o, &bv) in orow.iter_mut().zip(brow) {
-                *o += av * bv;
+    for ib in (0..m).step_by(MM_BLOCK) {
+        let ie = (ib + MM_BLOCK).min(m);
+        for jb in (0..n).step_by(MM_BLOCK) {
+            let je = (jb + MM_BLOCK).min(n);
+            for i in ib..ie {
+                let arow = &a[i * k..(i + 1) * k];
+                let orow = &mut out[i * n..(i + 1) * n];
+                for j in jb..je {
+                    let brow = &bt[j * k..(j + 1) * k];
+                    let mut acc = 0.0;
+                    for (&av, &bv) in arow.iter().zip(brow) {
+                        acc += av * bv;
+                    }
+                    orow[j] = acc;
+                }
             }
         }
     }
@@ -78,6 +105,20 @@ pub fn bias_grad(dout: &[f64], n: usize) -> Vec<f64> {
 pub fn tanh_inplace(x: &mut [f64]) {
     for v in x.iter_mut() {
         *v = v.tanh();
+    }
+}
+
+/// Fused `tanh(x + bias)` over every row of `x [rows x n]`, in place —
+/// one sweep instead of the add-then-tanh pair (§Perf: the trunk/head
+/// activations run this for every forward). Identical arithmetic per
+/// element, so results match the unfused pair bit for bit.
+pub fn bias_tanh_inplace(x: &mut [f64], bias: &[f64]) {
+    let n = bias.len();
+    debug_assert_eq!(x.len() % n, 0);
+    for row in x.chunks_mut(n) {
+        for (v, &b) in row.iter_mut().zip(bias) {
+            *v = (*v + b).tanh();
+        }
     }
 }
 
@@ -153,6 +194,52 @@ mod tests {
         let b = [1.0, 0.5, -1.0, 2.0, 0.0, 1.0];
         let c = matmul(&a, &b, 2, 3, 2);
         assert_eq!(c, vec![-1.0, 7.5, -1.0, 18.0]);
+    }
+
+    #[test]
+    fn blocked_matmul_matches_naive_bitwise_across_block_boundaries() {
+        // sizes straddling MM_BLOCK (including the PPO shapes' 128/64
+        // dims) must equal the naive triple loop bit for bit — the blocked
+        // kernel keeps the ascending-p summation order per element
+        let naive = |a: &[f64], b: &[f64], m: usize, k: usize, n: usize| {
+            let mut out = vec![0.0; m * n];
+            for i in 0..m {
+                for p in 0..k {
+                    let av = a[i * k + p];
+                    for j in 0..n {
+                        out[i * n + j] += av * b[p * n + j];
+                    }
+                }
+            }
+            out
+        };
+        let mut rng = Pcg32::seed_from(17);
+        for &(m, k, n) in &[(1, 8, 24), (17, 16, 15), (16, 128, 64), (33, 5, 49)] {
+            let a = randv(&mut rng, m * k);
+            let b = randv(&mut rng, k * n);
+            let got = matmul(&a, &b, m, k, n);
+            let want = naive(&a, &b, m, k, n);
+            for (x, y) in got.iter().zip(&want) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{m}x{k}x{n}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_bias_tanh_matches_unfused_pair_bitwise() {
+        let mut rng = Pcg32::seed_from(19);
+        let n = 7;
+        let rows = 5;
+        let x = randv(&mut rng, rows * n);
+        let bias = randv(&mut rng, n);
+        let mut fused = x.clone();
+        bias_tanh_inplace(&mut fused, &bias);
+        let mut unfused = x;
+        add_bias(&mut unfused, &bias);
+        tanh_inplace(&mut unfused);
+        for (a, b) in fused.iter().zip(&unfused) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 
     #[test]

@@ -9,8 +9,10 @@
 //! H_Θ of the sample set.
 
 use super::fill_random_unvisited;
-use super::kmeans::{kmeans, nearest_points};
+use super::kmeans::{kmeans_matrix, lloyd, nearest_points, seed_centroids};
 use crate::space::{Config, DesignSpace};
+use crate::util::matrix::FeatureMatrix;
+use crate::util::parallel::{par_map, threads};
 use crate::util::rng::Pcg32;
 use std::collections::HashSet;
 
@@ -30,29 +32,96 @@ pub struct AdaptiveSampleResult {
     pub replaced: usize,
 }
 
+/// Lloyd iterations per kmeans call in the sweep.
+const SWEEP_ITERS: usize = 25;
+
+/// Below this points x dims size the sweep stays serial (speculating the
+/// post-knee k's would cost more than it saves). Thread-count independent.
+const PAR_SWEEP_MIN_WORK: usize = 1 << 11;
+
 /// Sweep k over [K_MIN, K_MAX) in K_STEP strides; return the chosen k-means
 /// clustering at the knee of the loss curve.
-fn knee_kmeans(points: &[Vec<f32>], rng: &mut Pcg32) -> (usize, super::kmeans::KMeansResult) {
-    let mut prev_loss = f64::INFINITY;
-    let mut chosen = None;
-    let mut k = K_MIN;
-    while k < K_MAX {
-        let r = kmeans(points, k, rng, 25);
-        let loss = r.loss;
-        if loss <= 1e-12 {
-            // perfect clustering — no information left to resolve
+///
+/// §Perf: with multiple worker threads, the sweep *speculates*: the
+/// k-means++ seedings (the only RNG consumers) run serially in k order,
+/// then every k's Lloyd phase — ~[`SWEEP_ITERS`]x the work — runs in
+/// parallel. The knee rule is replayed over the losses, and the RNG is
+/// restored to the state it would have had when the serial early-breaking
+/// sweep stopped — so results *and* the RNG stream are bit-identical to
+/// the serial path at any thread count; only wall-clock changes.
+fn knee_kmeans(points: &FeatureMatrix, rng: &mut Pcg32) -> (usize, super::kmeans::KMeansResult) {
+    let nthreads = threads();
+    if nthreads <= 1 || points.len() * points.dim() < PAR_SWEEP_MIN_WORK {
+        // the reference semantics: serial early-breaking sweep
+        let mut prev_loss = f64::INFINITY;
+        let mut chosen = None;
+        let mut k = K_MIN;
+        while k < K_MAX {
+            let r = kmeans_matrix(points, k, rng, SWEEP_ITERS);
+            let loss = r.loss;
+            if loss <= 1e-12 {
+                // perfect clustering — no information left to resolve
+                chosen = Some((k, r));
+                break;
+            }
+            if chosen.is_some() && KNEE_CONSTANT * loss > prev_loss {
+                // knee reached: keep previous k's result
+                break;
+            }
             chosen = Some((k, r));
-            break;
+            prev_loss = loss;
+            k += K_STEP;
         }
-        if chosen.is_some() && KNEE_CONSTANT * loss > prev_loss {
-            // knee reached: keep previous k's result
-            break;
-        }
-        chosen = Some((k, r));
-        prev_loss = loss;
-        k += K_STEP;
+        return chosen.expect("k sweep produced no clustering");
     }
-    chosen.expect("k sweep produced no clustering")
+
+    // speculative parallel sweep, in waves of two k's: each wave seeds its
+    // k's serially (recording the RNG state after each — exactly the
+    // stream the serial sweep consumes per attempted k, since Lloyd draws
+    // nothing), then runs both Lloyd phases concurrently, splitting the
+    // remaining threads into each one's assignment sweep. A width-2 wave
+    // is never slower than running its two k's back to back, and the knee
+    // rule replays between waves so no wave past the knee ever launches.
+    let ks: Vec<usize> = (K_MIN..K_MAX).step_by(K_STEP).collect();
+    let inner = (nthreads / 2).max(1);
+    let mut seeded: Vec<(usize, FeatureMatrix, Pcg32)> = Vec::new();
+    let mut results: Vec<super::kmeans::KMeansResult> = Vec::new();
+    let mut prev_loss = f64::INFINITY;
+    let mut chosen: Option<usize> = None;
+    let mut attempted = 0;
+    'waves: for wave_ks in ks.chunks(2) {
+        let start = seeded.len();
+        for &k in wave_ks {
+            let c = seed_centroids(points, k, rng);
+            seeded.push((k, c, rng.clone()));
+        }
+        let wave = par_map(&seeded[start..], 2, |(_, c, _)| {
+            lloyd(points, c.clone(), SWEEP_ITERS, inner)
+        });
+        // replay the serial knee rule over this wave's losses
+        for r in wave {
+            results.push(r);
+            let i = results.len() - 1;
+            attempted = i;
+            let loss = results[i].loss;
+            if loss <= 1e-12 {
+                // perfect clustering — no information left to resolve
+                chosen = Some(i);
+                break 'waves;
+            }
+            if chosen.is_some() && KNEE_CONSTANT * loss > prev_loss {
+                // knee reached: keep previous k's result
+                break 'waves;
+            }
+            chosen = Some(i);
+            prev_loss = loss;
+        }
+    }
+    // the serial sweep would have stopped after attempting `attempted`:
+    // restore its RNG state, discarding the speculative draws
+    *rng = seeded[attempted].2.clone();
+    let i = chosen.expect("k sweep produced no clustering");
+    (seeded[i].0, results.swap_remove(i))
 }
 
 /// The per-dimension mode of the trajectory ("configuration generated from
@@ -84,7 +153,10 @@ pub fn adaptive_sample(
     rng: &mut Pcg32,
 ) -> AdaptiveSampleResult {
     assert!(!trajectory.is_empty());
-    let points: Vec<Vec<f32>> = trajectory.iter().map(|c| space.normalize(c)).collect();
+    let mut points = FeatureMatrix::with_capacity(space.ndims(), trajectory.len());
+    for c in trajectory {
+        points.push_row_with(|out| space.normalize_into(c, out));
+    }
 
     let (k, clustering) = knee_kmeans(&points, rng);
 
@@ -280,6 +352,39 @@ mod tests {
         let r = adaptive_sample(&s, &traj, &visited, &mut rng);
         assert_eq!(r.samples.len(), 1, "exactly one unvisited config exists");
         assert!(!visited.contains(&s.flat_index(&r.samples[0])));
+    }
+
+    #[test]
+    fn speculative_sweep_matches_serial_results_and_rng_stream() {
+        // the knee sweep's parallel speculation must leave both the chosen
+        // clustering AND the caller's RNG exactly where the serial sweep
+        // would — across clustered, random and degenerate trajectories
+        let s = space();
+        let mut gen = Pcg32::seed_from(0x5eed);
+        let trajs = vec![
+            random_trajectory(&s, 300, &mut gen),
+            clustered_trajectory(&s, 5, 50, &mut gen),
+            (0..200)
+                .map(|i| {
+                    let v = (i % 2) as u16;
+                    Config::new(vec![v; 8])
+                })
+                .collect(),
+        ];
+        let _knob = crate::util::parallel::thread_knob_guard();
+        for (t, traj) in trajs.iter().enumerate() {
+            crate::util::parallel::set_threads(1);
+            let mut rng_a = Pcg32::seed_from(42 + t as u64);
+            let ra = adaptive_sample(&s, traj, &HashSet::new(), &mut rng_a);
+            crate::util::parallel::set_threads(4);
+            let mut rng_b = Pcg32::seed_from(42 + t as u64);
+            let rb = adaptive_sample(&s, traj, &HashSet::new(), &mut rng_b);
+            crate::util::parallel::set_threads(0);
+            assert_eq!(ra.k, rb.k, "traj {t}");
+            assert_eq!(ra.replaced, rb.replaced, "traj {t}");
+            assert_eq!(ra.samples, rb.samples, "traj {t}");
+            assert_eq!(rng_a.next_u64(), rng_b.next_u64(), "rng stream diverged");
+        }
     }
 
     #[test]

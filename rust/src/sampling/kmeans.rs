@@ -2,13 +2,21 @@
 //! configuration coordinates — the engine of the adaptive sampling module
 //! (paper Algorithm 1). This is a hot path: it runs for every k in the
 //! knee sweep, every tuning iteration.
+//!
+//! §Perf: points and centroids live in flat [`FeatureMatrix`] buffers, and
+//! the Lloyd *assignment* sweep (the O(n·k·d) part) distributes points
+//! over threads on large workloads. Seeding — the only stochastic part —
+//! always runs serially, and the per-point loss fold keeps its original
+//! order, so any thread count produces bit-identical clusterings.
 
+use crate::util::matrix::FeatureMatrix;
+use crate::util::parallel::{par_indexed_mut, threads};
 use crate::util::rng::Pcg32;
 
 #[derive(Debug, Clone)]
 pub struct KMeansResult {
-    /// k centroids, each a d-vector.
-    pub centroids: Vec<Vec<f32>>,
+    /// k centroids, one row each.
+    pub centroids: FeatureMatrix,
     /// Cluster assignment per input point.
     pub assignment: Vec<u32>,
     /// Total within-cluster sum of squared distances ("Loss" in Alg. 1).
@@ -25,17 +33,23 @@ fn dist2(a: &[f32], b: &[f32]) -> f32 {
     acc
 }
 
-/// Run k-means with k-means++ seeding. `points` is row-major (n x d).
-pub fn kmeans(points: &[Vec<f32>], k: usize, rng: &mut Pcg32, max_iters: usize) -> KMeansResult {
+/// Below this n x k x d workload the assignment sweep stays serial (thread
+/// spawn would dominate). Thread-count independent, so the parallel/serial
+/// choice never changes results.
+const PAR_ASSIGN_MIN_WORK: usize = 1 << 16;
+
+/// k-means++ seeding — consumes the RNG exactly as the combined
+/// `kmeans` always has (Lloyd draws nothing), which is what lets the
+/// adaptive sampler's knee sweep speculate across k while preserving the
+/// serial RNG stream.
+pub(crate) fn seed_centroids(points: &FeatureMatrix, k: usize, rng: &mut Pcg32) -> FeatureMatrix {
     let n = points.len();
     assert!(n > 0 && k > 0);
     let k = k.min(n);
-    let d = points[0].len();
-
-    // --- k-means++ seeding --------------------------------------------------
-    let mut centroids: Vec<Vec<f32>> = Vec::with_capacity(k);
-    centroids.push(points[rng.below(n)].clone());
-    let mut d2: Vec<f32> = points.iter().map(|p| dist2(p, &centroids[0])).collect();
+    let mut centroids = FeatureMatrix::with_capacity(points.dim(), k);
+    centroids.push_row(points.row(rng.below(n)));
+    let mut d2: Vec<f32> =
+        (0..n).map(|i| dist2(points.row(i), centroids.row(0))).collect();
     while centroids.len() < k {
         let total: f64 = d2.iter().map(|&x| x as f64).sum();
         let next = if total <= 1e-30 {
@@ -52,35 +66,67 @@ pub fn kmeans(points: &[Vec<f32>], k: usize, rng: &mut Pcg32, max_iters: usize) 
             }
             pick
         };
-        centroids.push(points[next].clone());
-        let c = centroids.last().unwrap();
-        for (i, p) in points.iter().enumerate() {
-            let nd = dist2(p, c);
-            if nd < d2[i] {
-                d2[i] = nd;
+        centroids.push_row(points.row(next));
+        let c = centroids.row(centroids.len() - 1);
+        for (i, dd) in d2.iter_mut().enumerate() {
+            let nd = dist2(points.row(i), c);
+            if nd < *dd {
+                *dd = nd;
             }
         }
     }
+    centroids
+}
 
-    // --- Lloyd iterations ---------------------------------------------------
+/// Lloyd iterations from given seed centroids. `par_threads > 1` lets the
+/// per-point assignment sweep parallelize once the workload is large
+/// enough; results are bit-identical either way.
+pub(crate) fn lloyd(
+    points: &FeatureMatrix,
+    mut centroids: FeatureMatrix,
+    max_iters: usize,
+    par_threads: usize,
+) -> KMeansResult {
+    let n = points.len();
+    let d = points.dim();
+    let k = centroids.len();
     let mut assignment = vec![0u32; n];
+    let mut nearest = vec![(0u32, 0.0f32); n]; // scratch: (cluster, dist2)
+    let mut sums = vec![0.0f64; k * d];
+    let mut counts = vec![0usize; k];
     let mut loss = 0.0f64;
+    let parallel = par_threads > 1 && n * k * d >= PAR_ASSIGN_MIN_WORK;
     for _ in 0..max_iters {
-        // assign
-        loss = 0.0;
-        let mut moved = false;
-        for (i, p) in points.iter().enumerate() {
-            let mut best = 0u32;
-            let mut bd = f32::INFINITY;
-            for (j, c) in centroids.iter().enumerate() {
-                let dd = dist2(p, c);
-                if dd < bd {
-                    bd = dd;
-                    best = j as u32;
+        // assignment sweep: per-point independent
+        {
+            let cent = &centroids;
+            let assign_one = |i: usize, slot: &mut (u32, f32)| {
+                let p = points.row(i);
+                let mut bj = 0u32;
+                let mut bd = f32::INFINITY;
+                for j in 0..cent.len() {
+                    let dd = dist2(p, cent.row(j));
+                    if dd < bd {
+                        bd = dd;
+                        bj = j as u32;
+                    }
+                }
+                *slot = (bj, bd);
+            };
+            if parallel {
+                par_indexed_mut(&mut nearest, par_threads, assign_one);
+            } else {
+                for (i, slot) in nearest.iter_mut().enumerate() {
+                    assign_one(i, slot);
                 }
             }
-            if assignment[i] != best {
-                assignment[i] = best;
+        }
+        // fold in point order (the serial order — keeps loss bit-identical)
+        loss = 0.0;
+        let mut moved = false;
+        for (a, &(bj, bd)) in assignment.iter_mut().zip(&nearest) {
+            if *a != bj {
+                *a = bj;
                 moved = true;
             }
             loss += bd as f64;
@@ -88,18 +134,22 @@ pub fn kmeans(points: &[Vec<f32>], k: usize, rng: &mut Pcg32, max_iters: usize) 
         if !moved {
             break;
         }
-        // update
-        let mut sums = vec![vec![0.0f64; d]; centroids.len()];
-        let mut counts = vec![0usize; centroids.len()];
-        for (p, &a) in points.iter().zip(&assignment) {
-            counts[a as usize] += 1;
-            for (s, &v) in sums[a as usize].iter_mut().zip(p) {
+        // update: per-cluster accumulation in point order (serial — the
+        // fold order is the determinism contract; this is O(n·d), dwarfed
+        // by the O(n·k·d) assignment above)
+        sums.fill(0.0);
+        counts.fill(0);
+        for i in 0..n {
+            let a = assignment[i] as usize;
+            counts[a] += 1;
+            for (s, &v) in sums[a * d..(a + 1) * d].iter_mut().zip(points.row(i)) {
                 *s += v as f64;
             }
         }
-        for (j, c) in centroids.iter_mut().enumerate() {
+        for j in 0..k {
             if counts[j] > 0 {
-                for (cv, s) in c.iter_mut().zip(&sums[j]) {
+                let row = centroids.row_mut(j);
+                for (cv, s) in row.iter_mut().zip(&sums[j * d..(j + 1) * d]) {
                     *cv = (s / counts[j] as f64) as f32;
                 }
             }
@@ -111,16 +161,34 @@ pub fn kmeans(points: &[Vec<f32>], k: usize, rng: &mut Pcg32, max_iters: usize) 
     KMeansResult { centroids, assignment, loss }
 }
 
+/// Run k-means with k-means++ seeding on a flat point matrix.
+pub fn kmeans_matrix(
+    points: &FeatureMatrix,
+    k: usize,
+    rng: &mut Pcg32,
+    max_iters: usize,
+) -> KMeansResult {
+    let centroids = seed_centroids(points, k, rng);
+    lloyd(points, centroids, max_iters, threads())
+}
+
+/// Run k-means with k-means++ seeding. `points` is row-major (n x d)
+/// (compat shim over [`kmeans_matrix`]).
+pub fn kmeans(points: &[Vec<f32>], k: usize, rng: &mut Pcg32, max_iters: usize) -> KMeansResult {
+    assert!(!points.is_empty());
+    kmeans_matrix(&FeatureMatrix::from_rows(points[0].len(), points), k, rng, max_iters)
+}
+
 /// Index of the input point nearest to each centroid (centroids are means,
 /// not actual configurations; the sampler must measure real points).
-pub fn nearest_points(points: &[Vec<f32>], centroids: &[Vec<f32>]) -> Vec<usize> {
-    centroids
-        .iter()
-        .map(|c| {
+pub fn nearest_points(points: &FeatureMatrix, centroids: &FeatureMatrix) -> Vec<usize> {
+    (0..centroids.len())
+        .map(|j| {
+            let c = centroids.row(j);
             let mut best = 0;
             let mut bd = f32::INFINITY;
-            for (i, p) in points.iter().enumerate() {
-                let dd = dist2(p, c);
+            for i in 0..points.len() {
+                let dd = dist2(points.row(i), c);
                 if dd < bd {
                     bd = dd;
                     best = i;
@@ -194,9 +262,9 @@ mod tests {
             let k = 2 + rng.below(8);
             let r = kmeans(&pts, k, rng, 25);
             for (p, &a) in pts.iter().zip(&r.assignment) {
-                let da = dist2(p, &r.centroids[a as usize]);
-                for c in &r.centroids {
-                    assert!(da <= dist2(p, c) + 1e-4);
+                let da = dist2(p, r.centroids.row(a as usize));
+                for j in 0..r.centroids.len() {
+                    assert!(da <= dist2(p, r.centroids.row(j)) + 1e-4);
                 }
             }
         });
@@ -207,7 +275,8 @@ mod tests {
         let mut rng = Pcg32::seed_from(3);
         let (pts, _) = blobs(&mut rng, 3, 30, 4, 0.3);
         let r = kmeans(&pts, 3, &mut rng, 30);
-        let near = nearest_points(&pts, &r.centroids);
+        let m = FeatureMatrix::from_rows(4, &pts);
+        let near = nearest_points(&m, &r.centroids);
         assert_eq!(near.len(), 3);
         for (j, &i) in near.iter().enumerate() {
             // the chosen point must belong to that centroid's cluster
@@ -221,5 +290,29 @@ mod tests {
         let pts = vec![vec![1.0f32, 2.0]; 20];
         let r = kmeans(&pts, 5, &mut rng, 10);
         assert!(r.loss < 1e-12);
+    }
+
+    #[test]
+    fn parallel_assignment_is_bit_identical_to_serial() {
+        // big enough that n*k*d crosses the parallel threshold
+        let mut rng = Pcg32::seed_from(7);
+        let (pts, _) = blobs(&mut rng, 8, 300, 6, 1.5);
+        let m = FeatureMatrix::from_rows(6, &pts);
+        assert!(m.len() * 16 * 6 >= PAR_ASSIGN_MIN_WORK);
+        let mut rng_a = Pcg32::seed_from(8);
+        let mut rng_b = Pcg32::seed_from(8);
+        let seeds_a = seed_centroids(&m, 16, &mut rng_a);
+        let seeds_b = seed_centroids(&m, 16, &mut rng_b);
+        let serial = lloyd(&m, seeds_a, 25, 1);
+        let par = lloyd(&m, seeds_b, 25, 4);
+        assert_eq!(serial.loss.to_bits(), par.loss.to_bits());
+        assert_eq!(serial.assignment, par.assignment);
+        for j in 0..serial.centroids.len() {
+            for (a, b) in serial.centroids.row(j).iter().zip(par.centroids.row(j)) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+        // and the seeding consumed the same RNG draws
+        assert_eq!(rng_a.next_u64(), rng_b.next_u64());
     }
 }

@@ -9,7 +9,7 @@ pub mod kmeans;
 
 pub use adaptive::{adaptive_sample, mode_config, AdaptiveSampleResult};
 pub use greedy::{greedy_sample, DEFAULT_EPSILON, DEFAULT_PLAN_SIZE};
-pub use kmeans::{kmeans, nearest_points, KMeansResult};
+pub use kmeans::{kmeans, kmeans_matrix, nearest_points, KMeansResult};
 
 use crate::space::{Config, DesignSpace};
 use crate::util::rng::Pcg32;

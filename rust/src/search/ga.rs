@@ -99,9 +99,13 @@ impl Searcher for GeneticAlgorithm {
 
         for gen in 0..p.generations {
             gens = gen + 1;
-            // elitism: carry the best individuals unchanged
+            // elitism: carry the best individuals unchanged. NaN fitness
+            // (poisoned model output) ranks like the worst score instead of
+            // panicking the comparator or stealing an elite slot.
             let mut order: Vec<usize> = (0..self.population.len()).collect();
-            order.sort_by(|&a, &b| fitness[b].partial_cmp(&fitness[a]).unwrap());
+            order.sort_by(|&a, &b| {
+                super::score_key(fitness[b]).total_cmp(&super::score_key(fitness[a]))
+            });
             let mut next: Vec<Config> =
                 order.iter().take(p.elites).map(|&i| self.population[i].clone()).collect();
 
@@ -184,6 +188,22 @@ mod tests {
             .fold(f64::NEG_INFINITY, f64::max);
         assert!(r.scores[0] >= init_best, "{} vs {}", r.scores[0], init_best);
         assert!(r.steps_to_converge <= r.steps);
+    }
+
+    #[test]
+    fn nan_fitness_never_wins_an_elite_slot() {
+        // regression for the partial_cmp().unwrap() elitism comparator:
+        // the shared score_key ranks NaN below every finite fitness
+        let fitness = [1.0, f64::NAN, 3.0, f64::NAN, 2.0];
+        let mut order: Vec<usize> = (0..fitness.len()).collect();
+        order.sort_by(|&a, &b| {
+            crate::search::score_key(fitness[b])
+                .total_cmp(&crate::search::score_key(fitness[a]))
+        });
+        assert_eq!(&order[..3], &[2, 4, 0]);
+        let mut tail = order[3..].to_vec();
+        tail.sort_unstable();
+        assert_eq!(tail, vec![1, 3]);
     }
 
     #[test]

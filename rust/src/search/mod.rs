@@ -64,6 +64,17 @@ pub trait Searcher {
     }
 }
 
+/// Descending-sort key that ranks NaN like the worst possible score (a
+/// poisoned model output must neither panic a comparator nor win a slot).
+#[inline]
+pub(crate) fn score_key(v: f64) -> f64 {
+    if v.is_nan() {
+        f64::NEG_INFINITY
+    } else {
+        v
+    }
+}
+
 /// Deduplicate a scored trajectory, keeping the best-scored `cap` entries
 /// (order: best first) — the interchange format between search and sampling.
 pub fn dedup_top(
@@ -76,7 +87,7 @@ pub fn dedup_top(
         .into_iter()
         .filter(|(c, _)| seen.insert(space.flat_index(c)))
         .collect();
-    items.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    items.sort_by(|a, b| score_key(b.1).total_cmp(&score_key(a.1)));
     items.truncate(cap);
     let scores = items.iter().map(|(_, s)| *s).collect();
     let configs = items.into_iter().map(|(c, _)| c).collect();
@@ -87,6 +98,27 @@ pub fn dedup_top(
 mod tests {
     use super::*;
     use crate::workload::zoo;
+
+    #[test]
+    fn dedup_top_nan_scores_rank_last_without_panicking() {
+        // regression for the partial_cmp().unwrap() comparator at the
+        // search/sampling interchange: NaN-scored entries must sort after
+        // every real score and never panic
+        let s = DesignSpace::for_conv(zoo::alexnet()[2].layer);
+        let mut rng = Pcg32::seed_from(9);
+        let mut traj = Vec::new();
+        for i in 0..20 {
+            let score = if i % 5 == 0 { f64::NAN } else { i as f64 };
+            traj.push((s.random_config(&mut rng), score));
+        }
+        let (configs, scores) = dedup_top(&s, traj, 20);
+        assert_eq!(configs.len(), scores.len());
+        assert_eq!(scores[0], 19.0);
+        // all NaNs trail the finite scores
+        let first_nan = scores.iter().position(|v| v.is_nan()).unwrap();
+        assert!(scores[..first_nan].iter().all(|v| !v.is_nan()));
+        assert!(scores[first_nan..].iter().all(|v| v.is_nan()));
+    }
 
     #[test]
     fn dedup_top_orders_and_caps() {

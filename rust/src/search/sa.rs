@@ -90,6 +90,12 @@ impl Searcher for SimulatedAnnealing {
             .cloned()
             .zip(scores.iter().cloned())
             .collect();
+        // §Perf: an accept used to clone the proposal twice (into the chain
+        // and into the trajectory); proposals now live in reused buffers
+        // (`mutate_into`) and an accept *swaps* the proposal into the chain
+        // — one clone per trajectory entry, zero per rejected step.
+        trajectory.reserve(p.traj_cap);
+        let mut proposals: Vec<Config> = Vec::with_capacity(self.chains.len());
 
         let mut best = scores.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
         let mut last_improve = 0usize;
@@ -100,11 +106,12 @@ impl Searcher for SimulatedAnnealing {
             let t = p.t_start
                 + (p.t_end - p.t_start) * (step as f64 / p.n_steps.max(1) as f64);
 
-            let proposals: Vec<Config> = self
-                .chains
-                .iter()
-                .map(|c| space.mutate(c, rng))
-                .collect();
+            while proposals.len() < self.chains.len() {
+                proposals.push(Config::new(Vec::new()));
+            }
+            for (prop, chain) in proposals.iter_mut().zip(&self.chains) {
+                space.mutate_into(chain, rng, prop);
+            }
             let mut prop_scores = model.predict_batch(space, &proposals);
             // static screen (TVM verify_gpu_code analogue): never walk into
             // statically-invalid regions, even before the model has data
@@ -114,7 +121,7 @@ impl Searcher for SimulatedAnnealing {
                 let delta = prop_scores[i] - scores[i];
                 let accept = delta >= 0.0 || rng.f64() < (delta / t.max(1e-9)).exp();
                 if accept {
-                    self.chains[i] = proposals[i].clone();
+                    std::mem::swap(&mut self.chains[i], &mut proposals[i]);
                     scores[i] = prop_scores[i];
                     trajectory.push((self.chains[i].clone(), scores[i]));
                     if scores[i] > best + 1e-9 {

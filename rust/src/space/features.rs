@@ -28,41 +28,68 @@ fn lg(x: i64) -> f32 {
 /// 23     log2 blocks in grid
 pub fn features(space: &DesignSpace, config: &Config) -> Vec<f32> {
     let mut f = Vec::with_capacity(NFEATURES);
-    f.extend(space.normalize(config));
-    debug_assert_eq!(f.len(), NDIMS);
+    features_into(space, config, &mut f);
+    f
+}
+
+/// [`features`] appended onto an existing buffer — the allocation-free path
+/// for flat feature matrices.
+pub fn features_into(space: &DesignSpace, config: &Config, out: &mut Vec<f32>) {
+    let start = out.len();
+    out.resize(start + NFEATURES, 0.0);
+    features_fill(space, config, &mut out[start..]);
+}
+
+/// Write one configuration's feature row into a preallocated
+/// `NFEATURES`-wide slice (the parallel batch-featurize primitive; rows of
+/// a flat matrix are disjoint, so row fills run on any thread count with
+/// bit-identical results).
+pub fn features_fill(space: &DesignSpace, config: &Config, f: &mut [f32]) {
+    assert_eq!(f.len(), NFEATURES);
+    let mut i = 0;
+    let mut push = |v: f32| {
+        f[i] = v;
+        i += 1;
+    };
+    for (&ix, k) in config.idx.iter().zip(&space.knobs) {
+        push(if k.len() <= 1 {
+            0.5
+        } else {
+            ix as f32 / (k.len() - 1) as f32
+        });
+    }
+    debug_assert_eq!(config.idx.len(), NDIMS);
 
     let d = space.decode(config);
     let l = &space.layer;
-    f.push(lg(d.f.reg));
-    f.push(lg(d.f.vthread));
-    f.push(lg(d.f.threads));
-    f.push(lg(d.y.reg));
-    f.push(lg(d.y.vthread));
-    f.push(lg(d.y.threads));
-    f.push(lg(d.x.reg));
-    f.push(lg(d.x.vthread));
-    f.push(lg(d.x.threads));
+    push(lg(d.f.reg));
+    push(lg(d.f.vthread));
+    push(lg(d.f.threads));
+    push(lg(d.y.reg));
+    push(lg(d.y.vthread));
+    push(lg(d.y.threads));
+    push(lg(d.x.reg));
+    push(lg(d.x.vthread));
+    push(lg(d.x.threads));
 
     let threads = d.f.threads * d.y.threads * d.x.threads;
-    f.push(lg(threads));
-    f.push(lg(d.f.tile() * d.y.tile() * d.x.tile()));
-    f.push(lg(d.rc * d.ry * d.rx));
+    push(lg(threads));
+    push(lg(d.f.tile() * d.y.tile() * d.x.tile()));
+    push(lg(d.rc * d.ry * d.rx));
 
     // staged shared memory floats: input tile + filter tile per reduction step
     let in_tile = d.rc
         * ((d.y.tile() - 1) * l.stride + d.ry)
         * ((d.x.tile() - 1) * l.stride + d.rx);
     let filt_tile = d.f.tile() * d.rc * d.ry * d.rx;
-    f.push(lg(in_tile + filt_tile));
+    push(lg(in_tile + filt_tile));
 
-    f.push(lg(d.auto_unroll + 1));
-    f.push(if d.unroll_explicit { 1.0 } else { 0.0 });
+    push(lg(d.auto_unroll + 1));
+    push(if d.unroll_explicit { 1.0 } else { 0.0 });
 
     let blocks = (l.k / d.f.tile()) * (l.out_h() / d.y.tile()) * (l.out_w() / d.x.tile());
-    f.push(lg(blocks));
-
-    debug_assert_eq!(f.len(), NFEATURES);
-    f
+    push(lg(blocks));
+    debug_assert_eq!(i, NFEATURES);
 }
 
 #[cfg(test)]
@@ -90,6 +117,23 @@ mod tests {
         let mut b = a.clone();
         b.idx[0] = if b.idx[0] == 0 { 1 } else { 0 };
         assert_ne!(features(&s, &a), features(&s, &b));
+    }
+
+    #[test]
+    fn fill_and_into_match_features_exactly() {
+        let s = DesignSpace::for_conv(zoo::resnet18()[3].layer);
+        forall(100, 0xf111, |rng| {
+            let c = s.random_config(rng);
+            let direct = features(&s, &c);
+            let mut filled = vec![0.0f32; NFEATURES];
+            features_fill(&s, &c, &mut filled);
+            let mut appended = vec![42.0f32];
+            features_into(&s, &c, &mut appended);
+            for i in 0..NFEATURES {
+                assert_eq!(direct[i].to_bits(), filled[i].to_bits());
+                assert_eq!(direct[i].to_bits(), appended[i + 1].to_bits());
+            }
+        });
     }
 
     #[test]

@@ -144,13 +144,21 @@ impl DesignSpace {
     /// Normalized coordinates in [0,1]^8 — the RL agent's state and the
     /// metric space for k-means clustering.
     pub fn normalize(&self, c: &Config) -> Vec<f32> {
-        c.idx
-            .iter()
-            .zip(&self.knobs)
-            .map(|(&i, k)| {
-                if k.len() <= 1 { 0.5 } else { i as f32 / (k.len() - 1) as f32 }
-            })
-            .collect()
+        let mut out = Vec::with_capacity(self.ndims());
+        self.normalize_into(c, &mut out);
+        out
+    }
+
+    /// [`Self::normalize`] appended onto an existing buffer — the
+    /// allocation-free path for flat point matrices.
+    pub fn normalize_into(&self, c: &Config, out: &mut Vec<f32>) {
+        for (&i, k) in c.idx.iter().zip(&self.knobs) {
+            out.push(if k.len() <= 1 {
+                0.5
+            } else {
+                i as f32 / (k.len() - 1) as f32
+            });
+        }
     }
 
     /// Apply one per-dimension direction vector, clamping at the bounds
@@ -185,17 +193,26 @@ impl DesignSpace {
 
     /// Random single-knob mutation (SA / GA move).
     pub fn mutate(&self, c: &Config, rng: &mut Pcg32) -> Config {
-        let mut idx = c.idx.clone();
+        let mut out = Config::new(Vec::with_capacity(self.ndims()));
+        self.mutate_into(c, rng, &mut out);
+        out
+    }
+
+    /// [`Self::mutate`] into an existing `Config`, reusing its index
+    /// buffer (the SA proposal path mutates tens of thousands of configs
+    /// per round). Consumes exactly the RNG draws `mutate` would.
+    pub fn mutate_into(&self, c: &Config, rng: &mut Pcg32, out: &mut Config) {
+        out.idx.clear();
+        out.idx.extend_from_slice(&c.idx);
         let d = rng.below(self.ndims());
         let k = &self.knobs[d];
         if k.len() > 1 {
             let mut ni = rng.below(k.len()) as u16;
-            while ni == idx[d] {
+            while ni == out.idx[d] {
                 ni = rng.below(k.len()) as u16;
             }
-            idx[d] = ni;
+            out.idx[d] = ni;
         }
-        Config::new(idx)
     }
 
     /// Decode a configuration for the simulator / feature extractor.
@@ -329,6 +346,33 @@ mod tests {
             let m = s.mutate(&c, rng);
             let diff = c.idx.iter().zip(&m.idx).filter(|(a, b)| a != b).count();
             assert_eq!(diff, 1);
+        });
+    }
+
+    #[test]
+    fn mutate_into_matches_mutate_and_rng_stream() {
+        let s = space();
+        forall(100, 0x11fe, |rng| {
+            let c = s.random_config(rng);
+            let mut rng_a = rng.clone();
+            let mut rng_b = rng.clone();
+            let m = s.mutate(&c, &mut rng_a);
+            let mut out = Config::new(Vec::new());
+            s.mutate_into(&c, &mut rng_b, &mut out);
+            assert_eq!(m, out);
+            // identical RNG consumption: the next draw agrees
+            assert_eq!(rng_a.next_u64(), rng_b.next_u64());
+        });
+    }
+
+    #[test]
+    fn normalize_into_matches_normalize() {
+        let s = space();
+        forall(50, 0x220f, |rng| {
+            let c = s.random_config(rng);
+            let mut buf = vec![7.0f32]; // appended after existing content
+            s.normalize_into(&c, &mut buf);
+            assert_eq!(&buf[1..], s.normalize(&c).as_slice());
         });
     }
 

@@ -75,6 +75,13 @@ pub struct SessionConfig {
     /// curriculum (most-connected shapes first) while results stay in
     /// task order.
     pub transfer: TransferConfig,
+    /// Worker threads for the model-side hot paths (featurize batches, GBT
+    /// histogram/predict sweeps, k-means assignment + knee speculation) —
+    /// the `--threads` CLI knob. Results are bit-identical at any value
+    /// (parallelism is only applied where outputs are per-item
+    /// independent); only wall-clock changes. Default:
+    /// [`crate::util::parallel::default_threads`].
+    pub threads: usize,
 }
 
 impl Default for SessionConfig {
@@ -86,6 +93,7 @@ impl Default for SessionConfig {
             pipeline_depth: 1,
             budget_shares: None,
             transfer: TransferConfig::off(),
+            threads: crate::util::parallel::default_threads(),
         }
     }
 }
@@ -196,6 +204,7 @@ pub fn tune_tasks_session_observed(
     backend: Option<Arc<dyn Backend>>,
     registry: Option<&TransferRegistry>,
 ) -> ModelTuneResult {
+    crate::util::parallel::set_threads(scfg.threads.max(1));
     let n = tasks.len();
     let budgets = task_budgets(scfg, n);
     let cfgs: Vec<TunerConfig> = (0..n)

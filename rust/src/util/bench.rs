@@ -63,7 +63,9 @@ impl Bencher {
             samples.push(bstart.elapsed().as_nanos() as f64 / batch as f64);
             total_iters += batch;
         }
-        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total_cmp: timing samples are never NaN, but a poisoned sample
+        // must degrade to a deterministic order, not a panic
+        samples.sort_by(|a, b| a.total_cmp(b));
         let mean = samples.iter().sum::<f64>() / samples.len() as f64;
         let result = BenchResult {
             name: name.to_string(),

@@ -1,0 +1,170 @@
+//! Flat row-major f32 matrix — the shared buffer type of the model-side
+//! hot path (feature rows, k-means points, k-means centroids).
+//!
+//! §Perf: one contiguous allocation instead of a `Vec<Vec<f32>>` (one heap
+//! block per row), amortized across rounds via `clear()` + reuse. Row
+//! access is a bounds-checked slice of the flat buffer, so batch sweeps
+//! stream linearly through memory.
+
+/// Row-major `rows x dim` matrix of f32 over a single flat buffer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FeatureMatrix {
+    data: Vec<f32>,
+    dim: usize,
+}
+
+impl FeatureMatrix {
+    /// An empty matrix whose rows are `dim` wide.
+    pub fn new(dim: usize) -> Self {
+        assert!(dim > 0, "row width must be positive");
+        FeatureMatrix { data: Vec::new(), dim }
+    }
+
+    /// An empty matrix with capacity reserved for `rows` rows.
+    pub fn with_capacity(dim: usize, rows: usize) -> Self {
+        assert!(dim > 0, "row width must be positive");
+        FeatureMatrix { data: Vec::with_capacity(dim * rows), dim }
+    }
+
+    /// Build from row slices (convenience for tests and compat shims).
+    pub fn from_rows(dim: usize, rows: &[Vec<f32>]) -> Self {
+        let mut m = FeatureMatrix::with_capacity(dim, rows.len());
+        for r in rows {
+            m.push_row(r);
+        }
+        m
+    }
+
+    /// Number of rows.
+    pub fn len(&self) -> usize {
+        self.data.len() / self.dim
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Row width.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Drop all rows, keeping the allocation (round-to-round reuse).
+    pub fn clear(&mut self) {
+        self.data.clear();
+    }
+
+    /// The `i`-th row.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Element at `(row, col)`.
+    #[inline]
+    pub fn get(&self, row: usize, col: usize) -> f32 {
+        self.data[row * self.dim + col]
+    }
+
+    /// The `i`-th row, mutably.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let d = self.dim;
+        &mut self.data[i * d..(i + 1) * d]
+    }
+
+    /// Append one row (copied from a slice).
+    pub fn push_row(&mut self, row: &[f32]) {
+        assert_eq!(row.len(), self.dim);
+        self.data.extend_from_slice(row);
+    }
+
+    /// Append one row produced by `f`, which must push exactly `dim`
+    /// values onto the buffer (checked in debug builds) — lets callers
+    /// write rows in place without a temporary allocation.
+    pub fn push_row_with<F: FnOnce(&mut Vec<f32>)>(&mut self, f: F) {
+        let before = self.data.len();
+        f(&mut self.data);
+        debug_assert_eq!(self.data.len(), before + self.dim, "row writer pushed a partial row");
+        let _ = before;
+    }
+
+    /// Grow (zero-filled) or shrink to exactly `rows` rows.
+    pub fn resize_rows(&mut self, rows: usize) {
+        self.data.resize(rows * self.dim, 0.0);
+    }
+
+    /// The whole flat buffer.
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// The whole flat buffer, mutably (for parallel row fills).
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Iterate rows in order.
+    pub fn rows(&self) -> impl Iterator<Item = &[f32]> {
+        self.data.chunks_exact(self.dim)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_row_and_access() {
+        let mut m = FeatureMatrix::new(3);
+        assert!(m.is_empty());
+        m.push_row(&[1.0, 2.0, 3.0]);
+        m.push_row(&[4.0, 5.0, 6.0]);
+        assert_eq!(m.len(), 2);
+        assert_eq!(m.dim(), 3);
+        assert_eq!(m.row(0), &[1.0, 2.0, 3.0]);
+        assert_eq!(m.row(1), &[4.0, 5.0, 6.0]);
+        assert_eq!(m.get(1, 2), 6.0);
+        let rows: Vec<&[f32]> = m.rows().collect();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[1], m.row(1));
+    }
+
+    #[test]
+    fn clear_keeps_capacity_and_from_rows_matches() {
+        let rows = vec![vec![1.0f32, 2.0], vec![3.0, 4.0]];
+        let mut m = FeatureMatrix::from_rows(2, &rows);
+        assert_eq!(m.len(), 2);
+        let cap = m.data.capacity();
+        m.clear();
+        assert!(m.is_empty());
+        assert_eq!(m.data.capacity(), cap);
+    }
+
+    #[test]
+    fn push_row_with_writes_in_place() {
+        let mut m = FeatureMatrix::new(2);
+        m.push_row_with(|out| {
+            out.push(7.0);
+            out.push(8.0);
+        });
+        assert_eq!(m.row(0), &[7.0, 8.0]);
+    }
+
+    #[test]
+    fn resize_rows_zero_fills() {
+        let mut m = FeatureMatrix::new(2);
+        m.resize_rows(3);
+        assert_eq!(m.len(), 3);
+        assert_eq!(m.row(2), &[0.0, 0.0]);
+        m.resize_rows(1);
+        assert_eq!(m.len(), 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_width_row_panics() {
+        let mut m = FeatureMatrix::new(3);
+        m.push_row(&[1.0, 2.0]);
+    }
+}

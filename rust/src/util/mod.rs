@@ -2,6 +2,7 @@
 //! harnesses (the vendored crate set has no rand/rayon/criterion/proptest).
 
 pub mod bench;
+pub mod matrix;
 pub mod parallel;
 pub mod prop;
 pub mod rng;

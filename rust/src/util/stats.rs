@@ -31,7 +31,8 @@ pub fn geomean(xs: &[f64]) -> f64 {
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     assert!(!xs.is_empty());
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp: NaN sorts last deterministically instead of panicking
+    v.sort_by(|a, b| a.total_cmp(b));
     let rank = p.clamp(0.0, 100.0) / 100.0 * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -91,7 +92,8 @@ pub fn spearman(xs: &[f64], ys: &[f64]) -> f64 {
 
 fn ranks(xs: &[f64]) -> Vec<f64> {
     let mut idx: Vec<usize> = (0..xs.len()).collect();
-    idx.sort_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap());
+    // total_cmp: NaN ranks last deterministically instead of panicking
+    idx.sort_by(|&a, &b| xs[a].total_cmp(&xs[b]));
     let mut r = vec![0.0; xs.len()];
     let mut i = 0;
     while i < idx.len() {
@@ -161,5 +163,23 @@ mod tests {
         let xs = [1.0, 1.0, 2.0, 3.0];
         let ys = [5.0, 5.0, 6.0, 7.0];
         assert!((spearman(&xs, &ys) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_with_nan_does_not_panic() {
+        // regression for the partial_cmp().unwrap() sort: NaN entries sort
+        // last deterministically, so finite percentiles stay meaningful
+        let xs = [3.0, f64::NAN, 1.0, 2.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 2.5);
+    }
+
+    #[test]
+    fn spearman_with_nan_does_not_panic() {
+        // regression for the partial_cmp().unwrap() rank sort
+        let xs = [1.0, f64::NAN, 3.0, 4.0];
+        let ys = [1.0, 2.0, 3.0, 4.0];
+        let rho = spearman(&xs, &ys);
+        assert!(rho.is_finite());
     }
 }

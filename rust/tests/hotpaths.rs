@@ -1,0 +1,125 @@
+//! Determinism-under-parallelism pins for the flat-buffer hot-path
+//! refactor: tuner results (best config + GFLOPS, per method arm) must be
+//! bit-identical across `--threads 1/2/4`.
+//!
+//! Equivalence with the pre-refactor serial behavior is pinned at the
+//! component level (the layer where "same arithmetic, same order" can be
+//! stated exactly): feature rows byte-equal `features()`
+//! (`costmodel::tests`), incremental binning equals from-scratch binning
+//! (`gbt::tree::tests` + `costmodel::tests`), index-slice tree fits equal
+//! gathered-copy fits (`gbt::tree::tests`), the blocked matmul equals the
+//! naive triple loop bitwise (`nn::ops::tests`), and `mutate_into`
+//! consumes the RNG exactly as `mutate` (`space::tests`). Every parallel
+//! sweep writes per-item-independent outputs in place, so the thread count
+//! can change only wall-clock, never values — which is what this file
+//! asserts end to end.
+
+mod common;
+
+use common::{measurer, native_backend, tiny_layer};
+use release::tuner::{tune, MethodSpec, TuneResult, TunerConfig};
+use release::util::parallel::{set_threads, thread_knob_guard};
+use release::workload::ConvTask;
+
+fn tiny_task() -> ConvTask {
+    ConvTask {
+        id: "tiny.hot".to_string(),
+        model: "tiny",
+        index: 0,
+        layer: tiny_layer(),
+        occurrences: 1,
+    }
+}
+
+fn assert_bitwise_equal_runs(name: &str, a: &TuneResult, b: &TuneResult) {
+    assert_eq!(a.best_config, b.best_config, "{name}: best config diverged");
+    assert_eq!(
+        a.best_gflops.to_bits(),
+        b.best_gflops.to_bits(),
+        "{name}: best GFLOPS diverged"
+    );
+    assert_eq!(
+        a.best_runtime_ms.to_bits(),
+        b.best_runtime_ms.to_bits(),
+        "{name}: best runtime diverged"
+    );
+    assert_eq!(a.n_measurements, b.n_measurements, "{name}: budget spend diverged");
+    assert_eq!(a.iterations.len(), b.iterations.len(), "{name}: iteration count");
+    for (x, y) in a.iterations.iter().zip(&b.iterations) {
+        assert_eq!(
+            x.best_gflops.to_bits(),
+            y.best_gflops.to_bits(),
+            "{name}: per-iteration best diverged at iter {}",
+            x.iter
+        );
+        assert_eq!(x.cum_measured, y.cum_measured, "{name}: iter {}", x.iter);
+        assert_eq!(x.sampler_k, y.sampler_k, "{name}: sampler k at iter {}", x.iter);
+    }
+    assert_eq!(
+        a.clock.search_s.to_bits(),
+        b.clock.search_s.to_bits(),
+        "{name}: search clock diverged"
+    );
+    assert_eq!(
+        a.clock.model_s.to_bits(),
+        b.clock.model_s.to_bits(),
+        "{name}: model clock diverged"
+    );
+}
+
+/// The acceptance pin: every method arm — SA/GA/random search, greedy and
+/// adaptive sampling, and the RL (PPO) arms on the native backend — tunes
+/// to bit-identical results at `--threads` 1, 2 and 4.
+#[test]
+fn tune_results_bit_identical_across_thread_counts_all_arms() {
+    let _knob = thread_knob_guard();
+    let task = tiny_task();
+    let arms: [(&str, bool); 6] = [
+        ("autotvm", false),
+        ("ga", false),
+        ("random", false),
+        ("sa+as", false),
+        ("rl", true),
+        ("release", true),
+    ];
+    for (name, needs_backend) in arms {
+        let method = MethodSpec::parse(name).unwrap();
+        let cfg = TunerConfig {
+            max_trials: if needs_backend { 40 } else { 96 },
+            seed: 11,
+            ..Default::default()
+        };
+        let mut runs = Vec::new();
+        for threads in [1usize, 2, 4] {
+            set_threads(threads);
+            let backend = if needs_backend { Some(native_backend()) } else { None };
+            runs.push(tune(&task, &measurer(5), method, &cfg, backend));
+        }
+        set_threads(0);
+        assert!(
+            runs[0].best_gflops > 0.0,
+            "{name}: found nothing on the tiny task"
+        );
+        for r in &runs[1..] {
+            assert_bitwise_equal_runs(name, &runs[0], r);
+        }
+    }
+}
+
+/// A larger adaptive-sampling run on a real zoo layer: the trajectory is
+/// big enough to cross the parallel thresholds (speculative knee sweep,
+/// parallel Lloyd assignment, parallel batch predict), so this pins the
+/// thread-invariance of exactly the paths the small task may not reach.
+#[test]
+fn adaptive_arm_thread_invariance_on_zoo_layer() {
+    let _knob = thread_knob_guard();
+    let task = release::workload::zoo::resnet18()[5].clone();
+    let cfg = TunerConfig { max_trials: 128, seed: 7, ..Default::default() };
+    set_threads(1);
+    let serial = tune(&task, &measurer(9), MethodSpec::sa_as(), &cfg, None);
+    set_threads(4);
+    let par = tune(&task, &measurer(9), MethodSpec::sa_as(), &cfg, None);
+    set_threads(0);
+    assert!(serial.best_gflops > 0.0);
+    assert_bitwise_equal_runs("sa+as/resnet18", &serial, &par);
+}

@@ -203,6 +203,7 @@ fn transfer_budget_and_registry_discipline_property() {
             pipeline_depth: 1 + rng.below(2),
             budget_shares: None,
             transfer: TransferConfig::with_mode(mode),
+            ..Default::default()
         };
         let registry = TransferRegistry::new();
         let r = tune_tasks_session_observed(
