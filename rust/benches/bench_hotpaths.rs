@@ -1,17 +1,26 @@
 //! Hot-path benchmark of the model-side tuning loop: featurize / GBT fit /
 //! GBT predict / adaptive-sampling (k-means knee sweep) / PPO update —
-//! plus a quick end-to-end session — at `--threads 1` vs all cores, and a
-//! heap-allocation audit of one serial tuning round (flat-buffer path vs
-//! the pre-refactor `Vec<Vec<_>>` pipeline it replaced, re-enacted here).
+//! plus a quick end-to-end session — at `--threads 1` vs all cores, a
+//! pool-vs-scoped dispatch comparison, a histogram subtraction-vs-rebuild
+//! comparison, and a heap-allocation audit of one serial tuning round with
+//! a CI ratchet against the committed `ALLOC_BASELINE.json`.
 //!
-//! Writes `BENCH_hotpaths.json` (the first point of the perf trajectory;
-//! CI uploads it per PR) and asserts the acceptance bars:
+//! Writes `BENCH_hotpaths.json` (the perf trajectory; CI uploads it per
+//! PR) and asserts the acceptance bars:
 //!   - combined featurize+fit+predict+kmeans wall-clock speedup >= 1.5x at
 //!     `threads = available_parallelism` vs 1 (when >= 4 cores are
 //!     available; scaled down on smaller hosts),
-//!   - >= 2x fewer heap allocations per tuning round on the serial path.
+//!   - >= 1.2x additional combined speedup of the persistent pool +
+//!     histogram subtraction together over the PR 4 scoped-spawn/rebuild
+//!     baseline at the same thread count (>= 4 cores; scaled down below),
+//!   - >= 2x fewer heap allocations per tuning round on the serial path,
+//!   - no alloc-count regression beyond the committed baseline (the
+//!     ratchet; see `ALLOC_BASELINE.json`).
 //!
-//! `RELEASE_QUICK=1 cargo bench --bench bench_hotpaths` for the CI smoke.
+//! `RELEASE_QUICK=1 cargo bench --bench bench_hotpaths` for the CI smoke;
+//! `RELEASE_ALLOC_ONLY=1` runs just the (deterministic) allocation audit +
+//! ratchet — the blocking CI job — skipping the wall-clock stages that are
+//! too noisy to block on shared runners.
 
 use release::costmodel::{measurement_target, CostModel};
 use release::gbt::{Binner, BinnedMatrix, Gbt, GbtParams, Tree, TreeParams};
@@ -23,7 +32,9 @@ use release::space::features::{features, features_fill, NFEATURES};
 use release::space::{Config, DesignSpace};
 use release::tuner::{tune, MethodSpec, TunerConfig};
 use release::util::matrix::FeatureMatrix;
-use release::util::parallel::{default_threads, par_rows_mut, set_threads, threads};
+use release::util::parallel::{
+    default_threads, par_rows_mut, set_dispatch, set_threads, threads, Dispatch,
+};
 use release::util::rng::Pcg32;
 use release::workload::zoo;
 use std::alloc::{GlobalAlloc, Layout, System};
@@ -62,6 +73,35 @@ fn allocs() -> u64 {
     ALLOCS.load(Ordering::Relaxed)
 }
 
+// --- alloc-count ratchet -----------------------------------------------------
+
+/// Committed baseline for the ratchet. The audit is deterministic (fixed
+/// seeds, fixed sizes independent of quick/full, serial execution), so the
+/// headroom only covers allocator-strategy drift across std versions.
+const ALLOC_BASELINE_PATH: &str = "ALLOC_BASELINE.json";
+const RATCHET_HEADROOM: f64 = 1.05;
+
+/// Parse `"flat_round": <u64|null>` out of the baseline JSON (hand-rolled:
+/// serde is not vendored). Returns None when absent, null or unreadable.
+fn read_alloc_baseline() -> Option<u64> {
+    let text = std::fs::read_to_string(ALLOC_BASELINE_PATH).ok()?;
+    let key = "\"flat_round\"";
+    let at = text.find(key)? + key.len();
+    let rest = text[at..].trim_start().strip_prefix(':')?.trim_start();
+    let num: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+    num.parse().ok()
+}
+
+fn write_alloc_baseline(flat: u64) {
+    let body = format!(
+        "{{\n  \"comment\": \"alloc-count ratchet baseline for \
+         bench_hotpaths' serial tuning-round audit; deterministic, update \
+         intentionally when the audited path legitimately changes\",\n  \
+         \"flat_round\": {flat}\n}}\n"
+    );
+    std::fs::write(ALLOC_BASELINE_PATH, body).expect("write alloc baseline");
+}
+
 // --- timing -----------------------------------------------------------------
 
 /// Best-of-`reps` wall seconds of `f` (after one warmup run).
@@ -83,104 +123,156 @@ struct Stage {
     name: &'static str,
     serial_s: f64,
     parallel_s: f64,
+    /// Same thread count as `parallel_s`, but scoped spawn-per-call
+    /// dispatch and histogram rebuild — the PR 4 baseline.
+    pr4_s: f64,
 }
 
 impl Stage {
     fn speedup(&self) -> f64 {
         self.serial_s / self.parallel_s.max(1e-12)
     }
+    fn vs_pr4(&self) -> f64 {
+        self.pr4_s / self.parallel_s.max(1e-12)
+    }
 }
 
 fn main() {
     let quick = std::env::var("RELEASE_QUICK").map(|v| v != "0").unwrap_or(false);
+    let alloc_only =
+        std::env::var("RELEASE_ALLOC_ONLY").map(|v| v != "0").unwrap_or(false);
     let hi = default_threads();
     let reps = if quick { 2 } else { 3 };
     let n_feat: usize = if quick { 16384 } else { 32768 };
     let n_train: usize = if quick { 2048 } else { 4096 };
     let n_points: usize = if quick { 4096 } else { 8192 };
     println!(
-        "bench_hotpaths: {} mode, {hi} hardware threads, batch {n_feat}, \
+        "bench_hotpaths: {} mode{}, {hi} hardware threads, batch {n_feat}, \
          train {n_train}, kmeans points {n_points}",
-        if quick { "quick" } else { "full" }
+        if quick { "quick" } else { "full" },
+        if alloc_only { " (alloc audit only)" } else { "" }
     );
 
     let space = DesignSpace::for_conv(zoo::resnet18()[5].layer);
     let mut rng = Pcg32::seed_from(0);
     let configs: Vec<Config> =
         (0..n_feat).map(|_| space.random_config(&mut rng)).collect();
-    let train_cfgs = &configs[..n_train];
     let meas = SimMeasurer::titan_xp(0);
-    let measured = meas.measure_batch(&space, train_cfgs);
-    let ys: Vec<f32> = measured.iter().map(measurement_target).collect();
-    let fit_params = GbtParams { n_trees: 64, ..Default::default() };
-
-    // --- stage kernels (each honors the global --threads knob) -------------
-    let featurize = |cfgs: &[Config]| {
-        let mut m = FeatureMatrix::new(NFEATURES);
-        m.resize_rows(cfgs.len());
-        par_rows_mut(m.as_mut_slice(), NFEATURES, threads(), |i, row| {
-            features_fill(&space, &cfgs[i], row);
-        });
-        m
-    };
-    let train_m = featurize(train_cfgs);
-    let feat_m = featurize(&configs);
-    let gbt = Gbt::fit_matrix(&train_m, &ys, &fit_params);
-    let traj: Vec<Config> = configs[..n_points].to_vec();
+    // the audit's trajectory is fixed-size so the ratchet baseline is one
+    // number across quick/full modes
+    let audit_traj: Vec<Config> = configs[..4096.min(n_feat)].to_vec();
 
     let mut stages: Vec<Stage> = Vec::new();
-    for (name, kernel) in [
-        ("featurize", 0usize),
-        ("gbt_fit", 1),
-        ("gbt_predict", 2),
-        ("kmeans_knee", 3),
-    ] {
-        let run = |nthreads: usize| {
-            set_threads(nthreads);
-            let s = match kernel {
-                0 => time_best(reps, || featurize(&configs).len()),
-                1 => time_best(reps, || {
-                    Gbt::fit_matrix(&train_m, &ys, &fit_params).n_trees()
-                }),
-                2 => time_best(reps, || gbt.predict_matrix(&feat_m).len()),
-                _ => time_best(reps, || {
-                    let mut r = Pcg32::seed_from(7);
-                    adaptive_sample(&space, &traj, &HashSet::new(), &mut r).k
-                }),
-            };
-            set_threads(0);
-            s
+    let mut subtraction_speedup = 0.0f64;
+    if !alloc_only {
+        // heavy stage inputs built only when the wall-clock stages run —
+        // the alloc-only (blocking CI) path needs none of them
+        let train_cfgs = &configs[..n_train];
+        let measured = meas.measure_batch(&space, train_cfgs);
+        let ys: Vec<f32> = measured.iter().map(measurement_target).collect();
+        let fit_params = GbtParams { n_trees: 64, ..Default::default() };
+        // the PR 4 tree fit: rebuild every node's histograms (no subtraction)
+        let fit_params_rebuild =
+            GbtParams { n_trees: 64, subtract_hists: false, ..Default::default() };
+
+        // --- stage kernels (each honors the global --threads knob) ---------
+        let featurize = |cfgs: &[Config]| {
+            let mut m = FeatureMatrix::new(NFEATURES);
+            m.resize_rows(cfgs.len());
+            par_rows_mut(m.as_mut_slice(), NFEATURES, threads(), |i, row| {
+                features_fill(&space, &cfgs[i], row);
+            });
+            m
         };
-        let serial_s = run(1);
-        let parallel_s = run(hi);
-        let st = Stage { name, serial_s, parallel_s };
+        let train_m = featurize(train_cfgs);
+        let feat_m = featurize(&configs);
+        let gbt = Gbt::fit_matrix(&train_m, &ys, &fit_params);
+        let traj: Vec<Config> = configs[..n_points].to_vec();
+
+        for (name, kernel) in [
+            ("featurize", 0usize),
+            ("gbt_fit", 1),
+            ("gbt_predict", 2),
+            ("kmeans_knee", 3),
+        ] {
+            // leg: (thread count, dispatch, PR4-faithful tree fit?)
+            let run = |nthreads: usize, dispatch: Dispatch, pr4: bool| {
+                set_threads(nthreads);
+                set_dispatch(dispatch);
+                let fp = if pr4 { &fit_params_rebuild } else { &fit_params };
+                let s = match kernel {
+                    0 => time_best(reps, || featurize(&configs).len()),
+                    1 => time_best(reps, || {
+                        Gbt::fit_matrix(&train_m, &ys, fp).n_trees()
+                    }),
+                    2 => time_best(reps, || gbt.predict_matrix(&feat_m).len()),
+                    _ => time_best(reps, || {
+                        let mut r = Pcg32::seed_from(7);
+                        adaptive_sample(&space, &traj, &HashSet::new(), &mut r).k
+                    }),
+                };
+                set_threads(0);
+                set_dispatch(Dispatch::Pool);
+                s
+            };
+            let serial_s = run(1, Dispatch::Pool, false);
+            let parallel_s = run(hi, Dispatch::Pool, false);
+            let pr4_s = run(hi, Dispatch::Scoped, true);
+            let st = Stage { name, serial_s, parallel_s, pr4_s };
+            println!(
+                "stage {:<12} serial {:>9.2} ms   threads={hi} {:>9.2} ms ({:>5.2}x)   \
+                 pr4-baseline {:>9.2} ms ({:>5.2}x vs pr4)",
+                st.name,
+                st.serial_s * 1e3,
+                st.parallel_s * 1e3,
+                st.speedup(),
+                st.pr4_s * 1e3,
+                st.vs_pr4()
+            );
+            stages.push(st);
+        }
+
+        // isolate histogram subtraction from dispatch: serial fit, rebuild
+        // vs subtract
+        set_threads(1);
+        let fit_rebuild_s = time_best(reps, || {
+            Gbt::fit_matrix(&train_m, &ys, &fit_params_rebuild).n_trees()
+        });
+        let fit_subtract_s =
+            time_best(reps, || Gbt::fit_matrix(&train_m, &ys, &fit_params).n_trees());
+        set_threads(0);
+        subtraction_speedup = fit_rebuild_s / fit_subtract_s.max(1e-12);
         println!(
-            "stage {:<12} serial {:>9.2} ms   threads={hi} {:>9.2} ms   {:>5.2}x",
-            st.name,
-            st.serial_s * 1e3,
-            st.parallel_s * 1e3,
-            st.speedup()
+            "hist subtraction (serial fit): rebuild {:.2} ms, subtract {:.2} ms \
+             ({subtraction_speedup:.2}x)",
+            fit_rebuild_s * 1e3,
+            fit_subtract_s * 1e3
         );
-        stages.push(st);
     }
 
-    // PPO update: serial by design (the fixed-topology reverse-mode core);
-    // reported for the trajectory, not part of the combined-speedup bar.
-    let be = NativeBackend::new();
-    let spec = be.spec().clone();
-    let bsz = spec.b_rollout;
-    let obs_u = vec![0.5f32; bsz * spec.ndims];
-    let actions = vec![1i32; bsz * spec.ndims];
-    let old_logp = vec![-8.8f32; bsz];
-    let adv = vec![0.1f32; bsz];
-    let ret = vec![0.5f32; bsz];
-    let mask = vec![1.0f32; bsz];
-    let mut st = be.ppo_init(1).expect("ppo_init");
-    let ppo_s = time_best(reps, || {
-        be.ppo_update(&mut st, &obs_u, &actions, &old_logp, &adv, &ret, &mask, 3)
-            .unwrap()
-    });
-    println!("stage {:<12} {:>9.2} ms (serial-by-design)", "ppo_update", ppo_s * 1e3);
+    // PPO update: serial-dominant by design (the fixed-topology
+    // reverse-mode core); reported for the trajectory, not part of the
+    // combined-speedup bar.
+    let ppo_s = if alloc_only {
+        0.0
+    } else {
+        let be = NativeBackend::new();
+        let spec = be.spec().clone();
+        let bsz = spec.b_rollout;
+        let obs_u = vec![0.5f32; bsz * spec.ndims];
+        let actions = vec![1i32; bsz * spec.ndims];
+        let old_logp = vec![-8.8f32; bsz];
+        let adv = vec![0.1f32; bsz];
+        let ret = vec![0.5f32; bsz];
+        let mask = vec![1.0f32; bsz];
+        let mut st = be.ppo_init(1).expect("ppo_init");
+        let s = time_best(reps, || {
+            be.ppo_update(&mut st, &obs_u, &actions, &old_logp, &adv, &ret, &mask, 3)
+                .unwrap()
+        });
+        println!("stage {:<12} {:>9.2} ms", "ppo_update", s * 1e3);
+        s
+    };
 
     // --- allocation audit: one serial tuning round --------------------------
     set_threads(1);
@@ -189,10 +281,11 @@ fn main() {
     let audit_meas = meas.measure_batch(&space, audit_cfgs);
     let probe = &configs[n_feat - audit_n..];
     let audit_params = GbtParams::default(); // the cost model's real config
+    let audit_params_pr4 = GbtParams { subtract_hists: false, ..Default::default() };
 
     // pre-refactor pipeline, re-enacted: per-config feature Vecs, fresh
-    // Vec<Vec<u8>> binning, per-tree cloned sub-matrices, per-config
-    // normalize Vecs for the sampler
+    // Vec<Vec<u8>> binning, per-tree cloned sub-matrices, rebuild-every-node
+    // histograms, per-config normalize Vecs for the sampler
     let naive_allocs = {
         let before = allocs();
         let rows: Vec<Vec<f32>> =
@@ -203,19 +296,20 @@ fn main() {
             rows.iter().map(|r| binner.bin_row(r)).collect();
         let base = targets.iter().sum::<f32>() / targets.len() as f32;
         let mut pred = vec![base; targets.len()];
-        let mut trng = Pcg32::seed_from(audit_params.seed ^ 0x6b7);
+        let mut trng = Pcg32::seed_from(audit_params_pr4.seed ^ 0x6b7);
         let tparams = TreeParams {
-            max_depth: audit_params.max_depth,
-            min_samples_leaf: audit_params.min_samples_leaf,
-            lambda: audit_params.lambda,
+            max_depth: audit_params_pr4.max_depth,
+            min_samples_leaf: audit_params_pr4.min_samples_leaf,
+            lambda: audit_params_pr4.lambda,
             gamma: 1e-6,
+            subtract_hists: false,
         };
         let mut trees = Vec::new();
-        for _ in 0..audit_params.n_trees {
+        for _ in 0..audit_params_pr4.n_trees {
             let res: Vec<f32> =
                 targets.iter().zip(&pred).map(|(t, p)| t - p).collect();
             let keep =
-                ((targets.len() as f32 * audit_params.subsample) as usize).max(10);
+                ((targets.len() as f32 * audit_params_pr4.subsample) as usize).max(10);
             let mut order: Vec<u32> = (0..targets.len() as u32).collect();
             trng.shuffle(&mut order);
             order.truncate(keep);
@@ -233,7 +327,7 @@ fn main() {
             let idx: Vec<u32> = (0..keep as u32).collect();
             let tree = Tree::fit(&sub_binned, &sub_res, idx, &binner, &tparams);
             for (p, row) in pred.iter_mut().zip(&rows) {
-                *p += audit_params.learning_rate * tree.predict(row);
+                *p += audit_params_pr4.learning_rate * tree.predict(row);
             }
             trees.push(tree);
         }
@@ -243,16 +337,16 @@ fn main() {
         let mut preds = vec![base; probe_rows.len()];
         for t in &trees {
             for (p, row) in preds.iter_mut().zip(&probe_rows) {
-                *p += audit_params.learning_rate * t.predict(row);
+                *p += audit_params_pr4.learning_rate * t.predict(row);
             }
         }
         std::hint::black_box(&preds);
         // old sampler path: per-config normalize Vecs feeding the sweep
         let points: Vec<Vec<f32>> =
-            traj.iter().map(|c| space.normalize(c)).collect();
+            audit_traj.iter().map(|c| space.normalize(c)).collect();
         std::hint::black_box(points.len());
         let mut r = Pcg32::seed_from(7);
-        let s = adaptive_sample(&space, &traj, &HashSet::new(), &mut r);
+        let s = adaptive_sample(&space, &audit_traj, &HashSet::new(), &mut r);
         std::hint::black_box(s.k);
         allocs() - before
     };
@@ -265,7 +359,7 @@ fn main() {
         let preds = cm.predict_batch(&space, probe);
         std::hint::black_box(preds.len());
         let mut r = Pcg32::seed_from(7);
-        let s = adaptive_sample(&space, &traj, &HashSet::new(), &mut r);
+        let s = adaptive_sample(&space, &audit_traj, &HashSet::new(), &mut r);
         std::hint::black_box(s.k);
         allocs() - before
     };
@@ -276,39 +370,101 @@ fn main() {
          flat-buffer path {flat_allocs} ({alloc_ratio:.2}x fewer)"
     );
 
-    // --- quick end-to-end session (sanity: the wiring pays off in situ) -----
-    let e2e_task = &zoo::resnet18()[5];
-    let e2e_cfg = TunerConfig { max_trials: 96, seed: 3, ..Default::default() };
-    set_threads(1);
-    let t0 = Instant::now();
-    let r1 = tune(e2e_task, &SimMeasurer::titan_xp(3), MethodSpec::sa_as(), &e2e_cfg, None);
-    let e2e_serial_s = t0.elapsed().as_secs_f64();
-    set_threads(hi);
-    let t0 = Instant::now();
-    let rn = tune(e2e_task, &SimMeasurer::titan_xp(3), MethodSpec::sa_as(), &e2e_cfg, None);
-    let e2e_parallel_s = t0.elapsed().as_secs_f64();
-    set_threads(0);
-    assert_eq!(
-        r1.best_gflops.to_bits(),
-        rn.best_gflops.to_bits(),
-        "e2e tune must be bit-identical across thread counts"
-    );
-    println!(
-        "e2e tune (sa+as, 96 trials): serial {:.2}s, threads={hi} {:.2}s",
-        e2e_serial_s, e2e_parallel_s
-    );
+    // ratchet: compare against the committed baseline (bootstrap when null)
+    let baseline = read_alloc_baseline();
+    match baseline {
+        Some(b) => {
+            let limit = (b as f64 * RATCHET_HEADROOM) as u64;
+            println!(
+                "alloc ratchet: measured {flat_allocs} vs baseline {b} \
+                 (limit {limit})"
+            );
+            if (flat_allocs as f64) < b as f64 * 0.90 {
+                println!(
+                    "note: measured well below baseline — consider ratcheting \
+                     ALLOC_BASELINE.json down to {flat_allocs}"
+                );
+            }
+        }
+        None => {
+            println!(
+                "alloc ratchet: no committed baseline yet (flat_round null) — \
+                 bootstrap run; writing ALLOC_BASELINE.json with {flat_allocs}. \
+                 Commit it to arm the ratchet."
+            );
+            write_alloc_baseline(flat_allocs);
+        }
+    }
 
-    // --- combined bar + JSON -------------------------------------------------
+    // --- quick end-to-end session (sanity: the wiring pays off in situ) -----
+    let (e2e_serial_s, e2e_parallel_s) = if alloc_only {
+        (0.0, 0.0)
+    } else {
+        let e2e_task = &zoo::resnet18()[5];
+        let e2e_cfg = TunerConfig { max_trials: 96, seed: 3, ..Default::default() };
+        set_threads(1);
+        let t0 = Instant::now();
+        let r1 =
+            tune(e2e_task, &SimMeasurer::titan_xp(3), MethodSpec::sa_as(), &e2e_cfg, None);
+        let serial = t0.elapsed().as_secs_f64();
+        set_threads(hi);
+        let t0 = Instant::now();
+        let rn =
+            tune(e2e_task, &SimMeasurer::titan_xp(3), MethodSpec::sa_as(), &e2e_cfg, None);
+        let parallel = t0.elapsed().as_secs_f64();
+        set_threads(0);
+        assert_eq!(
+            r1.best_gflops.to_bits(),
+            rn.best_gflops.to_bits(),
+            "e2e tune must be bit-identical across thread counts"
+        );
+        println!(
+            "e2e tune (sa+as, 96 trials): serial {:.2}s, threads={hi} {:.2}s",
+            serial, parallel
+        );
+        (serial, parallel)
+    };
+
+    // --- combined bars + JSON ------------------------------------------------
     let combined_serial: f64 = stages.iter().map(|s| s.serial_s).sum();
     let combined_parallel: f64 = stages.iter().map(|s| s.parallel_s).sum();
+    let combined_pr4: f64 = stages.iter().map(|s| s.pr4_s).sum();
     let combined = combined_serial / combined_parallel.max(1e-12);
-    println!(
-        "combined model loop (featurize+fit+predict+kmeans): {:.2}x at {hi} threads",
-        combined
-    );
+    let combined_vs_pr4 = combined_pr4 / combined_parallel.max(1e-12);
+    if !alloc_only {
+        println!(
+            "combined model loop (featurize+fit+predict+kmeans): {combined:.2}x \
+             vs serial, {combined_vs_pr4:.2}x vs PR 4 scoped+rebuild baseline, \
+             at {hi} threads"
+        );
+    }
+
+    // alloc-only runs write no BENCH json: the committed bootstrap file
+    // (and real full-run trajectories) must not be clobbered with zeroed
+    // stage data by the blocking CI job or a local ratchet check
+    if alloc_only {
+        assert!(
+            alloc_ratio >= 2.0,
+            "flat serial path must allocate >= 2x less per round: \
+             naive {naive_allocs} vs flat {flat_allocs} ({alloc_ratio:.2}x)"
+        );
+        if let Some(b) = baseline {
+            let limit = (b as f64 * RATCHET_HEADROOM) as u64;
+            assert!(
+                flat_allocs <= limit,
+                "alloc-count regression: {flat_allocs} allocs per serial round \
+                 exceeds the ratchet limit {limit} (baseline {b}); if the \
+                 increase is intentional, update ALLOC_BASELINE.json"
+            );
+        }
+        println!("alloc audit + ratchet passed");
+        return;
+    }
 
     let mut json = String::from("{\n");
-    json.push_str(&format!("  \"threads\": {hi},\n  \"quick\": {quick},\n"));
+    json.push_str(&format!(
+        "  \"threads\": {hi},\n  \"quick\": {quick},\n  \"alloc_only\": {alloc_only},\n"
+    ));
     json.push_str(&format!(
         "  \"sizes\": {{\"featurize\": {n_feat}, \"train\": {n_train}, \
          \"kmeans_points\": {n_points}}},\n"
@@ -316,24 +472,33 @@ fn main() {
     json.push_str("  \"stages\": {\n");
     for (i, s) in stages.iter().enumerate() {
         json.push_str(&format!(
-            "    \"{}\": {{\"serial_ms\": {:.3}, \"parallel_ms\": {:.3}, \"speedup\": {:.3}}}{}\n",
+            "    \"{}\": {{\"serial_ms\": {:.3}, \"parallel_ms\": {:.3}, \
+             \"pr4_ms\": {:.3}, \"speedup\": {:.3}, \"vs_pr4\": {:.3}}}{}\n",
             s.name,
             s.serial_s * 1e3,
             s.parallel_s * 1e3,
+            s.pr4_s * 1e3,
             s.speedup(),
+            s.vs_pr4(),
             if i + 1 < stages.len() { "," } else { "" }
         ));
     }
     json.push_str("  },\n");
+    json.push_str(&format!(
+        "  \"hist_subtraction_speedup\": {subtraction_speedup:.3},\n"
+    ));
     json.push_str(&format!("  \"ppo_update_ms\": {:.3},\n", ppo_s * 1e3));
     json.push_str(&format!(
         "  \"e2e_tune\": {{\"serial_s\": {:.3}, \"parallel_s\": {:.3}}},\n",
         e2e_serial_s, e2e_parallel_s
     ));
     json.push_str(&format!("  \"combined_speedup\": {combined:.3},\n"));
+    json.push_str(&format!("  \"combined_vs_pr4\": {combined_vs_pr4:.3},\n"));
     json.push_str(&format!(
         "  \"allocs\": {{\"naive_round\": {naive_allocs}, \
-         \"flat_round\": {flat_allocs}, \"ratio\": {alloc_ratio:.3}}}\n"
+         \"flat_round\": {flat_allocs}, \"ratio\": {alloc_ratio:.3}, \
+         \"baseline\": {}}}\n",
+        baseline.map(|b| b.to_string()).unwrap_or_else(|| "null".into())
     ));
     json.push_str("}\n");
     let mut f = std::fs::File::create("BENCH_hotpaths.json").expect("write json");
@@ -346,18 +511,37 @@ fn main() {
         "flat serial path must allocate >= 2x less per round: \
          naive {naive_allocs} vs flat {flat_allocs} ({alloc_ratio:.2}x)"
     );
+    if let Some(b) = baseline {
+        let limit = (b as f64 * RATCHET_HEADROOM) as u64;
+        assert!(
+            flat_allocs <= limit,
+            "alloc-count regression: {flat_allocs} allocs per serial round \
+             exceeds the ratchet limit {limit} (baseline {b}); if the \
+             increase is intentional, update ALLOC_BASELINE.json"
+        );
+    }
     if hi >= 4 {
         assert!(
             combined >= 1.5,
             "combined model-loop speedup {combined:.2}x < 1.5x at {hi} threads"
+        );
+        assert!(
+            combined_vs_pr4 >= 1.2,
+            "pool + hist-subtraction speedup {combined_vs_pr4:.2}x < 1.2x over \
+             the PR 4 scoped-spawn baseline at {hi} threads"
         );
     } else if hi >= 2 {
         assert!(
             combined >= 1.1,
             "combined model-loop speedup {combined:.2}x < 1.1x at {hi} threads"
         );
-        println!("note: < 4 hardware threads; 1.5x bar scaled to 1.1x");
+        assert!(
+            combined_vs_pr4 >= 1.02,
+            "pool + hist-subtraction speedup {combined_vs_pr4:.2}x < 1.02x over \
+             the PR 4 scoped-spawn baseline at {hi} threads"
+        );
+        println!("note: < 4 hardware threads; 1.5x/1.2x bars scaled to 1.1x/1.02x");
     } else {
-        println!("note: single hardware thread; speedup bar skipped");
+        println!("note: single hardware thread; speedup bars skipped");
     }
 }

@@ -34,7 +34,8 @@ TUNE OPTIONS:
   --seed N          RNG seed                       (default: 0)
   --threads N       worker threads for the model-side hot paths (featurize,
                     GBT fit/predict, k-means); results are bit-identical at
-                    any value (default: available parallelism)
+                    any value (default: available parallelism; 0 rejected —
+                    pass 1 for serial)
   --no-early-stop   run the full budget
 
 SESSION OPTIONS (model tuning):
@@ -162,6 +163,21 @@ fn tuner_config(flags: &HashMap<String, String>) -> TunerConfig {
     cfg
 }
 
+/// Parse `--threads` if present. `0` is rejected outright: `set_threads(0)`
+/// stores the library's "unset" sentinel (fall back to all cores), so a
+/// user asking for zero workers would silently get the opposite.
+fn parse_threads_flag(flags: &HashMap<String, String>) -> Option<usize> {
+    flags.get("threads").map(|v| {
+        let t: usize = v.parse().expect("--threads must be an integer");
+        assert!(
+            t > 0,
+            "--threads 0 is invalid: pass 1 for serial, or omit the flag \
+             to use all cores"
+        );
+        t
+    })
+}
+
 fn session_config(flags: &HashMap<String, String>, tuner: TunerConfig) -> SessionConfig {
     let parse = |key: &str| -> Option<usize> {
         flags.get(key).map(|v| {
@@ -191,7 +207,7 @@ fn session_config(flags: &HashMap<String, String>, tuner: TunerConfig) -> Sessio
         transfer.topk = k.max(1);
     }
     let threads =
-        parse("threads").unwrap_or_else(crate::util::parallel::default_threads).max(1);
+        parse_threads_flag(flags).unwrap_or_else(crate::util::parallel::default_threads);
     SessionConfig {
         tuner,
         task_parallelism,
@@ -244,9 +260,8 @@ fn cmd_tune(flags: &HashMap<String, String>) -> i32 {
 
     if let Some(layer) = flags.get("layer") {
         // single-task path bypasses the session engine: apply --threads here
-        if let Some(t) = flags.get("threads") {
-            let t: usize = t.parse().expect("--threads must be an integer");
-            crate::util::parallel::set_threads(t.max(1));
+        if let Some(t) = parse_threads_flag(flags) {
+            crate::util::parallel::set_threads(t);
         }
         let Some((_, task)) =
             zoo::layer_table().into_iter().find(|(n, _)| n.eq_ignore_ascii_case(layer))
@@ -518,10 +533,16 @@ mod tests {
         flags.insert("threads".to_string(), "3".to_string());
         let s = session_config(&flags, TunerConfig::default());
         assert_eq!(s.threads, 3);
-        // 0 clamps to 1 (a session always has one worker)
+    }
+
+    #[test]
+    #[should_panic(expected = "--threads 0 is invalid")]
+    fn threads_zero_is_rejected_not_reinterpreted() {
+        // 0 used to be stored as set_threads' "unset" sentinel, silently
+        // giving the user ALL cores instead of the zero they asked for
+        let mut flags = HashMap::new();
         flags.insert("threads".to_string(), "0".to_string());
-        let s = session_config(&flags, TunerConfig::default());
-        assert_eq!(s.threads, 1);
+        session_config(&flags, TunerConfig::default());
     }
 
     #[test]

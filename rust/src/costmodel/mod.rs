@@ -21,7 +21,7 @@ use crate::sim::Measurement;
 use crate::space::features::{features_fill, features_into, NFEATURES};
 use crate::space::{Config, DesignSpace};
 use crate::util::matrix::FeatureMatrix;
-use crate::util::parallel::{par_rows_mut, threads};
+use crate::util::parallel::{gate, par_rows_mut, threads};
 use crate::util::rng::hash_unit;
 use std::cell::RefCell;
 use std::collections::HashMap;
@@ -49,8 +49,11 @@ impl Default for ModelTimeCost {
 const FEATURE_CACHE_CAP: usize = 1 << 16;
 
 /// Batches at least this large featurize in parallel, bypassing the cache
-/// (the memo lookup would serialize them anyway). Thread-count independent.
-const PAR_FEATURIZE_MIN: usize = 1024;
+/// (the memo lookup would serialize them anyway). Deliberately above the
+/// ~128-config batches the SA/GA/RL searchers re-query every round — those
+/// must keep hitting the memo — and scaled back up by [`gate`] under the
+/// scoped dispatch. Thread-count independent.
+const PAR_FEATURIZE_MIN: usize = 256;
 
 /// Flat-arena feature memo: config flat-index -> row in `rows`.
 struct FeatureCache {
@@ -300,7 +303,7 @@ impl CostModel {
         };
         let mut scratch = self.scratch.borrow_mut();
         scratch.clear();
-        if configs.len() >= PAR_FEATURIZE_MIN {
+        if configs.len() >= gate(PAR_FEATURIZE_MIN) {
             // huge batches: parallel per-row featurize straight into the
             // staging matrix (bypassing the memo, whose lookups would
             // serialize the sweep); rows are disjoint => bit-identical

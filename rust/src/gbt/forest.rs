@@ -10,8 +10,9 @@
 
 use super::tree::{Binner, BinnedMatrix, Tree, TreeParams};
 use crate::util::matrix::FeatureMatrix;
-use crate::util::parallel::{par_indexed_mut, threads};
+use crate::util::parallel::{gate, par_indexed_mut, threads};
 use crate::util::rng::Pcg32;
+use crate::util::simd::sum4_by;
 
 #[derive(Debug, Clone)]
 pub struct GbtParams {
@@ -23,6 +24,10 @@ pub struct GbtParams {
     /// Fraction of rows drawn (without replacement) per tree.
     pub subsample: f32,
     pub seed: u64,
+    /// Histogram subtraction in the per-tree split search (see
+    /// [`TreeParams::subtract_hists`]); `false` re-enacts the PR 4
+    /// rebuild-every-node baseline for benchmarking.
+    pub subtract_hists: bool,
 }
 
 impl Default for GbtParams {
@@ -35,17 +40,22 @@ impl Default for GbtParams {
             lambda: 1.0,
             subsample: 0.85,
             seed: 0,
+            subtract_hists: true,
         }
     }
 }
 
-/// Below these row counts the per-tree sweeps stay serial (thread spawn
-/// would dominate). The predict sweep walks ~depth nodes per row, so it
-/// amortizes a spawn far earlier than the residual sweep's single
-/// subtraction per row. Thread-count independent, so the choice never
-/// changes results.
-const PAR_PREDICT_MIN_ROWS: usize = 4096;
-const PAR_RESIDUAL_MIN_ROWS: usize = 1 << 16;
+/// Below these row counts the per-tree sweeps stay serial (dispatch
+/// overhead would dominate; [`gate`] scales each ~16x back up under the
+/// scoped spawn-per-call dispatch, exactly the PR 4 levels: 4096 / 65536 /
+/// 512). The boosting predict sweep walks ~depth nodes per row, so it
+/// amortizes dispatch far earlier than the residual sweep's single
+/// subtraction per row; batch prediction walks the whole ensemble per row
+/// and amortizes earlier still. Thread-count independent, so the choice
+/// never changes results.
+const PAR_FIT_PREDICT_MIN_ROWS: usize = 256;
+const PAR_RESIDUAL_MIN_ROWS: usize = 1 << 12;
+const PAR_BATCH_PREDICT_MIN_ROWS: usize = 32;
 
 /// A fitted boosted ensemble.
 pub struct Gbt {
@@ -96,11 +106,12 @@ impl Gbt {
             min_samples_leaf: params.min_samples_leaf,
             lambda: params.lambda,
             gamma: 1e-6,
+            subtract_hists: params.subtract_hists,
         };
         let mut rng = Pcg32::seed_from(params.seed ^ 0x6b7);
         let nthreads = threads();
-        let par_residual = nthreads > 1 && n >= PAR_RESIDUAL_MIN_ROWS;
-        let par_predict = nthreads > 1 && n >= PAR_PREDICT_MIN_ROWS;
+        let par_residual = nthreads > 1 && n >= gate(PAR_RESIDUAL_MIN_ROWS);
+        let par_predict = nthreads > 1 && n >= gate(PAR_FIT_PREDICT_MIN_ROWS);
 
         for _ in 0..params.n_trees {
             // residual sweep: per-element independent
@@ -139,34 +150,41 @@ impl Gbt {
         Gbt { base, trees, shrinkage: params.learning_rate }
     }
 
+    /// Ensemble prediction for one row (§Perf: the shared four-lane fold in
+    /// `util::simd` lets the per-tree node walks overlap in the pipeline —
+    /// a fixed per-call summation order, so every caller sees the same
+    /// bits at any thread count).
     #[inline]
     pub fn predict(&self, row: &[f32]) -> f32 {
-        let mut acc = self.base;
-        for t in &self.trees {
-            acc += self.shrinkage * t.predict(row);
-        }
-        acc
+        self.base + self.shrinkage * sum4_by(self.trees.len(), |i| self.trees[i].predict(row))
     }
 
-    /// Batch prediction over a flat matrix. Tree-major iteration keeps each
-    /// tree's node array cache-resident across the whole batch (§Perf: ~2x
-    /// over row-major); large batches switch to thread-parallel row chunks
-    /// (per-row independent, so bit-identical at any thread count).
+    /// Batch prediction over a flat matrix. Large batches run
+    /// thread-parallel row chunks (per-row independent, so bit-identical at
+    /// any thread count); small batches keep the tree-major sweep (§Perf:
+    /// each tree's node array stays cache-resident across the whole batch,
+    /// ~2x over row-major) with per-row lane accumulators that replay
+    /// [`sum4_by`]'s fold exactly — so both paths equal [`Gbt::predict`]
+    /// bit for bit.
     pub fn predict_matrix(&self, rows: &FeatureMatrix) -> Vec<f32> {
         let n = rows.len();
         let nthreads = threads();
-        if n >= 512 && nthreads > 1 {
+        if n >= gate(PAR_BATCH_PREDICT_MIN_ROWS) && nthreads > 1 {
             let mut acc = vec![0.0f32; n];
             par_indexed_mut(&mut acc, nthreads, |i, a| *a = self.predict(rows.row(i)));
             return acc;
         }
-        let mut acc = vec![self.base; n];
-        for t in &self.trees {
-            for (i, a) in acc.iter_mut().enumerate() {
-                *a += self.shrinkage * t.predict(rows.row(i));
+        let mut lanes = vec![[0.0f32; crate::util::simd::LANES]; n];
+        for (t, tree) in self.trees.iter().enumerate() {
+            let lane = t % crate::util::simd::LANES;
+            for (i, l) in lanes.iter_mut().enumerate() {
+                l[lane] += tree.predict(rows.row(i));
             }
         }
-        acc
+        lanes
+            .into_iter()
+            .map(|l| self.base + self.shrinkage * crate::util::simd::combine4(l))
+            .collect()
     }
 
     /// Batch prediction (compat shim over [`Gbt::predict_matrix`]).

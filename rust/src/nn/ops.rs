@@ -3,22 +3,32 @@
 //! Everything operates on flat row-major slices with explicit dimensions —
 //! the tensors here are small (the widest matmul is 128x64), so simple
 //! cache-friendly loops that the compiler can autovectorize beat any
-//! cleverness.
+//! cleverness. Shape checks are hard `assert!`s: every function here is a
+//! public entry point (reachable through `Backend::ppo_update` and the
+//! artifact runtime), and a silent shape mismatch in release builds would
+//! corrupt gradients instead of failing loudly.
 
 /// Output rows/cols per cache block of the matmul (closes the ROADMAP
 /// blocked-matmul item: both operand panels of a block stay L1-resident).
 const MM_BLOCK: usize = 16;
 
+/// Below this m x k x n flop count the matmul stays serial (pool dispatch
+/// would dominate; scaled back up by `gate` under the scoped dispatch).
+/// Thread-count independent, so the serial/parallel choice never changes
+/// results.
+const PAR_MM_MIN_WORK: usize = 1 << 16;
+
 /// `a [m x k] @ b [k x n] -> [m x n]`.
 ///
 /// §Perf: `b` is transposed once into a scratch panel so every output
 /// element is a unit-stride dot product, computed over `MM_BLOCK`-square
-/// output blocks for cache residency. Each element still accumulates in
+/// output blocks for cache residency; large products distribute output-row
+/// chunks over the worker pool. Each element still accumulates in
 /// ascending-`p` order — the same summation order as the naive loop — so
-/// results are bit-identical to the previous implementation.
+/// results are bit-identical to the naive kernel at any thread count.
 pub fn matmul(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), k * n);
+    assert_eq!(a.len(), m * k, "matmul: lhs shape mismatch");
+    assert_eq!(b.len(), k * n, "matmul: rhs shape mismatch");
     // pack b^T: bt[j * k + p] = b[p * n + j]
     let mut bt = vec![0.0; k * n];
     for (p, brow) in b.chunks(n).enumerate() {
@@ -27,22 +37,30 @@ pub fn matmul(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
         }
     }
     let mut out = vec![0.0; m * n];
-    for ib in (0..m).step_by(MM_BLOCK) {
-        let ie = (ib + MM_BLOCK).min(m);
+    let row_of = |arow: &[f64], orow: &mut [f64]| {
         for jb in (0..n).step_by(MM_BLOCK) {
             let je = (jb + MM_BLOCK).min(n);
-            for i in ib..ie {
-                let arow = &a[i * k..(i + 1) * k];
-                let orow = &mut out[i * n..(i + 1) * n];
-                for j in jb..je {
-                    let brow = &bt[j * k..(j + 1) * k];
-                    let mut acc = 0.0;
-                    for (&av, &bv) in arow.iter().zip(brow) {
-                        acc += av * bv;
-                    }
-                    orow[j] = acc;
+            for j in jb..je {
+                let brow = &bt[j * k..(j + 1) * k];
+                let mut acc = 0.0;
+                for (&av, &bv) in arow.iter().zip(brow) {
+                    acc += av * bv;
                 }
+                orow[j] = acc;
             }
+        }
+    };
+    let nthreads = crate::util::parallel::threads();
+    if n > 0 && nthreads > 1 && m * k * n >= crate::util::parallel::gate(PAR_MM_MIN_WORK) {
+        crate::util::parallel::par_rows_mut(&mut out, n, nthreads, |i, orow| {
+            row_of(&a[i * k..(i + 1) * k], orow);
+        });
+        return out;
+    }
+    for ib in (0..m).step_by(MM_BLOCK) {
+        let ie = (ib + MM_BLOCK).min(m);
+        for i in ib..ie {
+            row_of(&a[i * k..(i + 1) * k], &mut out[i * n..(i + 1) * n]);
         }
     }
     out
@@ -50,8 +68,8 @@ pub fn matmul(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
 
 /// Gradient wrt `a` of `a @ b`: `dout [m x n] @ b^T -> [m x k]`.
 pub fn matmul_grad_a(dout: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
-    debug_assert_eq!(dout.len(), m * n);
-    debug_assert_eq!(b.len(), k * n);
+    assert_eq!(dout.len(), m * n, "matmul_grad_a: dout shape mismatch");
+    assert_eq!(b.len(), k * n, "matmul_grad_a: rhs shape mismatch");
     let mut da = vec![0.0; m * k];
     for (darow, drow) in da.chunks_mut(k).zip(dout.chunks(n)) {
         for (p, d) in darow.iter_mut().enumerate() {
@@ -64,8 +82,8 @@ pub fn matmul_grad_a(dout: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> V
 
 /// Gradient wrt `b` of `a @ b`: `a^T [k x m] @ dout [m x n] -> [k x n]`.
 pub fn matmul_grad_b(a: &[f64], dout: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(dout.len(), m * n);
+    assert_eq!(a.len(), m * k, "matmul_grad_b: lhs shape mismatch");
+    assert_eq!(dout.len(), m * n, "matmul_grad_b: dout shape mismatch");
     let mut db = vec![0.0; k * n];
     for (arow, drow) in a.chunks(k).zip(dout.chunks(n)) {
         for (p, &av) in arow.iter().enumerate() {
@@ -81,7 +99,8 @@ pub fn matmul_grad_b(a: &[f64], dout: &[f64], m: usize, k: usize, n: usize) -> V
 /// Add a bias row to every row of `x [rows x n]` in place.
 pub fn add_bias(x: &mut [f64], bias: &[f64]) {
     let n = bias.len();
-    debug_assert_eq!(x.len() % n, 0);
+    assert!(n > 0, "add_bias: empty bias");
+    assert_eq!(x.len() % n, 0, "add_bias: ragged activation buffer");
     for row in x.chunks_mut(n) {
         for (v, &b) in row.iter_mut().zip(bias) {
             *v += b;
@@ -91,7 +110,8 @@ pub fn add_bias(x: &mut [f64], bias: &[f64]) {
 
 /// Bias gradient: column sums of `dout [rows x n]`.
 pub fn bias_grad(dout: &[f64], n: usize) -> Vec<f64> {
-    debug_assert_eq!(dout.len() % n, 0);
+    assert!(n > 0, "bias_grad: empty bias");
+    assert_eq!(dout.len() % n, 0, "bias_grad: ragged gradient buffer");
     let mut g = vec![0.0; n];
     for row in dout.chunks(n) {
         for (o, &d) in g.iter_mut().zip(row) {
@@ -114,7 +134,8 @@ pub fn tanh_inplace(x: &mut [f64]) {
 /// element, so results match the unfused pair bit for bit.
 pub fn bias_tanh_inplace(x: &mut [f64], bias: &[f64]) {
     let n = bias.len();
-    debug_assert_eq!(x.len() % n, 0);
+    assert!(n > 0, "bias_tanh_inplace: empty bias");
+    assert_eq!(x.len() % n, 0, "bias_tanh_inplace: ragged activation buffer");
     for row in x.chunks_mut(n) {
         for (v, &b) in row.iter_mut().zip(bias) {
             *v = (*v + b).tanh();
@@ -125,14 +146,15 @@ pub fn bias_tanh_inplace(x: &mut [f64], bias: &[f64]) {
 /// Backward through tanh given the *output* `y = tanh(x)`:
 /// `dx = dout * (1 - y^2)`.
 pub fn tanh_backward(dout: &[f64], y: &[f64]) -> Vec<f64> {
-    debug_assert_eq!(dout.len(), y.len());
+    assert_eq!(dout.len(), y.len(), "tanh_backward: shape mismatch");
     dout.iter().zip(y).map(|(&d, &t)| d * (1.0 - t * t)).collect()
 }
 
 /// Log-softmax over consecutive groups of `group` entries, in place
 /// (numerically stable: shift by the group max).
 pub fn log_softmax_groups(x: &mut [f64], group: usize) {
-    debug_assert_eq!(x.len() % group, 0);
+    assert!(group > 0, "log_softmax_groups: empty group");
+    assert_eq!(x.len() % group, 0, "log_softmax_groups: ragged logit buffer");
     for g in x.chunks_mut(group) {
         let max = g.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
         let lse = g.iter().map(|v| (v - max).exp()).sum::<f64>().ln() + max;
@@ -146,8 +168,9 @@ pub fn log_softmax_groups(x: &mut [f64], group: usize) {
 /// log-probs) and the forward output `lp`, the logit gradient per group is
 /// `dz_k = dlp_k - softmax_k * sum_j dlp_j`.
 pub fn log_softmax_backward(dlp: &[f64], lp: &[f64], group: usize) -> Vec<f64> {
-    debug_assert_eq!(dlp.len(), lp.len());
-    debug_assert_eq!(lp.len() % group, 0);
+    assert!(group > 0, "log_softmax_backward: empty group");
+    assert_eq!(dlp.len(), lp.len(), "log_softmax_backward: shape mismatch");
+    assert_eq!(lp.len() % group, 0, "log_softmax_backward: ragged log-prob buffer");
     let mut dz = vec![0.0; lp.len()];
     for ((dzg, dg), lg) in
         dz.chunks_mut(group).zip(dlp.chunks(group)).zip(lp.chunks(group))
@@ -223,6 +246,49 @@ mod tests {
                 assert_eq!(x.to_bits(), y.to_bits(), "{m}x{k}x{n}");
             }
         }
+    }
+
+    #[test]
+    fn parallel_matmul_matches_serial_bitwise() {
+        // a shape crossing PAR_MM_MIN_WORK: the row-chunked pool sweep must
+        // equal the serial blocked kernel bit for bit at any thread count
+        let (m, k, n) = (48, 64, 32);
+        assert!(m * k * n >= PAR_MM_MIN_WORK);
+        let mut rng = Pcg32::seed_from(23);
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, k * n);
+        let _knob = crate::util::parallel::thread_knob_guard();
+        crate::util::parallel::set_threads(1);
+        let serial = matmul(&a, &b, m, k, n);
+        crate::util::parallel::set_threads(4);
+        let par = matmul(&a, &b, m, k, n);
+        crate::util::parallel::set_threads(0);
+        for (x, y) in serial.iter().zip(&par) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "matmul: lhs shape mismatch")]
+    fn matmul_rejects_wrong_lhs_shape_in_release() {
+        // was a debug_assert: release builds silently read garbage shapes
+        let a = vec![0.0; 5];
+        let b = vec![0.0; 6];
+        matmul(&a, &b, 2, 3, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "add_bias: ragged activation buffer")]
+    fn add_bias_rejects_ragged_buffer_in_release() {
+        let mut x = vec![0.0; 7];
+        add_bias(&mut x, &[1.0, 2.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "log_softmax_groups: ragged logit buffer")]
+    fn log_softmax_rejects_ragged_buffer_in_release() {
+        let mut x = vec![0.0; 7];
+        log_softmax_groups(&mut x, 3);
     }
 
     #[test]

@@ -12,7 +12,7 @@ use super::fill_random_unvisited;
 use super::kmeans::{kmeans_matrix, lloyd, nearest_points, seed_centroids};
 use crate::space::{Config, DesignSpace};
 use crate::util::matrix::FeatureMatrix;
-use crate::util::parallel::{par_map, threads};
+use crate::util::parallel::{gate, par_map, threads};
 use crate::util::rng::Pcg32;
 use std::collections::HashSet;
 
@@ -36,8 +36,9 @@ pub struct AdaptiveSampleResult {
 const SWEEP_ITERS: usize = 25;
 
 /// Below this points x dims size the sweep stays serial (speculating the
-/// post-knee k's would cost more than it saves). Thread-count independent.
-const PAR_SWEEP_MIN_WORK: usize = 1 << 11;
+/// post-knee k's would cost more than it saves; [`gate`] scales it back up
+/// under the scoped dispatch). Thread-count independent.
+const PAR_SWEEP_MIN_WORK: usize = 1 << 7;
 
 /// Sweep k over [K_MIN, K_MAX) in K_STEP strides; return the chosen k-means
 /// clustering at the knee of the loss curve.
@@ -51,7 +52,7 @@ const PAR_SWEEP_MIN_WORK: usize = 1 << 11;
 /// the serial path at any thread count; only wall-clock changes.
 fn knee_kmeans(points: &FeatureMatrix, rng: &mut Pcg32) -> (usize, super::kmeans::KMeansResult) {
     let nthreads = threads();
-    if nthreads <= 1 || points.len() * points.dim() < PAR_SWEEP_MIN_WORK {
+    if nthreads <= 1 || points.len() * points.dim() < gate(PAR_SWEEP_MIN_WORK) {
         // the reference semantics: serial early-breaking sweep
         let mut prev_loss = f64::INFINITY;
         let mut chosen = None;

@@ -3,15 +3,18 @@
 //! (paper Algorithm 1). This is a hot path: it runs for every k in the
 //! knee sweep, every tuning iteration.
 //!
-//! §Perf: points and centroids live in flat [`FeatureMatrix`] buffers, and
-//! the Lloyd *assignment* sweep (the O(n·k·d) part) distributes points
-//! over threads on large workloads. Seeding — the only stochastic part —
-//! always runs serially, and the per-point loss fold keeps its original
-//! order, so any thread count produces bit-identical clusterings.
+//! §Perf: points and centroids live in flat [`FeatureMatrix`] buffers,
+//! distances go through the shared lane-unrolled [`dist2`] kernel
+//! (`util::simd`), and the Lloyd *assignment* sweep (the O(n·k·d) part)
+//! distributes points over the persistent worker pool on large workloads.
+//! Seeding — the only stochastic part — always runs serially, and the
+//! per-point loss fold keeps its original order, so any thread count
+//! produces bit-identical clusterings.
 
 use crate::util::matrix::FeatureMatrix;
-use crate::util::parallel::{par_indexed_mut, threads};
+use crate::util::parallel::{gate, par_indexed_mut, threads};
 use crate::util::rng::Pcg32;
+use crate::util::simd::dist2;
 
 #[derive(Debug, Clone)]
 pub struct KMeansResult {
@@ -23,20 +26,11 @@ pub struct KMeansResult {
     pub loss: f64,
 }
 
-#[inline]
-fn dist2(a: &[f32], b: &[f32]) -> f32 {
-    let mut acc = 0.0f32;
-    for (x, y) in a.iter().zip(b) {
-        let d = x - y;
-        acc += d * d;
-    }
-    acc
-}
-
-/// Below this n x k x d workload the assignment sweep stays serial (thread
-/// spawn would dominate). Thread-count independent, so the parallel/serial
-/// choice never changes results.
-const PAR_ASSIGN_MIN_WORK: usize = 1 << 16;
+/// Below this n x k x d workload the assignment sweep stays serial
+/// (dispatch overhead would dominate; [`gate`] scales it ~16x back up when
+/// the scoped spawn-per-call dispatch is active). Thread-count independent,
+/// so the parallel/serial choice never changes results.
+const PAR_ASSIGN_MIN_WORK: usize = 1 << 12;
 
 /// k-means++ seeding — consumes the RNG exactly as the combined
 /// `kmeans` always has (Lloyd draws nothing), which is what lets the
@@ -95,7 +89,7 @@ pub(crate) fn lloyd(
     let mut sums = vec![0.0f64; k * d];
     let mut counts = vec![0usize; k];
     let mut loss = 0.0f64;
-    let parallel = par_threads > 1 && n * k * d >= PAR_ASSIGN_MIN_WORK;
+    let parallel = par_threads > 1 && n * k * d >= gate(PAR_ASSIGN_MIN_WORK);
     for _ in 0..max_iters {
         // assignment sweep: per-point independent
         {

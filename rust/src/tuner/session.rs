@@ -665,6 +665,19 @@ mod tests {
     }
 
     #[test]
+    fn wall_model_device_slot_argmin_never_sees_an_empty_slice() {
+        // the schedule loop picks a device slot via stats::argmin(&slots)
+        // and immediately indexes with the result; argmin now panics on
+        // empty input, so pin that the slot vector stays non-empty even for
+        // a (nonsensical) zero-slot request — schedule_wall clamps it to 1
+        let iters = vec![(1.0, 2.0, 0.5); 3];
+        let (zero, walls_zero, _) = schedule_wall(&[iters.clone()], 1, 0, 1);
+        let (one, walls_one, _) = schedule_wall(&[iters], 1, 1, 1);
+        assert_eq!(zero.to_bits(), one.to_bits());
+        assert_eq!(walls_zero, walls_one);
+    }
+
+    #[test]
     fn wall_model_parallel_tasks_share_device_slots() {
         // two identical tasks, one device slot: measurements serialize, so
         // the makespan cannot drop below the summed device time

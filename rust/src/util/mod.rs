@@ -6,4 +6,5 @@ pub mod matrix;
 pub mod parallel;
 pub mod prop;
 pub mod rng;
+pub mod simd;
 pub mod stats;

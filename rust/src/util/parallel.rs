@@ -1,4 +1,5 @@
-//! Scoped-thread parallel primitives (tokio/rayon are not vendored).
+//! Deterministic parallel primitives over a persistent worker pool
+//! (tokio/rayon are not vendored).
 //!
 //! Everything here preserves the determinism contract of the tuning loop:
 //! work is only split where each output element depends on nothing but its
@@ -6,14 +7,41 @@
 //! thread count (including 1) produces bit-identical values. The
 //! process-wide worker count is the `--threads` knob: [`set_threads`] /
 //! [`threads`], defaulting to [`default_threads`].
+//!
+//! §Perf: parallel regions dispatch through a lazily-initialized persistent
+//! pool of parked OS threads ([`Dispatch::Pool`], the default) instead of
+//! spawning fresh threads per call. Injection costs ~1 µs vs the tens of µs
+//! of a `std::thread::scope` spawn, which is what lets the size gates at
+//! the call sites (`gate`) sit ~16x lower than the PR 4 spawn-per-call
+//! levels. The old scoped dispatch is retained behind
+//! [`set_dispatch`]`(Dispatch::Scoped)` so benches can measure pool-vs-spawn
+//! and tests can pin the two bit-identical.
+//!
+//! Pool lifecycle: workers spawn on first parallel dispatch
+//! (`available_parallelism - 1` of them — the calling thread always
+//! executes chunk 0 itself), park in a condvar when idle, and are never
+//! joined — teardown is shutdown-free (parked threads die with the
+//! process). Nested regions cannot deadlock: a thread waiting on its
+//! region's completion latch *helps*, executing queued chunks (its own or
+//! other regions') until its latch opens.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex, OnceLock};
+use std::time::Duration;
 
-/// 0 = unset: fall back to [`default_threads`].
+/// 0 = unset: fall back to [`default_threads`]. `set_threads(0)` therefore
+/// means "reset to the default", not "zero workers" — the CLI rejects an
+/// explicit `--threads 0` before it can reach this sentinel.
 static CONFIGURED_THREADS: AtomicUsize = AtomicUsize::new(0);
 
 /// Set the process-wide worker-thread count (the `--threads` CLI knob).
 /// Only wall-clock changes with this value — never results.
+///
+/// `0` stores the "unset" sentinel: [`threads`] falls back to
+/// [`default_threads`] (all cores). Callers that mean "serial" must pass 1;
+/// the CLI layer rejects `--threads 0` so the sentinel can't be reached
+/// from the command line by accident.
 pub fn set_threads(n: usize) {
     CONFIGURED_THREADS.store(n, Ordering::Relaxed);
 }
@@ -36,7 +64,207 @@ pub fn thread_knob_guard() -> std::sync::MutexGuard<'static, ()> {
     LOCK.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
 }
 
-/// Apply `f` to every item of `items` using up to `threads` OS threads,
+/// Which backend executes parallel regions. [`Dispatch::Pool`] (default)
+/// injects chunks into the persistent worker pool; [`Dispatch::Scoped`]
+/// re-enacts the PR 4 spawn-per-call dispatch. Results are bit-identical
+/// either way (same contiguous-chunk partitioning, disjoint outputs); only
+/// dispatch overhead differs — kept so benches can measure the difference
+/// and tests can pin the equivalence.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dispatch {
+    Pool,
+    Scoped,
+}
+
+static DISPATCH: AtomicUsize = AtomicUsize::new(0); // 0 = Pool, 1 = Scoped
+
+/// Select the dispatch backend (bench/test hook; results never change).
+pub fn set_dispatch(d: Dispatch) {
+    DISPATCH.store(d as usize, Ordering::Relaxed);
+}
+
+/// The active dispatch backend.
+pub fn dispatch() -> Dispatch {
+    match DISPATCH.load(Ordering::Relaxed) {
+        0 => Dispatch::Pool,
+        _ => Dispatch::Scoped,
+    }
+}
+
+/// Scale a pool-tuned min-work gate for the active dispatch: spawning a
+/// scoped thread costs ~16x more than injecting into the parked pool, so
+/// under [`Dispatch::Scoped`] the gates return to their PR 4 levels. The
+/// gate only picks serial vs parallel execution — which never changes
+/// results — so this is a pure wall-clock knob.
+#[inline]
+pub fn gate(pool_min_work: usize) -> usize {
+    match dispatch() {
+        Dispatch::Pool => pool_min_work,
+        Dispatch::Scoped => pool_min_work.saturating_mul(16),
+    }
+}
+
+// --- the persistent pool ----------------------------------------------------
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct PoolShared {
+    queue: Mutex<VecDeque<Job>>,
+    work_cv: Condvar,
+}
+
+struct Pool {
+    shared: &'static PoolShared,
+}
+
+static POOL: OnceLock<Pool> = OnceLock::new();
+
+fn pool() -> &'static Pool {
+    POOL.get_or_init(|| {
+        let shared: &'static PoolShared = Box::leak(Box::new(PoolShared {
+            queue: Mutex::new(VecDeque::new()),
+            work_cv: Condvar::new(),
+        }));
+        // the caller of every region runs chunk 0 itself, so N-1 workers
+        // saturate N cores; at least one worker so a 1-core host still
+        // exercises the pool paths
+        let workers = default_threads().saturating_sub(1).max(1);
+        for w in 0..workers {
+            std::thread::Builder::new()
+                .name(format!("release-pool-{w}"))
+                .spawn(move || worker_loop(shared))
+                .expect("spawn pool worker");
+        }
+        Pool { shared }
+    })
+}
+
+fn worker_loop(shared: &'static PoolShared) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(j) = q.pop_front() {
+                    break j;
+                }
+                q = shared.work_cv.wait(q).unwrap();
+            }
+        };
+        job(); // jobs catch panics internally; workers never die
+    }
+}
+
+/// Completion latch for one parallel region (lives on the caller's stack).
+struct Latch {
+    remaining: Mutex<usize>,
+    done_cv: Condvar,
+    panicked: AtomicBool,
+}
+
+impl Latch {
+    fn count_down(&self) {
+        let mut r = self.remaining.lock().unwrap();
+        *r -= 1;
+        if *r == 0 {
+            self.done_cv.notify_all();
+        }
+    }
+}
+
+/// Run `for_chunk(ci)` for every `ci in 0..nchunks` across the active
+/// dispatch backend, returning only after all chunks completed. Chunk 0
+/// always runs on the calling thread.
+fn run_chunks<F>(nchunks: usize, for_chunk: F)
+where
+    F: Fn(usize) + Sync,
+{
+    debug_assert!(nchunks >= 1);
+    match dispatch() {
+        Dispatch::Pool => pool_run_chunks(nchunks, &for_chunk),
+        Dispatch::Scoped => std::thread::scope(|scope| {
+            for ci in 1..nchunks {
+                let f = &for_chunk;
+                scope.spawn(move || f(ci));
+            }
+            for_chunk(0);
+        }),
+    }
+}
+
+fn pool_run_chunks(nchunks: usize, for_chunk: &(dyn Fn(usize) + Sync)) {
+    if nchunks == 1 {
+        for_chunk(0);
+        return;
+    }
+    let p = pool();
+    let latch = Latch {
+        remaining: Mutex::new(nchunks - 1),
+        done_cv: Condvar::new(),
+        panicked: AtomicBool::new(false),
+    };
+    {
+        // SAFETY: `for_chunk` and `latch` outlive every queued job — this
+        // function does not return (not even by unwinding; see the
+        // catch_unwind below) until the latch has counted every job done.
+        let f = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(
+                for_chunk,
+            )
+        };
+        let l = unsafe { std::mem::transmute::<&Latch, &'static Latch>(&latch) };
+        let mut q = p.shared.queue.lock().unwrap();
+        for ci in 1..nchunks {
+            q.push_back(Box::new(move || {
+                let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(ci)));
+                if r.is_err() {
+                    l.panicked.store(true, Ordering::Relaxed);
+                }
+                l.count_down();
+            }));
+        }
+        drop(q);
+        p.shared.work_cv.notify_all();
+    }
+    // run chunk 0 here; even if it panics, the queued jobs still borrow the
+    // stack — drain the latch before resuming the unwind
+    let own = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| for_chunk(0)));
+    // helping wait: execute queued chunks (ours or a nested region's) until
+    // the latch opens — this is what makes nested regions deadlock-free
+    // with a fixed worker count
+    loop {
+        if *latch.remaining.lock().unwrap() == 0 {
+            break;
+        }
+        let job = p.shared.queue.lock().unwrap().pop_front();
+        if let Some(j) = job {
+            j();
+            continue;
+        }
+        let r = latch.remaining.lock().unwrap();
+        if *r == 0 {
+            break;
+        }
+        // timed wait: a nested region may enqueue work that only signals
+        // `work_cv`, so re-poll the queue instead of sleeping on it
+        let _ = latch.done_cv.wait_timeout(r, Duration::from_micros(100)).unwrap();
+    }
+    if let Err(e) = own {
+        std::panic::resume_unwind(e);
+    }
+    if latch.panicked.load(Ordering::Relaxed) {
+        panic!("a pool worker chunk panicked");
+    }
+}
+
+/// `*mut T` that may cross threads — only ever dereferenced through
+/// disjoint per-chunk ranges computed from the chunk index.
+struct SendPtr<T>(*mut T);
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
+// --- the three primitives ---------------------------------------------------
+
+/// Apply `f` to every item of `items` using up to `threads` workers,
 /// preserving order. Falls back to serial for tiny inputs.
 pub fn par_map<T, U, F>(items: &[T], threads: usize, f: F) -> Vec<U>
 where
@@ -48,24 +276,26 @@ where
     if threads <= 1 || items.len() < 2 {
         return items.iter().map(&f).collect();
     }
-    let mut out: Vec<Option<U>> = Vec::with_capacity(items.len());
-    out.resize_with(items.len(), || None);
-    let chunk = items.len().div_ceil(threads);
-    std::thread::scope(|scope| {
-        for (slot_chunk, item_chunk) in out.chunks_mut(chunk).zip(items.chunks(chunk)) {
-            let f = &f;
-            scope.spawn(move || {
-                for (slot, item) in slot_chunk.iter_mut().zip(item_chunk) {
-                    *slot = Some(f(item));
-                }
-            });
+    let n = items.len();
+    let chunk = n.div_ceil(threads);
+    let nchunks = n.div_ceil(chunk);
+    let mut out: Vec<Option<U>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    let base = SendPtr(out.as_mut_ptr());
+    run_chunks(nchunks, |ci| {
+        let start = ci * chunk;
+        let end = (start + chunk).min(n);
+        // SAFETY: chunk ranges [start, end) are disjoint per `ci`.
+        let slots = unsafe { std::slice::from_raw_parts_mut(base.0.add(start), end - start) };
+        for (slot, item) in slots.iter_mut().zip(&items[start..end]) {
+            *slot = Some(f(item));
         }
     });
     out.into_iter().map(|o| o.unwrap()).collect()
 }
 
 /// In-place indexed parallel sweep: `f(i, &mut out[i])` for every element,
-/// partitioned into contiguous chunks across up to `threads` OS threads.
+/// partitioned into contiguous chunks across up to `threads` workers.
 /// Each element is written independently of all others, so the result is
 /// bit-identical at any thread count.
 pub fn par_indexed_mut<U, F>(out: &mut [U], threads: usize, f: F)
@@ -80,30 +310,37 @@ where
         }
         return;
     }
-    let chunk = out.len().div_ceil(threads);
-    std::thread::scope(|scope| {
-        for (ci, slot_chunk) in out.chunks_mut(chunk).enumerate() {
-            let f = &f;
-            scope.spawn(move || {
-                let base = ci * chunk;
-                for (j, slot) in slot_chunk.iter_mut().enumerate() {
-                    f(base + j, slot);
-                }
-            });
+    let n = out.len();
+    let chunk = n.div_ceil(threads);
+    let nchunks = n.div_ceil(chunk);
+    let base = SendPtr(out.as_mut_ptr());
+    run_chunks(nchunks, |ci| {
+        let start = ci * chunk;
+        let end = (start + chunk).min(n);
+        // SAFETY: chunk ranges [start, end) are disjoint per `ci`.
+        let slots = unsafe { std::slice::from_raw_parts_mut(base.0.add(start), end - start) };
+        for (j, slot) in slots.iter_mut().enumerate() {
+            f(start + j, slot);
         }
     });
 }
 
 /// Parallel fill of a flat row-major matrix: `f(row_index, row_slice)` for
 /// every `dim`-wide row of `data`, row blocks distributed over up to
-/// `threads` OS threads. Rows are disjoint, so the result is bit-identical
+/// `threads` workers. Rows are disjoint, so the result is bit-identical
 /// at any thread count.
-pub fn par_rows_mut<F>(data: &mut [f32], dim: usize, threads: usize, f: F)
+pub fn par_rows_mut<T, F>(data: &mut [T], dim: usize, threads: usize, f: F)
 where
-    F: Fn(usize, &mut [f32]) + Sync,
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
 {
     assert!(dim > 0, "row width must be positive");
-    debug_assert_eq!(data.len() % dim, 0);
+    assert_eq!(
+        data.len() % dim,
+        0,
+        "ragged row-major buffer: len {} is not a multiple of dim {dim}",
+        data.len()
+    );
     let rows = data.len() / dim;
     let threads = threads.max(1).min(rows.max(1));
     if threads <= 1 || rows < 2 {
@@ -113,14 +350,20 @@ where
         return;
     }
     let rows_per = rows.div_ceil(threads);
-    std::thread::scope(|scope| {
-        for (ci, block) in data.chunks_mut(rows_per * dim).enumerate() {
-            let f = &f;
-            scope.spawn(move || {
-                for (j, row) in block.chunks_mut(dim).enumerate() {
-                    f(ci * rows_per + j, row);
-                }
-            });
+    let nchunks = rows.div_ceil(rows_per);
+    let base = SendPtr(data.as_mut_ptr());
+    run_chunks(nchunks, |ci| {
+        let start_row = ci * rows_per;
+        let end_row = (start_row + rows_per).min(rows);
+        // SAFETY: row-block ranges are disjoint per `ci`.
+        let block = unsafe {
+            std::slice::from_raw_parts_mut(
+                base.0.add(start_row * dim),
+                (end_row - start_row) * dim,
+            )
+        };
+        for (j, row) in block.chunks_mut(dim).enumerate() {
+            f(start_row + j, row);
         }
     });
 }
@@ -182,6 +425,15 @@ mod tests {
     }
 
     #[test]
+    #[should_panic(expected = "ragged row-major buffer")]
+    fn par_rows_mut_rejects_ragged_buffer() {
+        // 13 elements at dim 5: the old debug_assert let release builds
+        // silently drop the trailing 3 elements and mis-index row blocks
+        let mut data = vec![0.0f32; 13];
+        par_rows_mut(&mut data, 5, 4, |_, _| {});
+    }
+
+    #[test]
     fn thread_knob_is_always_at_least_one() {
         // the global knob is shared across concurrently-running tests, so
         // no exact value can be asserted here — only the clamp invariant
@@ -202,5 +454,86 @@ mod tests {
             std::thread::sleep(std::time::Duration::from_millis(1));
         });
         assert!(ids.lock().unwrap().len() > 1);
+    }
+
+    #[test]
+    fn pool_matches_scoped_dispatch_bitwise() {
+        // the two dispatch backends share the chunk partitioning, so every
+        // primitive must produce byte-identical output under both
+        let _knob = thread_knob_guard();
+        let xs: Vec<f64> = (0..501).map(|i| (i as f64).sin()).collect();
+        let run = |d: Dispatch| {
+            set_dispatch(d);
+            let mapped = par_map(&xs, 3, |x| x * 1.00001 + 2.0);
+            let mut idx = vec![0.0f64; 501];
+            par_indexed_mut(&mut idx, 3, |i, s| *s = xs[i] * 3.0);
+            let mut rows = vec![0.0f32; 50 * 7];
+            par_rows_mut(&mut rows, 7, 3, |i, row| {
+                for (j, v) in row.iter_mut().enumerate() {
+                    *v = (i * 31 + j) as f32;
+                }
+            });
+            set_dispatch(Dispatch::Pool);
+            (mapped, idx, rows)
+        };
+        let a = run(Dispatch::Pool);
+        let b = run(Dispatch::Scoped);
+        assert_eq!(a.0, b.0);
+        assert_eq!(a.1, b.1);
+        assert_eq!(a.2, b.2);
+    }
+
+    #[test]
+    fn nested_regions_complete_without_deadlock() {
+        // outer par_map whose chunks each run an inner par_indexed_mut —
+        // the knee sweep's shape. Helping-wait must drain nested work even
+        // when all pool workers are busy with outer chunks.
+        let outer: Vec<usize> = (0..8).collect();
+        let got = par_map(&outer, 4, |&o| {
+            let mut inner = vec![0u64; 64];
+            par_indexed_mut(&mut inner, 4, |i, s| *s = (o * 1000 + i) as u64);
+            inner.iter().sum::<u64>()
+        });
+        let want: Vec<u64> = outer
+            .iter()
+            .map(|&o| (0..64u64).map(|i| o as u64 * 1000 + i).sum())
+            .collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn pool_reuse_no_state_leakage_between_sweeps() {
+        // two consecutive sweeps with different closures over the same
+        // pool: the second must see none of the first's effects
+        let mut a = vec![0u32; 300];
+        par_indexed_mut(&mut a, 4, |i, s| *s = i as u32 * 2);
+        let mut b = vec![0u32; 300];
+        par_indexed_mut(&mut b, 4, |i, s| *s = i as u32 + 7);
+        assert!(a.iter().enumerate().all(|(i, &v)| v == i as u32 * 2));
+        assert!(b.iter().enumerate().all(|(i, &v)| v == i as u32 + 7));
+    }
+
+    #[test]
+    fn worker_chunk_panic_propagates_to_caller() {
+        let res = std::panic::catch_unwind(|| {
+            let xs: Vec<u64> = (0..64).collect();
+            par_map(&xs, 8, |&x| {
+                if x == 63 {
+                    panic!("chunk boom");
+                }
+                x
+            })
+        });
+        assert!(res.is_err(), "panic in a pool chunk must reach the caller");
+    }
+
+    #[test]
+    fn gate_scales_with_dispatch() {
+        let _knob = thread_knob_guard();
+        set_dispatch(Dispatch::Pool);
+        assert_eq!(gate(1 << 14), 1 << 14);
+        set_dispatch(Dispatch::Scoped);
+        assert_eq!(gate(1 << 14), 1 << 18);
+        set_dispatch(Dispatch::Pool);
     }
 }

@@ -1,0 +1,127 @@
+//! Flat SIMD-friendly f32 kernels shared by the model-side hot loops
+//! (`gbt` ensemble prediction, k-means `dist2`).
+//!
+//! Each kernel folds with four independent accumulator lanes, combined
+//! pairwise at the end — the shape LLVM autovectorizes to packed adds/muls
+//! and that a scalar core still pipelines (no loop-carried dependency per
+//! lane). Lane folding is a *fixed* summation order: every call with the
+//! same inputs produces the same bits on every thread count, so the
+//! determinism-under-parallelism contract is untouched. (The lane order
+//! differs from a plain left-to-right fold, so adopting a kernel at a call
+//! site is a deliberate, pinned change — see the callers' tests.)
+
+/// Number of independent accumulator lanes.
+pub const LANES: usize = 4;
+
+/// Combine the four lanes pairwise: (l0 + l1) + (l2 + l3). Public so
+/// callers that maintain their own lane accumulators (e.g. the tree-major
+/// batch-predict sweep) reduce in exactly the kernels' order.
+#[inline(always)]
+pub fn combine4(acc: [f32; LANES]) -> f32 {
+    (acc[0] + acc[1]) + (acc[2] + acc[3])
+}
+
+/// Squared Euclidean distance between two equal-length f32 slices.
+#[inline]
+pub fn dist2(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len().min(b.len());
+    let mut acc = [0.0f32; LANES];
+    let mut i = 0;
+    while i + LANES <= n {
+        let d0 = a[i] - b[i];
+        let d1 = a[i + 1] - b[i + 1];
+        let d2 = a[i + 2] - b[i + 2];
+        let d3 = a[i + 3] - b[i + 3];
+        acc[0] += d0 * d0;
+        acc[1] += d1 * d1;
+        acc[2] += d2 * d2;
+        acc[3] += d3 * d3;
+        i += LANES;
+    }
+    while i < n {
+        let d = a[i] - b[i];
+        acc[i % LANES] += d * d;
+        i += 1;
+    }
+    combine4(acc)
+}
+
+/// Sum `f(0), f(1), ..., f(n-1)` with four independent accumulator lanes
+/// (the ensemble-prediction kernel: `f(i)` is tree `i`'s leaf value, and
+/// lane independence lets the per-tree node walks overlap in the pipeline).
+#[inline]
+pub fn sum4_by<F: FnMut(usize) -> f32>(n: usize, mut f: F) -> f32 {
+    let mut acc = [0.0f32; LANES];
+    let mut i = 0;
+    while i + LANES <= n {
+        acc[0] += f(i);
+        acc[1] += f(i + 1);
+        acc[2] += f(i + 2);
+        acc[3] += f(i + 3);
+        i += LANES;
+    }
+    while i < n {
+        acc[i % LANES] += f(i);
+        i += 1;
+    }
+    combine4(acc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn randv(rng: &mut Pcg32, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    /// Reference fold in the same lane order — the kernels' exact contract.
+    fn lane_ref(n: usize, term: impl Fn(usize) -> f32) -> f32 {
+        let mut acc = [0.0f32; LANES];
+        for i in 0..n {
+            // matches both the unrolled body (i % LANES cycles 0..3 within
+            // each full block) and the scalar tail
+            acc[i % LANES] += term(i);
+        }
+        (acc[0] + acc[1]) + (acc[2] + acc[3])
+    }
+
+    #[test]
+    fn dist2_matches_lane_reference_bitwise() {
+        let mut rng = Pcg32::seed_from(31);
+        for n in [0usize, 1, 3, 4, 5, 8, 19, 64, 257] {
+            let a = randv(&mut rng, n);
+            let b = randv(&mut rng, n);
+            let e = dist2(&a, &b);
+            let want_e = lane_ref(n, |i| (a[i] - b[i]) * (a[i] - b[i]));
+            assert_eq!(e.to_bits(), want_e.to_bits(), "dist2 n={n}");
+        }
+    }
+
+    #[test]
+    fn dist2_properties() {
+        let mut rng = Pcg32::seed_from(32);
+        let a = randv(&mut rng, 17);
+        let b = randv(&mut rng, 17);
+        assert_eq!(dist2(&a, &a), 0.0);
+        assert!(dist2(&a, &b) > 0.0);
+        // symmetry holds bitwise: (x-y)^2 == (y-x)^2 per lane
+        assert_eq!(dist2(&a, &b).to_bits(), dist2(&b, &a).to_bits());
+        // close to the serial fold (tolerance: reassociation only)
+        let serial: f32 = a.iter().zip(&b).map(|(x, y)| (x - y) * (x - y)).sum();
+        assert!((dist2(&a, &b) - serial).abs() <= serial.abs() * 1e-5 + 1e-6);
+    }
+
+    #[test]
+    fn sum4_by_matches_lane_reference() {
+        let mut rng = Pcg32::seed_from(33);
+        for n in [0usize, 1, 4, 7, 200] {
+            let xs = randv(&mut rng, n);
+            let got = sum4_by(n, |i| xs[i]);
+            let want = lane_ref(n, |i| xs[i]);
+            assert_eq!(got.to_bits(), want.to_bits(), "n={n}");
+        }
+    }
+}

@@ -43,7 +43,11 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
     }
 }
 
+/// Index of the largest element. Panics on an empty slice (matching
+/// [`percentile`]'s non-empty contract): the old silent `0` was out of
+/// bounds for every caller that immediately indexes with it.
 pub fn argmax(xs: &[f64]) -> usize {
+    assert!(!xs.is_empty(), "argmax of an empty slice");
     let mut best = 0;
     for i in 1..xs.len() {
         if xs[i] > xs[best] {
@@ -53,7 +57,11 @@ pub fn argmax(xs: &[f64]) -> usize {
     best
 }
 
+/// Index of the smallest element. Panics on an empty slice (matching
+/// [`percentile`]'s non-empty contract): the old silent `0` was out of
+/// bounds for every caller that immediately indexes with it.
 pub fn argmin(xs: &[f64]) -> usize {
+    assert!(!xs.is_empty(), "argmin of an empty slice");
     let mut best = 0;
     for i in 1..xs.len() {
         if xs[i] < xs[best] {
@@ -142,6 +150,20 @@ mod tests {
         let xs = [3.0, 1.0, 4.0, 1.5];
         assert_eq!(argmax(&xs), 2);
         assert_eq!(argmin(&xs), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "argmin of an empty slice")]
+    fn argmin_empty_panics() {
+        // the old behavior returned 0, which every caller then used as an
+        // index — out of bounds on the very slice that was empty
+        argmin(&[]);
+    }
+
+    #[test]
+    #[should_panic(expected = "argmax of an empty slice")]
+    fn argmax_empty_panics() {
+        argmax(&[]);
     }
 
     #[test]

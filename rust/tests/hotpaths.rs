@@ -18,7 +18,11 @@ mod common;
 
 use common::{measurer, native_backend, tiny_layer};
 use release::tuner::{tune, MethodSpec, TuneResult, TunerConfig};
-use release::util::parallel::{set_threads, thread_knob_guard};
+use release::util::parallel::{
+    par_indexed_mut, par_map, par_rows_mut, set_dispatch, set_threads, thread_knob_guard,
+    Dispatch,
+};
+use release::util::prop::forall;
 use release::workload::ConvTask;
 
 fn tiny_task() -> ConvTask {
@@ -104,6 +108,119 @@ fn tune_results_bit_identical_across_thread_counts_all_arms() {
             assert_bitwise_equal_runs(name, &runs[0], r);
         }
     }
+}
+
+/// Property test for the three parallel primitives across edge shapes —
+/// empty, singleton, fewer items than threads, non-dividing lengths, and
+/// `dim` far wider than the row count — asserting bit-identity with the
+/// serial path at threads ∈ {1, 2, 3, 8} on the persistent pool.
+#[test]
+fn parallel_primitives_bit_identical_across_edge_shapes() {
+    let shapes: [usize; 8] = [0, 1, 2, 3, 7, 8, 13, 257];
+    forall(25, 0x9001, |rng| {
+        let n = shapes[rng.below(shapes.len())];
+        let salt = rng.below(1 << 20) as u64;
+        let items: Vec<u64> = (0..n as u64).map(|i| i.wrapping_mul(salt + 3)).collect();
+
+        // par_map: serial reference is threads = 1
+        let want: Vec<u64> = par_map(&items, 1, |&x| x ^ salt);
+        for t in [2usize, 3, 8] {
+            assert_eq!(par_map(&items, t, |&x| x ^ salt), want, "par_map n={n} t={t}");
+        }
+
+        // par_indexed_mut
+        let mut want_idx = vec![0f64; n];
+        par_indexed_mut(&mut want_idx, 1, |i, s| *s = (i as f64 + 0.25) * salt as f64);
+        for t in [2usize, 3, 8] {
+            let mut out = vec![0f64; n];
+            par_indexed_mut(&mut out, t, |i, s| *s = (i as f64 + 0.25) * salt as f64);
+            assert_eq!(out, want_idx, "par_indexed_mut n={n} t={t}");
+        }
+
+        // par_rows_mut, including dim >> rows (wide rows, tiny row count)
+        for (rows, dim) in [(n, 3), (2, 512), (n, 1)] {
+            let fill = |i: usize, row: &mut [f32]| {
+                for (j, v) in row.iter_mut().enumerate() {
+                    *v = (i * dim + j) as f32 + salt as f32;
+                }
+            };
+            let mut want_rows = vec![0f32; rows * dim];
+            par_rows_mut(&mut want_rows, dim, 1, fill);
+            for t in [2usize, 3, 8] {
+                let mut out = vec![0f32; rows * dim];
+                par_rows_mut(&mut out, dim, t, fill);
+                assert_eq!(out, want_rows, "par_rows_mut rows={rows} dim={dim} t={t}");
+            }
+        }
+    });
+}
+
+/// Pool-reuse pin: consecutive sweeps with different closure types over
+/// the same persistent workers must not leak any state between them, and
+/// interleaving with a tuner run (which exercises the pool internally)
+/// must leave later primitive sweeps untouched.
+#[test]
+fn pool_reuse_across_sweeps_and_tuner_runs_no_state_leakage() {
+    let first: Vec<u64> = par_map(&(0..400u64).collect::<Vec<_>>(), 4, |&x| x * x);
+    assert!(first.iter().enumerate().all(|(i, &v)| v == (i * i) as u64));
+
+    // a full tuner run pushes many unrelated closures through the pool
+    let task = tiny_task();
+    let cfg = TunerConfig { max_trials: 32, seed: 2, ..Default::default() };
+    let r = tune(&task, &measurer(3), MethodSpec::sa_as(), &cfg, None);
+    assert!(r.best_gflops > 0.0);
+
+    let mut second = vec![String::new(); 300];
+    par_indexed_mut(&mut second, 4, |i, s| *s = format!("row-{i}"));
+    assert!(second.iter().enumerate().all(|(i, s)| s == &format!("row-{i}")));
+}
+
+/// Pool determinism under the thread-knob guard: flipping the global
+/// `--threads` knob (and the dispatch backend) between runs of the same
+/// sweep must never change a single bit of output.
+#[test]
+fn pool_under_thread_knob_guard_is_deterministic() {
+    let _knob = thread_knob_guard();
+    let xs: Vec<f64> = (0..1023).map(|i| (i as f64 * 0.37).cos()).collect();
+    let sweep = || {
+        let mut out = vec![0f64; xs.len()];
+        par_indexed_mut(
+            &mut out,
+            release::util::parallel::threads(),
+            |i, s| *s = xs[i].mul_add(3.0, -1.0),
+        );
+        out
+    };
+    set_threads(1);
+    let reference = sweep();
+    for t in [2usize, 3, 4, 8] {
+        set_threads(t);
+        assert_eq!(sweep(), reference, "threads {t}");
+    }
+    set_dispatch(Dispatch::Scoped);
+    set_threads(4);
+    assert_eq!(sweep(), reference, "scoped dispatch");
+    set_dispatch(Dispatch::Pool);
+    set_threads(0);
+}
+
+/// End-to-end pin of the dispatch refactor: the persistent pool must tune
+/// to exactly the results the PR 4 scoped spawn-per-call dispatch produced
+/// (same partitioning, disjoint outputs — so same bits, less overhead).
+#[test]
+fn pool_dispatch_matches_scoped_dispatch_end_to_end() {
+    let _knob = thread_knob_guard();
+    let task = tiny_task();
+    let cfg = TunerConfig { max_trials: 64, seed: 13, ..Default::default() };
+    set_threads(4);
+    set_dispatch(Dispatch::Pool);
+    let pool = tune(&task, &measurer(7), MethodSpec::sa_as(), &cfg, None);
+    set_dispatch(Dispatch::Scoped);
+    let scoped = tune(&task, &measurer(7), MethodSpec::sa_as(), &cfg, None);
+    set_dispatch(Dispatch::Pool);
+    set_threads(0);
+    assert!(pool.best_gflops > 0.0);
+    assert_bitwise_equal_runs("pool-vs-scoped", &pool, &scoped);
 }
 
 /// A larger adaptive-sampling run on a real zoo layer: the trajectory is
