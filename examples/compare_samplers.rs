@@ -14,7 +14,7 @@ use release::sim::{Measurer, SimMeasurer};
 use release::space::DesignSpace;
 use release::util::rng::Pcg32;
 use release::workload::zoo;
-use std::collections::HashSet;
+use std::collections::BTreeSet;
 
 fn diversity(space: &DesignSpace, configs: &[release::space::Config]) -> f64 {
     // mean pairwise L2 distance in normalized knob space
@@ -46,7 +46,7 @@ fn main() {
         let mut rng = Pcg32::seed_from(5);
         let mut model = CostModel::new(5);
         let mut sa = SimulatedAnnealing::default();
-        let mut visited: HashSet<u64> = HashSet::new();
+        let mut visited: BTreeSet<u64> = BTreeSet::new();
         let mut best = 0.0f64;
         let mut iters = 0;
         println!("== {sampler} sampling ==");

@@ -15,7 +15,7 @@ use release::space::{features::features, pca, Config, DesignSpace};
 use release::util::bench::Bencher;
 use release::util::rng::Pcg32;
 use release::workload::zoo;
-use std::collections::HashSet;
+use std::collections::BTreeSet;
 
 fn main() {
     let b = Bencher::default();
@@ -72,7 +72,7 @@ fn main() {
     });
     b.iter("adaptive_sample(512)", || {
         let mut r = Pcg32::seed_from(2);
-        adaptive_sample(&space, &configs, &HashSet::new(), &mut r)
+        adaptive_sample(&space, &configs, &BTreeSet::new(), &mut r)
     });
     b.iter("pca::project_2d(512x8)", || pca::project_2d(&points));
 
@@ -81,7 +81,7 @@ fn main() {
         let (sa_round, _) = Bencher::once("sa round (128 chains x <=500 steps)", || {
             let mut sa = SimulatedAnnealing::default();
             let mut r = Pcg32::seed_from(3);
-            sa.round(&space, &cm, &HashSet::new(), &mut r)
+            sa.round(&space, &cm, &BTreeSet::new(), &mut r)
         });
         std::hint::black_box(sa_round.trajectory.len());
     }

@@ -38,7 +38,7 @@ use release::util::parallel::{
 use release::util::rng::Pcg32;
 use release::workload::zoo;
 use std::alloc::{GlobalAlloc, Layout, System};
-use std::collections::HashSet;
+use std::collections::BTreeSet;
 use std::io::Write as _;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
@@ -48,18 +48,24 @@ use std::time::Instant;
 struct CountingAlloc;
 static ALLOCS: AtomicU64 = AtomicU64::new(0);
 
+// SAFETY: pure pass-through to the System allocator plus a relaxed counter
+// bump — every GlobalAlloc contract obligation is delegated unchanged.
 unsafe impl GlobalAlloc for CountingAlloc {
+    // SAFETY: same layout handed straight to System.alloc.
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
         System.alloc(layout)
     }
+    // SAFETY: ptr/layout come from this allocator's alloc, per the trait.
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
         System.dealloc(ptr, layout)
     }
+    // SAFETY: arguments forwarded unchanged to System.realloc.
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
         System.realloc(ptr, layout, new_size)
     }
+    // SAFETY: same layout handed straight to System.alloc_zeroed.
     unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
         System.alloc_zeroed(layout)
@@ -208,7 +214,7 @@ fn main() {
                     2 => time_best(reps, || gbt.predict_matrix(&feat_m).len()),
                     _ => time_best(reps, || {
                         let mut r = Pcg32::seed_from(7);
-                        adaptive_sample(&space, &traj, &HashSet::new(), &mut r).k
+                        adaptive_sample(&space, &traj, &BTreeSet::new(), &mut r).k
                     }),
                 };
                 set_threads(0);
@@ -346,7 +352,7 @@ fn main() {
             audit_traj.iter().map(|c| space.normalize(c)).collect();
         std::hint::black_box(points.len());
         let mut r = Pcg32::seed_from(7);
-        let s = adaptive_sample(&space, &audit_traj, &HashSet::new(), &mut r);
+        let s = adaptive_sample(&space, &audit_traj, &BTreeSet::new(), &mut r);
         std::hint::black_box(s.k);
         allocs() - before
     };
@@ -359,7 +365,7 @@ fn main() {
         let preds = cm.predict_batch(&space, probe);
         std::hint::black_box(preds.len());
         let mut r = Pcg32::seed_from(7);
-        let s = adaptive_sample(&space, &audit_traj, &HashSet::new(), &mut r);
+        let s = adaptive_sample(&space, &audit_traj, &BTreeSet::new(), &mut r);
         std::hint::black_box(s.k);
         allocs() - before
     };

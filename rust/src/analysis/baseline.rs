@@ -1,0 +1,256 @@
+//! `LINT_BASELINE.json` — the debt ratchet for `pallas-lint`, in the same
+//! style as `ALLOC_BASELINE.json`: CI blocks on *new* violations while the
+//! committed baseline records existing debt, and the baseline is only ever
+//! allowed to shrink.
+//!
+//! Debt is aggregated per `(file, rule)` — not per line — so unrelated
+//! edits that shift line numbers never invalidate the baseline, while any
+//! net-new violation in a file/rule bucket is caught.
+//!
+//! Hand-rolled JSON (serde is not vendored): the format is a flat
+//! `"counts"` object of `"<file>|<rule>": <count>` pairs plus a comment
+//! string, written with sorted keys (a `BTreeMap` — the linter practices
+//! what it preaches).
+
+use super::rules::Finding;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Violation counts keyed `"<file>|<rule>"`, deterministically ordered.
+pub type Counts = BTreeMap<String, u32>;
+
+/// Default baseline location, relative to the repo root.
+pub const BASELINE_PATH: &str = "LINT_BASELINE.json";
+
+/// Aggregate findings into baseline counts.
+pub fn counts_of(findings: &[Finding]) -> Counts {
+    let mut counts = Counts::new();
+    for f in findings {
+        *counts.entry(f.key()).or_insert(0) += 1;
+    }
+    counts
+}
+
+/// Parse a baseline document. Tolerant scanner: every `"key": <digits>`
+/// pair anywhere in the text is a count (the `"comment"` pair has a string
+/// value, so it is skipped naturally). Returns an empty map for text with
+/// no count pairs.
+pub fn parse(text: &str) -> Counts {
+    let mut counts = Counts::new();
+    let b = text.as_bytes();
+    let mut i = 0usize;
+    while i < b.len() {
+        if b[i] != b'"' {
+            i += 1;
+            continue;
+        }
+        // scan the quoted key
+        let start = i + 1;
+        let mut j = start;
+        while j < b.len() && b[j] != b'"' {
+            if b[j] == b'\\' {
+                j += 1;
+            }
+            j += 1;
+        }
+        if j >= b.len() {
+            break;
+        }
+        let key = &text[start..j];
+        i = j + 1;
+        // expect `:` then digits (else this was a string value / the
+        // comment key — keep scanning after it)
+        while i < b.len() && b[i].is_ascii_whitespace() {
+            i += 1;
+        }
+        if i >= b.len() || b[i] != b':' {
+            continue;
+        }
+        i += 1;
+        while i < b.len() && b[i].is_ascii_whitespace() {
+            i += 1;
+        }
+        let digits_start = i;
+        while i < b.len() && b[i].is_ascii_digit() {
+            i += 1;
+        }
+        if i > digits_start {
+            if let Ok(n) = text[digits_start..i].parse::<u32>() {
+                counts.insert(key.to_string(), n);
+            }
+        }
+    }
+    counts
+}
+
+/// Render a baseline document (sorted keys, stable output).
+pub fn render(counts: &Counts) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str(
+        "  \"comment\": \"pallas-lint debt ratchet: violations per file|rule. \
+         CI blocks on counts above these; this file may only shrink. \
+         Regenerate with `cargo run --bin pallas-lint -- --write-baseline`.\",\n",
+    );
+    s.push_str("  \"counts\": {\n");
+    let mut first = true;
+    for (k, v) in counts {
+        if !first {
+            s.push_str(",\n");
+        }
+        first = false;
+        s.push_str(&format!("    \"{k}\": {v}"));
+    }
+    s.push_str("\n  }\n}\n");
+    s
+}
+
+/// Read a baseline file; `None` when missing or unreadable.
+pub fn read(path: &Path) -> Option<Counts> {
+    std::fs::read_to_string(path).ok().map(|t| parse(&t))
+}
+
+/// Ratchet comparison of current counts against the committed baseline.
+#[derive(Debug, Default)]
+pub struct RatchetDiff {
+    /// Buckets above baseline: (key, current, baselined) — these block.
+    pub regressions: Vec<(String, u32, u32)>,
+    /// Buckets below baseline: (key, current, baselined) — ratchet-down
+    /// candidates; the baseline should shrink to match.
+    pub improvements: Vec<(String, u32, u32)>,
+}
+
+impl RatchetDiff {
+    pub fn is_clean(&self) -> bool {
+        self.regressions.is_empty()
+    }
+}
+
+/// Compare `current` against `baseline`. A key absent from the baseline
+/// has baselined count 0 (any occurrence is a regression); a baselined key
+/// absent from `current` is an improvement down to 0.
+pub fn diff(current: &Counts, baseline: &Counts) -> RatchetDiff {
+    let mut d = RatchetDiff::default();
+    for (k, &cur) in current {
+        let base = baseline.get(k).copied().unwrap_or(0);
+        if cur > base {
+            d.regressions.push((k.clone(), cur, base));
+        } else if cur < base {
+            d.improvements.push((k.clone(), cur, base));
+        }
+    }
+    for (k, &base) in baseline {
+        if base > 0 && !current.contains_key(k) {
+            d.improvements.push((k.clone(), 0, base));
+        }
+    }
+    d
+}
+
+/// Write `current` as the new baseline at `path`, enforcing the
+/// only-shrinks contract: if a committed baseline exists and any bucket
+/// would *grow* (or appear), refuse with an error naming the offenders —
+/// the fix is in the code, not the baseline.
+pub fn write_ratcheted(path: &Path, current: &Counts) -> Result<(), String> {
+    if let Some(committed) = read(path) {
+        let d = diff(current, &committed);
+        if !d.regressions.is_empty() {
+            let mut msg = String::from(
+                "refusing to grow the lint baseline; fix these instead of baselining them:\n",
+            );
+            for (k, cur, base) in &d.regressions {
+                msg.push_str(&format!("  {k}: {cur} (baseline {base})\n"));
+            }
+            return Err(msg);
+        }
+    }
+    std::fs::write(path, render(current))
+        .map_err(|e| format!("writing {}: {e}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn counts(pairs: &[(&str, u32)]) -> Counts {
+        pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+    }
+
+    #[test]
+    fn render_parse_roundtrip_sorted_and_stable() {
+        let c = counts(&[("rust/src/b.rs|S2", 3), ("rust/src/a.rs|D2", 1)]);
+        let text = render(&c);
+        assert_eq!(parse(&text), c);
+        // sorted output: a.rs before b.rs
+        let a = text.find("a.rs").expect("a.rs key present");
+        let b = text.find("b.rs").expect("b.rs key present");
+        assert!(a < b);
+        // the comment string is not mistaken for a count
+        assert_eq!(parse(&text).len(), 2);
+    }
+
+    #[test]
+    fn new_violation_is_a_regression() {
+        let base = counts(&[("f.rs|S2", 2)]);
+        // one more S2 in the same bucket
+        let d = diff(&counts(&[("f.rs|S2", 3)]), &base);
+        assert_eq!(d.regressions, vec![("f.rs|S2".to_string(), 3, 2)]);
+        assert!(!d.is_clean());
+        // a fresh bucket regresses from 0
+        let d = diff(&counts(&[("f.rs|S2", 2), ("g.rs|D1", 1)]), &base);
+        assert_eq!(d.regressions, vec![("g.rs|D1".to_string(), 1, 0)]);
+    }
+
+    #[test]
+    fn removed_violation_is_an_improvement_not_a_failure() {
+        let base = counts(&[("f.rs|S2", 2), ("g.rs|D2", 1)]);
+        let d = diff(&counts(&[("f.rs|S2", 1)]), &base);
+        assert!(d.is_clean());
+        let mut imp = d.improvements.clone();
+        imp.sort();
+        assert_eq!(
+            imp,
+            vec![("f.rs|S2".to_string(), 1, 2), ("g.rs|D2".to_string(), 0, 1)]
+        );
+    }
+
+    #[test]
+    fn write_ratcheted_shrinks_but_rejects_growth() {
+        let dir =
+            std::env::temp_dir().join(format!("pallas-lint-ratchet-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).expect("create temp dir");
+        let path = dir.join("LINT_BASELINE.json");
+
+        // seed
+        write_ratcheted(&path, &counts(&[("f.rs|S2", 2)])).expect("seed baseline");
+        // shrink: allowed, file updates
+        write_ratcheted(&path, &counts(&[("f.rs|S2", 1)])).expect("ratchet down");
+        assert_eq!(read(&path).expect("read back"), counts(&[("f.rs|S2", 1)]));
+        // growth: rejected, file unchanged
+        let err = write_ratcheted(&path, &counts(&[("f.rs|S2", 4)]))
+            .expect_err("growth must be rejected");
+        assert!(err.contains("f.rs|S2"));
+        assert_eq!(read(&path).expect("read back"), counts(&[("f.rs|S2", 1)]));
+
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn counts_aggregate_per_file_rule() {
+        use crate::analysis::rules::check_source;
+        let r = check_source(
+            "rust/src/fixture.rs",
+            "fn f(o: Option<u32>) { o.unwrap(); o.unwrap(); let t = Instant::now(); }",
+        );
+        let c = counts_of(&r.findings);
+        assert_eq!(c.get("rust/src/fixture.rs|S2"), Some(&2));
+        assert_eq!(c.get("rust/src/fixture.rs|D3"), Some(&1));
+    }
+
+    #[test]
+    fn missing_baseline_reads_none_and_empty_text_parses_empty() {
+        assert!(read(Path::new("/nonexistent/LINT_BASELINE.json")).is_none());
+        assert!(parse("").is_empty());
+        assert!(parse("{}").is_empty());
+    }
+}

@@ -1,0 +1,394 @@
+//! Hand-rolled Rust lexer for `pallas-lint` (no `syn`/`proc-macro2`; the
+//! crate's zero-external-deps rule applies to its tooling too).
+//!
+//! The lexer produces a flat token stream plus a side list of comments.
+//! It does **not** aim to be a full Rust front end — it only has to be
+//! exact about the constructs that would otherwise corrupt a token scan:
+//!
+//! - raw strings (`r"…"`, `r#"…"#`, any hash depth, `br#"…"#`) — a `*/`
+//!   or `unwrap()` inside one must not produce tokens;
+//! - nested block comments (`/* a /* b */ c */`) — Rust block comments
+//!   nest, unlike C;
+//! - lifetimes vs char literals (`'a` in `<'a>` vs `'a'`, escapes like
+//!   `'\n'`, `'\u{1F600}'`);
+//! - multi-char `::` (kept as one punct so path patterns like
+//!   `Instant::now` are a 3-token match).
+//!
+//! Everything else (numbers, idents, single-char puncts) is deliberately
+//! coarse: rule patterns never depend on numeric values or operator
+//! shapes beyond `.`, `#`, `:`, `::`, `;`, `&`, `=` and the three
+//! delimiter pairs.
+
+/// What kind of lexeme a [`Token`] is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`unsafe`, `for`, `HashMap`, …).
+    Ident,
+    /// Lifetime (`'a`, `'static`, `'_`) — *not* a char literal.
+    Lifetime,
+    /// Numeric literal (value not interpreted).
+    Num,
+    /// String literal of any flavor (plain, raw, byte) — contents opaque.
+    Str,
+    /// Char or byte-char literal (`'a'`, `b'\n'`).
+    Char,
+    /// Punctuation. Single char, except `::` which is kept joined.
+    Punct,
+}
+
+/// One lexed token with its 1-based source line.
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+/// One comment (line or block). `line..=end_line` is the span it covers;
+/// rules use comments to find `// SAFETY:` / `// PANIC:` justifications.
+#[derive(Debug, Clone)]
+pub struct Comment {
+    pub line: u32,
+    pub end_line: u32,
+    pub text: String,
+}
+
+/// Lexer output: the token stream plus the comment side channel.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub tokens: Vec<Token>,
+    pub comments: Vec<Comment>,
+}
+
+/// Lex `src` into tokens + comments. Never fails: malformed input (an
+/// unterminated string, say) degrades to "consume to end of file" rather
+/// than a panic, because the linter must stay usable on work-in-progress
+/// trees.
+pub fn lex(src: &str) -> Lexed {
+    let b = src.as_bytes();
+    let mut out = Lexed::default();
+    let mut i = 0usize;
+    let mut line = 1u32;
+
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            b'\n' => {
+                line += 1;
+                i += 1;
+            }
+            c if c.is_ascii_whitespace() => {
+                i += 1;
+            }
+            b'/' if i + 1 < b.len() && b[i + 1] == b'/' => {
+                let start = i;
+                while i < b.len() && b[i] != b'\n' {
+                    i += 1;
+                }
+                out.comments.push(Comment {
+                    line,
+                    end_line: line,
+                    text: src[start..i].to_string(),
+                });
+            }
+            b'/' if i + 1 < b.len() && b[i + 1] == b'*' => {
+                let start = i;
+                let start_line = line;
+                let mut depth = 1usize;
+                i += 2;
+                while i < b.len() && depth > 0 {
+                    if b[i] == b'\n' {
+                        line += 1;
+                        i += 1;
+                    } else if b[i] == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+                        depth += 1;
+                        i += 2;
+                    } else if b[i] == b'*' && i + 1 < b.len() && b[i + 1] == b'/' {
+                        depth -= 1;
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                }
+                out.comments.push(Comment {
+                    line: start_line,
+                    end_line: line,
+                    text: src[start..i].to_string(),
+                });
+            }
+            b'r' | b'b' if starts_raw_or_byte_string(b, i) => {
+                let (j, nl) = consume_string_like(b, i);
+                out.tokens.push(Token { kind: TokKind::Str, text: String::new(), line });
+                line += nl;
+                i = j;
+            }
+            b'"' => {
+                let (j, nl) = consume_plain_string(b, i);
+                out.tokens.push(Token { kind: TokKind::Str, text: String::new(), line });
+                line += nl;
+                i = j;
+            }
+            b'\'' => {
+                let (tok, j) = consume_quote(b, i, line);
+                out.tokens.push(tok);
+                i = j;
+            }
+            c if c == b'_' || c.is_ascii_alphabetic() => {
+                let start = i;
+                while i < b.len() && (b[i] == b'_' || b[i].is_ascii_alphanumeric()) {
+                    i += 1;
+                }
+                out.tokens.push(Token {
+                    kind: TokKind::Ident,
+                    text: src[start..i].to_string(),
+                    line,
+                });
+            }
+            c if c.is_ascii_digit() => {
+                let start = i;
+                i += 1;
+                while i < b.len() {
+                    let d = b[i];
+                    if d == b'_' || d.is_ascii_alphanumeric() {
+                        i += 1;
+                    } else if d == b'.'
+                        && i + 1 < b.len()
+                        && b[i + 1].is_ascii_digit()
+                        && !src[start..i].contains('.')
+                    {
+                        // `1.5` continues the number; `1..n` does not
+                        i += 1;
+                    } else {
+                        break;
+                    }
+                }
+                out.tokens.push(Token {
+                    kind: TokKind::Num,
+                    text: src[start..i].to_string(),
+                    line,
+                });
+            }
+            b':' if i + 1 < b.len() && b[i + 1] == b':' => {
+                out.tokens.push(Token { kind: TokKind::Punct, text: "::".to_string(), line });
+                i += 2;
+            }
+            _ => {
+                out.tokens.push(Token {
+                    kind: TokKind::Punct,
+                    text: (c as char).to_string(),
+                    line,
+                });
+                i += 1;
+            }
+        }
+    }
+    out
+}
+
+/// Does `b[i..]` start a raw/byte string (`r"`, `r#`, `br"`, `br#`, `b"`)?
+/// Called only when `b[i]` is `r` or `b`; a plain ident like `radius` must
+/// return false so the ident path lexes it.
+fn starts_raw_or_byte_string(b: &[u8], i: usize) -> bool {
+    let mut j = i;
+    if b[j] == b'b' {
+        j += 1;
+        if j < b.len() && b[j] == b'\'' {
+            return false; // byte char literal `b'x'` — handled by quote path? no: see consume_quote note
+        }
+    }
+    if j < b.len() && b[j] == b'r' {
+        j += 1;
+        while j < b.len() && b[j] == b'#' {
+            j += 1;
+        }
+    }
+    j < b.len() && b[j] == b'"' && j > i
+}
+
+/// Consume a raw/byte string starting at `i` (validated by
+/// [`starts_raw_or_byte_string`]). Returns (index after the literal,
+/// newlines consumed).
+fn consume_string_like(b: &[u8], i: usize) -> (usize, u32) {
+    let mut j = i;
+    if b[j] == b'b' {
+        j += 1;
+    }
+    let raw = j < b.len() && b[j] == b'r';
+    if raw {
+        j += 1;
+    }
+    let mut hashes = 0usize;
+    while j < b.len() && b[j] == b'#' {
+        hashes += 1;
+        j += 1;
+    }
+    // opening quote
+    j += 1;
+    let mut nl = 0u32;
+    if raw {
+        // scan for `"` followed by `hashes` hash marks; no escapes in raw
+        while j < b.len() {
+            if b[j] == b'\n' {
+                nl += 1;
+                j += 1;
+                continue;
+            }
+            if b[j] == b'"' {
+                let mut k = j + 1;
+                let mut seen = 0usize;
+                while k < b.len() && b[k] == b'#' && seen < hashes {
+                    seen += 1;
+                    k += 1;
+                }
+                if seen == hashes {
+                    return (k, nl);
+                }
+            }
+            j += 1;
+        }
+        (j, nl)
+    } else {
+        let (end, more) = scan_escaped(b, j, b'"');
+        (end, nl + more)
+    }
+}
+
+/// Consume a plain `"…"` string starting at the opening quote.
+fn consume_plain_string(b: &[u8], i: usize) -> (usize, u32) {
+    scan_escaped(b, i + 1, b'"')
+}
+
+/// Scan to the closing `close` honoring `\` escapes; returns (index after
+/// the close, newlines seen). Unterminated input consumes to EOF.
+fn scan_escaped(b: &[u8], mut j: usize, close: u8) -> (usize, u32) {
+    let mut nl = 0u32;
+    while j < b.len() {
+        match b[j] {
+            b'\\' => j += 2,
+            b'\n' => {
+                nl += 1;
+                j += 1;
+            }
+            c if c == close => return (j + 1, nl),
+            _ => j += 1,
+        }
+    }
+    (j, nl)
+}
+
+/// Disambiguate `'` at `i`: lifetime (`'a`, `'static`, `'_`) vs char
+/// literal (`'a'`, `'\n'`, `'0'`). The rule: an ident-shaped run after the
+/// quote is a *char literal* only when it is immediately closed by `'`;
+/// otherwise it is a lifetime and has no closing quote at all.
+fn consume_quote(b: &[u8], i: usize, line: u32) -> (Token, usize) {
+    let next = if i + 1 < b.len() { b[i + 1] } else { 0 };
+    if next == b'\\' {
+        // escaped char literal `'\n'`, `'\u{…}'`
+        let (end, _) = scan_escaped(b, i + 1, b'\'');
+        return (Token { kind: TokKind::Char, text: String::new(), line }, end);
+    }
+    if next == b'_' || next.is_ascii_alphabetic() {
+        let mut j = i + 1;
+        while j < b.len() && (b[j] == b'_' || b[j].is_ascii_alphanumeric()) {
+            j += 1;
+        }
+        if j < b.len() && b[j] == b'\'' {
+            // `'a'` — single ident char closed by a quote
+            return (Token { kind: TokKind::Char, text: String::new(), line }, j + 1);
+        }
+        // `'a` / `'static` — lifetime, no closing quote
+        let text = String::from_utf8_lossy(&b[i + 1..j]).into_owned();
+        return (Token { kind: TokKind::Lifetime, text, line }, j);
+    }
+    // `'0'`, `' '`, `'+'`, possibly multi-byte UTF-8 char — scan to close
+    let (end, _) = scan_escaped(b, i + 1, b'\'');
+    (Token { kind: TokKind::Char, text: String::new(), line }, end)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .tokens
+            .iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text.clone())
+            .collect()
+    }
+
+    #[test]
+    fn raw_strings_hide_their_contents() {
+        // tokens inside a raw string (any hash depth) must not leak
+        let l = lex(r####"let s = r#"x.unwrap() /* not a comment "# ; done"####);
+        let ids = idents(r####"let s = r#"x.unwrap() /* not a comment "# ; done"####);
+        assert_eq!(ids, vec!["let", "s", "done"]);
+        assert_eq!(l.comments.len(), 0);
+        // byte-raw flavor
+        assert_eq!(idents(r###"let b = br"u.unwrap()"; end"###), vec!["let", "b", "end"]);
+    }
+
+    #[test]
+    fn nested_block_comments_close_at_matching_depth() {
+        let src = "before /* a /* nested */ still comment */ after";
+        assert_eq!(idents(src), vec!["before", "after"]);
+        let l = lex(src);
+        assert_eq!(l.comments.len(), 1);
+        assert!(l.comments[0].text.contains("nested"));
+    }
+
+    #[test]
+    fn lifetime_vs_char_literal() {
+        let l = lex("fn f<'a>(x: &'a str) { let c = 'a'; let s: &'static str = \"\"; }");
+        let lifetimes: Vec<_> =
+            l.tokens.iter().filter(|t| t.kind == TokKind::Lifetime).map(|t| &t.text).collect();
+        assert_eq!(lifetimes, vec!["a", "a", "static"]);
+        let chars = l.tokens.iter().filter(|t| t.kind == TokKind::Char).count();
+        assert_eq!(chars, 1);
+    }
+
+    #[test]
+    fn escaped_and_symbol_char_literals() {
+        let l = lex(r"let a = '\n'; let b = '0'; let c = ' '; let d = '\u{1F600}';");
+        let chars = l.tokens.iter().filter(|t| t.kind == TokKind::Char).count();
+        assert_eq!(chars, 4);
+        assert!(l.tokens.iter().all(|t| t.kind != TokKind::Lifetime));
+    }
+
+    #[test]
+    fn double_colon_is_one_token_and_lines_are_tracked() {
+        let l = lex("a::b\nc:d");
+        let t: Vec<(&str, u32)> =
+            l.tokens.iter().map(|t| (t.text.as_str(), t.line)).collect();
+        assert_eq!(
+            t,
+            vec![("a", 1), ("::", 1), ("b", 1), ("c", 2), (":", 2), ("d", 2)]
+        );
+    }
+
+    #[test]
+    fn comments_record_spans_and_strings_count_newlines() {
+        let l = lex("x\n/* two\nline */\ny = \"multi\nline\"\nz");
+        assert_eq!(l.comments[0].line, 2);
+        assert_eq!(l.comments[0].end_line, 3);
+        let z = l.tokens.iter().find(|t| t.text == "z").expect("z token");
+        assert_eq!(z.line, 6);
+    }
+
+    #[test]
+    fn line_comment_does_not_eat_the_newline() {
+        let l = lex("a // trailing\nb");
+        let b = l.tokens.iter().find(|t| t.text == "b").expect("b token");
+        assert_eq!(b.line, 2);
+        assert_eq!(l.comments[0].text, "// trailing");
+    }
+
+    #[test]
+    fn byte_char_literal_is_a_char_not_a_string() {
+        // `b'x'` must not trip the byte-string path
+        let l = lex("let x = b'q'; after");
+        assert!(l.tokens.iter().any(|t| t.text == "after"));
+        assert_eq!(l.tokens.iter().filter(|t| t.kind == TokKind::Str).count(), 0);
+    }
+}

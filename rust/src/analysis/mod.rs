@@ -1,0 +1,212 @@
+//! `pallas-lint` — first-party static analysis enforcing the repo's
+//! determinism & safety contract (see README "Static analysis & the
+//! determinism contract").
+//!
+//! The value proposition of this codebase is that every result is
+//! bit-identical at any `--threads` value. Three separate PRs re-fixed the
+//! same NaN-unsafe comparator bug, and unordered hash iteration, ad-hoc
+//! threads, wall-clock reads, and undocumented `unsafe` keep trying to
+//! re-enter through new code. This module makes the written invariants
+//! machine-checked:
+//!
+//! - [`lexer`]: hand-rolled Rust lexer (raw strings, nested block
+//!   comments, lifetimes vs char literals) — no `syn`, keeping the
+//!   zero-external-deps rule;
+//! - [`tree`]: token trees + a lightweight sequence matcher;
+//! - [`rules`]: the D1–D3 determinism rules and S1–S2 safety rules, with
+//!   the central allowlist;
+//! - [`baseline`]: the `LINT_BASELINE.json` shrink-only debt ratchet.
+//!
+//! The `pallas-lint` bin target drives this over `rust/src`,
+//! `rust/benches`, `rust/tests`, and `examples`; CI runs it with
+//! `--check-baseline` as a blocking job.
+
+pub mod baseline;
+pub mod lexer;
+pub mod rules;
+pub mod tree;
+
+use rules::Finding;
+use std::path::{Path, PathBuf};
+
+/// The directory roots `pallas-lint` walks, relative to the repo root.
+/// `rust/vendor` is deliberately absent: the vendored shims mirror
+/// external crates' APIs and are not held to this repo's contract.
+pub const LINT_ROOTS: &[&str] = &["rust/src", "rust/benches", "rust/tests", "examples"];
+
+/// Result of linting a whole tree.
+#[derive(Debug, Default)]
+pub struct LintReport {
+    /// Violations (allowlist already applied), in deterministic
+    /// path-then-position order.
+    pub findings: Vec<Finding>,
+    /// Sites matched by an [`rules::ALLOWLIST`] entry — reported for
+    /// auditability, never blocking.
+    pub allowlisted: Vec<Finding>,
+    pub files_scanned: usize,
+}
+
+/// Lint every `.rs` file under [`LINT_ROOTS`] relative to `root`. Files
+/// are visited in sorted path order so output and report bytes are stable.
+pub fn lint_tree(root: &Path) -> Result<LintReport, String> {
+    let mut files: Vec<PathBuf> = Vec::new();
+    for dir in LINT_ROOTS {
+        let abs = root.join(dir);
+        if abs.is_dir() {
+            collect_rs_files(&abs, &mut files)?;
+        }
+    }
+    files.sort();
+
+    let mut report = LintReport::default();
+    for path in files {
+        let src = std::fs::read_to_string(&path)
+            .map_err(|e| format!("reading {}: {e}", path.display()))?;
+        let rel = rel_path(root, &path);
+        let file_report = rules::check_source(&rel, &src);
+        report.findings.extend(file_report.findings);
+        report.allowlisted.extend(file_report.allowlisted);
+        report.files_scanned += 1;
+    }
+    Ok(report)
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let entries =
+        std::fs::read_dir(dir).map_err(|e| format!("reading dir {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("reading dir {}: {e}", dir.display()))?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Repo-relative path with forward slashes (rule scoping and baseline keys
+/// must not depend on the host platform).
+fn rel_path(root: &Path, path: &Path) -> String {
+    let rel = path.strip_prefix(root).unwrap_or(path);
+    rel.to_string_lossy().replace('\\', "/")
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn findings_json(findings: &[Finding]) -> String {
+    let mut s = String::from("[");
+    for (i, f) in findings.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!(
+            "\n    {{\"file\": \"{}\", \"line\": {}, \"rule\": \"{}\", \"message\": \"{}\", \"hint\": \"{}\"}}",
+            json_escape(&f.file),
+            f.line,
+            f.rule,
+            json_escape(&f.message),
+            json_escape(f.hint)
+        ));
+    }
+    s.push_str("\n  ]");
+    s
+}
+
+/// Render the machine-readable diagnostics report (the CI artifact).
+pub fn render_report(report: &LintReport, ratchet: Option<&baseline::RatchetDiff>) -> String {
+    let counts = baseline::counts_of(&report.findings);
+    let mut s = String::from("{\n");
+    s.push_str(&format!("  \"files_scanned\": {},\n", report.files_scanned));
+    s.push_str(&format!("  \"violations\": {},\n", report.findings.len()));
+    s.push_str(&format!("  \"allowlisted\": {},\n", report.allowlisted.len()));
+    s.push_str(&format!("  \"findings\": {},\n", findings_json(&report.findings)));
+    s.push_str(&format!("  \"allowlisted_sites\": {},\n", findings_json(&report.allowlisted)));
+    match ratchet {
+        Some(d) => {
+            let reg: Vec<String> = d
+                .regressions
+                .iter()
+                .map(|(k, cur, base)| {
+                    format!(
+                        "\n    {{\"key\": \"{}\", \"current\": {cur}, \"baseline\": {base}}}",
+                        json_escape(k)
+                    )
+                })
+                .collect();
+            let imp: Vec<String> = d
+                .improvements
+                .iter()
+                .map(|(k, cur, base)| {
+                    format!(
+                        "\n    {{\"key\": \"{}\", \"current\": {cur}, \"baseline\": {base}}}",
+                        json_escape(k)
+                    )
+                })
+                .collect();
+            s.push_str(&format!(
+                "  \"ratchet\": {{\"regressions\": [{}{}], \"improvements\": [{}{}]}},\n",
+                reg.join(","),
+                if reg.is_empty() { "" } else { "\n  " },
+                imp.join(","),
+                if imp.is_empty() { "" } else { "\n  " },
+            ));
+        }
+        None => s.push_str("  \"ratchet\": null,\n"),
+    }
+    s.push_str("  \"counts\": {");
+    let mut first = true;
+    for (k, v) in &counts {
+        if !first {
+            s.push(',');
+        }
+        first = false;
+        s.push_str(&format!("\n    \"{}\": {v}", json_escape(k)));
+    }
+    if !counts.is_empty() {
+        s.push_str("\n  ");
+    }
+    s.push_str("}\n}\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_json_is_parseable_by_the_baseline_scanner_and_escapes() {
+        let findings = rules::check_source(
+            "rust/src/fixture.rs",
+            "fn f(o: Option<u32>) { o.unwrap(); }",
+        )
+        .findings;
+        let report = LintReport { findings, allowlisted: Vec::new(), files_scanned: 2 };
+        let text = render_report(&report, None);
+        assert!(text.contains("\"violations\": 1"));
+        assert!(text.contains("rust/src/fixture.rs|S2"));
+        // the counts object at the end parses with the baseline scanner
+        let parsed = baseline::parse(&text);
+        assert_eq!(parsed.get("rust/src/fixture.rs|S2"), Some(&1));
+        // escaping: a message with a quote/backslash cannot corrupt the doc
+        assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+    }
+
+    #[test]
+    fn lint_roots_exclude_vendor() {
+        assert!(!LINT_ROOTS.iter().any(|r| r.contains("vendor")));
+    }
+}

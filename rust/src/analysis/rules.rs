@@ -1,0 +1,680 @@
+//! The five `pallas-lint` rules: the repo's written determinism & safety
+//! invariants as machine-checked token-tree patterns.
+//!
+//! | id | invariant |
+//! |----|-----------|
+//! | D1 | no `partial_cmp(..).unwrap()/.expect(..)` — float orderings must use `total_cmp` |
+//! | D2 | no iteration over `std::collections::HashMap`/`HashSet` (unordered iteration feeding results breaks the any-`--threads` bit-identity contract); lookup-only use is fine, iteration needs a `BTreeMap`/`BTreeSet` or an [`ALLOWLIST`] entry |
+//! | D3 | no `std::thread::{spawn,scope,Builder}`, `Instant::now`/`SystemTime::now`, or non-`util::rng` randomness outside `util::parallel`/`util::bench` and the benches tree |
+//! | S1 | every `unsafe` block / `unsafe impl` carries a `// SAFETY:` comment (same line or ≤ 3 lines above) |
+//! | S2 | no `.unwrap()`/`.expect(..)` in library code (`rust/src`, outside `#[cfg(test)]`) without a `// PANIC:` justification |
+//!
+//! Escape hatches are deliberate and auditable: a central [`ALLOWLIST`]
+//! with a one-line justification per entry (D2/D3), and the `// SAFETY:` /
+//! `// PANIC:` comment conventions (S1/S2). D1 has no escape — `total_cmp`
+//! is always available and always right.
+
+use super::lexer::{lex, Comment, TokKind};
+use super::tree::{
+    build, group_at, ident_at, level_idents, match_seq, punct_at, Delim, Pat, TokenTree,
+};
+use std::collections::BTreeSet;
+
+/// Rule catalog: (id, what it enforces, fix-it hint).
+pub const RULES: &[(&str, &str, &str)] = &[
+    (
+        "D1",
+        "NaN-unsafe float comparator: partial_cmp(..).unwrap()/.expect(..)",
+        "use total_cmp (f64/f32): `a.total_cmp(&b)` — NaN gets a deterministic order instead of a panic",
+    ),
+    (
+        "D2",
+        "iteration over std HashMap/HashSet (unordered; breaks bit-identity under --threads)",
+        "use BTreeMap/BTreeSet, or drain through a sorted Vec; lookup-only maps may stay hashed (allowlist)",
+    ),
+    (
+        "D3",
+        "ad-hoc threads/wall-clock/randomness outside util::parallel, util::bench and Clock",
+        "route threads through util::parallel, time through sim::Clock or util::bench, randomness through util::rng",
+    ),
+    (
+        "S1",
+        "unsafe block/impl without a `// SAFETY:` comment",
+        "state the invariant that makes it sound in a `// SAFETY:` comment on or directly above the unsafe site",
+    ),
+    (
+        "S2",
+        "unwrap()/expect() in library code without a `// PANIC:` justification",
+        "handle the error, or justify the panic in a `// PANIC:` comment on or directly above the call",
+    ),
+];
+
+/// One diagnostic.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: &'static str,
+    /// Repo-relative path, forward slashes.
+    pub file: String,
+    pub line: u32,
+    /// The principal token at the site (allowlist matching key).
+    pub ident: String,
+    pub message: String,
+    pub hint: &'static str,
+}
+
+impl Finding {
+    /// Baseline aggregation key: per (file, rule), so line drift from
+    /// unrelated edits never invalidates the committed baseline.
+    pub fn key(&self) -> String {
+        format!("{}|{}", self.file, self.rule)
+    }
+}
+
+/// A sanctioned exception: `rule` findings in files ending with
+/// `file_suffix` whose principal token is `ident` (`"*"` = any) are
+/// reported as allowlisted, not as violations. Every entry carries its
+/// one-line justification — the allowlist *is* the audit trail.
+pub struct AllowEntry {
+    pub rule: &'static str,
+    pub file_suffix: &'static str,
+    pub ident: &'static str,
+    pub reason: &'static str,
+}
+
+pub const ALLOWLIST: &[AllowEntry] = &[
+    AllowEntry {
+        rule: "D3",
+        file_suffix: "rust/src/runtime/mod.rs",
+        ident: "Instant",
+        reason: "real-measurement path: wall-clock timing of the PJRT kernel IS the measurement",
+    },
+    AllowEntry {
+        rule: "D3",
+        file_suffix: "rust/src/coordinator/mod.rs",
+        ident: "thread",
+        reason: "scoped device-slot threads; results keyed by slot index; pinned by session tests",
+    },
+    AllowEntry {
+        rule: "D3",
+        file_suffix: "rust/src/tuner/session.rs",
+        ident: "thread",
+        reason: "scoped task-parallel tuner threads; results keyed to task order; pinned in tests",
+    },
+];
+
+/// Files where D3 does not apply at all (they *implement* the sanctioned
+/// primitives) — distinct from the allowlist, which records exceptions.
+const D3_EXEMPT_SUFFIXES: &[&str] = &["rust/src/util/parallel.rs", "rust/src/util/bench.rs"];
+
+/// Directory prefixes where D3 does not apply (benches time wall-clock by
+/// definition; examples demonstrate the public API, not engine internals).
+const D3_EXEMPT_PREFIXES: &[&str] = &["rust/benches/"];
+
+/// S2 applies only to library code.
+const S2_PREFIX: &str = "rust/src/";
+
+const ITER_METHODS: &[&str] = &[
+    "iter",
+    "iter_mut",
+    "into_iter",
+    "keys",
+    "values",
+    "values_mut",
+    "drain",
+    "retain",
+    "union",
+    "intersection",
+    "difference",
+    "symmetric_difference",
+];
+
+const UNWRAPPY: &[&str] = &["unwrap", "expect"];
+
+/// Result of checking one file.
+#[derive(Debug, Default)]
+pub struct FileReport {
+    pub findings: Vec<Finding>,
+    pub allowlisted: Vec<Finding>,
+}
+
+struct Ctx {
+    in_test: bool,
+}
+
+struct Scan<'s> {
+    file: &'s str,
+    comments: &'s [Comment],
+    hash_idents: BTreeSet<String>,
+    d3_applies: bool,
+    s2_applies: bool,
+    out: Vec<Finding>,
+}
+
+/// Run every rule over one source file. `rel_path` must be repo-relative
+/// with forward slashes (it selects rule scope and allowlist matches).
+pub fn check_source(rel_path: &str, src: &str) -> FileReport {
+    let lexed = lex(src);
+    let forest = build(lexed.tokens);
+
+    let mut scan = Scan {
+        file: rel_path,
+        comments: &lexed.comments,
+        hash_idents: collect_hash_idents(&forest),
+        d3_applies: !D3_EXEMPT_SUFFIXES.iter().any(|s| rel_path.ends_with(s))
+            && !D3_EXEMPT_PREFIXES.iter().any(|p| rel_path.starts_with(p)),
+        s2_applies: rel_path.starts_with(S2_PREFIX),
+        out: Vec::new(),
+    };
+    scan_level(&forest, &Ctx { in_test: false }, &mut scan);
+
+    let mut report = FileReport::default();
+    for f in scan.out {
+        let allowed = ALLOWLIST.iter().any(|e| {
+            e.rule == f.rule
+                && f.file.ends_with(e.file_suffix)
+                && (e.ident == "*" || e.ident == f.ident)
+        });
+        if allowed {
+            report.allowlisted.push(f);
+        } else {
+            report.findings.push(f);
+        }
+    }
+    report
+}
+
+/// Pass 1 for D2: names bound to a std hash container anywhere in the file
+/// (`x: HashMap<..>`, `x: &HashSet<..>`, `let x = HashMap::new()`, struct
+/// fields, fn params). Receiver-based iteration checks key off these.
+fn collect_hash_idents(forest: &[TokenTree]) -> BTreeSet<String> {
+    let mut found = BTreeSet::new();
+    collect_hash_idents_level(forest, &mut found);
+    found
+}
+
+fn collect_hash_idents_level(level: &[TokenTree], found: &mut BTreeSet<String>) {
+    for (i, t) in level.iter().enumerate() {
+        match t {
+            TokenTree::Group(g) => collect_hash_idents_level(&g.trees, found),
+            TokenTree::Leaf(tok) => {
+                if tok.kind == TokKind::Ident && (tok.text == "HashMap" || tok.text == "HashSet") {
+                    if let Some(name) = bound_name_before(level, i) {
+                        found.insert(name.to_string());
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Walk left from the `HashMap`/`HashSet` token at `i`: skip the
+/// `std::collections::` path prefix and `&`/`mut`, then accept either a
+/// type ascription (`name :`) or an initializer (`name =`). Returns the
+/// bound name, or None for shapes we do not track (e.g. nested generics
+/// like `Mutex<HashMap<..>>`, whose receiver is a guard, not the name).
+fn bound_name_before<'t>(level: &'t [TokenTree], i: usize) -> Option<&'t str> {
+    let mut j = i;
+    while j >= 2 && punct_at(level, j - 1, "::") && ident_at(level, j - 2).is_some() {
+        j -= 2;
+    }
+    while j >= 1
+        && (punct_at(level, j - 1, "&")
+            || matches!(ident_at(level, j - 1), Some("mut") | Some("mut_")))
+    {
+        j -= 1;
+    }
+    if j >= 2 && (punct_at(level, j - 1, ":") || punct_at(level, j - 1, "=")) {
+        return ident_at(level, j - 2);
+    }
+    None
+}
+
+fn attr_is_test(g: &super::tree::Group) -> bool {
+    // `#[test]`
+    if level_idents(&g.trees) == ["test"] {
+        return true;
+    }
+    // `#[cfg(test)]` — exactly, not `cfg(not(test))`/`cfg(all(..))`
+    if match_seq(&g.trees, 0, &[Pat::Id("cfg"), Pat::G(Delim::Paren)]) {
+        if let Some(args) = group_at(&g.trees, 1, Delim::Paren) {
+            return level_idents(&args.trees) == ["test"];
+        }
+    }
+    false
+}
+
+fn has_marker(comments: &[Comment], line: u32, marker: &str) -> bool {
+    comments.iter().any(|c| {
+        c.text.contains(marker) && c.end_line <= line && line.saturating_sub(c.end_line) <= 3
+            || (c.line <= line && line <= c.end_line && c.text.contains(marker))
+    })
+}
+
+fn scan_level(level: &[TokenTree], ctx: &Ctx, st: &mut Scan) {
+    let mut pending_test_attr = false;
+    let mut i = 0usize;
+    while i < level.len() {
+        // attributes: `#[...]` — may mark the next braced item as test code
+        if punct_at(level, i, "#") {
+            if let Some(g) = group_at(level, i + 1, Delim::Bracket) {
+                if attr_is_test(g) {
+                    pending_test_attr = true;
+                }
+                i += 2;
+                continue;
+            }
+        }
+        match &level[i] {
+            TokenTree::Group(g) => {
+                let child = Ctx {
+                    in_test: ctx.in_test || (pending_test_attr && g.delim == Delim::Brace),
+                };
+                if g.delim == Delim::Brace {
+                    pending_test_attr = false;
+                }
+                scan_level(&g.trees, &child, st);
+            }
+            TokenTree::Leaf(tok) => {
+                if tok.kind == TokKind::Punct && tok.text == ";" {
+                    pending_test_attr = false;
+                }
+                check_at(level, i, ctx, st);
+            }
+        }
+        i += 1;
+    }
+}
+
+fn check_at(level: &[TokenTree], i: usize, ctx: &Ctx, st: &mut Scan) {
+    let line = level[i].line();
+
+    // D1 — `partial_cmp(..).unwrap()` / `.expect(..)`
+    if match_seq(
+        level,
+        i,
+        &[
+            Pat::Id("partial_cmp"),
+            Pat::G(Delim::Paren),
+            Pat::P("."),
+            Pat::IdIn(UNWRAPPY),
+            Pat::G(Delim::Paren),
+        ],
+    ) {
+        st.push(
+            "D1",
+            line,
+            "partial_cmp",
+            "NaN-unsafe comparator: partial_cmp followed by unwrap/expect".to_string(),
+        );
+    }
+
+    // D2 — iteration over a tracked hash container
+    if let Some(name) = ident_at(level, i) {
+        if st.hash_idents.contains(name)
+            && match_seq(
+                level,
+                i + 1,
+                &[Pat::P("."), Pat::IdIn(ITER_METHODS), Pat::G(Delim::Paren)],
+            )
+        {
+            let method = ident_at(level, i + 2).unwrap_or("iter");
+            st.push(
+                "D2",
+                line,
+                name.to_string(),
+                format!("iteration over hash `{name}` via `.{method}()` — order is unspecified"),
+            );
+        }
+        // `for x in [&[mut]] tracked {`
+        if name == "for" {
+            d2_for_loop(level, i, st);
+        }
+    }
+
+    // D3 — threads / wall-clock / foreign randomness
+    if st.d3_applies && !ctx.in_test {
+        if match_seq(level, i, &[Pat::Id("Instant"), Pat::P("::"), Pat::Id("now")])
+            || match_seq(level, i, &[Pat::Id("SystemTime"), Pat::P("::"), Pat::Id("now")])
+        {
+            let head = ident_at(level, i).unwrap_or("Instant");
+            st.push(
+                "D3",
+                line,
+                head.to_string(),
+                format!("wall-clock read `{head}::now()` outside util::bench/Clock"),
+            );
+        }
+        if match_seq(
+            level,
+            i,
+            &[
+                Pat::Id("thread"),
+                Pat::P("::"),
+                Pat::IdIn(&["spawn", "scope", "Builder"]),
+            ],
+        ) {
+            let what = ident_at(level, i + 2).unwrap_or("spawn");
+            st.push(
+                "D3",
+                line,
+                "thread",
+                format!("ad-hoc thread creation `thread::{what}` outside util::parallel"),
+            );
+        }
+        if let Some(name) = ident_at(level, i) {
+            if ["thread_rng", "from_entropy", "getrandom"].contains(&name)
+                || (name == "rand" && punct_at(level, i + 1, "::"))
+            {
+                st.push(
+                    "D3",
+                    line,
+                    name.to_string(),
+                    format!("non-util::rng randomness `{name}` — seed from the task RNG contract"),
+                );
+            }
+        }
+    }
+
+    // S1 — undocumented unsafe
+    if matches!(ident_at(level, i), Some("unsafe")) && !has_marker(st.comments, line, "SAFETY:") {
+        st.push(
+            "S1",
+            line,
+            "unsafe",
+            "unsafe without a `// SAFETY:` comment on or directly above it".to_string(),
+        );
+    }
+
+    // S2 — unjustified unwrap/expect in library code
+    if st.s2_applies
+        && !ctx.in_test
+        && punct_at(level, i, ".")
+        && match_seq(level, i + 1, &[Pat::IdIn(UNWRAPPY), Pat::G(Delim::Paren)])
+    {
+        let call_line = level[i + 1].line();
+        if !has_marker(st.comments, call_line, "PANIC:") {
+            let method = ident_at(level, i + 1).unwrap_or("unwrap");
+            st.push(
+                "S2",
+                call_line,
+                method.to_string(),
+                format!("`.{method}()` in library code without a `// PANIC:` justification"),
+            );
+        }
+    }
+}
+
+/// D2's `for`-loop form: flag when the iterable expression ends in a
+/// tracked hash-container name (`for k in &self.map {`, `for v in set {`).
+fn d2_for_loop(level: &[TokenTree], i: usize, st: &mut Scan) {
+    let brace = level[i..]
+        .iter()
+        .position(|t| matches!(t, TokenTree::Group(g) if g.delim == Delim::Brace))
+        .map(|off| i + off);
+    let Some(brace) = brace else { return };
+    let in_kw = (i..brace).find(|&k| matches!(ident_at(level, k), Some("in")));
+    let Some(in_kw) = in_kw else { return };
+    if brace <= in_kw + 1 {
+        return;
+    }
+    if let Some(name) = ident_at(level, brace - 1) {
+        if st.hash_idents.contains(name) {
+            st.push(
+                "D2",
+                level[brace - 1].line(),
+                name.to_string(),
+                format!("for-loop over hash container `{name}` — order is unspecified"),
+            );
+        }
+    }
+}
+
+impl Scan<'_> {
+    fn push(&mut self, rule: &'static str, line: u32, ident: impl Into<String>, message: String) {
+        let hint = RULES
+            .iter()
+            .find(|(id, _, _)| *id == rule)
+            .map(|(_, _, h)| *h)
+            .unwrap_or("");
+        self.out.push(Finding {
+            rule,
+            file: self.file.to_string(),
+            line,
+            ident: ident.into(),
+            message,
+            hint,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lint_src(src: &str) -> Vec<Finding> {
+        check_source("rust/src/fixture.rs", src).findings
+    }
+
+    /// Same fixture, but outside S2's library scope (D1/D2/D3/S1 still
+    /// apply) — for snippets whose point is not the unwrap itself.
+    fn lint_test_tree(src: &str) -> Vec<Finding> {
+        check_source("rust/tests/fixture.rs", src).findings
+    }
+
+    fn rules_of(findings: &[Finding]) -> Vec<&str> {
+        findings.iter().map(|f| f.rule).collect()
+    }
+
+    // ---- D1 ----------------------------------------------------------------
+
+    #[test]
+    fn d1_flags_partial_cmp_unwrap_and_expect() {
+        let f =
+            lint_test_tree("fn f(a: f64, b: f64) { v.sort_by(|a, b| a.partial_cmp(b).unwrap()); }");
+        assert_eq!(rules_of(&f), vec!["D1"]);
+        assert_eq!(f[0].line, 1);
+        let f = lint_test_tree("fn f() { let o = x.partial_cmp(&y).expect(\"ordered\"); }");
+        assert_eq!(rules_of(&f), vec!["D1"]);
+        // in library code the same site additionally owes an S2 justification
+        let f = lint_src("fn f() { v.sort_by(|a, b| a.partial_cmp(b).unwrap()); }");
+        assert_eq!(rules_of(&f), vec!["D1", "S2"]);
+    }
+
+    #[test]
+    fn d1_clean_total_cmp_and_lone_partial_cmp() {
+        assert!(lint_src("fn f() { v.sort_by(|a, b| a.total_cmp(b)); }").is_empty());
+        // partial_cmp without the unwrap is not the anti-pattern
+        assert!(lint_src("fn f() -> Option<Ordering> { a.partial_cmp(&b) }").is_empty());
+        // mentions in comments and strings must not fire
+        assert!(lint_src("// partial_cmp().unwrap() was the bug\nfn f() {}").is_empty());
+        assert!(lint_src("fn f() { let s = \"partial_cmp(x).unwrap()\"; }").is_empty());
+    }
+
+    // ---- D2 ----------------------------------------------------------------
+
+    #[test]
+    fn d2_flags_iteration_over_hash_containers() {
+        let f = lint_src(
+            "struct S { map: HashMap<u64, f64> }\n\
+             impl S { fn sum(&self) -> f64 { self.map.values().sum() } }",
+        );
+        assert_eq!(rules_of(&f), vec!["D2"]);
+        assert_eq!(f[0].line, 2);
+
+        let f = lint_src(
+            "fn f(seen: &HashSet<u64>) { for x in seen.iter() { use_it(x); } }",
+        );
+        assert_eq!(rules_of(&f), vec!["D2"]);
+
+        let f = lint_src(
+            "fn f() { let mut m = HashMap::new(); for (k, v) in &m { emit(k, v); } }",
+        );
+        assert_eq!(rules_of(&f), vec!["D2"]);
+
+        let f = lint_src(
+            "fn f(a: &HashSet<u64>, b: HashSet<u64>) { let u: Vec<u64> = a.union(&b).copied().collect(); }",
+        );
+        assert_eq!(rules_of(&f), vec!["D2"]);
+    }
+
+    #[test]
+    fn d2_clean_lookup_only_and_btree() {
+        // lookup-only hash use is the sanctioned fast path
+        assert!(lint_src(
+            "fn f(visited: &HashSet<u64>, x: u64) -> bool { visited.contains(&x) }"
+        )
+        .is_empty());
+        assert!(lint_src(
+            "struct C { map: HashMap<u64, u32> }\n\
+             impl C { fn get(&self, k: u64) -> Option<u32> { self.map.get(&k).copied() } }"
+        )
+        .is_empty());
+        // ordered containers iterate freely
+        assert!(lint_src(
+            "fn f(m: &BTreeMap<u64, f64>) -> f64 { m.values().sum() }"
+        )
+        .is_empty());
+        // iterating an unrelated Vec while a hash map is in scope is fine
+        assert!(lint_src(
+            "fn f(m: &HashMap<u64, u32>, v: &[u64]) -> usize { v.iter().filter(|x| m.contains_key(x)).count() }"
+        )
+        .is_empty());
+    }
+
+    // ---- D3 ----------------------------------------------------------------
+
+    #[test]
+    fn d3_flags_clock_threads_and_foreign_rng() {
+        let f = lint_src("fn f() { let t0 = Instant::now(); }");
+        assert_eq!(rules_of(&f), vec!["D3"]);
+        let f = lint_src("fn f() { let t = SystemTime::now(); }");
+        assert_eq!(rules_of(&f), vec!["D3"]);
+        let f = lint_src("fn f() { std::thread::spawn(|| work()); }");
+        assert_eq!(rules_of(&f), vec!["D3"]);
+        let f = lint_src("fn f() { std::thread::scope(|s| { s.spawn(|| ()); }); }");
+        assert_eq!(rules_of(&f), vec!["D3"]);
+        let f = lint_src("fn f() { let r = thread_rng(); }");
+        assert_eq!(rules_of(&f), vec!["D3"]);
+    }
+
+    #[test]
+    fn d3_exempt_in_sanctioned_files_tests_and_benches() {
+        let src = "fn f() { let t0 = Instant::now(); }";
+        assert!(check_source("rust/src/util/parallel.rs", src).findings.is_empty());
+        assert!(check_source("rust/src/util/bench.rs", src).findings.is_empty());
+        assert!(check_source("rust/benches/bench_x.rs", src).findings.is_empty());
+        // test code may time things (its assertions pin determinism)
+        let in_test = "#[cfg(test)]\nmod tests { fn t() { let t0 = Instant::now(); } }";
+        assert!(lint_src(in_test).is_empty());
+    }
+
+    #[test]
+    fn d3_allowlist_reroutes_to_allowlisted_not_findings() {
+        let src = "fn f() { let t0 = Instant::now(); }";
+        let r = check_source("rust/src/runtime/mod.rs", src);
+        assert!(r.findings.is_empty());
+        assert_eq!(r.allowlisted.len(), 1);
+        assert_eq!(r.allowlisted[0].rule, "D3");
+    }
+
+    // ---- S1 ----------------------------------------------------------------
+
+    #[test]
+    fn s1_flags_undocumented_unsafe_block_and_impl() {
+        let f = lint_src("fn f(p: *mut u8) { let v = unsafe { *p }; }");
+        assert_eq!(rules_of(&f), vec!["S1"]);
+        let f = lint_src("struct W(*mut u8);\nunsafe impl Send for W {}");
+        assert_eq!(rules_of(&f), vec!["S1"]);
+        assert_eq!(f[0].line, 2);
+    }
+
+    #[test]
+    fn s1_clean_with_safety_comment_same_line_or_above() {
+        assert!(lint_src(
+            "fn f(p: *mut u8) {\n    // SAFETY: p is valid for reads, caller contract\n    let v = unsafe { *p };\n}"
+        )
+        .is_empty());
+        assert!(lint_src(
+            "// SAFETY: only dereferenced through disjoint chunk ranges\nunsafe impl Send for W {}"
+        )
+        .is_empty());
+        // a SAFETY comment too far above does not count
+        let f = lint_src(
+            "// SAFETY: stale, five lines up\n\n\n\n\nfn f(p: *mut u8) { let v = unsafe { *p }; }",
+        );
+        assert_eq!(rules_of(&f), vec!["S1"]);
+    }
+
+    // ---- S2 ----------------------------------------------------------------
+
+    #[test]
+    fn s2_flags_unjustified_unwrap_in_library_code() {
+        let f = lint_src("fn f(o: Option<u32>) -> u32 { o.unwrap() }");
+        assert_eq!(rules_of(&f), vec!["S2"]);
+        let f = lint_src("fn f(r: Result<u32, E>) -> u32 { r.expect(\"must\") }");
+        assert_eq!(rules_of(&f), vec!["S2"]);
+    }
+
+    #[test]
+    fn s2_clean_with_panic_comment_adapters_tests_and_nonlibrary() {
+        assert!(lint_src(
+            "fn f(o: Option<u32>) -> u32 {\n    // PANIC: o is Some by construction two lines up\n    o.unwrap()\n}"
+        )
+        .is_empty());
+        // unwrap_or and friends are not panics
+        assert!(lint_src("fn f(o: Option<u32>) -> u32 { o.unwrap_or(0) }").is_empty());
+        assert!(lint_src("fn f(o: Option<u32>) -> u32 { o.unwrap_or_else(|| 0) }").is_empty());
+        // #[cfg(test)] modules are exempt
+        assert!(lint_src(
+            "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() { Some(1).unwrap(); }\n}"
+        )
+        .is_empty());
+        // tests/benches/examples trees are outside S2's scope
+        let src = "fn f(o: Option<u32>) -> u32 { o.unwrap() }";
+        assert!(check_source("rust/tests/integration.rs", src).findings.is_empty());
+        assert!(check_source("rust/benches/bench_x.rs", src).findings.is_empty());
+        assert!(check_source("examples/quickstart.rs", src).findings.is_empty());
+    }
+
+    #[test]
+    fn s2_test_attr_on_single_fn_is_exempt_but_siblings_are_not() {
+        let f = lint_src(
+            "#[cfg(test)]\nfn helper() { Some(1).unwrap(); }\nfn lib() { Some(2).unwrap(); }",
+        );
+        assert_eq!(rules_of(&f), vec!["S2"]);
+        assert_eq!(f[0].line, 3);
+    }
+
+    #[test]
+    fn cfg_not_test_is_not_a_test_marker() {
+        let f = lint_src("#[cfg(not(test))]\nfn lib() { Some(1).unwrap(); }");
+        assert_eq!(rules_of(&f), vec!["S2"]);
+    }
+
+    // ---- cross-cutting ------------------------------------------------------
+
+    #[test]
+    fn multiple_rules_report_together_most_lines_intact() {
+        let src = "\
+fn f(m: &HashMap<u64, f64>) -> f64 {
+    let t0 = Instant::now();
+    let best = xs.iter().max_by(|a, b| a.partial_cmp(b).unwrap()).unwrap();
+    m.values().sum::<f64>() + best
+}";
+        let f = lint_src(src);
+        let mut rules = rules_of(&f);
+        rules.sort_unstable();
+        // line 3 carries D1 plus an S2 for the trailing `.unwrap()` on max_by
+        assert_eq!(rules, vec!["D1", "D2", "D3", "S2", "S2"]);
+        assert!(f.iter().any(|x| x.rule == "D1" && x.line == 3));
+        assert!(f.iter().any(|x| x.rule == "D2" && x.line == 4));
+        assert!(f.iter().any(|x| x.rule == "D3" && x.line == 2));
+    }
+
+    #[test]
+    fn finding_keys_aggregate_per_file_and_rule() {
+        let f = lint_src("fn f(o: Option<u32>) { o.unwrap(); o.unwrap(); }");
+        assert_eq!(f.len(), 2);
+        assert!(f.iter().all(|x| x.key() == "rust/src/fixture.rs|S2"));
+    }
+}

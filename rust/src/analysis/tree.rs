@@ -1,0 +1,246 @@
+//! Token trees + a lightweight matcher for `pallas-lint` rules.
+//!
+//! The flat token stream from [`crate::analysis::lexer`] is grouped by the
+//! three delimiter pairs into nested [`TokenTree`]s, so rule patterns can
+//! say "`partial_cmp`, *a parenthesized group*, `.`, `unwrap`" without
+//! hand-balancing delimiters at every call site. The matcher is a plain
+//! sequence match over one tree level ([`match_seq`]) — rules recurse into
+//! groups themselves because they carry context down (e.g. "inside a
+//! `#[cfg(test)]` module").
+
+use super::lexer::{TokKind, Token};
+
+/// Delimiter kind of a [`Group`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Delim {
+    Paren,
+    Bracket,
+    Brace,
+}
+
+/// A delimited group: everything between `(`/`[`/`{` and its match.
+#[derive(Debug)]
+pub struct Group {
+    pub delim: Delim,
+    /// Line of the opening delimiter.
+    pub line: u32,
+    pub trees: Vec<TokenTree>,
+}
+
+/// One node of the token tree.
+#[derive(Debug)]
+pub enum TokenTree {
+    Leaf(Token),
+    Group(Group),
+}
+
+impl TokenTree {
+    /// Source line of this node (a group reports its opening line).
+    pub fn line(&self) -> u32 {
+        match self {
+            TokenTree::Leaf(t) => t.line,
+            TokenTree::Group(g) => g.line,
+        }
+    }
+}
+
+fn open_delim(text: &str) -> Option<Delim> {
+    match text {
+        "(" => Some(Delim::Paren),
+        "[" => Some(Delim::Bracket),
+        "{" => Some(Delim::Brace),
+        _ => None,
+    }
+}
+
+fn close_delim(text: &str) -> Option<Delim> {
+    match text {
+        ")" => Some(Delim::Paren),
+        "]" => Some(Delim::Bracket),
+        "}" => Some(Delim::Brace),
+        _ => None,
+    }
+}
+
+/// Build nested token trees from a flat token stream. Tolerant of
+/// unbalanced input (the linter runs on work-in-progress trees): a stray
+/// close delimiter becomes a leaf, unclosed groups close at end of input.
+pub fn build(tokens: Vec<Token>) -> Vec<TokenTree> {
+    // stack of (delim, open_line, children); the bottom entry is the root
+    let mut stack: Vec<(Option<(Delim, u32)>, Vec<TokenTree>)> = vec![(None, Vec::new())];
+    for tok in tokens {
+        if tok.kind == TokKind::Punct {
+            if let Some(d) = open_delim(&tok.text) {
+                stack.push((Some((d, tok.line)), Vec::new()));
+                continue;
+            }
+            if let Some(d) = close_delim(&tok.text) {
+                let closes_top = matches!(stack.last(), Some((Some((td, _)), _)) if *td == d);
+                if closes_top {
+                    // stack holds >= 2 entries here (root + the group being
+                    // closed), so both operations succeed
+                    if let Some((Some((delim, line)), trees)) = stack.pop() {
+                        if let Some((_, parent)) = stack.last_mut() {
+                            parent.push(TokenTree::Group(Group { delim, line, trees }));
+                        }
+                    }
+                    continue;
+                }
+                // mismatched close: fall through, keep it as a leaf
+            }
+        }
+        if let Some((_, top)) = stack.last_mut() {
+            top.push(TokenTree::Leaf(tok));
+        }
+    }
+    // unclosed groups: splice their children back into the parent level so
+    // no tokens are lost
+    while stack.len() > 1 {
+        if let Some((_, orphans)) = stack.pop() {
+            if let Some((_, parent)) = stack.last_mut() {
+                parent.extend(orphans);
+            }
+        }
+    }
+    match stack.pop() {
+        Some((_, root)) => root,
+        None => Vec::new(),
+    }
+}
+
+/// One element of a sequence pattern for [`match_seq`].
+pub enum Pat<'a> {
+    /// An identifier with exactly this text.
+    Id(&'a str),
+    /// An identifier matching any of these texts.
+    IdIn(&'a [&'a str]),
+    /// A punctuation token with exactly this text.
+    P(&'a str),
+    /// A group with this delimiter (contents unconstrained).
+    G(Delim),
+}
+
+fn matches_one(tree: &TokenTree, pat: &Pat) -> bool {
+    match (tree, pat) {
+        (TokenTree::Leaf(t), Pat::Id(s)) => t.kind == TokKind::Ident && t.text == *s,
+        (TokenTree::Leaf(t), Pat::IdIn(set)) => {
+            t.kind == TokKind::Ident && set.contains(&t.text.as_str())
+        }
+        (TokenTree::Leaf(t), Pat::P(s)) => t.kind == TokKind::Punct && t.text == *s,
+        (TokenTree::Group(g), Pat::G(d)) => g.delim == *d,
+        _ => false,
+    }
+}
+
+/// Does `trees[at..]` start with the pattern sequence?
+pub fn match_seq(trees: &[TokenTree], at: usize, pats: &[Pat]) -> bool {
+    if at + pats.len() > trees.len() {
+        return false;
+    }
+    pats.iter().enumerate().all(|(k, p)| matches_one(&trees[at + k], p))
+}
+
+/// Is `trees[at]` an identifier, and if so which?
+pub fn ident_at<'t>(trees: &'t [TokenTree], at: usize) -> Option<&'t str> {
+    match trees.get(at) {
+        Some(TokenTree::Leaf(t)) if t.kind == TokKind::Ident => Some(&t.text),
+        _ => None,
+    }
+}
+
+/// Is `trees[at]` the given punctuation?
+pub fn punct_at(trees: &[TokenTree], at: usize, s: &str) -> bool {
+    matches!(trees.get(at), Some(TokenTree::Leaf(t)) if t.kind == TokKind::Punct && t.text == s)
+}
+
+/// Is `trees[at]` a group with the given delimiter?
+pub fn group_at<'t>(trees: &'t [TokenTree], at: usize, d: Delim) -> Option<&'t Group> {
+    match trees.get(at) {
+        Some(TokenTree::Group(g)) if g.delim == d => Some(g),
+        _ => None,
+    }
+}
+
+/// Flattened ident texts of one group level (leaves only, no recursion) —
+/// used to inspect attribute contents like `cfg(test)`.
+pub fn level_idents(trees: &[TokenTree]) -> Vec<&str> {
+    trees
+        .iter()
+        .filter_map(|t| match t {
+            TokenTree::Leaf(tok) if tok.kind == TokKind::Ident => Some(tok.text.as_str()),
+            _ => None,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::lex;
+
+    fn forest(src: &str) -> Vec<TokenTree> {
+        build(lex(src).tokens)
+    }
+
+    #[test]
+    fn groups_nest_and_report_open_lines() {
+        let f = forest("fn f(a: u8) {\n  g([1, 2]);\n}");
+        // level 0: fn, f, (..), {..}
+        assert_eq!(f.len(), 4);
+        let body = group_at(&f, 3, Delim::Brace).expect("body group");
+        assert_eq!(body.line, 1);
+        // inside the body: g, (..), ;
+        let call = group_at(&body.trees, 1, Delim::Paren).expect("call group");
+        assert_eq!(call.line, 2);
+        assert!(group_at(&call.trees, 0, Delim::Bracket).is_some());
+    }
+
+    #[test]
+    fn match_seq_spans_leaves_and_groups() {
+        let f = forest("x.partial_cmp(y).unwrap()");
+        // x . partial_cmp (..) . unwrap (..)
+        assert!(match_seq(
+            &f,
+            2,
+            &[
+                Pat::Id("partial_cmp"),
+                Pat::G(Delim::Paren),
+                Pat::P("."),
+                Pat::IdIn(&["unwrap", "expect"]),
+                Pat::G(Delim::Paren),
+            ]
+        ));
+        assert!(!match_seq(&f, 0, &[Pat::Id("partial_cmp")]));
+    }
+
+    #[test]
+    fn unbalanced_input_loses_no_tokens() {
+        let f = forest("a { b ( c");
+        // every ident must survive even though nothing closes
+        let mut ids = Vec::new();
+        fn walk<'t>(ts: &'t [TokenTree], out: &mut Vec<&'t str>) {
+            for t in ts {
+                match t {
+                    TokenTree::Leaf(tok) => {
+                        if tok.kind == crate::analysis::lexer::TokKind::Ident {
+                            out.push(&tok.text);
+                        }
+                    }
+                    TokenTree::Group(g) => walk(&g.trees, out),
+                }
+            }
+        }
+        walk(&f, &mut ids);
+        assert_eq!(ids, vec!["a", "b", "c"]);
+        // stray close becomes a leaf, not a panic
+        let g = forest(") x");
+        assert_eq!(level_idents(&g), vec!["x"]);
+    }
+
+    #[test]
+    fn generics_angle_brackets_stay_flat() {
+        // `<` `>` are ordinary puncts — HashMap<u64, u32> stays one level
+        let f = forest("m: HashMap<u64, u32>");
+        assert_eq!(level_idents(&f), vec!["m", "HashMap", "u64", "u32"]);
+    }
+}

@@ -1,0 +1,194 @@
+//! `pallas-lint` — drive the first-party determinism & safety analysis
+//! pass over the repo (see `release::analysis`).
+//!
+//! ```text
+//! pallas-lint                      # list all current violations (informational)
+//! pallas-lint --check-baseline     # CI mode: fail only on NEW debt vs LINT_BASELINE.json
+//! pallas-lint --write-baseline     # ratchet the baseline down (growth is rejected)
+//! pallas-lint --rules              # print the rule catalog
+//! ```
+//!
+//! Exit codes: 0 = clean (or no new debt in `--check-baseline` mode),
+//! 1 = violations / new debt / rejected baseline growth, 2 = usage or I/O
+//! error. A machine-readable report is always written (default
+//! `pallas-lint-report.json`) so the CI artifact upload can never come up
+//! empty.
+
+use release::analysis::{baseline, lint_tree, render_report, rules, LINT_ROOTS};
+use std::path::PathBuf;
+
+const USAGE: &str = "\
+pallas-lint — determinism & safety static analysis for this repo
+
+USAGE:
+  pallas-lint [--root DIR] [--report PATH] [--check-baseline | --write-baseline]
+  pallas-lint --rules
+
+OPTIONS:
+  --root DIR         repo root to lint            (default: .)
+  --report PATH      where to write the JSON diagnostics report
+                     (default: pallas-lint-report.json under --root)
+  --check-baseline   ratchet mode: fail only on violations beyond the
+                     committed LINT_BASELINE.json; print ratchet-down
+                     advice when debt shrank
+  --write-baseline   rewrite LINT_BASELINE.json from the current tree;
+                     refuses to grow any file|rule bucket
+  --rules            print the rule catalog (id, invariant, fix-it hint)
+";
+
+fn main() {
+    std::process::exit(run(&std::env::args().skip(1).collect::<Vec<_>>()));
+}
+
+fn run(args: &[String]) -> i32 {
+    let mut root = PathBuf::from(".");
+    let mut report_path: Option<PathBuf> = None;
+    let mut check = false;
+    let mut write = false;
+
+    let mut i = 0usize;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--root" | "--report" => {
+                let Some(v) = args.get(i + 1) else {
+                    eprintln!("{} needs a value\n\n{USAGE}", args[i]);
+                    return 2;
+                };
+                if args[i] == "--root" {
+                    root = PathBuf::from(v);
+                } else {
+                    report_path = Some(PathBuf::from(v));
+                }
+                i += 2;
+            }
+            "--check-baseline" => {
+                check = true;
+                i += 1;
+            }
+            "--write-baseline" => {
+                write = true;
+                i += 1;
+            }
+            "--rules" => {
+                print_rules();
+                return 0;
+            }
+            "--help" | "-h" => {
+                println!("{USAGE}");
+                return 0;
+            }
+            other => {
+                eprintln!("unknown argument {other:?}\n\n{USAGE}");
+                return 2;
+            }
+        }
+    }
+    if check && write {
+        eprintln!("--check-baseline and --write-baseline are mutually exclusive\n\n{USAGE}");
+        return 2;
+    }
+
+    let report = match lint_tree(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("pallas-lint: {e}");
+            return 2;
+        }
+    };
+    if report.files_scanned == 0 {
+        eprintln!(
+            "pallas-lint: no .rs files under {} in {:?} — wrong --root?",
+            root.display(),
+            LINT_ROOTS
+        );
+        return 2;
+    }
+
+    for f in &report.findings {
+        println!("{}:{} [{}] {}", f.file, f.line, f.rule, f.message);
+        println!("    fix: {}", f.hint);
+    }
+    let counts = baseline::counts_of(&report.findings);
+    println!(
+        "pallas-lint: {} files, {} violation(s) in {} file|rule bucket(s), {} allowlisted site(s)",
+        report.files_scanned,
+        report.findings.len(),
+        counts.len(),
+        report.allowlisted.len()
+    );
+
+    let baseline_path = root.join(baseline::BASELINE_PATH);
+    let mut exit = 0;
+    let mut ratchet = None;
+
+    if write {
+        match baseline::write_ratcheted(&baseline_path, &counts) {
+            Ok(()) => println!(
+                "wrote {} ({} bucket(s), {} violation(s))",
+                baseline_path.display(),
+                counts.len(),
+                report.findings.len()
+            ),
+            Err(e) => {
+                eprint!("{e}");
+                exit = 1;
+            }
+        }
+    } else if check {
+        match baseline::read(&baseline_path) {
+            None => {
+                eprintln!(
+                    "pallas-lint: no baseline at {} — run --write-baseline and commit it",
+                    baseline_path.display()
+                );
+                exit = 1;
+            }
+            Some(committed) => {
+                let d = baseline::diff(&counts, &committed);
+                for (k, cur, base) in &d.regressions {
+                    eprintln!("NEW debt  {k}: {cur} violation(s), baseline allows {base}");
+                }
+                for (k, cur, base) in &d.improvements {
+                    println!(
+                        "ratchet-down candidate  {k}: now {cur}, baseline {base} — \
+                         run --write-baseline to lock in the improvement"
+                    );
+                }
+                if d.is_clean() {
+                    println!("baseline check OK: no new violations");
+                } else {
+                    eprintln!(
+                        "baseline check FAILED: {} bucket(s) above the committed baseline",
+                        d.regressions.len()
+                    );
+                    exit = 1;
+                }
+                ratchet = Some(d);
+            }
+        }
+    } else if !report.findings.is_empty() {
+        exit = 1;
+    }
+
+    let out = report_path.unwrap_or_else(|| root.join("pallas-lint-report.json"));
+    let text = render_report(&report, ratchet.as_ref());
+    if let Err(e) = std::fs::write(&out, text) {
+        eprintln!("pallas-lint: writing report {}: {e}", out.display());
+        return 2;
+    }
+    println!("report: {}", out.display());
+    exit
+}
+
+fn print_rules() {
+    println!("pallas-lint rules (escape hatches: the allowlist in");
+    println!("rust/src/analysis/rules.rs, `// SAFETY:` for S1, `// PANIC:` for S2):\n");
+    for (id, what, hint) in rules::RULES {
+        println!("{id}  {what}");
+        println!("    fix: {hint}\n");
+    }
+    println!("allowlisted exceptions:");
+    for e in rules::ALLOWLIST {
+        println!("  [{}] {} ({}) — {}", e.rule, e.file_suffix, e.ident, e.reason);
+    }
+}

@@ -490,6 +490,9 @@ impl Tree {
     pub fn predict(&self, row: &[f32]) -> f32 {
         let mut i = 0usize;
         loop {
+            // SAFETY: `i` is 0 (nodes is never empty once built) or a
+            // `left`/`right` child index, which `build` only ever sets to
+            // positions it has pushed into `self.nodes`.
             let n = unsafe { self.nodes.get_unchecked(i) };
             if n.feature == LEAF {
                 return n.threshold;

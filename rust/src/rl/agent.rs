@@ -27,7 +27,7 @@ use crate::runtime::{AgentState, Backend};
 use crate::search::{dedup_top, SearchRound, Searcher};
 use crate::space::{Config, DesignSpace, Direction};
 use crate::util::rng::Pcg32;
-use std::collections::HashSet;
+use std::collections::BTreeSet;
 use std::sync::Arc;
 
 #[derive(Debug, Clone)]
@@ -155,7 +155,7 @@ impl Searcher for PpoAgent {
         &mut self,
         space: &DesignSpace,
         model: &CostModel,
-        _visited: &HashSet<u64>,
+        _visited: &BTreeSet<u64>,
         rng: &mut Pcg32,
     ) -> SearchRound {
         let m = self.backend.spec().clone();
@@ -359,7 +359,7 @@ mod tests {
 
         let mut agent = PpoAgent::new(backend(), 42);
         agent.params.max_batches = 6;
-        let r = agent.round(&space, &cm, &HashSet::new(), &mut rng);
+        let r = agent.round(&space, &cm, &BTreeSet::new(), &mut rng);
         assert!(!r.trajectory.is_empty());
         assert_eq!(r.trajectory.len(), r.scores.len());
         assert!(r.steps >= 8 && r.steps <= 6 * 8);
@@ -383,9 +383,9 @@ mod tests {
         let mut agent = PpoAgent::new(backend(), 7);
         agent.params.max_batches = 5;
         agent.params.min_batches = 5; // fixed batches for comparability
-        let r1 = agent.round(&space, &cm, &HashSet::new(), &mut rng);
-        let r2 = agent.round(&space, &cm, &HashSet::new(), &mut rng);
-        let r3 = agent.round(&space, &cm, &HashSet::new(), &mut rng);
+        let r1 = agent.round(&space, &cm, &BTreeSet::new(), &mut rng);
+        let r2 = agent.round(&space, &cm, &BTreeSet::new(), &mut rng);
+        let r3 = agent.round(&space, &cm, &BTreeSet::new(), &mut rng);
         let later = r2.scores[0].max(r3.scores[0]);
         assert!(
             later >= r1.scores[0] - 0.3,

@@ -14,7 +14,7 @@ use crate::space::{Config, DesignSpace};
 use crate::util::matrix::FeatureMatrix;
 use crate::util::parallel::{gate, par_map, threads};
 use crate::util::rng::Pcg32;
-use std::collections::HashSet;
+use std::collections::BTreeSet;
 
 /// `Constant` in Algorithm 1 line 7: break when Constant*Loss > PreviousLoss,
 /// i.e. when adding ~8 more clusters no longer cuts the loss by >1/Constant.
@@ -150,7 +150,7 @@ pub fn mode_config(space: &DesignSpace, trajectory: &[Config]) -> Config {
 pub fn adaptive_sample(
     space: &DesignSpace,
     trajectory: &[Config],
-    visited: &HashSet<u64>,
+    visited: &BTreeSet<u64>,
     rng: &mut Pcg32,
 ) -> AdaptiveSampleResult {
     assert!(!trajectory.is_empty());
@@ -165,7 +165,7 @@ pub fn adaptive_sample(
     // point (a measurable configuration).
     let nearest = nearest_points(&points, &clustering.centroids);
     let mut samples: Vec<Config> = Vec::with_capacity(nearest.len());
-    let mut taken = HashSet::new();
+    let mut taken = BTreeSet::new();
     let mut replaced = 0;
 
     let mode = mode_config(space, trajectory);
@@ -248,7 +248,7 @@ mod tests {
         let s = space();
         let mut rng = Pcg32::seed_from(0);
         let traj = random_trajectory(&s, 512, &mut rng);
-        let r = adaptive_sample(&s, &traj, &HashSet::new(), &mut rng);
+        let r = adaptive_sample(&s, &traj, &BTreeSet::new(), &mut rng);
         assert!(r.samples.len() <= K_MAX);
         assert!(r.samples.len() >= K_MIN / 2);
         assert!(r.samples.len() < traj.len() / 4);
@@ -259,7 +259,7 @@ mod tests {
         let s = space();
         let mut rng = Pcg32::seed_from(1);
         let traj = clustered_trajectory(&s, 6, 60, &mut rng);
-        let r = adaptive_sample(&s, &traj, &HashSet::new(), &mut rng);
+        let r = adaptive_sample(&s, &traj, &BTreeSet::new(), &mut rng);
         // 6 true clusters: the sweep must hit the knee well before K_MAX
         assert!(r.k <= 40, "k = {}", r.k);
 
@@ -268,7 +268,7 @@ mod tests {
         let centers: Vec<Config> = (0..6).map(|_| s.random_config(&mut rng)).collect();
         let dup: Vec<Config> =
             (0..360).map(|i| centers[i % 6].clone()).collect();
-        let rd = adaptive_sample(&s, &dup, &HashSet::new(), &mut rng);
+        let rd = adaptive_sample(&s, &dup, &BTreeSet::new(), &mut rng);
         assert_eq!(rd.k, K_MIN, "duplicates should cluster perfectly at K_MIN");
     }
 
@@ -278,10 +278,10 @@ mod tests {
         forall(20, 0xada, |rng| {
             let traj = random_trajectory(&s, 256, rng);
             // mark half the trajectory visited
-            let visited: HashSet<u64> =
+            let visited: BTreeSet<u64> =
                 traj.iter().take(128).map(|c| s.flat_index(c)).collect();
             let r = adaptive_sample(&s, &traj, &visited, rng);
-            let mut seen = HashSet::new();
+            let mut seen = BTreeSet::new();
             for c in &r.samples {
                 let f = s.flat_index(c);
                 assert!(!visited.contains(&f), "returned a visited config");
@@ -296,7 +296,7 @@ mod tests {
         let mut rng = Pcg32::seed_from(3);
         let traj = clustered_trajectory(&s, 4, 40, &mut rng);
         // visit everything in the trajectory => all centroids redundant
-        let visited: HashSet<u64> = traj.iter().map(|c| s.flat_index(c)).collect();
+        let visited: BTreeSet<u64> = traj.iter().map(|c| s.flat_index(c)).collect();
         let r = adaptive_sample(&s, &traj, &visited, &mut rng);
         assert!(r.replaced > 0);
         for c in &r.samples {
@@ -346,7 +346,7 @@ mod tests {
         b.idx[1] = 1;
         let mut c = a.clone();
         c.idx[0] = 1;
-        let visited: HashSet<u64> =
+        let visited: BTreeSet<u64> =
             [&a, &b, &c].iter().map(|cc| s.flat_index(cc)).collect();
         let traj = vec![a; 16];
         let mut rng = Pcg32::seed_from(7);
@@ -376,10 +376,10 @@ mod tests {
         for (t, traj) in trajs.iter().enumerate() {
             crate::util::parallel::set_threads(1);
             let mut rng_a = Pcg32::seed_from(42 + t as u64);
-            let ra = adaptive_sample(&s, traj, &HashSet::new(), &mut rng_a);
+            let ra = adaptive_sample(&s, traj, &BTreeSet::new(), &mut rng_a);
             crate::util::parallel::set_threads(4);
             let mut rng_b = Pcg32::seed_from(42 + t as u64);
-            let rb = adaptive_sample(&s, traj, &HashSet::new(), &mut rng_b);
+            let rb = adaptive_sample(&s, traj, &BTreeSet::new(), &mut rng_b);
             crate::util::parallel::set_threads(0);
             assert_eq!(ra.k, rb.k, "traj {t}");
             assert_eq!(ra.replaced, rb.replaced, "traj {t}");
@@ -393,7 +393,7 @@ mod tests {
         let s = space();
         let mut rng = Pcg32::seed_from(4);
         let traj = vec![s.random_config(&mut rng)];
-        let r = adaptive_sample(&s, &traj, &HashSet::new(), &mut rng);
+        let r = adaptive_sample(&s, &traj, &BTreeSet::new(), &mut rng);
         assert_eq!(r.samples.len(), 1);
     }
 }

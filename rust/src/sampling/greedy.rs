@@ -5,7 +5,7 @@
 use super::fill_random_unvisited;
 use crate::space::{Config, DesignSpace};
 use crate::util::rng::Pcg32;
-use std::collections::HashSet;
+use std::collections::BTreeSet;
 
 pub const DEFAULT_PLAN_SIZE: usize = 64;
 pub const DEFAULT_EPSILON: f64 = 0.05;
@@ -17,7 +17,7 @@ pub fn greedy_sample(
     space: &DesignSpace,
     trajectory: &[Config],
     scores: &[f64],
-    visited: &HashSet<u64>,
+    visited: &BTreeSet<u64>,
     plan_size: usize,
     epsilon: f64,
     rng: &mut Pcg32,
@@ -33,7 +33,7 @@ pub fn greedy_sample(
     let n_top = plan_size - n_random;
 
     let mut out = Vec::with_capacity(plan_size);
-    let mut taken: HashSet<u64> = HashSet::new();
+    let mut taken: BTreeSet<u64> = BTreeSet::new();
     for &i in &order {
         if out.len() >= n_top {
             break;
@@ -65,12 +65,12 @@ mod tests {
         let mut rng = Pcg32::seed_from(0);
         let traj: Vec<Config> = (0..100).map(|_| s.random_config(&mut rng)).collect();
         let scores: Vec<f64> = (0..100).map(|i| i as f64).collect();
-        let out = greedy_sample(&s, &traj, &scores, &HashSet::new(), 8, 0.0, &mut rng);
+        let out = greedy_sample(&s, &traj, &scores, &BTreeSet::new(), 8, 0.0, &mut rng);
         assert_eq!(out.len(), 8);
         // highest scores are at the end of traj
-        let top: HashSet<u64> =
+        let top: BTreeSet<u64> =
             traj[92..].iter().map(|c| s.flat_index(c)).collect();
-        let got: HashSet<u64> = out.iter().map(|c| s.flat_index(c)).collect();
+        let got: BTreeSet<u64> = out.iter().map(|c| s.flat_index(c)).collect();
         assert_eq!(top, got);
     }
 
@@ -80,7 +80,7 @@ mod tests {
         let mut rng = Pcg32::seed_from(1);
         let traj: Vec<Config> = (0..50).map(|_| s.random_config(&mut rng)).collect();
         let scores: Vec<f64> = (0..50).map(|i| i as f64).collect();
-        let visited: HashSet<u64> =
+        let visited: BTreeSet<u64> =
             traj[40..].iter().map(|c| s.flat_index(c)).collect();
         let out = greedy_sample(&s, &traj, &scores, &visited, 10, 0.0, &mut rng);
         for c in &out {
@@ -94,9 +94,9 @@ mod tests {
         let mut rng = Pcg32::seed_from(2);
         let traj: Vec<Config> = (0..64).map(|_| s.random_config(&mut rng)).collect();
         let scores = vec![1.0; 64];
-        let out = greedy_sample(&s, &traj, &scores, &HashSet::new(), 64, 0.25, &mut rng);
+        let out = greedy_sample(&s, &traj, &scores, &BTreeSet::new(), 64, 0.25, &mut rng);
         assert_eq!(out.len(), 64);
-        let traj_set: HashSet<u64> = traj.iter().map(|c| s.flat_index(c)).collect();
+        let traj_set: BTreeSet<u64> = traj.iter().map(|c| s.flat_index(c)).collect();
         let fresh = out.iter().filter(|c| !traj_set.contains(&s.flat_index(c))).count();
         assert!(fresh >= 10, "only {fresh} random picks");
     }
@@ -111,13 +111,13 @@ mod tests {
         let mut scores: Vec<f64> = (0..32).map(|i| i as f64).collect();
         scores[3] = f64::NAN;
         scores[17] = f64::NAN;
-        let out = greedy_sample(&s, &traj, &scores, &HashSet::new(), 10, 0.0, &mut rng);
+        let out = greedy_sample(&s, &traj, &scores, &BTreeSet::new(), 10, 0.0, &mut rng);
         assert_eq!(out.len(), 10);
-        let distinct: HashSet<u64> = out.iter().map(|c| s.flat_index(c)).collect();
+        let distinct: BTreeSet<u64> = out.iter().map(|c| s.flat_index(c)).collect();
         assert_eq!(distinct.len(), out.len());
         // the top-scored config still makes the cut; the NaN-scored ones
         // rank like the worst score and are left out
-        let got: HashSet<u64> = out.iter().map(|c| s.flat_index(c)).collect();
+        let got: BTreeSet<u64> = out.iter().map(|c| s.flat_index(c)).collect();
         assert!(got.contains(&s.flat_index(&traj[31])));
         assert!(!got.contains(&s.flat_index(&traj[3])));
         assert!(!got.contains(&s.flat_index(&traj[17])));
@@ -130,9 +130,9 @@ mod tests {
         let c = s.random_config(&mut rng);
         let traj = vec![c.clone(); 20];
         let scores = vec![1.0; 20];
-        let out = greedy_sample(&s, &traj, &scores, &HashSet::new(), 5, 0.0, &mut rng);
+        let out = greedy_sample(&s, &traj, &scores, &BTreeSet::new(), 5, 0.0, &mut rng);
         // only one distinct trajectory point exists; rest come from ε-pool
-        let distinct: HashSet<u64> = out.iter().map(|x| s.flat_index(x)).collect();
+        let distinct: BTreeSet<u64> = out.iter().map(|x| s.flat_index(x)).collect();
         assert_eq!(distinct.len(), out.len());
     }
 }

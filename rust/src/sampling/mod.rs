@@ -13,7 +13,7 @@ pub use kmeans::{kmeans, kmeans_matrix, nearest_points, KMeansResult};
 
 use crate::space::{Config, DesignSpace};
 use crate::util::rng::Pcg32;
-use std::collections::HashSet;
+use std::collections::BTreeSet;
 
 /// Push up to `want` uniform-random configs onto `out`, skipping anything in
 /// `visited` or `taken` (accepted configs are added to `taken`). Bounded by
@@ -22,8 +22,8 @@ use std::collections::HashSet;
 /// ε-exploration share.
 pub fn fill_random_unvisited(
     space: &DesignSpace,
-    visited: &HashSet<u64>,
-    taken: &mut HashSet<u64>,
+    visited: &BTreeSet<u64>,
+    taken: &mut BTreeSet<u64>,
     want: usize,
     guard: usize,
     rng: &mut Pcg32,
@@ -50,14 +50,14 @@ mod tests {
     fn fill_random_unvisited_respects_sets_and_guard() {
         let space = DesignSpace::for_conv(zoo::alexnet()[2].layer);
         let mut rng = Pcg32::seed_from(0);
-        let mut taken = HashSet::new();
+        let mut taken = BTreeSet::new();
         let mut out = Vec::new();
         // pre-visit a handful of configs; draws must avoid them
-        let visited: HashSet<u64> =
+        let visited: BTreeSet<u64> =
             (0..32).map(|_| space.flat_index(&space.random_config(&mut rng))).collect();
         fill_random_unvisited(&space, &visited, &mut taken, 16, 1000, &mut rng, &mut out);
         assert_eq!(out.len(), 16);
-        let mut seen = HashSet::new();
+        let mut seen = BTreeSet::new();
         for c in &out {
             let f = space.flat_index(c);
             assert!(!visited.contains(&f));

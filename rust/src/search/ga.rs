@@ -6,7 +6,7 @@ use super::{dedup_top, SearchRound, Searcher};
 use crate::costmodel::CostModel;
 use crate::space::{Config, DesignSpace};
 use crate::util::rng::Pcg32;
-use std::collections::HashSet;
+use std::collections::BTreeSet;
 
 #[derive(Debug, Clone)]
 pub struct GaParams {
@@ -77,7 +77,7 @@ impl Searcher for GeneticAlgorithm {
         &mut self,
         space: &DesignSpace,
         model: &CostModel,
-        _visited: &HashSet<u64>,
+        _visited: &BTreeSet<u64>,
         rng: &mut Pcg32,
     ) -> SearchRound {
         let p = self.params.clone();
@@ -179,7 +179,7 @@ mod tests {
             population: 64,
             ..Default::default()
         });
-        let r = ga.round(&space, &cm, &HashSet::new(), &mut rng);
+        let r = ga.round(&space, &cm, &BTreeSet::new(), &mut rng);
 
         let init: Vec<_> = (0..64).map(|_| space.random_config(&mut rng)).collect();
         let init_best = cm

@@ -14,7 +14,7 @@ use crate::costmodel::CostModel;
 use crate::runtime::AgentState;
 use crate::space::{Config, DesignSpace};
 use crate::util::rng::Pcg32;
-use std::collections::HashSet;
+use std::collections::{BTreeSet, HashSet};
 
 /// The outcome of one search round (one tuner iteration's worth of search).
 #[derive(Debug, Clone)]
@@ -37,12 +37,14 @@ pub struct SearchRound {
 pub trait Searcher {
     fn name(&self) -> &'static str;
 
-    /// Run one round of search and return the trajectory.
+    /// Run one round of search and return the trajectory. `visited` is an
+    /// ordered set so any future iteration over it is deterministic (lint
+    /// rule D2); lookups are O(log n) but the set stays small.
     fn round(
         &mut self,
         space: &DesignSpace,
         model: &CostModel,
-        visited: &HashSet<u64>,
+        visited: &BTreeSet<u64>,
         rng: &mut Pcg32,
     ) -> SearchRound;
 

@@ -4,7 +4,7 @@ use super::{dedup_top, SearchRound, Searcher};
 use crate::costmodel::CostModel;
 use crate::space::DesignSpace;
 use crate::util::rng::Pcg32;
-use std::collections::HashSet;
+use std::collections::BTreeSet;
 
 pub struct RandomSearch {
     /// How many uniform draws per round.
@@ -29,7 +29,7 @@ impl Searcher for RandomSearch {
         &mut self,
         space: &DesignSpace,
         model: &CostModel,
-        _visited: &HashSet<u64>,
+        _visited: &BTreeSet<u64>,
         rng: &mut Pcg32,
     ) -> SearchRound {
         let configs: Vec<_> = (0..self.draws).map(|_| space.random_config(rng)).collect();
@@ -57,7 +57,7 @@ mod tests {
         let cm = CostModel::new(0);
         let mut rng = Pcg32::seed_from(0);
         let mut rs = RandomSearch { draws: 100, traj_cap: 64 };
-        let r = rs.round(&space, &cm, &HashSet::new(), &mut rng);
+        let r = rs.round(&space, &cm, &BTreeSet::new(), &mut rng);
         assert!(r.trajectory.len() <= 64);
         assert!(r.trajectory.len() > 32); // collisions are rare in a vast space
         assert_eq!(r.steps, 100);

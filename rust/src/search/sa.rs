@@ -11,7 +11,7 @@ use super::{dedup_top, SearchRound, Searcher};
 use crate::costmodel::CostModel;
 use crate::space::{Config, DesignSpace};
 use crate::util::rng::Pcg32;
-use std::collections::HashSet;
+use std::collections::BTreeSet;
 
 #[derive(Debug, Clone)]
 pub struct SaParams {
@@ -74,7 +74,7 @@ impl Searcher for SimulatedAnnealing {
         &mut self,
         space: &DesignSpace,
         model: &CostModel,
-        _visited: &HashSet<u64>,
+        _visited: &BTreeSet<u64>,
         rng: &mut Pcg32,
     ) -> SearchRound {
         let p = &self.params;
@@ -169,7 +169,7 @@ mod tests {
         let mut rng = Pcg32::seed_from(1);
 
         let mut sa = SimulatedAnnealing::default();
-        let round = sa.round(&space, &cm, &HashSet::new(), &mut rng);
+        let round = sa.round(&space, &cm, &BTreeSet::new(), &mut rng);
 
         // random baseline of the same budget order
         let rand: Vec<_> = (0..2000).map(|_| space.random_config(&mut rng)).collect();
@@ -196,7 +196,7 @@ mod tests {
             n_chains: 32,
             ..Default::default()
         });
-        let r = sa.round(&space, &cm, &HashSet::new(), &mut rng);
+        let r = sa.round(&space, &cm, &BTreeSet::new(), &mut rng);
         assert_eq!(r.trajectory.len(), r.scores.len());
         assert!(r.steps <= 100);
         assert!(r.steps_to_converge <= r.steps);
@@ -216,7 +216,7 @@ mod tests {
             patience: 30,
             ..Default::default()
         });
-        let r = sa.round(&space, &cm, &HashSet::new(), &mut rng);
+        let r = sa.round(&space, &cm, &BTreeSet::new(), &mut rng);
         assert!(r.steps < 100, "ran {} steps on a flat surface", r.steps);
     }
 
@@ -230,8 +230,8 @@ mod tests {
             n_chains: 16,
             ..Default::default()
         });
-        let r1 = sa.round(&space, &cm, &HashSet::new(), &mut rng);
-        let r2 = sa.round(&space, &cm, &HashSet::new(), &mut rng);
+        let r1 = sa.round(&space, &cm, &BTreeSet::new(), &mut rng);
+        let r2 = sa.round(&space, &cm, &BTreeSet::new(), &mut rng);
         // warm start should keep round-2 quality at least near round-1
         assert!(r2.scores[0] >= r1.scores[0] - 0.5);
         sa.reset();

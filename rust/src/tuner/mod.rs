@@ -27,7 +27,7 @@ use crate::transfer::{
 };
 use crate::util::rng::Pcg32;
 use crate::workload::ConvTask;
-use std::collections::{HashSet, VecDeque};
+use std::collections::{BTreeSet, VecDeque};
 use std::sync::Arc;
 
 /// Which search agent drives the tuner.
@@ -253,11 +253,11 @@ pub struct TaskTuner {
     rng: Pcg32,
     model: CostModel,
     searcher: Box<dyn Searcher>,
-    visited: HashSet<u64>,
+    visited: BTreeSet<u64>,
     /// Flat indices planned but not yet absorbed (nonempty only when the
     /// caller pipelines) — excluded from sampling so no config is measured
     /// twice even while its batch is still on the device.
-    in_flight: HashSet<u64>,
+    in_flight: BTreeSet<u64>,
     /// Configs claimed by planned-but-unabsorbed batches.
     pending: usize,
     best: Option<(Config, f64, f64)>, // (config, ms, gflops)
@@ -293,8 +293,8 @@ impl TaskTuner {
             rng: Pcg32::seed_from(cfg.seed ^ 0x7e1ea5e),
             model,
             searcher,
-            visited: HashSet::new(),
-            in_flight: HashSet::new(),
+            visited: BTreeSet::new(),
+            in_flight: BTreeSet::new(),
             pending: 0,
             best: None,
             iterations: Vec::new(),
@@ -409,8 +409,8 @@ impl TaskTuner {
 
         // Configs to exclude from sampling: measured ones plus anything an
         // in-flight batch already claimed.
-        let excluded_owned: HashSet<u64>;
-        let excluded: &HashSet<u64> = if self.in_flight.is_empty() {
+        let excluded_owned: BTreeSet<u64>;
+        let excluded: &BTreeSet<u64> = if self.in_flight.is_empty() {
             &self.visited
         } else {
             excluded_owned = self.visited.union(&self.in_flight).copied().collect();
@@ -440,7 +440,7 @@ impl TaskTuner {
             SamplerKind::Adaptive => {
                 let r = adaptive_sample(&self.space, &round.trajectory, excluded, &mut self.rng);
                 let mut samples = r.samples;
-                let mut taken: HashSet<u64> =
+                let mut taken: BTreeSet<u64> =
                     samples.iter().map(|c| self.space.flat_index(c)).collect();
                 // exploitation top-up: the highest-predicted unvisited
                 // trajectory points (the configs the compiler most wants

@@ -133,6 +133,8 @@ fn pool() -> &'static Pool {
             std::thread::Builder::new()
                 .name(format!("release-pool-{w}"))
                 .spawn(move || worker_loop(shared))
+                // PANIC: thread creation failing at pool init is
+                // unrecoverable resource exhaustion; nothing to degrade to.
                 .expect("spawn pool worker");
         }
         Pool { shared }
@@ -142,11 +144,15 @@ fn pool() -> &'static Pool {
 fn worker_loop(shared: &'static PoolShared) {
     loop {
         let job = {
+            // PANIC: queue-mutex poisoning means another worker died while
+            // holding it (jobs catch their own panics, so this is a harness
+            // bug) — crashing the pool loudly beats silently losing chunks.
             let mut q = shared.queue.lock().unwrap();
             loop {
                 if let Some(j) = q.pop_front() {
                     break j;
                 }
+                // PANIC: same poisoning contract as the lock above.
                 q = shared.work_cv.wait(q).unwrap();
             }
         };
@@ -163,6 +169,8 @@ struct Latch {
 
 impl Latch {
     fn count_down(&self) {
+        // PANIC: latch-mutex poisoning — the caller re-raises worker panics
+        // after the region anyway; propagating poison here is equivalent.
         let mut r = self.remaining.lock().unwrap();
         *r -= 1;
         if *r == 0 {
@@ -203,15 +211,20 @@ fn pool_run_chunks(nchunks: usize, for_chunk: &(dyn Fn(usize) + Sync)) {
         panicked: AtomicBool::new(false),
     };
     {
-        // SAFETY: `for_chunk` and `latch` outlive every queued job — this
-        // function does not return (not even by unwinding; see the
-        // catch_unwind below) until the latch has counted every job done.
+        // SAFETY: `for_chunk` outlives every queued job — this function
+        // does not return (not even by unwinding; see the catch_unwind
+        // below) until the latch has counted every job done.
         let f = unsafe {
             std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(
                 for_chunk,
             )
         };
+        // SAFETY: same lifetime laundering as `f` above — `latch` lives on
+        // this stack frame and every job counts down before the frame can
+        // unwind, so the 'static borrow never dangles.
         let l = unsafe { std::mem::transmute::<&Latch, &'static Latch>(&latch) };
+        // PANIC: mutex poisoning — a panicked worker already re-raises via
+        // the latch flag; propagating the poison here is the correct crash.
         let mut q = p.shared.queue.lock().unwrap();
         for ci in 1..nchunks {
             q.push_back(Box::new(move || {
@@ -232,20 +245,26 @@ fn pool_run_chunks(nchunks: usize, for_chunk: &(dyn Fn(usize) + Sync)) {
     // the latch opens — this is what makes nested regions deadlock-free
     // with a fixed worker count
     loop {
+        // PANIC: all four lock/wait unwraps in this loop share the
+        // poisoning contract documented on `worker_loop`: jobs catch their
+        // own panics, so a poisoned latch or queue is a harness bug.
         if *latch.remaining.lock().unwrap() == 0 {
             break;
         }
+        // PANIC: see the poisoning contract above.
         let job = p.shared.queue.lock().unwrap().pop_front();
         if let Some(j) = job {
             j();
             continue;
         }
+        // PANIC: see the poisoning contract above.
         let r = latch.remaining.lock().unwrap();
         if *r == 0 {
             break;
         }
         // timed wait: a nested region may enqueue work that only signals
-        // `work_cv`, so re-poll the queue instead of sleeping on it
+        // `work_cv`, so re-poll the queue instead of sleeping on it.
+        // PANIC: see the poisoning contract above.
         let _ = latch.done_cv.wait_timeout(r, Duration::from_micros(100)).unwrap();
     }
     if let Err(e) = own {
@@ -259,7 +278,13 @@ fn pool_run_chunks(nchunks: usize, for_chunk: &(dyn Fn(usize) + Sync)) {
 /// `*mut T` that may cross threads — only ever dereferenced through
 /// disjoint per-chunk ranges computed from the chunk index.
 struct SendPtr<T>(*mut T);
+// The pointer is only dereferenced through disjoint per-chunk ranges
+// (`[start, end)` computed from the chunk index), so no two threads ever
+// alias the same elements, and `T: Send` keeps the element type safe to
+// move across the pool.
+// SAFETY: disjoint-range access as documented above.
 unsafe impl<T: Send> Send for SendPtr<T> {}
+// SAFETY: sharing `&SendPtr` is confined to the same disjoint ranges.
 unsafe impl<T: Send> Sync for SendPtr<T> {}
 
 // --- the three primitives ---------------------------------------------------
@@ -291,6 +316,8 @@ where
             *slot = Some(f(item));
         }
     });
+    // PANIC: every slot is Some — run_chunks returns only after all chunks
+    // completed, and the chunk ranges cover 0..n exactly.
     out.into_iter().map(|o| o.unwrap()).collect()
 }
 

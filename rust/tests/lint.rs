@@ -1,0 +1,131 @@
+//! Self-lint integration tests: `pallas-lint` run against this very repo,
+//! plus an end-to-end ratchet exercise on a synthetic tree.
+//!
+//! The first test is the same check CI runs (`pallas-lint
+//! --check-baseline`): the working tree must carry no determinism/safety
+//! debt beyond the committed `LINT_BASELINE.json`, and the baseline may
+//! only ever shrink.
+
+use release::analysis::rules::{ALLOWLIST, RULES};
+use release::analysis::{baseline, lint_tree};
+use std::path::{Path, PathBuf};
+
+fn repo_root() -> PathBuf {
+    // CARGO_MANIFEST_DIR is the crate root, which is the repo root here
+    // (Cargo.toml lives at the top level).
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+#[test]
+fn repo_has_no_unbaselined_lint_debt() {
+    let root = repo_root();
+    let report = lint_tree(&root).expect("lint_tree over the repo");
+    assert!(report.files_scanned > 40, "suspiciously few files scanned: {}", report.files_scanned);
+
+    let counts = baseline::counts_of(&report.findings);
+    let committed = baseline::read(&root.join(baseline::BASELINE_PATH))
+        .expect("LINT_BASELINE.json must exist and parse — run `pallas-lint --write-baseline`");
+    let d = baseline::diff(&counts, &committed);
+
+    let mut msg = String::new();
+    for (key, cur, base) in &d.regressions {
+        msg.push_str(&format!("\n  NEW debt {key}: {cur} violation(s), baseline allows {base}"));
+        for f in report.findings.iter().filter(|f| f.key() == *key) {
+            msg.push_str(&format!("\n    {}:{} [{}] {}", f.file, f.line, f.rule, f.message));
+            msg.push_str(&format!("\n      fix: {}", f.hint));
+        }
+    }
+    assert!(
+        d.is_clean(),
+        "pallas-lint found violations beyond LINT_BASELINE.json:{msg}\n\
+         (fix the sites, allowlist with a justification, or — only for \
+         pre-existing debt — regenerate the baseline)"
+    );
+}
+
+#[test]
+fn lint_baseline_is_wellformed_and_refers_to_real_files() {
+    let root = repo_root();
+    let committed = baseline::read(&root.join(baseline::BASELINE_PATH))
+        .expect("LINT_BASELINE.json must exist and parse");
+    let rule_ids: Vec<&str> = RULES.iter().map(|(id, _, _)| *id).collect();
+    for (key, count) in &committed {
+        let (file, rule) = key
+            .rsplit_once('|')
+            .unwrap_or_else(|| panic!("malformed baseline key {key:?} (want file|RULE)"));
+        assert!(rule_ids.contains(&rule), "unknown rule id in baseline key {key:?}");
+        assert!(
+            root.join(file).is_file(),
+            "baseline key {key:?} names a file that no longer exists — \
+             run `pallas-lint --write-baseline` to drop it"
+        );
+        assert!(*count > 0, "zero-count baseline bucket {key:?} should be absent");
+    }
+}
+
+#[test]
+fn allowlist_entries_refer_to_real_files() {
+    let root = repo_root();
+    for e in ALLOWLIST {
+        assert!(
+            root.join(e.file_suffix).is_file(),
+            "allowlist entry [{}] {} names a file that no longer exists",
+            e.rule,
+            e.file_suffix
+        );
+        assert!(!e.reason.is_empty(), "allowlist entry for {} has no justification", e.file_suffix);
+    }
+}
+
+// ---- end-to-end ratchet on a synthetic tree --------------------------------
+
+fn write(path: &Path, content: &str) {
+    std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+    std::fs::write(path, content).unwrap();
+}
+
+#[test]
+fn ratchet_end_to_end_new_debt_blocks_shrink_is_locked_in_growth_rejected() {
+    let dir = std::env::temp_dir().join(format!("pallas-lint-e2e-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let lib = dir.join("rust/src/lib.rs");
+    write(&lib, "fn f(o: Option<u32>) -> u32 { o.unwrap() }\n");
+
+    // measure the starting debt and commit it as the baseline
+    let report = lint_tree(&dir).unwrap();
+    let counts = baseline::counts_of(&report.findings);
+    assert_eq!(counts.get("rust/src/lib.rs|S2"), Some(&1));
+    let bpath = dir.join(baseline::BASELINE_PATH);
+    baseline::write_ratcheted(&bpath, &counts).unwrap();
+    let committed = baseline::read(&bpath).unwrap();
+    assert!(baseline::diff(&counts, &committed).is_clean());
+
+    // a NEW violation (second unjustified unwrap) is a regression
+    write(
+        &lib,
+        "fn f(o: Option<u32>) -> u32 { o.unwrap() }\n\
+         fn g(o: Option<u32>) -> u32 { o.unwrap() }\n",
+    );
+    let grown = baseline::counts_of(&lint_tree(&dir).unwrap().findings);
+    let d = baseline::diff(&grown, &committed);
+    assert!(!d.is_clean(), "new debt must register as a regression");
+    assert_eq!(d.regressions, vec![("rust/src/lib.rs|S2".to_string(), 2, 1)]);
+    // ... and --write-baseline refuses to absorb it
+    assert!(baseline::write_ratcheted(&bpath, &grown).is_err());
+    assert_eq!(baseline::read(&bpath).unwrap(), committed, "rejected write must not alter file");
+
+    // fixing the debt is clean against the old baseline and ratchets down
+    write(
+        &lib,
+        "fn f(o: Option<u32>) -> u32 {\n    // PANIC: fixture — o is Some by construction\n    o.unwrap()\n}\n",
+    );
+    let fixed = baseline::counts_of(&lint_tree(&dir).unwrap().findings);
+    assert!(fixed.is_empty());
+    let d = baseline::diff(&fixed, &committed);
+    assert!(d.is_clean(), "shrinking debt never blocks");
+    assert_eq!(d.improvements, vec![("rust/src/lib.rs|S2".to_string(), 0, 1)]);
+    baseline::write_ratcheted(&bpath, &fixed).unwrap();
+    assert!(baseline::read(&bpath).unwrap().is_empty(), "ratchet-down must stick");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
