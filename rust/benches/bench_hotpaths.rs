@@ -15,7 +15,10 @@
 //!     baseline at the same thread count (>= 4 cores; scaled down below),
 //!   - >= 2x fewer heap allocations per tuning round on the serial path,
 //!   - no alloc-count regression beyond the committed baseline (the
-//!     ratchet; see `ALLOC_BASELINE.json`).
+//!     ratchet; see `ALLOC_BASELINE.json`),
+//!   - tracing-disabled obs overhead bounded at <= 3% of the serial e2e
+//!     run (measured guard cost x traced call volume — the pallas-trace
+//!     "near-zero when off" contract).
 //!
 //! `RELEASE_QUICK=1 cargo bench --bench bench_hotpaths` for the CI smoke;
 //! `RELEASE_ALLOC_ONLY=1` runs just the (deterministic) allocation audit +
@@ -87,15 +90,20 @@ fn allocs() -> u64 {
 const ALLOC_BASELINE_PATH: &str = "ALLOC_BASELINE.json";
 const RATCHET_HEADROOM: f64 = 1.05;
 
-/// Parse `"flat_round": <u64|null>` out of the baseline JSON (hand-rolled:
-/// serde is not vendored). Returns None when absent, null or unreadable.
-fn read_alloc_baseline() -> Option<u64> {
+/// Parse `"flat_round": <u64|null>` plus the `"provisional"` flag out of
+/// the baseline JSON (hand-rolled: serde is not vendored). Returns None
+/// when the count is absent, null or unreadable. A provisional baseline is
+/// a hand-set ceiling rather than a measurement: the first real run
+/// replaces it with the measured count (auto-tighten) and only fails if
+/// the measurement exceeds the ceiling's headroom.
+fn read_alloc_baseline() -> Option<(u64, bool)> {
     let text = std::fs::read_to_string(ALLOC_BASELINE_PATH).ok()?;
     let key = "\"flat_round\"";
     let at = text.find(key)? + key.len();
     let rest = text[at..].trim_start().strip_prefix(':')?.trim_start();
     let num: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
-    num.parse().ok()
+    let provisional = text.contains("\"provisional\": true");
+    num.parse().ok().map(|n| (n, provisional))
 }
 
 fn write_alloc_baseline(flat: u64) {
@@ -379,7 +387,22 @@ fn main() {
     // ratchet: compare against the committed baseline (bootstrap when null)
     let baseline = read_alloc_baseline();
     match baseline {
-        Some(b) => {
+        Some((b, true)) => {
+            let limit = (b as f64 * RATCHET_HEADROOM) as u64;
+            println!(
+                "alloc ratchet: measured {flat_allocs} vs PROVISIONAL ceiling \
+                 {b} (limit {limit})"
+            );
+            if flat_allocs <= b {
+                println!(
+                    "provisional ceiling replaced with the measured baseline \
+                     {flat_allocs}; commit the updated ALLOC_BASELINE.json \
+                     (uploaded as a CI artifact) to arm the exact ratchet"
+                );
+                write_alloc_baseline(flat_allocs);
+            }
+        }
+        Some((b, false)) => {
             let limit = (b as f64 * RATCHET_HEADROOM) as u64;
             println!(
                 "alloc ratchet: measured {flat_allocs} vs baseline {b} \
@@ -403,8 +426,8 @@ fn main() {
     }
 
     // --- quick end-to-end session (sanity: the wiring pays off in situ) -----
-    let (e2e_serial_s, e2e_parallel_s) = if alloc_only {
-        (0.0, 0.0)
+    let (e2e_serial_s, e2e_parallel_s, trace_overhead_frac) = if alloc_only {
+        (0.0, 0.0, 0.0)
     } else {
         let e2e_task = &zoo::resnet18()[5];
         let e2e_cfg = TunerConfig { max_trials: 96, seed: 3, ..Default::default() };
@@ -428,7 +451,42 @@ fn main() {
             "e2e tune (sa+as, 96 trials): serial {:.2}s, threads={hi} {:.2}s",
             serial, parallel
         );
-        (serial, parallel)
+
+        // tracing-disabled overhead bound (the obs contract): time the
+        // disabled guard itself — one relaxed atomic load — then multiply
+        // by the obs call volume of an identical traced run. The volume
+        // proxy over-counts (counter *values*, not call sites), so the
+        // bound is conservative.
+        let guard_calls: u64 = if quick { 20_000_000 } else { 100_000_000 };
+        let t0 = Instant::now();
+        for i in 0..guard_calls {
+            release::obs::metrics::add(
+                release::obs::metrics::Counter::ModelPredicts,
+                std::hint::black_box(i),
+            );
+        }
+        let per_call_s = t0.elapsed().as_secs_f64() / guard_calls as f64;
+        release::obs::enable();
+        set_threads(1);
+        let rt =
+            tune(e2e_task, &SimMeasurer::titan_xp(3), MethodSpec::sa_as(), &e2e_cfg, None);
+        set_threads(0);
+        release::obs::disable();
+        assert_eq!(
+            r1.best_gflops.to_bits(),
+            rt.best_gflops.to_bits(),
+            "tracing must not perturb tuning results"
+        );
+        let volume =
+            release::obs::metrics::total_counted() + release::obs::drain().len() as u64;
+        let frac = per_call_s * volume as f64 / serial.max(1e-9);
+        println!(
+            "tracing-disabled overhead: {:.2} ns/guard x {volume} obs calls = \
+             {:.4}% of the serial e2e run",
+            per_call_s * 1e9,
+            frac * 100.0
+        );
+        (serial, parallel, frac)
     };
 
     // --- combined bars + JSON ------------------------------------------------
@@ -454,13 +512,14 @@ fn main() {
             "flat serial path must allocate >= 2x less per round: \
              naive {naive_allocs} vs flat {flat_allocs} ({alloc_ratio:.2}x)"
         );
-        if let Some(b) = baseline {
+        if let Some((b, provisional)) = baseline {
             let limit = (b as f64 * RATCHET_HEADROOM) as u64;
             assert!(
                 flat_allocs <= limit,
                 "alloc-count regression: {flat_allocs} allocs per serial round \
-                 exceeds the ratchet limit {limit} (baseline {b}); if the \
-                 increase is intentional, update ALLOC_BASELINE.json"
+                 exceeds the ratchet limit {limit} ({} {b}); if the \
+                 increase is intentional, update ALLOC_BASELINE.json",
+                if provisional { "provisional ceiling" } else { "baseline" }
             );
         }
         println!("alloc audit + ratchet passed");
@@ -501,10 +560,13 @@ fn main() {
     json.push_str(&format!("  \"combined_speedup\": {combined:.3},\n"));
     json.push_str(&format!("  \"combined_vs_pr4\": {combined_vs_pr4:.3},\n"));
     json.push_str(&format!(
+        "  \"trace_overhead_frac\": {trace_overhead_frac:.6},\n"
+    ));
+    json.push_str(&format!(
         "  \"allocs\": {{\"naive_round\": {naive_allocs}, \
          \"flat_round\": {flat_allocs}, \"ratio\": {alloc_ratio:.3}, \
          \"baseline\": {}}}\n",
-        baseline.map(|b| b.to_string()).unwrap_or_else(|| "null".into())
+        baseline.map(|(b, _)| b.to_string()).unwrap_or_else(|| "null".into())
     ));
     json.push_str("}\n");
     let mut f = std::fs::File::create("BENCH_hotpaths.json").expect("write json");
@@ -513,17 +575,23 @@ fn main() {
 
     // --- acceptance bars -----------------------------------------------------
     assert!(
+        trace_overhead_frac <= 0.03,
+        "tracing-disabled overhead bound {:.3}% exceeds the 3% obs contract",
+        trace_overhead_frac * 100.0
+    );
+    assert!(
         alloc_ratio >= 2.0,
         "flat serial path must allocate >= 2x less per round: \
          naive {naive_allocs} vs flat {flat_allocs} ({alloc_ratio:.2}x)"
     );
-    if let Some(b) = baseline {
+    if let Some((b, provisional)) = baseline {
         let limit = (b as f64 * RATCHET_HEADROOM) as u64;
         assert!(
             flat_allocs <= limit,
             "alloc-count regression: {flat_allocs} allocs per serial round \
-             exceeds the ratchet limit {limit} (baseline {b}); if the \
-             increase is intentional, update ALLOC_BASELINE.json"
+             exceeds the ratchet limit {limit} ({} {b}); if the \
+             increase is intentional, update ALLOC_BASELINE.json",
+            if provisional { "provisional ceiling" } else { "baseline" }
         );
     }
     if hi >= 4 {

@@ -8,7 +8,9 @@
 //! pipeline depth 2.
 //!
 //! `RELEASE_QUICK=1 cargo bench --bench bench_session_pipeline` for a fast
-//! pass.
+//! pass. `RELEASE_TRACE=<out.jsonl>` additionally records the pipelined
+//! leg's pallas-trace and exports it as chrome://tracing JSON — the CI
+//! job uploads that file as a per-PR artifact.
 
 use release::sim::SimMeasurer;
 use release::tuner::e2e::tune_model;
@@ -28,9 +30,19 @@ fn main() {
 
     let meas_pipe = SimMeasurer::titan_xp(17);
     let scfg = SessionConfig::pipelined(cfg, 4);
+    let trace_path = std::env::var("RELEASE_TRACE").ok().filter(|p| !p.is_empty());
+    if trace_path.is_some() {
+        release::obs::enable();
+    }
     let (pipe, _) = Bencher::once("pipelined session(resnet18, tp=4, depth=2)", || {
         tune_model_session("resnet18", &meas_pipe, MethodSpec::sa_as(), &scfg, None)
     });
+    if let Some(p) = trace_path.as_deref() {
+        release::obs::disable();
+        let dropped = release::obs::dropped();
+        release::obs::export_chrome_trace(std::path::Path::new(p)).expect("write trace");
+        println!("trace written to {p} ({dropped} spans dropped)");
+    }
 
     let speedup = serial.opt_time_s / pipe.wall_s;
     println!(

@@ -1,4 +1,4 @@
-//! The five `pallas-lint` rules: the repo's written determinism & safety
+//! The six `pallas-lint` rules: the repo's written determinism & safety
 //! invariants as machine-checked token-tree patterns.
 //!
 //! | id | invariant |
@@ -8,6 +8,7 @@
 //! | D3 | no `std::thread::{spawn,scope,Builder}`, `Instant::now`/`SystemTime::now`, or non-`util::rng` randomness outside `util::parallel`/`util::bench` and the benches tree |
 //! | S1 | every `unsafe` block / `unsafe impl` carries a `// SAFETY:` comment (same line or ≤ 3 lines above) |
 //! | S2 | no `.unwrap()`/`.expect(..)` in library code (`rust/src`, outside `#[cfg(test)]`) without a `// PANIC:` justification |
+//! | O1 | no `println!`/`eprintln!` in engine code (`rust/src` outside `cli`, `report`, `bin`, `util/bench`): the process streams belong to the CLI; engine telemetry goes through `obs` |
 //!
 //! Escape hatches are deliberate and auditable: a central [`ALLOWLIST`]
 //! with a one-line justification per entry (D2/D3), and the `// SAFETY:` /
@@ -46,6 +47,11 @@ pub const RULES: &[(&str, &str, &str)] = &[
         "S2",
         "unwrap()/expect() in library code without a `// PANIC:` justification",
         "handle the error, or justify the panic in a `// PANIC:` comment on or directly above the call",
+    ),
+    (
+        "O1",
+        "println!/eprintln! in engine code (stdout/stderr belongs to the CLI layer)",
+        "record an obs counter/span or return the information to the caller; direct printing is reserved for cli, report, bin and util::bench",
     ),
 ];
 
@@ -100,6 +106,12 @@ pub const ALLOWLIST: &[AllowEntry] = &[
         ident: "thread",
         reason: "scoped task-parallel tuner threads; results keyed to task order; pinned in tests",
     },
+    AllowEntry {
+        rule: "O1",
+        file_suffix: "rust/src/runtime/mod.rs",
+        ident: "eprintln",
+        reason: "one-time backend-selection fallback warning at startup, before any tuning loop runs",
+    },
 ];
 
 /// Files where D3 does not apply at all (they *implement* the sanctioned
@@ -112,6 +124,18 @@ const D3_EXEMPT_PREFIXES: &[&str] = &["rust/benches/"];
 
 /// S2 applies only to library code.
 const S2_PREFIX: &str = "rust/src/";
+
+/// O1 applies to engine library code: `rust/src` minus the user-facing
+/// layers that own the process streams.
+const O1_EXEMPT_PREFIXES: &[&str] =
+    &["rust/src/cli/", "rust/src/report/", "rust/src/bin/"];
+const O1_EXEMPT_SUFFIXES: &[&str] = &["rust/src/util/bench.rs"];
+
+fn o1_applies(rel_path: &str) -> bool {
+    rel_path.starts_with(S2_PREFIX)
+        && !O1_EXEMPT_PREFIXES.iter().any(|p| rel_path.starts_with(p))
+        && !O1_EXEMPT_SUFFIXES.iter().any(|s| rel_path.ends_with(s))
+}
 
 const ITER_METHODS: &[&str] = &[
     "iter",
@@ -147,6 +171,7 @@ struct Scan<'s> {
     hash_idents: BTreeSet<String>,
     d3_applies: bool,
     s2_applies: bool,
+    o1_applies: bool,
     out: Vec<Finding>,
 }
 
@@ -163,6 +188,7 @@ pub fn check_source(rel_path: &str, src: &str) -> FileReport {
         d3_applies: !D3_EXEMPT_SUFFIXES.iter().any(|s| rel_path.ends_with(s))
             && !D3_EXEMPT_PREFIXES.iter().any(|p| rel_path.starts_with(p)),
         s2_applies: rel_path.starts_with(S2_PREFIX),
+        o1_applies: o1_applies(rel_path),
         out: Vec::new(),
     };
     scan_level(&forest, &Ctx { in_test: false }, &mut scan);
@@ -383,6 +409,20 @@ fn check_at(level: &[TokenTree], i: usize, ctx: &Ctx, st: &mut Scan) {
             "unsafe",
             "unsafe without a `// SAFETY:` comment on or directly above it".to_string(),
         );
+    }
+
+    // O1 — stream writes from engine code
+    if st.o1_applies && !ctx.in_test {
+        if let Some(name @ ("println" | "eprintln")) = ident_at(level, i) {
+            if punct_at(level, i + 1, "!") {
+                st.push(
+                    "O1",
+                    line,
+                    name.to_string(),
+                    format!("`{name}!` in engine code — the process streams belong to the CLI"),
+                );
+            }
+        }
     }
 
     // S2 — unjustified unwrap/expect in library code
@@ -649,6 +689,49 @@ mod tests {
     fn cfg_not_test_is_not_a_test_marker() {
         let f = lint_src("#[cfg(not(test))]\nfn lib() { Some(1).unwrap(); }");
         assert_eq!(rules_of(&f), vec!["S2"]);
+    }
+
+    // ---- O1 ----------------------------------------------------------------
+
+    #[test]
+    fn o1_flags_stream_writes_in_engine_code() {
+        let f = lint_src("fn f() { println!(\"progress {x}\"); }");
+        assert_eq!(rules_of(&f), vec!["O1"]);
+        assert_eq!(f[0].ident, "println");
+        let f = lint_src("fn f() { eprintln!(\"warning: {e}\"); }");
+        assert_eq!(rules_of(&f), vec!["O1"]);
+    }
+
+    #[test]
+    fn o1_exempt_in_cli_report_bin_bench_and_tests() {
+        let src = "fn f() { println!(\"user-facing\"); }";
+        assert!(check_source("rust/src/cli/mod.rs", src).findings.is_empty());
+        assert!(check_source("rust/src/report/table.rs", src).findings.is_empty());
+        assert!(check_source("rust/src/bin/pallas_lint.rs", src).findings.is_empty());
+        assert!(check_source("rust/src/util/bench.rs", src).findings.is_empty());
+        // outside rust/src entirely (tests, benches) is out of scope
+        assert!(check_source("rust/tests/integration.rs", src).findings.is_empty());
+        // #[cfg(test)] modules inside engine files may print
+        assert!(lint_src(
+            "#[cfg(test)]\nmod tests { fn t() { eprintln!(\"skipping\"); } }"
+        )
+        .is_empty());
+        // format!/writeln! and mentions in comments or strings do not fire
+        assert!(lint_src("fn f() -> String { format!(\"x={x}\") }").is_empty());
+        assert!(lint_src("// println! would be wrong here\nfn f() {}").is_empty());
+        assert!(lint_src("fn f() { let s = \"println!(gotcha)\"; }").is_empty());
+    }
+
+    #[test]
+    fn o1_allowlist_reroutes_runtime_backend_warning() {
+        let src = "fn f() { eprintln!(\"falling back to native: {e}\"); }";
+        let r = check_source("rust/src/runtime/mod.rs", src);
+        assert!(r.findings.is_empty());
+        assert_eq!(r.allowlisted.len(), 1);
+        assert_eq!(r.allowlisted[0].rule, "O1");
+        // println! there is NOT sanctioned — only the eprintln warning
+        let r = check_source("rust/src/runtime/mod.rs", "fn f() { println!(\"x\"); }");
+        assert_eq!(r.findings.len(), 1);
     }
 
     // ---- cross-cutting ------------------------------------------------------

@@ -5,6 +5,7 @@
 //! release tune --model resnet18 [--method release] [--trials 1000] [--seed 0]
 //! release tune --layer L8 [--method autotvm] ...
 //! release experiment <fig2|fig3|fig5|fig6|fig7|fig8|fig9|transfer|all> [--quick] [--seed 0]
+//! release report trace out.jsonl
 //! ```
 
 use crate::report::{self, ExperimentConfig};
@@ -25,6 +26,13 @@ USAGE:
   release tune --model <alexnet|vgg16|resnet18> [options]
   release tune --layer <L1..L8> [options]
   release experiment <fig2|fig3|fig5|fig6|fig7|fig8|fig9|transfer|all> [--quick] [--seed N]
+  release report trace <out.jsonl>   summarize a recorded trace
+
+OBSERVABILITY (any tune/experiment command):
+  --trace <out.jsonl>  record a deterministic chrome://tracing file of the
+                       run (simulated timeline; bit-identical at any
+                       --threads value)
+  --metrics            print the counter/histogram snapshot after the run
 
 TUNE OPTIONS:
   --method <autotvm|rl|sa+as|release|ga|random>   (default: release)
@@ -61,7 +69,7 @@ fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
         let a = &args[i];
         if let Some(key) = a.strip_prefix("--") {
             // boolean flags
-            if matches!(key, "quick" | "no-early-stop" | "help") {
+            if matches!(key, "quick" | "no-early-stop" | "help" | "metrics") {
                 flags.insert(key.to_string(), "1".to_string());
                 i += 1;
             } else if i + 1 < args.len() {
@@ -85,12 +93,71 @@ pub fn run(args: &[String]) -> i32 {
         println!("{USAGE}");
         return if pos.is_empty() && !flags.contains_key("help") { 2 } else { 0 };
     }
-    match pos[0].as_str() {
+    let trace_path = flags.get("trace").filter(|p| !p.is_empty()).cloned();
+    let observing = trace_path.is_some() || flags.contains_key("metrics");
+    if observing {
+        crate::obs::enable();
+    }
+    let mut code = match pos[0].as_str() {
         "info" => cmd_info(),
         "tune" => cmd_tune(&flags),
         "experiment" => cmd_experiment(&pos[1..], &flags),
+        "report" => cmd_report(&pos[1..]),
         other => {
             eprintln!("unknown command {other:?}\n{USAGE}");
+            2
+        }
+    };
+    if observing {
+        crate::obs::disable();
+        if flags.contains_key("metrics") {
+            crate::obs::metrics::snapshot_table().print();
+        }
+        if let Some(p) = trace_path {
+            let dropped = crate::obs::dropped();
+            match crate::obs::export_chrome_trace(std::path::Path::new(&p)) {
+                Ok(()) => {
+                    println!("trace written to {p}");
+                    if dropped > 0 {
+                        eprintln!("warning: {dropped} span(s) dropped (sink full)");
+                    }
+                }
+                Err(e) => {
+                    eprintln!("failed to write trace {p}: {e}");
+                    if code == 0 {
+                        code = 1;
+                    }
+                }
+            }
+        }
+    }
+    code
+}
+
+/// `release report trace <file.jsonl>` — per-stage and per-lane rollups of
+/// a recorded chrome trace.
+fn cmd_report(pos: &[String]) -> i32 {
+    match pos.first().map(String::as_str) {
+        Some("trace") => {
+            let Some(path) = pos.get(1) else {
+                eprintln!("usage: release report trace <trace.jsonl>");
+                return 2;
+            };
+            match crate::obs::summary::summarize_file(std::path::Path::new(path)) {
+                Ok(s) => {
+                    println!("{}: {} span(s)", path, s.n_events);
+                    s.per_stage.print();
+                    s.per_lane.print();
+                    0
+                }
+                Err(e) => {
+                    eprintln!("cannot read {path}: {e}");
+                    1
+                }
+            }
+        }
+        _ => {
+            eprintln!("unknown report (want: trace <file.jsonl>)\n{USAGE}");
             2
         }
     }
@@ -455,6 +522,15 @@ mod tests {
     #[test]
     fn unknown_command_errors() {
         assert_eq!(run(&["bogus".to_string()]), 2);
+    }
+
+    #[test]
+    fn report_trace_argument_errors_are_graceful() {
+        let argv = |a: &[&str]| a.iter().map(|s| s.to_string()).collect::<Vec<_>>();
+        assert_eq!(run(&argv(&["report"])), 2);
+        assert_eq!(run(&argv(&["report", "trace"])), 2);
+        assert_eq!(run(&argv(&["report", "bogus"])), 2);
+        assert_eq!(run(&argv(&["report", "trace", "/nonexistent/trace.jsonl"])), 1);
     }
 
     #[test]

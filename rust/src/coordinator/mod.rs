@@ -27,6 +27,7 @@ impl Gate {
     }
 
     fn acquire(&self) {
+        crate::obs::metrics::inc(crate::obs::metrics::Counter::GateAcquires);
         let mut p = self.permits.lock().unwrap();
         while *p == 0 {
             p = self.cv.wait(p).unwrap();
@@ -99,6 +100,7 @@ impl<'m> MeasureCoordinator<'m> {
             self.gate.acquire();
             let out = self.measurer.measure_batch_timed(space, configs);
             self.gate.release();
+            self.record_batch(configs.len(), 1, out.1);
             return out;
         }
         *self.jobs.lock().unwrap() += chunks.len();
@@ -146,7 +148,31 @@ impl<'m> MeasureCoordinator<'m> {
             total_secs += secs;
             all.extend(out);
         }
+        self.record_batch(configs.len(), chunks.len(), total_secs);
         (all, total_secs)
+    }
+
+    /// Telemetry for one completed batch: counters, histograms, and — when
+    /// the calling thread carries a task trace context — a `measure/batch`
+    /// span anchored at the task's simulated-timeline position. `secs` is
+    /// the batch's deterministic per-batch attribution, so the span is
+    /// bit-identical at any worker/thread count.
+    fn record_batch(&self, n_configs: usize, n_chunks: usize, secs: f64) {
+        use crate::obs::metrics::{self, Counter, Histogram};
+        if !crate::obs::enabled() {
+            return;
+        }
+        metrics::inc(Counter::CoordBatches);
+        metrics::add(Counter::CoordJobs, n_chunks as u64);
+        metrics::observe(Histogram::MeasureBatchConfigs, n_configs as u64);
+        metrics::observe(Histogram::MeasureBatchSimMs, (secs * 1e3) as u64);
+        crate::obs::emit_ctx(
+            "measure",
+            "batch",
+            crate::obs::ctx_base(),
+            crate::obs::us(secs),
+            &[("n", n_configs as f64), ("chunks", n_chunks as f64)],
+        );
     }
 }
 

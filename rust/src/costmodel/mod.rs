@@ -68,10 +68,13 @@ impl FeatureCache {
 
     /// Row index for `c`, featurizing on first sight.
     fn intern(&mut self, space: &DesignSpace, c: &Config) -> usize {
+        use crate::obs::metrics::{inc, Counter};
         let key = space.flat_index(c);
         if let Some(&ix) = self.map.get(&key) {
+            inc(Counter::FeatureCacheHits);
             return ix as usize;
         }
+        inc(Counter::FeatureCacheMisses);
         if self.map.len() >= FEATURE_CACHE_CAP {
             self.map.clear();
             self.rows.clear();
@@ -259,6 +262,7 @@ impl CostModel {
                     &self.params,
                 ));
                 self.n_fits += 1;
+                crate::obs::metrics::inc(crate::obs::metrics::Counter::ModelFits);
                 self.spent_s.set(
                     self.spent_s.get()
                         + self.time.fit_base_s
@@ -280,6 +284,7 @@ impl CostModel {
         if self.t_scratch_y.len() >= 8 {
             self.gbt = Some(Gbt::fit_matrix(&self.t_scratch_x, &self.t_scratch_y, &self.params));
             self.n_fits += 1;
+            crate::obs::metrics::inc(crate::obs::metrics::Counter::ModelFits);
             self.spent_s.set(
                 self.spent_s.get()
                     + self.time.fit_base_s
@@ -295,6 +300,10 @@ impl CostModel {
     }
 
     pub fn predict_batch(&self, space: &DesignSpace, configs: &[Config]) -> Vec<f64> {
+        crate::obs::metrics::add(
+            crate::obs::metrics::Counter::ModelPredicts,
+            configs.len() as u64,
+        );
         self.spent_s.set(
             self.spent_s.get() + self.time.predict_per_k_s * configs.len() as f64 / 1000.0,
         );

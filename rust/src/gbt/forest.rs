@@ -147,6 +147,10 @@ impl Gbt {
             }
             trees.push(tree);
         }
+        crate::obs::metrics::add(
+            crate::obs::metrics::Counter::GbtTreesFit,
+            trees.len() as u64,
+        );
         Gbt { base, trees, shrinkage: params.learning_rate }
     }
 

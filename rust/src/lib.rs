@@ -24,6 +24,7 @@ pub mod coordinator;
 pub mod costmodel;
 pub mod gbt;
 pub mod nn;
+pub mod obs;
 pub mod report;
 pub mod rl;
 pub mod runtime;

@@ -1,0 +1,270 @@
+//! Static metrics registry: fixed-slot atomic counters + log2-bucket
+//! histograms for the whole tuning loop.
+//!
+//! Everything lives in `static` arrays indexed by enum discriminant —
+//! no allocation ever, no registration step, and snapshots iterate the
+//! arrays in definition order (no hash-map iteration, per rule D2).
+//!
+//! Counters are *process-global and thread-additive*: values that depend
+//! on scheduling (pool help ticks, idle waits, feature-cache hits under
+//! parallel featurize) belong here and are deliberately kept **out of the
+//! trace file**, which must stay bit-identical at any `--threads`.
+//!
+//! All mutation is gated on [`super::enabled`]; when tracing/metrics are
+//! off each call is one relaxed load and an early return.
+
+use crate::report::Table;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Every counter the loop maintains. Keep names in sync with
+/// [`COUNTER_NAMES`] (the `snapshot_names_cover_all_counters` test pins
+/// the arity).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Counter {
+    /// Candidate configs proposed to the measurer (post-sampling).
+    ConfigsSampled,
+    /// Configs actually measured on the (simulated) device.
+    ConfigsMeasured,
+    /// Feature-arena memo hits in `CostModel::intern`.
+    FeatureCacheHits,
+    /// Feature-arena memo misses (fresh featurizations).
+    FeatureCacheMisses,
+    /// `CostModel::refit` calls that actually fit a GBT.
+    ModelFits,
+    /// Configs scored through `CostModel::predict_batch`.
+    ModelPredicts,
+    /// Individual boosted trees fit across all GBT fits.
+    GbtTreesFit,
+    /// PPO minibatch-epoch updates applied.
+    PpoUpdates,
+    /// Searcher rounds planned by task tuners.
+    SearchRounds,
+    /// `adaptive_sample` invocations.
+    AdaptiveSamples,
+    /// Measurement batches through the coordinator.
+    CoordBatches,
+    /// Individual dispatch jobs the coordinator fanned out.
+    CoordJobs,
+    /// Device-slot gate acquisitions.
+    GateAcquires,
+    /// Jobs executed by pool worker threads.
+    PoolJobs,
+    /// Jobs a waiting caller stole and ran itself (help-while-waiting).
+    PoolHelpTicks,
+    /// Timed-out waits in the pool's help loop (idle ticks).
+    PoolIdleWaits,
+    /// Artifacts published to the transfer registry.
+    TransferPublishes,
+    /// Transfer plans built (registry consults).
+    TransferConsults,
+    /// PPO policy warm-starts skipped (backend refused the donor state).
+    PolicyWarmSkipped,
+}
+
+pub const N_COUNTERS: usize = 19;
+
+/// Display names, in `Counter` discriminant order.
+pub const COUNTER_NAMES: [&str; N_COUNTERS] = [
+    "configs_sampled",
+    "configs_measured",
+    "feature_cache_hits",
+    "feature_cache_misses",
+    "model_fits",
+    "model_predicts",
+    "gbt_trees_fit",
+    "ppo_updates",
+    "search_rounds",
+    "adaptive_samples",
+    "coord_batches",
+    "coord_jobs",
+    "gate_acquires",
+    "pool_jobs",
+    "pool_help_ticks",
+    "pool_idle_waits",
+    "transfer_publishes",
+    "transfer_consults",
+    "policy_warm_skipped",
+];
+
+// PANIC-free const-init of the static slot arrays (pre-1.79 pattern).
+#[allow(clippy::declare_interior_mutable_const)]
+const ZERO: AtomicU64 = AtomicU64::new(0);
+static COUNTERS: [AtomicU64; N_COUNTERS] = [ZERO; N_COUNTERS];
+
+/// Log2-bucket histograms (bucket 0 = value 0, bucket k = [2^(k-1), 2^k)).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Histogram {
+    /// Configs per coordinator measurement batch.
+    MeasureBatchConfigs,
+    /// Simulated milliseconds per coordinator measurement batch.
+    MeasureBatchSimMs,
+}
+
+pub const N_HISTS: usize = 2;
+pub const HIST_BUCKETS: usize = 16;
+
+pub const HIST_NAMES: [&str; N_HISTS] =
+    ["measure_batch_configs", "measure_batch_sim_ms"];
+
+#[allow(clippy::declare_interior_mutable_const)]
+const ZERO_ROW: [AtomicU64; HIST_BUCKETS] = [ZERO; HIST_BUCKETS];
+static HISTS: [[AtomicU64; HIST_BUCKETS]; N_HISTS] = [ZERO_ROW; N_HISTS];
+
+/// Add `n` to a counter. One relaxed load + early return when disabled.
+#[inline]
+pub fn add(c: Counter, n: u64) {
+    if super::enabled() {
+        COUNTERS[c as usize].fetch_add(n, Ordering::Relaxed);
+    }
+}
+
+/// Increment a counter by one.
+#[inline]
+pub fn inc(c: Counter) {
+    add(c, 1);
+}
+
+/// Current value of a counter (0 unless metrics were enabled).
+pub fn get(c: Counter) -> u64 {
+    COUNTERS[c as usize].load(Ordering::Relaxed)
+}
+
+#[inline]
+fn bucket_of(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        ((64 - v.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+    }
+}
+
+/// Record one observation into a histogram.
+#[inline]
+pub fn observe(h: Histogram, v: u64) {
+    if super::enabled() {
+        HISTS[h as usize][bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Raw bucket counts for one histogram.
+pub fn hist(h: Histogram) -> [u64; HIST_BUCKETS] {
+    let mut out = [0u64; HIST_BUCKETS];
+    for (o, b) in out.iter_mut().zip(&HISTS[h as usize]) {
+        *o = b.load(Ordering::Relaxed);
+    }
+    out
+}
+
+/// Zero every counter and histogram (called from [`super::enable`]).
+pub fn reset() {
+    for c in &COUNTERS {
+        c.store(0, Ordering::SeqCst);
+    }
+    for row in &HISTS {
+        for b in row {
+            b.store(0, Ordering::SeqCst);
+        }
+    }
+}
+
+/// All counters in definition order (deterministic iteration).
+pub fn snapshot() -> Vec<(&'static str, u64)> {
+    COUNTER_NAMES
+        .iter()
+        .enumerate()
+        .map(|(i, name)| (*name, COUNTERS[i].load(Ordering::Relaxed)))
+        .collect()
+}
+
+/// Sum of every counter — the loop's total metrics-call volume (the ≤3%
+/// overhead stage in `bench_hotpaths` scales the disabled-guard cost by
+/// this).
+pub fn total_counted() -> u64 {
+    COUNTERS.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+}
+
+/// Render the registry as a report table: every counter, then each
+/// histogram's non-empty buckets.
+pub fn snapshot_table() -> Table {
+    let mut t = Table::new("metrics snapshot", &["metric", "value"]);
+    for (name, v) in snapshot() {
+        t.row(vec![name.to_string(), v.to_string()]);
+    }
+    for (hi, hname) in HIST_NAMES.iter().enumerate() {
+        let row = &HISTS[hi];
+        for (b, slot) in row.iter().enumerate() {
+            let n = slot.load(Ordering::Relaxed);
+            if n == 0 {
+                continue;
+            }
+            let range = if b == 0 {
+                "0".to_string()
+            } else {
+                format!("[{}, {})", 1u64 << (b - 1), 1u64 << b)
+            };
+            t.row(vec![format!("hist/{hname} {range}"), n.to_string()]);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Counters are process-global and other tests may be tracing
+    // concurrently: assert on deltas/lower bounds, never exact totals,
+    // and serialize enable/disable cycles on the shared obs test lock.
+
+    #[test]
+    fn disabled_add_is_a_no_op() {
+        let _g = super::super::OBS_TEST_LOCK.lock().unwrap();
+        super::super::disable();
+        let before = get(Counter::PolicyWarmSkipped);
+        add(Counter::PolicyWarmSkipped, 17);
+        assert_eq!(get(Counter::PolicyWarmSkipped), before);
+    }
+
+    #[test]
+    fn enabled_add_accumulates() {
+        let _g = super::super::OBS_TEST_LOCK.lock().unwrap();
+        super::super::enable();
+        let before = get(Counter::TransferConsults);
+        inc(Counter::TransferConsults);
+        add(Counter::TransferConsults, 2);
+        assert!(get(Counter::TransferConsults) >= before + 3);
+        super::super::disable();
+    }
+
+    #[test]
+    fn bucket_edges_are_log2() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(u64::MAX), HIST_BUCKETS - 1);
+    }
+
+    #[test]
+    fn snapshot_names_cover_all_counters() {
+        let snap = snapshot();
+        assert_eq!(snap.len(), N_COUNTERS);
+        // spot-check that discriminants line up with the name table
+        assert_eq!(COUNTER_NAMES[Counter::PoolJobs as usize], "pool_jobs");
+        assert_eq!(
+            COUNTER_NAMES[Counter::PolicyWarmSkipped as usize],
+            "policy_warm_skipped"
+        );
+        assert_eq!(Counter::PolicyWarmSkipped as usize, N_COUNTERS - 1);
+    }
+
+    #[test]
+    fn snapshot_table_lists_every_counter() {
+        let t = snapshot_table();
+        assert!(t.rows.len() >= N_COUNTERS);
+        assert_eq!(t.rows[0][0], "configs_sampled");
+    }
+}

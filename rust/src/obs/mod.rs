@@ -1,0 +1,481 @@
+//! `pallas-trace`: first-party deterministic tracing for the tuning loop.
+//!
+//! Spans are keyed to the *simulated* optimization timeline (the same
+//! event-replay `Clock` that produces `wall_s`), never to the host clock,
+//! so a recorded trace is **bit-identical at any `--threads` value** — a
+//! property no off-the-shelf tracer can offer. Ordering inside the file is
+//! pinned by deterministic sequence numbers, not arrival order:
+//!
+//! - Task-side spans (`tuner/plan`, `search/*`, `sample/*`, `model/*`,
+//!   `measure/*`, `rl/*`, `transfer/*`) carry a per-task sequence from the
+//!   thread-local [`ObsCtx`] a `TaskTuner` installs around its own calls.
+//!   Whatever OS thread happens to run the task, the (lane, seq) pair is a
+//!   pure function of the task's deterministic control flow.
+//! - Serial spans (the session lane and the per-device-slot wait/service
+//!   spans, emitted by the wall-schedule replay after workers have joined)
+//!   draw from a global counter that only single-threaded code touches.
+//!
+//! Draining sorts by `(lane, seq)` — a total order independent of thread
+//! interleaving — and the chrome://tracing export is a pure function of
+//! that sorted event list.
+//!
+//! Cost contract: when disabled (the default) every entry point is one
+//! relaxed atomic load and an early return — no allocation, no locks, no
+//! TLS writes (asserted by the `trace_disabled_alloc` integration test and
+//! the ≤3% overhead stage in `bench_hotpaths`). Enabling preallocates the
+//! sharded sink up front; recording never grows a buffer (full shards
+//! count drops instead of reallocating).
+
+pub mod metrics;
+pub mod summary;
+
+use std::cell::Cell;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Maximum number of key/value arguments carried inline by a span.
+pub const MAX_ARGS: usize = 3;
+
+/// One completed span. Fixed-size and `Copy`: recording never allocates.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpanEvent {
+    /// Category (chrome `cat`), e.g. `"tuner"`, `"device"`.
+    pub cat: &'static str,
+    /// Span name (chrome `name`), e.g. `"plan"`, `"measure/batch"`.
+    pub name: &'static str,
+    /// Chrome `tid`: task index, [`LANE_SESSION`], or `LANE_DEVICE0 + slot`.
+    pub lane: u32,
+    /// Deterministic per-lane sequence number (total order within a lane).
+    pub seq: u32,
+    /// Start on the simulated timeline, microseconds.
+    pub ts_us: u64,
+    /// Duration on the simulated timeline, microseconds (0 = instant).
+    pub dur_us: u64,
+    /// Inline numeric arguments (first `n_args` entries are live).
+    pub args: [(&'static str, f64); MAX_ARGS],
+    pub n_args: u8,
+}
+
+/// Lane for session-scope spans.
+pub const LANE_SESSION: u32 = 999;
+/// First device-slot lane; slot `s` records on `LANE_DEVICE0 + s`.
+pub const LANE_DEVICE0: u32 = 1000;
+
+const N_SHARDS: usize = 16;
+/// Per-shard capacity, reserved once at [`enable`]; pushes beyond it are
+/// counted in [`dropped`] instead of reallocating.
+const SHARD_CAP: usize = 1 << 14;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static DROPPED: AtomicU64 = AtomicU64::new(0);
+/// Sequence source for serial-only call sites (session lane, device lanes
+/// written by the post-join schedule replay). Deterministic because only
+/// single-threaded code draws from it.
+static SERIAL_SEQ: AtomicU32 = AtomicU32::new(0);
+
+// PANIC-free const-init of a static array of mutexes (pre-1.79 pattern).
+#[allow(clippy::declare_interior_mutable_const)]
+const EMPTY_SHARD: Mutex<Vec<SpanEvent>> = Mutex::new(Vec::new());
+static SINK: [Mutex<Vec<SpanEvent>>; N_SHARDS] = [EMPTY_SHARD; N_SHARDS];
+
+/// Per-task tracing context, installed on whichever thread currently runs
+/// the task (see [`swap_ctx`]). `NONE` makes every emit a no-op, so stray
+/// library calls outside a traced tuner never record.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ObsCtx {
+    /// Lane (chrome tid) for spans emitted under this context.
+    pub lane: u32,
+    /// Next per-lane sequence number.
+    pub next_seq: u32,
+    /// Current position on the task's simulated timeline, microseconds.
+    /// Deep call sites (sampler, coordinator, PPO) anchor spans here.
+    pub base_us: u64,
+}
+
+impl ObsCtx {
+    /// The inert context: emits are dropped without recording.
+    pub const NONE: ObsCtx = ObsCtx { lane: u32::MAX, next_seq: 0, base_us: 0 };
+
+    /// A fresh context recording on `lane`.
+    pub fn on_lane(lane: u32) -> ObsCtx {
+        ObsCtx { lane, next_seq: 0, base_us: 0 }
+    }
+
+    pub fn is_none(&self) -> bool {
+        self.lane == u32::MAX
+    }
+}
+
+thread_local! {
+    static CTX: Cell<ObsCtx> = const { Cell::new(ObsCtx::NONE) };
+}
+
+/// The obs statics are process-global; unit tests that flip the enabled
+/// flag serialize on this lock so enable/disable cycles don't interleave.
+#[cfg(test)]
+pub(crate) static OBS_TEST_LOCK: Mutex<()> = Mutex::new(());
+
+/// Convert simulated seconds to whole microseconds (chrome `ts` unit).
+/// Rounding (not truncating) keeps adjacent spans from drifting apart.
+#[inline]
+pub fn us(s: f64) -> u64 {
+    (s * 1e6).round() as u64
+}
+
+/// Is recording on? One relaxed load — the entire disabled-path cost.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn recording on: clears and preallocates the sink, resets sequence
+/// numbers, the drop counter and the metrics registry.
+pub fn enable() {
+    for shard in &SINK {
+        // PANIC: sink mutexes are only poisoned if a recorder panicked
+        // mid-push; tracing cannot meaningfully continue past that.
+        let mut v = shard.lock().unwrap();
+        v.clear();
+        let cap = v.capacity();
+        if cap < SHARD_CAP {
+            v.reserve_exact(SHARD_CAP - cap);
+        }
+    }
+    DROPPED.store(0, Ordering::SeqCst);
+    SERIAL_SEQ.store(0, Ordering::SeqCst);
+    metrics::reset();
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+/// Turn recording off. Buffered events stay drainable.
+pub fn disable() {
+    ENABLED.store(false, Ordering::SeqCst);
+}
+
+/// Events pushed while their shard was full (0 in any healthy run; the
+/// golden-trace test asserts it).
+pub fn dropped() -> u64 {
+    DROPPED.load(Ordering::SeqCst)
+}
+
+/// Install `ctx` on this thread, returning the previous context so the
+/// caller can restore it (and persist the advanced `next_seq`).
+pub fn swap_ctx(ctx: ObsCtx) -> ObsCtx {
+    CTX.with(|c| c.replace(ctx))
+}
+
+/// Move the current context's timeline anchor. No-op without a live
+/// context or with tracing disabled.
+#[inline]
+pub fn set_ctx_base(base_us: u64) {
+    if !enabled() {
+        return;
+    }
+    CTX.with(|c| {
+        let mut ctx = c.get();
+        if !ctx.is_none() {
+            ctx.base_us = base_us;
+            c.set(ctx);
+        }
+    });
+}
+
+/// The current context's timeline anchor (0 without one).
+#[inline]
+pub fn ctx_base() -> u64 {
+    if !enabled() {
+        return 0;
+    }
+    CTX.with(|c| c.get().base_us)
+}
+
+#[inline]
+fn push(ev: SpanEvent) {
+    let shard = ev.lane as usize & (N_SHARDS - 1);
+    // PANIC: see `enable` — a poisoned sink shard means a recorder
+    // panicked; propagating is the only sound option.
+    let mut v = SINK[shard].lock().unwrap();
+    if v.len() < v.capacity() {
+        v.push(ev);
+    } else {
+        DROPPED.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+fn pack_args(args: &[(&'static str, f64)]) -> ([(&'static str, f64); MAX_ARGS], u8) {
+    let mut packed = [("", 0.0f64); MAX_ARGS];
+    let n = args.len().min(MAX_ARGS);
+    packed[..n].copy_from_slice(&args[..n]);
+    (packed, n as u8)
+}
+
+/// Record a span against the current thread's task context. No-op when
+/// disabled or without a live context (one branch each).
+#[inline]
+pub fn emit_ctx(
+    cat: &'static str,
+    name: &'static str,
+    ts_us: u64,
+    dur_us: u64,
+    args: &[(&'static str, f64)],
+) {
+    if !enabled() {
+        return;
+    }
+    CTX.with(|c| {
+        let mut ctx = c.get();
+        if ctx.is_none() {
+            return;
+        }
+        let seq = ctx.next_seq;
+        ctx.next_seq += 1;
+        c.set(ctx);
+        let (packed, n_args) = pack_args(args);
+        push(SpanEvent {
+            cat,
+            name,
+            lane: ctx.lane,
+            seq,
+            ts_us,
+            dur_us,
+            args: packed,
+            n_args,
+        });
+    });
+}
+
+/// Record a span from *serial* code (session lane, device lanes in the
+/// post-join schedule replay) using the global sequence counter. Only
+/// single-threaded call sites may use this — that is what keeps the
+/// sequence deterministic.
+#[inline]
+pub fn emit_serial(
+    lane: u32,
+    cat: &'static str,
+    name: &'static str,
+    ts_us: u64,
+    dur_us: u64,
+    args: &[(&'static str, f64)],
+) {
+    if !enabled() {
+        return;
+    }
+    let seq = SERIAL_SEQ.fetch_add(1, Ordering::Relaxed);
+    let (packed, n_args) = pack_args(args);
+    push(SpanEvent { cat, name, lane, seq, ts_us, dur_us, args: packed, n_args });
+}
+
+/// Drain every buffered event, sorted by `(lane, seq)` — a total order
+/// that is a pure function of the tuned workload, not of thread timing.
+pub fn drain() -> Vec<SpanEvent> {
+    let mut out: Vec<SpanEvent> = Vec::new();
+    for shard in &SINK {
+        // PANIC: see `enable` on sink poisoning.
+        out.append(&mut shard.lock().unwrap());
+    }
+    out.sort_by_key(|e| (e.lane, e.seq));
+    out
+}
+
+fn lane_name(lane: u32) -> String {
+    if lane == LANE_SESSION {
+        "session".to_string()
+    } else if lane >= LANE_DEVICE0 {
+        format!("device-{}", lane - LANE_DEVICE0)
+    } else {
+        format!("task-{lane}")
+    }
+}
+
+/// Format an argument value with a stable, locale-free rendering:
+/// integral values print as integers, everything else at fixed precision.
+fn fmt_arg(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 9.0e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v:.6}")
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render events as a chrome://tracing "JSON Array Format" document, one
+/// event per line (JSONL-style inside the array). Pure function of the
+/// event list: the golden-trace test compares these bytes across thread
+/// counts.
+pub fn render_chrome_jsonl(events: &[SpanEvent]) -> String {
+    let mut lines: Vec<String> = Vec::new();
+    let mut lanes: Vec<u32> = events.iter().map(|e| e.lane).collect();
+    lanes.sort_unstable();
+    lanes.dedup();
+    for lane in lanes {
+        lines.push(format!(
+            "{{\"ph\":\"M\",\"pid\":1,\"tid\":{lane},\"name\":\"thread_name\",\
+             \"args\":{{\"name\":\"{}\"}}}}",
+            json_escape(&lane_name(lane))
+        ));
+    }
+    for e in events {
+        let mut args = format!("\"seq\":{}", e.seq);
+        for (k, v) in &e.args[..e.n_args as usize] {
+            args.push_str(&format!(",\"{}\":{}", json_escape(k), fmt_arg(*v)));
+        }
+        lines.push(format!(
+            "{{\"ph\":\"X\",\"pid\":1,\"tid\":{},\"cat\":\"{}\",\"name\":\"{}\",\
+             \"ts\":{},\"dur\":{},\"args\":{{{}}}}}",
+            e.lane,
+            json_escape(e.cat),
+            json_escape(e.name),
+            e.ts_us,
+            e.dur_us,
+            args
+        ));
+    }
+    let mut out = String::from("[\n");
+    out.push_str(&lines.join(",\n"));
+    out.push_str("\n]\n");
+    out
+}
+
+/// Drain and write the chrome trace to `path`.
+pub fn export_chrome_trace(path: &Path) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let events = drain();
+    std::fs::write(path, render_chrome_jsonl(&events))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    use super::OBS_TEST_LOCK as TEST_LOCK;
+
+    /// Other lib tests may be tracing concurrently once instrumentation is
+    /// live; assertions here filter to this test-only category so a
+    /// neighboring tuner test's spans can't interfere.
+    const CAT: &str = "obs-selftest";
+
+    fn ours(evs: &[SpanEvent]) -> Vec<SpanEvent> {
+        evs.iter().copied().filter(|e| e.cat == CAT).collect()
+    }
+
+    #[test]
+    fn disabled_path_records_nothing() {
+        let _g = TEST_LOCK.lock().unwrap();
+        disable();
+        drain();
+        emit_serial(LANE_SESSION, CAT, "x", 0, 1, &[]);
+        emit_ctx(CAT, "x", 0, 1, &[]);
+        assert!(ours(&drain()).is_empty());
+        assert!(!enabled());
+    }
+
+    #[test]
+    fn ctx_emit_orders_by_lane_then_seq() {
+        let _g = TEST_LOCK.lock().unwrap();
+        enable();
+        let prev = swap_ctx(ObsCtx::on_lane(2));
+        emit_ctx(CAT, "a", 10, 5, &[("n", 3.0)]);
+        emit_ctx(CAT, "b", 20, 5, &[]);
+        let back = swap_ctx(prev);
+        assert_eq!(back.next_seq, 2);
+        let p2 = swap_ctx(ObsCtx::on_lane(1));
+        emit_ctx(CAT, "c", 30, 5, &[]);
+        swap_ctx(p2);
+        emit_serial(LANE_SESSION, CAT, "s", 0, 40, &[]);
+        disable();
+        let evs = ours(&drain());
+        let names: Vec<&str> = evs.iter().map(|e| e.name).collect();
+        assert_eq!(names, vec!["c", "a", "b", "s"]);
+        assert_eq!(evs[1].seq, 0);
+        assert_eq!(evs[2].seq, 1);
+    }
+
+    #[test]
+    fn none_ctx_never_records() {
+        let _g = TEST_LOCK.lock().unwrap();
+        enable();
+        let prev = swap_ctx(ObsCtx::NONE);
+        emit_ctx(CAT, "stray", 0, 1, &[]);
+        swap_ctx(prev);
+        disable();
+        assert!(ours(&drain()).is_empty());
+    }
+
+    #[test]
+    fn render_is_valid_single_json_array() {
+        // render is a pure function — no global sink involvement needed
+        let evs = [
+            SpanEvent {
+                cat: CAT,
+                name: "plan",
+                lane: 0,
+                seq: 0,
+                ts_us: 1,
+                dur_us: 2,
+                args: [("k", 8.0), ("frac", 0.25), ("", 0.0)],
+                n_args: 2,
+            },
+            SpanEvent {
+                cat: CAT,
+                name: "service",
+                lane: LANE_DEVICE0 + 1,
+                seq: 1,
+                ts_us: 3,
+                dur_us: 4,
+                args: [("", 0.0); MAX_ARGS],
+                n_args: 0,
+            },
+        ];
+        let s = render_chrome_jsonl(&evs);
+        assert!(s.starts_with("[\n"));
+        assert!(s.ends_with("\n]\n"));
+        assert!(s.contains("\"name\":\"task-0\""));
+        assert!(s.contains("\"name\":\"device-1\""));
+        assert!(s.contains("\"k\":8"));
+        assert!(s.contains("\"frac\":0.250000"));
+        // every payload line is one complete object, comma-separated
+        for line in s.lines().filter(|l| l.starts_with('{')) {
+            let t = line.trim_end_matches(',');
+            assert!(t.starts_with('{') && t.ends_with('}'), "{line}");
+        }
+    }
+
+    #[test]
+    fn us_rounds_to_microseconds() {
+        assert_eq!(us(0.0), 0);
+        assert_eq!(us(1.5), 1_500_000);
+        assert_eq!(us(0.000_000_6), 1);
+    }
+
+    #[test]
+    fn base_anchor_roundtrips_through_tls() {
+        let _g = TEST_LOCK.lock().unwrap();
+        enable();
+        let prev = swap_ctx(ObsCtx::on_lane(7));
+        set_ctx_base(123);
+        assert_eq!(ctx_base(), 123);
+        let ctx = swap_ctx(prev);
+        assert_eq!(ctx.base_us, 123);
+        disable();
+        drain();
+    }
+}

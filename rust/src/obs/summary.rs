@@ -1,0 +1,227 @@
+//! `report trace`: summarize a recorded chrome-trace file into the
+//! per-stage / per-lane breakdown tables.
+//!
+//! The parser is a deliberately small line-oriented reader of the exact
+//! format [`super::render_chrome_jsonl`] emits (one complete event object
+//! per line): it extracts the handful of fields the summary needs and
+//! ignores everything else, so it has zero dependencies and stays robust
+//! to new argument keys. Aggregation uses `BTreeMap` — deterministic
+//! iteration order (rule D2), so the summary of a given trace is itself
+//! byte-stable.
+
+use crate::report::Table;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// One parsed duration event.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    pub tid: u32,
+    pub cat: String,
+    pub name: String,
+    pub ts_us: u64,
+    pub dur_us: u64,
+}
+
+/// Scan `line` for `"key":"string-value"`.
+fn field_str(line: &str, key: &str) -> Option<String> {
+    let pat = format!("\"{key}\":\"");
+    let start = line.find(&pat)? + pat.len();
+    let rest = &line[start..];
+    let end = rest.find('"')?;
+    Some(rest[..end].to_string())
+}
+
+/// Scan `line` for `"key":<number>` (integer or float; stops at `,`/`}`).
+fn field_num(line: &str, key: &str) -> Option<f64> {
+    let pat = format!("\"{key}\":");
+    let start = line.find(&pat)? + pat.len();
+    let rest = &line[start..];
+    let end = rest
+        .find(|c: char| c == ',' || c == '}')
+        .unwrap_or(rest.len());
+    rest[..end].trim().parse().ok()
+}
+
+/// Parse the duration (`"ph":"X"`) events out of a rendered trace.
+/// Metadata events and array brackets are skipped; malformed lines are
+/// ignored rather than fatal (a truncated trace should still summarize).
+pub fn parse_chrome_trace(body: &str) -> Vec<TraceEvent> {
+    let mut out = Vec::new();
+    for raw in body.lines() {
+        let line = raw.trim().trim_end_matches(',');
+        if !line.starts_with('{') || !line.contains("\"ph\":\"X\"") {
+            continue;
+        }
+        let (Some(cat), Some(name)) =
+            (field_str(line, "cat"), field_str(line, "name"))
+        else {
+            continue;
+        };
+        let (Some(tid), Some(ts), Some(dur)) = (
+            field_num(line, "tid"),
+            field_num(line, "ts"),
+            field_num(line, "dur"),
+        ) else {
+            continue;
+        };
+        out.push(TraceEvent {
+            tid: tid as u32,
+            cat,
+            name,
+            ts_us: ts as u64,
+            dur_us: dur as u64,
+        });
+    }
+    out
+}
+
+/// The `report trace` output: stage and lane breakdowns.
+#[derive(Debug, Clone)]
+pub struct TraceSummary {
+    pub n_events: usize,
+    pub per_stage: Table,
+    pub per_lane: Table,
+}
+
+fn lane_label(tid: u32) -> String {
+    if tid == super::LANE_SESSION {
+        "session".to_string()
+    } else if tid >= super::LANE_DEVICE0 {
+        format!("device-{}", tid - super::LANE_DEVICE0)
+    } else {
+        format!("task-{tid}")
+    }
+}
+
+fn ms(us: u64) -> String {
+    format!("{:.3}", us as f64 / 1e3)
+}
+
+/// Aggregate parsed events into the two summary tables.
+pub fn summarize(events: &[TraceEvent]) -> TraceSummary {
+    // (cat, name) -> (count, total_us, max_us)
+    let mut stages: BTreeMap<(String, String), (u64, u64, u64)> = BTreeMap::new();
+    // tid -> (count, busy_us, first_ts, last_end)
+    let mut lanes: BTreeMap<u32, (u64, u64, u64, u64)> = BTreeMap::new();
+    for e in events {
+        let s = stages
+            .entry((e.cat.clone(), e.name.clone()))
+            .or_insert((0, 0, 0));
+        s.0 += 1;
+        s.1 += e.dur_us;
+        s.2 = s.2.max(e.dur_us);
+        let l = lanes.entry(e.tid).or_insert((0, 0, u64::MAX, 0));
+        l.0 += 1;
+        l.1 += e.dur_us;
+        l.2 = l.2.min(e.ts_us);
+        l.3 = l.3.max(e.ts_us + e.dur_us);
+    }
+    let mut per_stage = Table::new(
+        "per-stage breakdown (simulated time)",
+        &["stage", "spans", "total ms", "mean ms", "max ms"],
+    );
+    for ((cat, name), (count, total, max)) in &stages {
+        per_stage.row(vec![
+            format!("{cat}/{name}"),
+            count.to_string(),
+            ms(*total),
+            format!("{:.3}", *total as f64 / 1e3 / *count as f64),
+            ms(*max),
+        ]);
+    }
+    let mut per_lane = Table::new(
+        "per-lane breakdown (simulated time)",
+        &["lane", "spans", "busy ms", "span ms"],
+    );
+    for (tid, (count, busy, first, last)) in &lanes {
+        per_lane.row(vec![
+            lane_label(*tid),
+            count.to_string(),
+            ms(*busy),
+            ms(last.saturating_sub(*first)),
+        ]);
+    }
+    TraceSummary { n_events: events.len(), per_stage, per_lane }
+}
+
+/// Read, parse and summarize a trace file.
+pub fn summarize_file(path: &Path) -> std::io::Result<TraceSummary> {
+    let body = std::fs::read_to_string(path)?;
+    Ok(summarize(&parse_chrome_trace(&body)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{SpanEvent, MAX_ARGS};
+
+    fn ev(
+        cat: &'static str,
+        name: &'static str,
+        lane: u32,
+        seq: u32,
+        ts_us: u64,
+        dur_us: u64,
+    ) -> SpanEvent {
+        SpanEvent {
+            cat,
+            name,
+            lane,
+            seq,
+            ts_us,
+            dur_us,
+            args: [("", 0.0); MAX_ARGS],
+            n_args: 0,
+        }
+    }
+
+    #[test]
+    fn roundtrips_through_render_and_parse() {
+        let evs = [
+            ev("tuner", "plan", 0, 0, 100, 50),
+            ev("tuner", "plan", 0, 1, 200, 70),
+            ev("device", "service", super::super::LANE_DEVICE0, 0, 0, 900),
+        ];
+        let body = crate::obs::render_chrome_jsonl(&evs);
+        let parsed = parse_chrome_trace(&body);
+        assert_eq!(parsed.len(), 3);
+        assert_eq!(parsed[0].name, "plan");
+        assert_eq!(parsed[0].dur_us, 50);
+        assert_eq!(parsed[2].tid, super::super::LANE_DEVICE0);
+    }
+
+    #[test]
+    fn summary_aggregates_per_stage_and_lane() {
+        let evs = [
+            ev("tuner", "plan", 0, 0, 100, 50),
+            ev("tuner", "plan", 0, 1, 200, 70),
+            ev("tuner", "absorb", 1, 0, 150, 30),
+        ];
+        let body = crate::obs::render_chrome_jsonl(&evs);
+        let s = summarize(&parse_chrome_trace(&body));
+        assert_eq!(s.n_events, 3);
+        // BTreeMap order: absorb before plan
+        assert_eq!(s.per_stage.rows[0][0], "tuner/absorb");
+        assert_eq!(s.per_stage.rows[1][0], "tuner/plan");
+        assert_eq!(s.per_stage.rows[1][1], "2");
+        assert_eq!(s.per_stage.rows[1][2], "0.120"); // 50+70 us
+        assert_eq!(s.per_lane.rows[0][0], "task-0");
+        assert_eq!(s.per_lane.rows[0][3], "0.170"); // 100..270 us
+    }
+
+    #[test]
+    fn malformed_lines_are_skipped_not_fatal() {
+        let body = "[\n{\"ph\":\"X\",\"broken\n{\"ph\":\"M\",\"pid\":1}\n]\n";
+        assert!(parse_chrome_trace(body).is_empty());
+    }
+
+    #[test]
+    fn field_extractors() {
+        let l = "{\"ph\":\"X\",\"tid\":1000,\"cat\":\"a\",\"name\":\"b\",\"ts\":5,\"dur\":7}";
+        assert_eq!(field_str(l, "cat").as_deref(), Some("a"));
+        assert_eq!(field_num(l, "tid"), Some(1000.0));
+        assert_eq!(field_num(l, "dur"), Some(7.0));
+        assert_eq!(field_num(l, "missing"), None);
+    }
+}

@@ -94,6 +94,11 @@ fn save(table: &Table, name: &str) {
     if let Err(e) = table.write_csv(&path) {
         eprintln!("warning: could not write {path:?}: {e}");
     }
+    // machine-readable twin of the ASCII table: same cells, stable keys
+    let path = results_dir().join(format!("{name}.json"));
+    if let Err(e) = table.write_json(&path) {
+        eprintln!("warning: could not write {path:?}: {e}");
+    }
 }
 
 // ===================================================================== Fig 2

@@ -82,6 +82,49 @@ impl Table {
         }
         std::fs::write(path, s)
     }
+
+    /// Render the table as a machine-readable JSON document with a stable
+    /// key order: `{"title": ..., "header": [...], "rows": [[...], ...]}`.
+    /// Cells are the same formatted strings as the ASCII rendering, so the
+    /// two outputs can never disagree on a number.
+    pub fn render_json(&self) -> String {
+        let esc = |c: &str| {
+            let mut out = String::with_capacity(c.len() + 2);
+            out.push('"');
+            for ch in c.chars() {
+                match ch {
+                    '"' => out.push_str("\\\""),
+                    '\\' => out.push_str("\\\\"),
+                    ch if (ch as u32) < 0x20 => {
+                        let _ = write!(out, "\\u{:04x}", ch as u32);
+                    }
+                    ch => out.push(ch),
+                }
+            }
+            out.push('"');
+            out
+        };
+        let list = |cells: &[String]| {
+            cells.iter().map(|c| esc(c)).collect::<Vec<_>>().join(",")
+        };
+        let mut s = String::new();
+        let _ = write!(s, "{{\n  \"title\": {},\n  \"header\": [{}],\n  \"rows\": [",
+            esc(&self.title), list(&self.header));
+        for (i, row) in self.rows.iter().enumerate() {
+            let sep = if i + 1 < self.rows.len() { "," } else { "" };
+            let _ = write!(s, "\n    [{}]{}", list(row), sep);
+        }
+        s.push_str("\n  ]\n}\n");
+        s
+    }
+
+    /// Write the table as JSON (see [`Self::render_json`]).
+    pub fn write_json(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.render_json())
+    }
 }
 
 /// Results directory (CSV dumps for every figure/table).
@@ -116,6 +159,24 @@ mod tests {
     fn rejects_bad_arity() {
         let mut t = Table::new("x", &["a", "b"]);
         t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn json_rendering_is_escaped_and_stably_keyed() {
+        let mut t = Table::new("j \"quoted\"", &["k", "v"]);
+        t.row(vec!["a\\b".into(), "1.5".into()]);
+        t.row(vec!["c".into(), "2".into()]);
+        let s = t.render_json();
+        // stable key order: title, header, rows
+        let (ti, hi, ri) = (
+            s.find("\"title\"").unwrap(),
+            s.find("\"header\"").unwrap(),
+            s.find("\"rows\"").unwrap(),
+        );
+        assert!(ti < hi && hi < ri, "{s}");
+        assert!(s.contains("\"j \\\"quoted\\\"\""));
+        assert!(s.contains("[\"a\\\\b\",\"1.5\"]"));
+        assert!(s.trim_end().ends_with('}'));
     }
 
     #[test]

@@ -301,6 +301,17 @@ impl Searcher for PpoAgent {
                     self.update_seed,
                 )
                 .expect("ppo_update failed");
+            crate::obs::metrics::inc(crate::obs::metrics::Counter::PpoUpdates);
+            // Anchor each update on the task's simulated timeline: the
+            // round's search time is `batches * batch_cost_s` from the
+            // round start, so batch `b` spans the b-th slice.
+            crate::obs::emit_ctx(
+                "rl",
+                "ppo_update",
+                crate::obs::ctx_base() + crate::obs::us(batch as f64 * p.batch_cost_s),
+                crate::obs::us(p.batch_cost_s),
+                &[("batch", batch as f64), ("walkers", b as f64)],
+            );
 
             if batches >= p.min_batches && batches - last_improve >= p.patience {
                 break;

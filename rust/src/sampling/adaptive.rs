@@ -202,6 +202,18 @@ pub fn adaptive_sample(
         fill_random_unvisited(space, visited, &mut taken, k, 4096, rng, &mut samples);
     }
 
+    crate::obs::metrics::inc(crate::obs::metrics::Counter::AdaptiveSamples);
+    crate::obs::emit_ctx(
+        "sample",
+        "adaptive",
+        crate::obs::ctx_base(),
+        0,
+        &[
+            ("k", k as f64),
+            ("replaced", replaced as f64),
+            ("n", samples.len() as f64),
+        ],
+    );
     AdaptiveSampleResult { samples, k, replaced }
 }
 

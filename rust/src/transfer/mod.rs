@@ -304,6 +304,17 @@ pub fn build_plan(
         }
     }
 
+    crate::obs::metrics::inc(crate::obs::metrics::Counter::TransferConsults);
+    crate::obs::emit_ctx(
+        "transfer",
+        "consult",
+        crate::obs::ctx_base(),
+        0,
+        &[
+            ("donors", plan.donor_ids.len() as f64),
+            ("pairs", plan.pairs.len() as f64),
+        ],
+    );
     if plan.is_empty() {
         None
     } else {

@@ -60,6 +60,17 @@ impl TransferRegistry {
     /// Publish a finished task's artifact. Call only after the task's
     /// tuning loop has fully completed.
     pub fn publish(&self, artifact: TaskArtifact) {
+        crate::obs::metrics::inc(crate::obs::metrics::Counter::TransferPublishes);
+        crate::obs::emit_ctx(
+            "transfer",
+            "publish",
+            crate::obs::ctx_base(),
+            0,
+            &[
+                ("pairs", artifact.pairs.len() as f64),
+                ("best_gflops", artifact.best_gflops),
+            ],
+        );
         let mut g = self.inner.lock().unwrap();
         g.events.push(TransferEvent::Published { task: artifact.task_id.clone() });
         g.artifacts.push(Arc::new(artifact));

@@ -89,6 +89,8 @@ pub fn tune_tasks(
 pub(crate) fn per_task_config(cfg: &TunerConfig, task_index: usize) -> TunerConfig {
     let mut task_cfg = cfg.clone();
     task_cfg.seed = cfg.seed.wrapping_add(task_index as u64 * 1031);
+    // each task records its trace spans on its own lane (chrome tid)
+    task_cfg.obs_lane = task_index as u32;
     task_cfg
 }
 

@@ -114,6 +114,10 @@ pub struct TunerConfig {
     /// unvisited trajectory points per iteration (pure exploitation) on top
     /// of the cluster representatives.
     pub exploit_top: usize,
+    /// Trace lane (chrome `tid`) this task's spans record on when tracing
+    /// is enabled. `e2e::per_task_config` sets it to the task index; the
+    /// default 0 is right for single-task tunes.
+    pub obs_lane: u32,
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -134,6 +138,7 @@ impl Default for TunerConfig {
             seed: 0,
             measure_workers: 8,
             exploit_top: 8,
+            obs_lane: 0,
         }
     }
 }
@@ -273,6 +278,12 @@ pub struct TaskTuner {
     record_pairs: bool,
     artifact_pairs: Vec<(Vec<i64>, f32)>,
     transfer: Option<TransferSummary>,
+    /// This task's trace context (lane + next span sequence number). The
+    /// context lives with the tuner, not the thread: a session worker that
+    /// interleaves several tasks installs each tuner's context only for the
+    /// duration of that tuner's stage, so span sequence numbers depend on
+    /// per-task progress alone — never on which thread ran the stage.
+    obs: crate::obs::ObsCtx,
 }
 
 impl TaskTuner {
@@ -307,7 +318,20 @@ impl TaskTuner {
             record_pairs: false,
             artifact_pairs: Vec::new(),
             transfer: None,
+            obs: crate::obs::ObsCtx::on_lane(cfg.obs_lane),
         }
+    }
+
+    /// Install this tuner's trace context on the current thread for the
+    /// duration of a stage; pair with [`Self::obs_exit`].
+    fn obs_enter(&self) -> crate::obs::ObsCtx {
+        crate::obs::swap_ctx(self.obs)
+    }
+
+    /// Restore the previous thread context, saving the advanced sequence
+    /// number back into the tuner.
+    fn obs_exit(&mut self, prev: crate::obs::ObsCtx) {
+        self.obs = crate::obs::swap_ctx(prev);
     }
 
     /// Record measured (knob values, target) pairs so [`Self::export_artifact`]
@@ -350,7 +374,11 @@ impl TaskTuner {
                     self.searcher.warm_start(state);
                     policy_warm = true;
                 }
-                Err(e) => eprintln!("warning: policy warm-start skipped: {e}"),
+                // a skipped warm start degrades to a cold start by design;
+                // surface it through the metrics registry, not stderr
+                Err(_) => {
+                    crate::obs::metrics::inc(crate::obs::metrics::Counter::PolicyWarmSkipped);
+                }
             }
         }
         // the seed fit happened before any IterationRecord exists: charge
@@ -402,10 +430,21 @@ impl TaskTuner {
     /// Run one search + sample stage. Returns `None` when the budget is
     /// exhausted, convergence fired, or sampling produced nothing new.
     pub fn plan(&mut self) -> Option<PlannedBatch> {
+        let prev = self.obs_enter();
+        let out = self.plan_inner();
+        self.obs_exit(prev);
+        out
+    }
+
+    fn plan_inner(&mut self) -> Option<PlannedBatch> {
         if self.stopped || self.budget_left() == 0 {
             return None;
         }
         let iter = self.iter + 1;
+        if crate::obs::enabled() {
+            // anchor this iteration's spans at the task's simulated clock
+            crate::obs::set_ctx_base(crate::obs::us(self.clock.total_s()));
+        }
 
         // Configs to exclude from sampling: measured ones plus anything an
         // in-flight batch already claimed.
@@ -476,6 +515,26 @@ impl TaskTuner {
         };
         samples.truncate(budget_left);
         let model_query_s = self.model.spent_s.get() - model_spent_before;
+        {
+            use crate::obs::metrics::{add, inc, Counter};
+            inc(Counter::SearchRounds);
+            add(Counter::ConfigsSampled, samples.len() as u64);
+            let t0 = crate::obs::ctx_base();
+            crate::obs::emit_ctx(
+                "search",
+                self.searcher.name(),
+                t0,
+                crate::obs::us(round.sim_time_s),
+                &[("steps", round.steps as f64)],
+            );
+            crate::obs::emit_ctx(
+                "tuner",
+                "plan",
+                t0,
+                crate::obs::us(round.sim_time_s + model_query_s),
+                &[("n", samples.len() as f64), ("k", k as f64)],
+            );
+        }
         if samples.is_empty() {
             // the round still happened: charge its host time even though it
             // produced nothing to measure, and keep the serial invariant
@@ -507,6 +566,12 @@ impl TaskTuner {
     /// cost-model refit, searcher seeding, clock accounting, iteration
     /// record, and the convergence policy.
     pub fn absorb(&mut self, batch: PlannedBatch, results: Vec<Measurement>, device_s: f64) {
+        let prev = self.obs_enter();
+        self.absorb_inner(batch, results, device_s);
+        self.obs_exit(prev);
+    }
+
+    fn absorb_inner(&mut self, batch: PlannedBatch, results: Vec<Measurement>, device_s: f64) {
         for c in &batch.configs {
             self.in_flight.remove(&self.space.flat_index(c));
         }
@@ -549,6 +614,31 @@ impl TaskTuner {
                 seeds.insert(0, c.clone());
             }
             self.searcher.seed(&seeds);
+        }
+
+        {
+            use crate::obs::metrics::{add, Counter};
+            add(Counter::ConfigsMeasured, results.len() as u64);
+            if crate::obs::enabled() {
+                // captured before this batch's costs are charged, so the
+                // refit span sits after the batch's search + device time
+                let t0 = crate::obs::us(self.clock.total_s());
+                let refit_ts = t0 + crate::obs::us(batch.search_s + device_s);
+                crate::obs::emit_ctx(
+                    "model",
+                    "refit",
+                    refit_ts,
+                    crate::obs::us(model_fit_s),
+                    &[("n", results.len() as f64)],
+                );
+                crate::obs::emit_ctx(
+                    "tuner",
+                    "absorb",
+                    refit_ts,
+                    crate::obs::us(model_fit_s + batch.model_query_s),
+                    &[("iter", batch.iter as f64), ("cum", self.cum as f64)],
+                );
+            }
         }
 
         // charge this batch's own plan-stage costs here so the iteration
@@ -662,7 +752,12 @@ pub fn tune_with_coordinator_transfer(
     let mut tuner = TaskTuner::new(task, method, cfg, backend.clone());
     if let Some((registry, tcfg)) = transfer {
         tuner.enable_artifact_recording();
-        if let Some(plan) = transfer::build_plan(registry, task, &tuner.space, tcfg) {
+        // consult/publish spans land on the task's lane, like every other
+        // stage of this loop
+        let prev = tuner.obs_enter();
+        let plan = transfer::build_plan(registry, task, &tuner.space, tcfg);
+        tuner.obs_exit(prev);
+        if let Some(plan) = plan {
             tuner.apply_transfer(&plan, backend.as_ref());
         }
     }
@@ -671,8 +766,10 @@ pub fn tune_with_coordinator_transfer(
         while queue.len() < depth {
             match tuner.plan() {
                 Some(batch) => {
+                    let prev = tuner.obs_enter();
                     let (results, secs) =
                         coordinator.measure_timed(&tuner.space, &batch.configs);
+                    tuner.obs_exit(prev);
                     queue.push_back((batch, results, secs));
                 }
                 None => break,
@@ -684,7 +781,9 @@ pub fn tune_with_coordinator_transfer(
         }
     }
     if let Some((registry, _)) = transfer {
+        let prev = tuner.obs_enter();
         registry.publish(tuner.export_artifact());
+        tuner.obs_exit(prev);
     }
     tuner.finish()
 }

@@ -311,7 +311,8 @@ pub fn tune_tasks_session_observed(
     // enabled), and the walls map back to original task indices.
     let deltas: Vec<Vec<IterCost>> =
         order.iter().map(|&i| iteration_deltas(&results[i])).collect();
-    let (wall_s, task_walls, iter_walls) = schedule_wall(&deltas, tp, device_slots, depth);
+    let (wall_s, task_walls, iter_walls) =
+        schedule_wall(&deltas, &order, tp, device_slots, depth);
     for ((&i, w), iw) in order.iter().zip(task_walls).zip(iter_walls) {
         let r = &mut results[i];
         r.clock.wall_s = w;
@@ -362,8 +363,16 @@ fn iteration_deltas(r: &TuneResult) -> Vec<IterCost> {
 /// the real interleaving would instead of penalizing later-indexed tasks.
 /// Returns (makespan, per-task elapsed wall, per-task per-iteration wall —
 /// the elapsed time from task start to each batch's absorb completing).
+///
+/// When tracing is enabled the replay also emits the per-device-slot
+/// `device/wait` + `device/service` spans and the session-lane summary
+/// span — this runs serially after the workers have joined, which is what
+/// makes the serial sequence counter deterministic. `labels[i]` is the
+/// original task index of `per_task[i]` (the replay receives tasks in
+/// execution order).
 fn schedule_wall(
     per_task: &[Vec<IterCost>],
+    labels: &[usize],
     task_parallelism: usize,
     device_slots: usize,
     depth: usize,
@@ -479,10 +488,46 @@ fn schedule_wall(
         let sim = &mut active[best].1;
         let measure_end = device_start + sim.iters[sim.next].1;
         slots[si] = measure_end;
+        if crate::obs::enabled() {
+            let lane = crate::obs::LANE_DEVICE0 + si as u32;
+            let task = labels.get(sim.task).copied().unwrap_or(sim.task) as f64;
+            let (t_req, t_start, t_end) =
+                (crate::obs::us(req), crate::obs::us(device_start), crate::obs::us(measure_end));
+            if t_start > t_req {
+                crate::obs::emit_serial(
+                    lane,
+                    "device",
+                    "wait",
+                    t_req,
+                    t_start - t_req,
+                    &[("task", task)],
+                );
+            }
+            crate::obs::emit_serial(
+                lane,
+                "device",
+                "service",
+                t_start,
+                t_end.saturating_sub(t_start),
+                &[("task", task)],
+            );
+        }
         sim.in_flight.push_back((sim.next, measure_end));
         sim.next += 1;
         active[best].0 = sim.advance_to_booking(depth);
     }
+    crate::obs::emit_serial(
+        crate::obs::LANE_SESSION,
+        "session",
+        "schedule",
+        0,
+        crate::obs::us(makespan),
+        &[
+            ("tasks", n as f64),
+            ("lanes", task_parallelism.max(1) as f64),
+            ("slots", device_slots.max(1) as f64),
+        ],
+    );
     (makespan, walls, iter_walls)
 }
 
@@ -651,8 +696,9 @@ mod tests {
         // plan-stage host time of batch i+1 must hide under the measurement
         // of batch i, while absorb time stays serial
         let iters = vec![(10.0, 100.0, 1.0); 4];
-        let (serial_wall, _, serial_iter_walls) = schedule_wall(&[iters.clone()], 1, 1, 1);
-        let (pipe_wall, _, _) = schedule_wall(&[iters], 1, 1, 2);
+        let (serial_wall, _, serial_iter_walls) =
+            schedule_wall(&[iters.clone()], &[0], 1, 1, 1);
+        let (pipe_wall, _, _) = schedule_wall(&[iters], &[0], 1, 1, 2);
         // per-iteration walls are monotone absorb-completion times
         assert_eq!(serial_iter_walls[0].len(), 4);
         assert!(serial_iter_walls[0].windows(2).all(|w| w[0] < w[1]));
@@ -671,8 +717,8 @@ mod tests {
         // empty input, so pin that the slot vector stays non-empty even for
         // a (nonsensical) zero-slot request — schedule_wall clamps it to 1
         let iters = vec![(1.0, 2.0, 0.5); 3];
-        let (zero, walls_zero, _) = schedule_wall(&[iters.clone()], 1, 0, 1);
-        let (one, walls_one, _) = schedule_wall(&[iters], 1, 1, 1);
+        let (zero, walls_zero, _) = schedule_wall(&[iters.clone()], &[0], 1, 0, 1);
+        let (one, walls_one, _) = schedule_wall(&[iters], &[0], 1, 1, 1);
         assert_eq!(zero.to_bits(), one.to_bits());
         assert_eq!(walls_zero, walls_one);
     }
@@ -682,14 +728,15 @@ mod tests {
         // two identical tasks, one device slot: measurements serialize, so
         // the makespan cannot drop below the summed device time
         let iters = vec![(1.0, 50.0, 1.0); 3];
-        let (one_slot, walls, _) = schedule_wall(&[iters.clone(), iters.clone()], 2, 1, 1);
+        let (one_slot, walls, _) =
+            schedule_wall(&[iters.clone(), iters.clone()], &[0, 1], 2, 1, 1);
         assert!(one_slot >= 300.0, "{one_slot}");
         // FCFS slot service: contention delays BOTH tasks (interleaved
         // batches), rather than letting task 0 run as if uncontended and
         // pushing all the waiting onto task 1
         assert!(walls[0] > 200.0 && walls[1] > 200.0, "{walls:?}");
         // two slots: tasks truly overlap
-        let (two_slots, _, _) = schedule_wall(&[iters.clone(), iters], 2, 2, 1);
+        let (two_slots, _, _) = schedule_wall(&[iters.clone(), iters], &[0, 1], 2, 2, 1);
         assert!(two_slots < one_slot - 100.0, "{two_slots} vs {one_slot}");
     }
 }

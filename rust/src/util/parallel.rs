@@ -156,6 +156,7 @@ fn worker_loop(shared: &'static PoolShared) {
                 q = shared.work_cv.wait(q).unwrap();
             }
         };
+        crate::obs::metrics::inc(crate::obs::metrics::Counter::PoolJobs);
         job(); // jobs catch panics internally; workers never die
     }
 }
@@ -254,6 +255,7 @@ fn pool_run_chunks(nchunks: usize, for_chunk: &(dyn Fn(usize) + Sync)) {
         // PANIC: see the poisoning contract above.
         let job = p.shared.queue.lock().unwrap().pop_front();
         if let Some(j) = job {
+            crate::obs::metrics::inc(crate::obs::metrics::Counter::PoolHelpTicks);
             j();
             continue;
         }
@@ -264,6 +266,7 @@ fn pool_run_chunks(nchunks: usize, for_chunk: &(dyn Fn(usize) + Sync)) {
         }
         // timed wait: a nested region may enqueue work that only signals
         // `work_cv`, so re-poll the queue instead of sleeping on it.
+        crate::obs::metrics::inc(crate::obs::metrics::Counter::PoolIdleWaits);
         // PANIC: see the poisoning contract above.
         let _ = latch.done_cv.wait_timeout(r, Duration::from_micros(100)).unwrap();
     }

@@ -1,0 +1,66 @@
+//! Disabled-path cost contract: with tracing off, every obs entry point
+//! (span emitters, metrics counters/histograms, timeline anchors) must be
+//! allocation-free — the instrumented hot loops pay one atomic load and
+//! nothing else. Enforced with a counting global allocator, so this test
+//! lives in its own binary with exactly one `#[test]` (a concurrent test
+//! would pollute the allocation window).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use release::obs;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+struct CountingAlloc;
+
+// SAFETY: delegates every operation verbatim to `System` (a correct
+// allocator); the only addition is a relaxed counter bump, which cannot
+// violate the GlobalAlloc contract.
+unsafe impl GlobalAlloc for CountingAlloc {
+    // SAFETY: caller upholds the GlobalAlloc contract; forwarded unchanged.
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    // SAFETY: `ptr` came from this allocator (which forwards to `System`)
+    // with the same layout, per the caller's contract.
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn disabled_tracing_allocates_nothing() {
+    use obs::metrics::{add, inc, observe, Counter, Histogram};
+    assert!(!obs::enabled(), "tracing must start disabled");
+
+    // the counting allocator itself works
+    let sanity = ALLOCS.load(Ordering::Relaxed);
+    let probe = vec![0u8; 64];
+    assert!(ALLOCS.load(Ordering::Relaxed) > sanity, "allocator not counting");
+    drop(probe);
+
+    let before = ALLOCS.load(Ordering::Relaxed);
+    for i in 0..100_000u64 {
+        inc(Counter::SearchRounds);
+        add(Counter::ConfigsSampled, i);
+        observe(Histogram::MeasureBatchConfigs, i);
+        obs::emit_ctx("cat", "name", i, 1, &[("a", 1.0), ("b", 2.0)]);
+        obs::emit_serial(obs::LANE_SESSION, "cat", "name", i, 1, &[]);
+        obs::set_ctx_base(i);
+        std::hint::black_box(obs::ctx_base());
+    }
+    let after = ALLOCS.load(Ordering::Relaxed);
+    assert_eq!(
+        after - before,
+        0,
+        "disabled obs entry points must not allocate (saw {} allocations)",
+        after - before
+    );
+    assert_eq!(obs::metrics::total_counted(), 0, "disabled metrics must not record");
+}
