@@ -39,7 +39,8 @@ fn main() {
 
     let meas_rel = SimMeasurer::titan_xp(11);
     let scfg = SessionConfig::pipelined(rel_cfg, 4);
-    let rel = tune_model_session("resnet18", &meas_rel, method, &scfg, Some(backend));
+    let rel = tune_model_session("resnet18", &meas_rel, method, &scfg, Some(backend))
+        .expect("resnet18 is in the zoo");
 
     let arm = rel.method.clone();
     let col_ms = format!("{arm} ms");

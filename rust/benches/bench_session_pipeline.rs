@@ -36,6 +36,7 @@ fn main() {
     }
     let (pipe, _) = Bencher::once("pipelined session(resnet18, tp=4, depth=2)", || {
         tune_model_session("resnet18", &meas_pipe, MethodSpec::sa_as(), &scfg, None)
+            .expect("resnet18 is in the zoo")
     });
     if let Some(p) = trace_path.as_deref() {
         release::obs::disable();

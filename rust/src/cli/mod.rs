@@ -12,7 +12,9 @@ use crate::report::{self, ExperimentConfig};
 use crate::runtime::{select_backend, Backend, BackendKind};
 use crate::sim::SimMeasurer;
 use crate::transfer::{TransferConfig, TransferMode};
-use crate::tuner::session::{tune_model_session, SessionConfig};
+use crate::tuner::session::{
+    tune_model_session_checkpointed, CheckpointSpec, SessionConfig, SessionError,
+};
 use crate::tuner::{tune, MethodSpec, TunerConfig};
 use crate::workload::zoo;
 use std::collections::HashMap;
@@ -58,6 +60,17 @@ SESSION OPTIONS (model tuning):
                          queued siblings (cost-model pairs and/or PPO
                          policy); off = bit-identical baseline (default)
   --transfer-topk N      donors consulted per task (default: 3)
+
+CHECKPOINT / RESUME (model tuning, requires --task-parallelism 1):
+  --checkpoint <path>       write a resumable snapshot of the whole session
+                            (atomic: temp file + rename) while tuning
+  --checkpoint-every N      rounds between checkpoint writes (default: 8)
+  --resume <path>           continue a session from a snapshot; results and
+                            traces are bit-identical to an uninterrupted
+                            run (version/fingerprint mismatches are
+                            rejected with a clear error)
+  --checkpoint-kill-after N exit(0) right after the Nth checkpoint write
+                            (CI kill-mid-run smoke hook)
 ";
 
 /// Parse `--key value` pairs and positional args.
@@ -376,7 +389,44 @@ fn cmd_tune(flags: &HashMap<String, String>) -> i32 {
         scfg.pipeline_depth,
         scfg.transfer.mode.name()
     );
-    let r = tune_model_session(model, &meas, method, &scfg, backend);
+    let ckpt = flags.get("checkpoint").filter(|p| !p.is_empty()).map(|p| {
+        let every = flags
+            .get("checkpoint-every")
+            .map(|v| {
+                v.parse::<usize>()
+                    .unwrap_or_else(|_| panic!("--checkpoint-every must be an integer"))
+            })
+            .unwrap_or(8)
+            .max(1);
+        let kill_after = flags.get("checkpoint-kill-after").map(|v| {
+            v.parse::<usize>()
+                .unwrap_or_else(|_| panic!("--checkpoint-kill-after must be an integer"))
+        });
+        CheckpointSpec { path: p.into(), every, kill_after }
+    });
+    let resume = flags
+        .get("resume")
+        .filter(|p| !p.is_empty())
+        .map(std::path::PathBuf::from);
+    let r = match tune_model_session_checkpointed(
+        model,
+        &meas,
+        method,
+        &scfg,
+        backend,
+        ckpt.as_ref(),
+        resume.as_deref(),
+    ) {
+        Ok(r) => r,
+        Err(e @ SessionError::UnknownModel { .. }) => {
+            eprintln!("{e}");
+            return 2;
+        }
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
     let mut table = report::Table::new(
         &format!("{model} via {}", method.name()),
         &["task", "best ms", "GFLOPS", "measurements", "opt min", "wall min", "donors"],
@@ -566,6 +616,33 @@ mod tests {
                 .iter()
                 .map(|s| s.to_string())
                 .collect();
+        assert_eq!(run(&args), 1);
+    }
+
+    #[test]
+    fn resume_from_missing_snapshot_is_a_graceful_error() {
+        // the load error must surface as a message + exit 1, never a panic
+        let args: Vec<String> = [
+            "tune", "--model", "alexnet", "--method", "autotvm", "--trials", "8",
+            "--resume", "/nonexistent/session.snap",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        assert_eq!(run(&args), 1);
+    }
+
+    #[test]
+    fn checkpoint_under_task_parallelism_is_rejected() {
+        // checkpointing is defined for the serial task schedule only; the
+        // typed Unsupported error must arrive before any tuning happens
+        let args: Vec<String> = [
+            "tune", "--model", "alexnet", "--method", "autotvm", "--trials", "8",
+            "--task-parallelism", "2", "--checkpoint", "/nonexistent/dir/s.snap",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
         assert_eq!(run(&args), 1);
     }
 

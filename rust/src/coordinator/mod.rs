@@ -26,18 +26,36 @@ impl Gate {
         Gate { permits: Mutex::new(permits.max(1)), cv: Condvar::new() }
     }
 
-    fn acquire(&self) {
+    /// Take a permit; the guard gives it back on drop — including during
+    /// unwinding, so a panicking measurer can never leak a permit and
+    /// deadlock the sibling callers still waiting on the gate.
+    fn acquire(&self) -> GatePermit<'_> {
         crate::obs::metrics::inc(crate::obs::metrics::Counter::GateAcquires);
+        // PANIC: the permit lock is only ever held for the counter update
+        // itself (never across a measurer call), so it cannot be poisoned
         let mut p = self.permits.lock().unwrap();
         while *p == 0 {
+            // PANIC: same short-critical-section argument for the condvar
             p = self.cv.wait(p).unwrap();
         }
         *p -= 1;
+        GatePermit(self)
     }
 
     fn release(&self) {
-        *self.permits.lock().unwrap() += 1;
+        // poison-tolerant: release runs from Drop, possibly mid-unwind —
+        // a panic here would escalate straight to an abort
+        *self.permits.lock().unwrap_or_else(|e| e.into_inner()) += 1;
         self.cv.notify_one();
+    }
+}
+
+/// RAII gate permit (see [`Gate::acquire`]).
+struct GatePermit<'a>(&'a Gate);
+
+impl Drop for GatePermit<'_> {
+    fn drop(&mut self) {
+        self.0.release();
     }
 }
 
@@ -97,9 +115,9 @@ impl<'m> MeasureCoordinator<'m> {
         if self.workers == 1 || chunks.len() == 1 {
             // single dispatch: the whole batch goes down as one job
             *self.jobs.lock().unwrap() += 1;
-            self.gate.acquire();
+            let permit = self.gate.acquire();
             let out = self.measurer.measure_batch_timed(space, configs);
-            self.gate.release();
+            drop(permit);
             self.record_batch(configs.len(), 1, out.1);
             return out;
         }
@@ -124,9 +142,9 @@ impl<'m> MeasureCoordinator<'m> {
                         break;
                     }
                     let (pos, slice) = chunks[idx];
-                    self.gate.acquire();
+                    let permit = self.gate.acquire();
                     let (out, secs) = self.measurer.measure_batch_timed(space, slice);
-                    self.gate.release();
+                    drop(permit);
                     if tx.send((pos, out, secs)).is_err() {
                         break;
                     }

@@ -18,6 +18,7 @@
 
 use crate::gbt::{BinnedMatrix, Gbt, GbtParams, IncrementalBinner};
 use crate::sim::Measurement;
+use crate::snapshot::{SnapReader, SnapWriter, SnapshotError};
 use crate::space::features::{features_fill, features_into, NFEATURES};
 use crate::space::{Config, DesignSpace};
 use crate::util::matrix::FeatureMatrix;
@@ -333,6 +334,85 @@ impl CostModel {
     /// Best measured fitness so far (GFLOPS).
     pub fn best_gflops(&self) -> f64 {
         self.best_gflops
+    }
+
+    /// Checkpoint serialization: training rows (native + transferred),
+    /// accounting, and the fitted forest verbatim. The feature memo and
+    /// binning state are rebuilt on restore — both are pinned by tests to
+    /// be pure functions of the rows, so rebuilding changes nothing.
+    pub(crate) fn snap_save(&self, w: &mut SnapWriter) {
+        w.put_usize(self.feats.len());
+        for i in 0..self.feats.len() {
+            w.put_f32_slice(self.feats.row(i));
+        }
+        w.put_f32_slice(&self.ys);
+        w.put_usize(self.t_feats.len());
+        for i in 0..self.t_feats.len() {
+            w.put_f32_slice(self.t_feats.row(i));
+        }
+        w.put_f32_slice(&self.t_ys);
+        w.put_f32_slice(&self.t_w);
+        w.put_f64(self.transfer_half_life);
+        w.put_f64(self.best_gflops);
+        w.put_f64(self.spent_s.get());
+        w.put_usize(self.n_fits);
+        match &self.gbt {
+            Some(gbt) => {
+                w.put_bool(true);
+                gbt.snap_save(w);
+            }
+            None => w.put_bool(false),
+        }
+    }
+
+    /// Restore into a freshly-constructed model with the *same seed* (the
+    /// fingerprint guarantees this upstream). One `refit` rebuilds the
+    /// incremental binning over the restored rows; the serialized forest
+    /// then replaces whatever that fit produced, so prediction is exact
+    /// even for ensembles whose training mix (transfer thinning at an
+    /// earlier decay) is no longer reproducible. The refit's `ModelFits`
+    /// bump is masked by the obs counter restore that follows a model
+    /// restore in session resume order.
+    pub(crate) fn snap_restore(&mut self, r: &mut SnapReader) -> Result<(), SnapshotError> {
+        let n = r.get_usize()?;
+        for _ in 0..n {
+            let row = r.get_f32_vec()?;
+            if row.len() != NFEATURES {
+                return Err(SnapshotError::Corrupt("cost-model row width"));
+            }
+            self.feats.push_row(&row);
+        }
+        self.ys = r.get_f32_vec()?;
+        let tn = r.get_usize()?;
+        for _ in 0..tn {
+            let row = r.get_f32_vec()?;
+            if row.len() != NFEATURES {
+                return Err(SnapshotError::Corrupt("cost-model transfer row width"));
+            }
+            self.t_feats.push_row(&row);
+        }
+        self.t_ys = r.get_f32_vec()?;
+        self.t_w = r.get_f32_vec()?;
+        self.transfer_half_life = r.get_f64()?;
+        self.best_gflops = r.get_f64()?;
+        let spent_s = r.get_f64()?;
+        let n_fits = r.get_usize()?;
+        let gbt = if r.get_bool()? {
+            Some(Gbt::snap_restore(r)?)
+        } else {
+            None
+        };
+        if self.ys.len() != self.feats.len()
+            || self.t_ys.len() != self.t_feats.len()
+            || self.t_w.len() != self.t_feats.len()
+        {
+            return Err(SnapshotError::Corrupt("cost-model row/target count"));
+        }
+        self.refit();
+        self.gbt = gbt;
+        self.spent_s.set(spent_s);
+        self.n_fits = n_fits;
+        Ok(())
     }
 
     /// Test hook: the memoized feature row for `config` (interned on first

@@ -65,6 +65,32 @@ pub struct Gbt {
 }
 
 impl Gbt {
+    /// Checkpoint serialization: base + shrinkage + every tree's node
+    /// array, verbatim — a restored forest predicts bit-identically without
+    /// refitting (covers ensembles whose training rows are no longer
+    /// reproducible, e.g. a fit that predates later transfer decay).
+    pub(crate) fn snap_save(&self, w: &mut crate::snapshot::SnapWriter) {
+        w.put_f32(self.base);
+        w.put_f32(self.shrinkage);
+        w.put_usize(self.trees.len());
+        for t in &self.trees {
+            t.snap_save(w);
+        }
+    }
+
+    pub(crate) fn snap_restore(
+        r: &mut crate::snapshot::SnapReader,
+    ) -> Result<Self, crate::snapshot::SnapshotError> {
+        let base = r.get_f32()?;
+        let shrinkage = r.get_f32()?;
+        let count = r.get_usize()?;
+        let mut trees = Vec::new();
+        for _ in 0..count {
+            trees.push(Tree::snap_restore(r)?);
+        }
+        Ok(Gbt { base, trees, shrinkage })
+    }
+
     /// Fit on row-major `data` (n x d) against targets `y` (compat shim
     /// over [`Gbt::fit_matrix`] for callers still holding `Vec<Vec<f32>>`).
     pub fn fit(data: &[Vec<f32>], y: &[f32], params: &GbtParams) -> Self {

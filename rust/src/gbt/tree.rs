@@ -329,6 +329,35 @@ fn subtract_hists(parent: &mut [FeatureHist], child: &[FeatureHist]) {
 }
 
 impl Tree {
+    /// Checkpoint serialization: the flat node array, verbatim.
+    pub(crate) fn snap_save(&self, w: &mut crate::snapshot::SnapWriter) {
+        w.put_usize(self.nodes.len());
+        for n in &self.nodes {
+            w.put_u16(n.feature);
+            w.put_f32(n.threshold);
+            w.put_u32(n.left);
+            w.put_u32(n.right);
+        }
+    }
+
+    /// Rebuild a tree from [`Tree::snap_save`] bytes. Grows node by node
+    /// (no up-front reservation) so a corrupt length hits end-of-buffer
+    /// instead of allocating.
+    pub(crate) fn snap_restore(
+        r: &mut crate::snapshot::SnapReader,
+    ) -> Result<Self, crate::snapshot::SnapshotError> {
+        let count = r.get_usize()?;
+        let mut nodes = Vec::new();
+        for _ in 0..count {
+            let feature = r.get_u16()?;
+            let threshold = r.get_f32()?;
+            let left = r.get_u32()?;
+            let right = r.get_u32()?;
+            nodes.push(Node { feature, threshold, left, right });
+        }
+        Ok(Tree { nodes })
+    }
+
     /// Fit to residuals over the rows selected by `idx` (in `idx` order):
     /// squared-error objective => gradient = residual, hessian = 1; leaf
     /// value = sum(res)/(n + lambda). Subsampling callers pass the drawn

@@ -31,6 +31,7 @@ pub mod runtime;
 pub mod sampling;
 pub mod search;
 pub mod sim;
+pub mod snapshot;
 pub mod space;
 pub mod transfer;
 pub mod tuner;

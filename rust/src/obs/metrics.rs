@@ -60,9 +60,13 @@ pub enum Counter {
     TransferConsults,
     /// PPO policy warm-starts skipped (backend refused the donor state).
     PolicyWarmSkipped,
+    /// Session checkpoints written to disk.
+    CheckpointSaves,
+    /// Session checkpoints loaded for resume.
+    CheckpointLoads,
 }
 
-pub const N_COUNTERS: usize = 19;
+pub const N_COUNTERS: usize = 21;
 
 /// Display names, in `Counter` discriminant order.
 pub const COUNTER_NAMES: [&str; N_COUNTERS] = [
@@ -85,6 +89,8 @@ pub const COUNTER_NAMES: [&str; N_COUNTERS] = [
     "transfer_publishes",
     "transfer_consults",
     "policy_warm_skipped",
+    "checkpoint_saves",
+    "checkpoint_loads",
 ];
 
 // PANIC-free const-init of the static slot arrays (pre-1.79 pattern).
@@ -178,6 +184,39 @@ pub fn snapshot() -> Vec<(&'static str, u64)> {
         .collect()
 }
 
+/// Raw counter values in definition order — for session checkpoints.
+pub fn raw_counters() -> [u64; N_COUNTERS] {
+    let mut out = [0u64; N_COUNTERS];
+    for (o, c) in out.iter_mut().zip(&COUNTERS) {
+        *o = c.load(Ordering::Relaxed);
+    }
+    out
+}
+
+/// Raw histogram bucket counts in definition order — for checkpoints.
+pub fn raw_hists() -> [[u64; HIST_BUCKETS]; N_HISTS] {
+    let mut out = [[0u64; HIST_BUCKETS]; N_HISTS];
+    for (row, src) in out.iter_mut().zip(&HISTS) {
+        for (o, b) in row.iter_mut().zip(src) {
+            *o = b.load(Ordering::Relaxed);
+        }
+    }
+    out
+}
+
+/// Overwrite every counter and histogram with checkpointed values
+/// (restore path — the inverse of [`raw_counters`]/[`raw_hists`]).
+pub fn restore_raw(counters: &[u64; N_COUNTERS], hists: &[[u64; HIST_BUCKETS]; N_HISTS]) {
+    for (c, v) in COUNTERS.iter().zip(counters) {
+        c.store(*v, Ordering::SeqCst);
+    }
+    for (row, src) in HISTS.iter().zip(hists) {
+        for (b, v) in row.iter().zip(src) {
+            b.store(*v, Ordering::SeqCst);
+        }
+    }
+}
+
 /// Sum of every counter — the loop's total metrics-call volume (the ≤3%
 /// overhead stage in `bench_hotpaths` scales the disabled-guard cost by
 /// this).
@@ -258,7 +297,11 @@ mod tests {
             COUNTER_NAMES[Counter::PolicyWarmSkipped as usize],
             "policy_warm_skipped"
         );
-        assert_eq!(Counter::PolicyWarmSkipped as usize, N_COUNTERS - 1);
+        assert_eq!(
+            COUNTER_NAMES[Counter::CheckpointSaves as usize],
+            "checkpoint_saves"
+        );
+        assert_eq!(Counter::CheckpointLoads as usize, N_COUNTERS - 1);
     }
 
     #[test]

@@ -59,6 +59,10 @@ pub struct SpanEvent {
 
 /// Lane for session-scope spans.
 pub const LANE_SESSION: u32 = 999;
+/// Lane for checkpoint save spans (serial, simulated-timeline anchored, so
+/// a run that checkpoints and a run that resumed from one of those
+/// checkpoints still export byte-identical traces).
+pub const LANE_CKPT: u32 = 998;
 /// First device-slot lane; slot `s` records on `LANE_DEVICE0 + s`.
 pub const LANE_DEVICE0: u32 = 1000;
 
@@ -351,6 +355,149 @@ pub fn render_chrome_jsonl(events: &[SpanEvent]) -> String {
     out
 }
 
+/// Map a span string (category, name, or argument key) back to its
+/// `&'static str` identity after deserialization. The trace vocabulary is
+/// closed — every emit site uses a literal — so this match IS the schema;
+/// extend it when adding a new span. Unknown strings mean a corrupt or
+/// incompatible snapshot.
+pub fn intern_static(s: &str) -> Option<&'static str> {
+    Some(match s {
+        "" => "",
+        // categories
+        "measure" => "measure",
+        "rl" => "rl",
+        "transfer" => "transfer",
+        "sample" => "sample",
+        "search" => "search",
+        "tuner" => "tuner",
+        "model" => "model",
+        "device" => "device",
+        "session" => "session",
+        "ckpt" => "ckpt",
+        // names (searcher names double as span names under "search")
+        "batch" => "batch",
+        "ppo_update" => "ppo_update",
+        "publish" => "publish",
+        "consult" => "consult",
+        "adaptive" => "adaptive",
+        "sa" => "sa",
+        "ga" => "ga",
+        "random" => "random",
+        "plan" => "plan",
+        "absorb" => "absorb",
+        "refit" => "refit",
+        "wait" => "wait",
+        "service" => "service",
+        "schedule" => "schedule",
+        "save" => "save",
+        // argument keys
+        "n" => "n",
+        "chunks" => "chunks",
+        "walkers" => "walkers",
+        "pairs" => "pairs",
+        "best_gflops" => "best_gflops",
+        "donors" => "donors",
+        "k" => "k",
+        "replaced" => "replaced",
+        "steps" => "steps",
+        "iter" => "iter",
+        "cum" => "cum",
+        "task" => "task",
+        "tasks" => "tasks",
+        "lanes" => "lanes",
+        "slots" => "slots",
+        _ => return None,
+    })
+}
+
+/// Serialize the full observability state — every buffered span (sorted by
+/// `(lane, seq)`, the same total order `drain` uses), the serial-sequence
+/// cursor, and the metrics registry — without draining anything.
+pub fn snap_save(w: &mut crate::snapshot::SnapWriter) {
+    let mut events: Vec<SpanEvent> = Vec::new();
+    for shard in &SINK {
+        // PANIC: see `enable` on sink poisoning.
+        events.extend(shard.lock().unwrap().iter().copied());
+    }
+    events.sort_by_key(|e| (e.lane, e.seq));
+    w.put_usize(events.len());
+    for e in &events {
+        w.put_str(e.cat);
+        w.put_str(e.name);
+        w.put_u32(e.lane);
+        w.put_u32(e.seq);
+        w.put_u64(e.ts_us);
+        w.put_u64(e.dur_us);
+        w.put_u8(e.n_args);
+        for (key, v) in &e.args[..e.n_args as usize] {
+            w.put_str(key);
+            w.put_f64(*v);
+        }
+    }
+    w.put_u32(SERIAL_SEQ.load(Ordering::SeqCst));
+    for c in metrics::raw_counters() {
+        w.put_u64(c);
+    }
+    for row in metrics::raw_hists() {
+        for b in row {
+            w.put_u64(b);
+        }
+    }
+}
+
+/// Restore checkpointed observability state. Spans re-inject into the sink
+/// only when tracing is enabled (a resume without `--trace` still consumes
+/// the section); counters and histograms restore unconditionally, and the
+/// serial-sequence cursor resumes exactly where the saved run left it.
+pub fn snap_restore(
+    r: &mut crate::snapshot::SnapReader,
+) -> Result<(), crate::snapshot::SnapshotError> {
+    use crate::snapshot::SnapshotError;
+    let n = r.get_usize()?;
+    for _ in 0..n {
+        let cat = intern_static(&r.get_string()?)
+            .ok_or(SnapshotError::Corrupt("unknown span category"))?;
+        let name = intern_static(&r.get_string()?)
+            .ok_or(SnapshotError::Corrupt("unknown span name"))?;
+        let lane = r.get_u32()?;
+        let seq = r.get_u32()?;
+        let ts_us = r.get_u64()?;
+        let dur_us = r.get_u64()?;
+        let n_args = r.get_u8()?;
+        if n_args as usize > MAX_ARGS {
+            return Err(SnapshotError::Corrupt("span argument count"));
+        }
+        let mut args = [("", 0.0f64); MAX_ARGS];
+        for slot in args.iter_mut().take(n_args as usize) {
+            let key = intern_static(&r.get_string()?)
+                .ok_or(SnapshotError::Corrupt("unknown span argument key"))?;
+            let v = r.get_f64()?;
+            *slot = (key, v);
+        }
+        if enabled() {
+            push(SpanEvent { cat, name, lane, seq, ts_us, dur_us, args, n_args });
+        }
+    }
+    let serial_seq = r.get_u32()?;
+    if enabled() {
+        SERIAL_SEQ.store(serial_seq, Ordering::SeqCst);
+    }
+    let mut counters = [0u64; metrics::N_COUNTERS];
+    for c in counters.iter_mut() {
+        *c = r.get_u64()?;
+    }
+    let mut hists = [[0u64; metrics::HIST_BUCKETS]; metrics::N_HISTS];
+    for row in hists.iter_mut() {
+        for b in row.iter_mut() {
+            *b = r.get_u64()?;
+        }
+    }
+    if enabled() {
+        metrics::restore_raw(&counters, &hists);
+    }
+    Ok(())
+}
+
 /// Drain and write the chrome trace to `path`.
 pub fn export_chrome_trace(path: &Path) -> std::io::Result<()> {
     if let Some(dir) = path.parent() {
@@ -457,6 +604,40 @@ mod tests {
             let t = line.trim_end_matches(',');
             assert!(t.starts_with('{') && t.ends_with('}'), "{line}");
         }
+    }
+
+    #[test]
+    fn snapshot_roundtrips_spans_through_a_fresh_sink() {
+        let _g = TEST_LOCK.lock().unwrap();
+        enable();
+        // LANE_CKPT is only written by checkpoint code, so concurrent lib
+        // tests can't collide with the assertions below
+        emit_serial(LANE_CKPT, "ckpt", "save", 5, 0, &[("iter", 2.0), ("task", 1.0)]);
+        let mut w = crate::snapshot::SnapWriter::new();
+        snap_save(&mut w);
+        let bytes = w.into_file_bytes(7);
+
+        enable(); // wipe the sink, then restore into it
+        let mut r = crate::snapshot::SnapReader::from_file_bytes(bytes, 7).unwrap();
+        snap_restore(&mut r).unwrap();
+        disable();
+        let evs: Vec<SpanEvent> =
+            drain().into_iter().filter(|e| e.lane == LANE_CKPT).collect();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].cat, "ckpt");
+        assert_eq!(evs[0].name, "save");
+        assert_eq!(evs[0].ts_us, 5);
+        assert_eq!(evs[0].n_args, 2);
+        assert_eq!(evs[0].args[0], ("iter", 2.0));
+        assert_eq!(evs[0].args[1], ("task", 1.0));
+    }
+
+    #[test]
+    fn intern_covers_the_whole_span_vocabulary() {
+        for s in ["tuner", "plan", "sa", "best_gflops", "ckpt", "save", ""] {
+            assert_eq!(intern_static(s), Some(s));
+        }
+        assert_eq!(intern_static("not-a-span-string"), None);
     }
 
     #[test]

@@ -600,7 +600,8 @@ pub fn transfer_warmstart(
         method,
         &cold_scfg,
         backend.clone(),
-    );
+    )
+    .unwrap_or_else(|e| unreachable!("{model} is in the zoo: {e}"));
     let mut warm_scfg = SessionConfig::serial(tuner);
     warm_scfg.transfer = TransferConfig::with_mode(mode);
     let warm = tune_model_session(
@@ -609,7 +610,8 @@ pub fn transfer_warmstart(
         method,
         &warm_scfg,
         backend,
-    );
+    )
+    .unwrap_or_else(|e| unreachable!("{model} is in the zoo: {e}"));
 
     let mut table = Table::new(
         &format!(

@@ -25,6 +25,7 @@ use super::gae::gae;
 use crate::costmodel::CostModel;
 use crate::runtime::{AgentState, Backend};
 use crate::search::{dedup_top, SearchRound, Searcher};
+use crate::snapshot::{SnapReader, SnapWriter, SnapshotError};
 use crate::space::{Config, DesignSpace, Direction};
 use crate::util::rng::Pcg32;
 use std::collections::BTreeSet;
@@ -149,6 +150,40 @@ impl Searcher for PpoAgent {
 
     fn export_state(&self) -> Option<AgentState> {
         self.state.clone()
+    }
+
+    // Cross-round state: the learned parameters + Adam moments (if the
+    // policy has been initialized), the PPO update-seed cursor, and the
+    // exploitation seed configs fed back by the tuner. `init_seed` is
+    // reconstructed from the tuner config on restore.
+    fn snap_save(&self, w: &mut SnapWriter) {
+        match &self.state {
+            Some(s) => {
+                w.put_bool(true);
+                w.put_f32_slice(&s.params);
+                w.put_f32_slice(&s.m);
+                w.put_f32_slice(&s.v);
+                w.put_f32(s.t);
+            }
+            None => w.put_bool(false),
+        }
+        w.put_i64(self.update_seed as i64);
+        w.put_configs(&self.seed_configs);
+    }
+
+    fn snap_restore(&mut self, r: &mut SnapReader) -> Result<(), SnapshotError> {
+        self.state = if r.get_bool()? {
+            let params = r.get_f32_vec()?;
+            let m = r.get_f32_vec()?;
+            let v = r.get_f32_vec()?;
+            let t = r.get_f32()?;
+            Some(AgentState { params, m, v, t })
+        } else {
+            None
+        };
+        self.update_seed = r.get_i64()? as i32;
+        self.seed_configs = r.get_configs()?;
+        Ok(())
     }
 
     fn round(

@@ -4,6 +4,7 @@
 
 use super::{dedup_top, SearchRound, Searcher};
 use crate::costmodel::CostModel;
+use crate::snapshot::{SnapReader, SnapWriter, SnapshotError};
 use crate::space::{Config, DesignSpace};
 use crate::util::rng::Pcg32;
 use std::collections::BTreeSet;
@@ -71,6 +72,17 @@ impl Searcher for GeneticAlgorithm {
 
     fn reset(&mut self) {
         self.population.clear();
+    }
+
+    // The population is the only cross-round state; the evolution RNG is
+    // the tuner's and is checkpointed there.
+    fn snap_save(&self, w: &mut SnapWriter) {
+        w.put_configs(&self.population);
+    }
+
+    fn snap_restore(&mut self, r: &mut SnapReader) -> Result<(), SnapshotError> {
+        self.population = r.get_configs()?;
+        Ok(())
     }
 
     fn round(

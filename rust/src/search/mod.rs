@@ -12,6 +12,7 @@ pub mod sa;
 
 use crate::costmodel::CostModel;
 use crate::runtime::AgentState;
+use crate::snapshot::{SnapReader, SnapWriter, SnapshotError};
 use crate::space::{Config, DesignSpace};
 use crate::util::rng::Pcg32;
 use std::collections::{BTreeSet, HashSet};
@@ -63,6 +64,19 @@ pub trait Searcher {
     /// Default: nothing to export.
     fn export_state(&self) -> Option<AgentState> {
         None
+    }
+
+    /// Serialize every piece of cross-round internal state (SA chains, GA
+    /// population, PPO parameters + optimizer moments + seed configs) into
+    /// a checkpoint. Stateless searchers write nothing. Must be the exact
+    /// inverse of [`Self::snap_restore`]: a restored searcher continues the
+    /// identical trajectory the saved one would have.
+    fn snap_save(&self, _w: &mut SnapWriter) {}
+
+    /// Restore the state written by [`Self::snap_save`] into a
+    /// freshly-constructed searcher of the same kind/config.
+    fn snap_restore(&mut self, _r: &mut SnapReader) -> Result<(), SnapshotError> {
+        Ok(())
     }
 }
 

@@ -9,6 +9,7 @@
 
 use super::{dedup_top, SearchRound, Searcher};
 use crate::costmodel::CostModel;
+use crate::snapshot::{SnapReader, SnapWriter, SnapshotError};
 use crate::space::{Config, DesignSpace};
 use crate::util::rng::Pcg32;
 use std::collections::BTreeSet;
@@ -68,6 +69,17 @@ impl Searcher for SimulatedAnnealing {
 
     fn reset(&mut self) {
         self.chains.clear();
+    }
+
+    // The persistent chain points are the only cross-round state; the
+    // walk's RNG lives with the tuner and is checkpointed there.
+    fn snap_save(&self, w: &mut SnapWriter) {
+        w.put_configs(&self.chains);
+    }
+
+    fn snap_restore(&mut self, r: &mut SnapReader) -> Result<(), SnapshotError> {
+        self.chains = r.get_configs()?;
+        Ok(())
     }
 
     fn round(

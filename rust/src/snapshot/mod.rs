@@ -1,0 +1,644 @@
+//! Versioned on-disk snapshots of mid-flight tuning sessions.
+//!
+//! A snapshot captures everything a session needs to resume **bit-
+//! identically** — per-task tuner plan/absorb position and remaining
+//! budget, searcher internals (SA chains / GA population / PPO
+//! `AgentState`), every RNG stream at its exact cursor, the cost model's
+//! training buffers, visited/in-flight sets, the transfer registry's
+//! artifacts and audit log, and the simulated `Clock` accounting. The
+//! determinism contract (results bit-pinned at any `--threads`) turns
+//! "snapshot + resume == uninterrupted run" into a machine-checkable
+//! invariant; `rust/tests/snapshot_resume.rs` checks it.
+//!
+//! ## File layout
+//!
+//! ```text
+//! [ magic  8B  b"RELSNAPS" ]  identifies the file family
+//! [ version u32           ]  format version (FORMAT_VERSION)
+//! [ fingerprint u64       ]  hash of the session config + task list
+//! [ payload ...           ]  tagged sections (see SnapWriter::section)
+//! [ checksum u64          ]  FNV-1a over everything above
+//! ```
+//!
+//! All integers are little-endian; floats are stored as their exact IEEE
+//! bit patterns (`to_bits`), so a round trip is bitwise lossless. Zero
+//! external dependencies. Writes are atomic: the bytes land in
+//! `<path>.tmp`, are fsynced, then renamed over `<path>` — a crash
+//! mid-checkpoint leaves the previous snapshot intact, never a torn file.
+//!
+//! The **fingerprint** pins a snapshot to the run that wrote it: model
+//! name, task list, method, tuner + session schedule config (everything
+//! that shapes the deterministic trajectory — `--threads` is deliberately
+//! excluded because results are bit-identical at any value). Resuming
+//! under a different config is refused with
+//! [`SnapshotError::FingerprintMismatch`] instead of silently diverging.
+
+use crate::space::Config;
+use std::fmt;
+use std::io::Write as _;
+use std::path::Path;
+
+/// First 8 bytes of every snapshot file.
+pub const MAGIC: [u8; 8] = *b"RELSNAPS";
+
+/// Bump on any layout change; old files are refused, never misread.
+pub const FORMAT_VERSION: u32 = 1;
+
+/// Typed error for every snapshot save/load/resume failure mode — the
+/// snapshot paths carry no `unwrap`/`expect` (lint rule S2 stays clean).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SnapshotError {
+    /// Filesystem failure (message carries the underlying io::Error).
+    Io(String),
+    /// The file does not start with [`MAGIC`] — not a snapshot at all.
+    BadMagic,
+    /// Written by a different format version of this code.
+    VersionMismatch { found: u32, expected: u32 },
+    /// Written by a run with a different config/task-list fingerprint.
+    FingerprintMismatch { found: u64, expected: u64 },
+    /// The trailing checksum does not match the bytes (bit rot, torn
+    /// write outside our atomic path, or truncation at a section border).
+    ChecksumMismatch,
+    /// The payload ended before a read completed (truncated file).
+    UnexpectedEof,
+    /// Structurally invalid payload (bad section tag, impossible length).
+    Corrupt(&'static str),
+    /// Valid snapshot, but this build cannot resume it (e.g. a schedule
+    /// the checkpoint machinery does not cover).
+    Unsupported(&'static str),
+}
+
+impl fmt::Display for SnapshotError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SnapshotError::Io(e) => write!(f, "snapshot I/O error: {e}"),
+            SnapshotError::BadMagic => {
+                write!(f, "not a session snapshot (bad magic; expected {:?})", MAGIC)
+            }
+            SnapshotError::VersionMismatch { found, expected } => write!(
+                f,
+                "snapshot format version {found} is not supported (this build reads version {expected}); re-run the original tune or upgrade"
+            ),
+            SnapshotError::FingerprintMismatch { found, expected } => write!(
+                f,
+                "snapshot was written by a different session config (fingerprint {found:#018x}, this run is {expected:#018x}); resume with the same --model/--method/--trials/--seed and session flags"
+            ),
+            SnapshotError::ChecksumMismatch => {
+                write!(f, "snapshot checksum mismatch (file is corrupt or truncated)")
+            }
+            SnapshotError::UnexpectedEof => {
+                write!(f, "snapshot ended unexpectedly (truncated file)")
+            }
+            SnapshotError::Corrupt(what) => write!(f, "snapshot is corrupt: {what}"),
+            SnapshotError::Unsupported(what) => write!(f, "snapshot not resumable: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for SnapshotError {}
+
+impl From<std::io::Error> for SnapshotError {
+    fn from(e: std::io::Error) -> Self {
+        SnapshotError::Io(e.to_string())
+    }
+}
+
+/// FNV-1a 64 over a byte stream — the trailing integrity checksum.
+/// Dependency-free and byte-order independent by construction.
+pub fn checksum64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1_0000_0000_01b3);
+    }
+    h
+}
+
+/// Append-only serializer for the snapshot payload. Every `put_*` has an
+/// exact-inverse `get_*` on [`SnapReader`]; floats round-trip via their
+/// IEEE bit patterns so restored state is bitwise equal to what was saved.
+#[derive(Default)]
+pub struct SnapWriter {
+    buf: Vec<u8>,
+}
+
+impl SnapWriter {
+    pub fn new() -> Self {
+        SnapWriter { buf: Vec::with_capacity(4096) }
+    }
+
+    /// Open a tagged section. Tags make the payload self-describing: a
+    /// reader that expects section `t` and finds something else reports
+    /// a structural error instead of misinterpreting bytes.
+    pub fn section(&mut self, tag: u32) {
+        self.put_u32(0x5EC0_0000 | (tag & 0xFFFF));
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_bool(&mut self, v: bool) {
+        self.buf.push(v as u8);
+    }
+
+    pub fn put_u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_usize(&mut self, v: usize) {
+        self.put_u64(v as u64);
+    }
+
+    pub fn put_i64(&mut self, v: i64) {
+        self.put_u64(v as u64);
+    }
+
+    pub fn put_f64(&mut self, v: f64) {
+        self.put_u64(v.to_bits());
+    }
+
+    pub fn put_f32(&mut self, v: f32) {
+        self.put_u32(v.to_bits());
+    }
+
+    pub fn put_str(&mut self, s: &str) {
+        self.put_usize(s.len());
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    pub fn put_u64_slice(&mut self, xs: &[u64]) {
+        self.put_usize(xs.len());
+        for &x in xs {
+            self.put_u64(x);
+        }
+    }
+
+    pub fn put_i64_slice(&mut self, xs: &[i64]) {
+        self.put_usize(xs.len());
+        for &x in xs {
+            self.put_i64(x);
+        }
+    }
+
+    pub fn put_f32_slice(&mut self, xs: &[f32]) {
+        self.put_usize(xs.len());
+        for &x in xs {
+            self.put_f32(x);
+        }
+    }
+
+    pub fn put_f64_slice(&mut self, xs: &[f64]) {
+        self.put_usize(xs.len());
+        for &x in xs {
+            self.put_f64(x);
+        }
+    }
+
+    /// One design-space configuration (its knob index vector).
+    pub fn put_config(&mut self, c: &Config) {
+        self.put_usize(c.idx.len());
+        for &i in &c.idx {
+            self.put_u16(i);
+        }
+    }
+
+    pub fn put_configs(&mut self, cs: &[Config]) {
+        self.put_usize(cs.len());
+        for c in cs {
+            self.put_config(c);
+        }
+    }
+
+    /// Payload bytes written so far (diagnostics / cadence decisions).
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Frame the payload into a complete snapshot file image:
+    /// magic + version + fingerprint + payload + checksum.
+    pub fn into_file_bytes(self, fingerprint: u64) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.buf.len() + 28);
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+        out.extend_from_slice(&fingerprint.to_le_bytes());
+        out.extend_from_slice(&self.buf);
+        let sum = checksum64(&out);
+        out.extend_from_slice(&sum.to_le_bytes());
+        out
+    }
+}
+
+/// Cursor over a verified snapshot payload. Construct via [`load`] (file)
+/// or [`SnapReader::from_file_bytes`]; every `get_*` returns a typed error
+/// on truncation instead of panicking.
+pub struct SnapReader {
+    buf: Vec<u8>,
+    pos: usize,
+}
+
+impl SnapReader {
+    /// Verify magic, version, fingerprint and checksum; on success the
+    /// cursor sits at the first payload byte.
+    pub fn from_file_bytes(
+        bytes: Vec<u8>,
+        expected_fingerprint: u64,
+    ) -> Result<Self, SnapshotError> {
+        // header (8 + 4 + 8) + trailing checksum (8)
+        if bytes.len() < 28 {
+            return Err(SnapshotError::UnexpectedEof);
+        }
+        if bytes[..8] != MAGIC {
+            return Err(SnapshotError::BadMagic);
+        }
+        let version = u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]);
+        if version != FORMAT_VERSION {
+            return Err(SnapshotError::VersionMismatch {
+                found: version,
+                expected: FORMAT_VERSION,
+            });
+        }
+        let body_end = bytes.len() - 8;
+        let mut sum = [0u8; 8];
+        sum.copy_from_slice(&bytes[body_end..]);
+        if checksum64(&bytes[..body_end]) != u64::from_le_bytes(sum) {
+            return Err(SnapshotError::ChecksumMismatch);
+        }
+        let mut fp = [0u8; 8];
+        fp.copy_from_slice(&bytes[12..20]);
+        let found = u64::from_le_bytes(fp);
+        if found != expected_fingerprint {
+            return Err(SnapshotError::FingerprintMismatch {
+                found,
+                expected: expected_fingerprint,
+            });
+        }
+        let mut r = SnapReader { buf: bytes, pos: 20 };
+        r.buf.truncate(body_end);
+        Ok(r)
+    }
+
+    fn take(&mut self, n: usize) -> Result<&[u8], SnapshotError> {
+        if self.buf.len() - self.pos < n {
+            return Err(SnapshotError::UnexpectedEof);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    /// Consume a section tag and verify it matches.
+    pub fn expect_section(&mut self, tag: u32) -> Result<(), SnapshotError> {
+        let found = self.get_u32()?;
+        if found != (0x5EC0_0000 | (tag & 0xFFFF)) {
+            return Err(SnapshotError::Corrupt("unexpected section tag"));
+        }
+        Ok(())
+    }
+
+    pub fn get_u8(&mut self) -> Result<u8, SnapshotError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn get_bool(&mut self) -> Result<bool, SnapshotError> {
+        match self.get_u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            _ => Err(SnapshotError::Corrupt("boolean out of range")),
+        }
+    }
+
+    pub fn get_u16(&mut self) -> Result<u16, SnapshotError> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    pub fn get_u32(&mut self) -> Result<u32, SnapshotError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn get_u64(&mut self) -> Result<u64, SnapshotError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    pub fn get_usize(&mut self) -> Result<usize, SnapshotError> {
+        let v = self.get_u64()?;
+        usize::try_from(v).map_err(|_| SnapshotError::Corrupt("length overflows usize"))
+    }
+
+    /// A length that will drive a `Vec::with_capacity` — bounded by the
+    /// bytes actually remaining so a corrupt length cannot OOM the host.
+    fn get_len(&mut self, elem_bytes: usize) -> Result<usize, SnapshotError> {
+        let n = self.get_usize()?;
+        if n.saturating_mul(elem_bytes.max(1)) > self.buf.len() - self.pos {
+            return Err(SnapshotError::Corrupt("length exceeds remaining payload"));
+        }
+        Ok(n)
+    }
+
+    pub fn get_i64(&mut self) -> Result<i64, SnapshotError> {
+        Ok(self.get_u64()? as i64)
+    }
+
+    pub fn get_f64(&mut self) -> Result<f64, SnapshotError> {
+        Ok(f64::from_bits(self.get_u64()?))
+    }
+
+    pub fn get_f32(&mut self) -> Result<f32, SnapshotError> {
+        Ok(f32::from_bits(self.get_u32()?))
+    }
+
+    pub fn get_string(&mut self) -> Result<String, SnapshotError> {
+        let n = self.get_len(1)?;
+        let bytes = self.take(n)?.to_vec();
+        String::from_utf8(bytes).map_err(|_| SnapshotError::Corrupt("string is not UTF-8"))
+    }
+
+    pub fn get_u64_vec(&mut self) -> Result<Vec<u64>, SnapshotError> {
+        let n = self.get_len(8)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.get_u64()?);
+        }
+        Ok(out)
+    }
+
+    pub fn get_i64_vec(&mut self) -> Result<Vec<i64>, SnapshotError> {
+        let n = self.get_len(8)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.get_i64()?);
+        }
+        Ok(out)
+    }
+
+    pub fn get_f32_vec(&mut self) -> Result<Vec<f32>, SnapshotError> {
+        let n = self.get_len(4)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.get_f32()?);
+        }
+        Ok(out)
+    }
+
+    pub fn get_f64_vec(&mut self) -> Result<Vec<f64>, SnapshotError> {
+        let n = self.get_len(8)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.get_f64()?);
+        }
+        Ok(out)
+    }
+
+    pub fn get_config(&mut self) -> Result<Config, SnapshotError> {
+        let n = self.get_len(2)?;
+        let mut idx = Vec::with_capacity(n);
+        for _ in 0..n {
+            idx.push(self.get_u16()?);
+        }
+        Ok(Config::new(idx))
+    }
+
+    pub fn get_configs(&mut self) -> Result<Vec<Config>, SnapshotError> {
+        let n = self.get_len(2)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.get_config()?);
+        }
+        Ok(out)
+    }
+
+    /// Bytes not yet consumed (a fully-read snapshot ends at 0).
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+}
+
+/// Atomically persist a framed snapshot: write `<path>.tmp`, fsync, then
+/// rename over `path`. A crash at any point leaves either the old snapshot
+/// or none — never a torn file at the final path.
+pub fn save(path: &Path, fingerprint: u64, writer: SnapWriter) -> Result<(), SnapshotError> {
+    let bytes = writer.into_file_bytes(fingerprint);
+    let mut tmp = path.as_os_str().to_os_string();
+    tmp.push(".tmp");
+    let tmp = std::path::PathBuf::from(tmp);
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(&bytes)?;
+        f.sync_all()?;
+    }
+    if let Err(e) = std::fs::rename(&tmp, path) {
+        // don't leave the temp file behind on a failed rename
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e.into());
+    }
+    Ok(())
+}
+
+/// Load + verify a snapshot written by [`save`]. The returned reader sits
+/// at the first payload byte.
+pub fn load(path: &Path, expected_fingerprint: u64) -> Result<SnapReader, SnapshotError> {
+    let bytes = std::fs::read(path)?;
+    SnapReader::from_file_bytes(bytes, expected_fingerprint)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    fn tmp_path(tag: &str) -> std::path::PathBuf {
+        static N: AtomicU64 = AtomicU64::new(0);
+        let n = N.fetch_add(1, Ordering::Relaxed);
+        std::env::temp_dir().join(format!(
+            "release-snap-test-{}-{tag}-{n}.bin",
+            std::process::id()
+        ))
+    }
+
+    fn sample_writer() -> SnapWriter {
+        let mut w = SnapWriter::new();
+        w.section(1);
+        w.put_u8(7);
+        w.put_bool(true);
+        w.put_u16(65535);
+        w.put_u32(0xDEAD_BEEF);
+        w.put_u64(u64::MAX - 3);
+        w.put_usize(42);
+        w.put_i64(-123_456_789);
+        w.put_f64(std::f64::consts::PI);
+        w.put_f64(f64::NAN);
+        w.put_f32(-0.0f32);
+        w.put_str("hello snapshot");
+        w.put_u64_slice(&[1, 2, 3]);
+        w.put_i64_slice(&[-1, 0, 1]);
+        w.put_f32_slice(&[1.5, -2.5]);
+        w.put_f64_slice(&[0.1, 0.2, 0.3]);
+        w.put_config(&Config::new(vec![0, 3, 9]));
+        w.put_configs(&[Config::new(vec![1]), Config::new(vec![2, 2])]);
+        w
+    }
+
+    fn check_sample(r: &mut SnapReader) {
+        r.expect_section(1).unwrap();
+        assert_eq!(r.get_u8().unwrap(), 7);
+        assert!(r.get_bool().unwrap());
+        assert_eq!(r.get_u16().unwrap(), 65535);
+        assert_eq!(r.get_u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.get_u64().unwrap(), u64::MAX - 3);
+        assert_eq!(r.get_usize().unwrap(), 42);
+        assert_eq!(r.get_i64().unwrap(), -123_456_789);
+        assert_eq!(r.get_f64().unwrap().to_bits(), std::f64::consts::PI.to_bits());
+        // NaN round-trips to the exact same bit pattern
+        assert_eq!(r.get_f64().unwrap().to_bits(), f64::NAN.to_bits());
+        assert_eq!(r.get_f32().unwrap().to_bits(), (-0.0f32).to_bits());
+        assert_eq!(r.get_string().unwrap(), "hello snapshot");
+        assert_eq!(r.get_u64_vec().unwrap(), vec![1, 2, 3]);
+        assert_eq!(r.get_i64_vec().unwrap(), vec![-1, 0, 1]);
+        assert_eq!(r.get_f32_vec().unwrap(), vec![1.5, -2.5]);
+        assert_eq!(r.get_f64_vec().unwrap(), vec![0.1, 0.2, 0.3]);
+        assert_eq!(r.get_config().unwrap(), Config::new(vec![0, 3, 9]));
+        assert_eq!(
+            r.get_configs().unwrap(),
+            vec![Config::new(vec![1]), Config::new(vec![2, 2])]
+        );
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn roundtrip_every_primitive_bitwise() {
+        let bytes = sample_writer().into_file_bytes(0x1234);
+        let mut r = SnapReader::from_file_bytes(bytes, 0x1234).unwrap();
+        check_sample(&mut r);
+    }
+
+    #[test]
+    fn file_save_load_roundtrip_atomic() {
+        let path = tmp_path("roundtrip");
+        save(&path, 99, sample_writer()).unwrap();
+        // the temp file never survives a successful save
+        let mut tmp = path.as_os_str().to_os_string();
+        tmp.push(".tmp");
+        assert!(!std::path::Path::new(&tmp).exists());
+        let mut r = load(&path, 99).unwrap();
+        check_sample(&mut r);
+        // overwriting is also atomic (rename over the old file)
+        save(&path, 99, sample_writer()).unwrap();
+        assert!(load(&path, 99).is_ok());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut bytes = sample_writer().into_file_bytes(1);
+        bytes[0] ^= 0xFF;
+        assert!(matches!(
+            SnapReader::from_file_bytes(bytes, 1),
+            Err(SnapshotError::BadMagic)
+        ));
+    }
+
+    #[test]
+    fn version_bump_rejected_with_both_versions() {
+        let mut w = SnapWriter::new();
+        w.put_u8(1);
+        let mut bytes = w.into_file_bytes(1);
+        bytes[8] = FORMAT_VERSION as u8 + 1; // bump the version field
+        // checksum covers the version, so fix it up to isolate the check
+        let end = bytes.len() - 8;
+        let sum = checksum64(&bytes[..end]);
+        bytes[end..].copy_from_slice(&sum.to_le_bytes());
+        match SnapReader::from_file_bytes(bytes, 1) {
+            Err(SnapshotError::VersionMismatch { found, expected }) => {
+                assert_eq!(found, FORMAT_VERSION + 1);
+                assert_eq!(expected, FORMAT_VERSION);
+            }
+            other => panic!("expected VersionMismatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn fingerprint_mismatch_rejected_with_both_prints() {
+        let bytes = sample_writer().into_file_bytes(0xAAAA);
+        match SnapReader::from_file_bytes(bytes, 0xBBBB) {
+            Err(SnapshotError::FingerprintMismatch { found, expected }) => {
+                assert_eq!(found, 0xAAAA);
+                assert_eq!(expected, 0xBBBB);
+            }
+            other => panic!("expected FingerprintMismatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn corruption_and_truncation_rejected() {
+        let bytes = sample_writer().into_file_bytes(5);
+        // flip one payload byte: checksum catches it
+        let mut flipped = bytes.clone();
+        flipped[25] ^= 0x40;
+        assert!(matches!(
+            SnapReader::from_file_bytes(flipped, 5),
+            Err(SnapshotError::ChecksumMismatch)
+        ));
+        // truncate mid-payload: checksum (or length) catches it
+        let truncated = bytes[..bytes.len() / 2].to_vec();
+        assert!(SnapReader::from_file_bytes(truncated, 5).is_err());
+        // an empty / tiny file is an EOF, not a panic
+        assert!(matches!(
+            SnapReader::from_file_bytes(Vec::new(), 5),
+            Err(SnapshotError::UnexpectedEof)
+        ));
+        assert!(SnapReader::from_file_bytes(vec![0u8; 10], 5).is_err());
+    }
+
+    #[test]
+    fn reader_eof_and_bad_lengths_are_typed_errors() {
+        let mut w = SnapWriter::new();
+        w.put_u32(7);
+        let mut r = SnapReader::from_file_bytes(w.into_file_bytes(1), 1).unwrap();
+        assert_eq!(r.get_u32().unwrap(), 7);
+        assert!(matches!(r.get_u64(), Err(SnapshotError::UnexpectedEof)));
+
+        // a huge claimed length must not drive an allocation
+        let mut w = SnapWriter::new();
+        w.put_u64(u64::MAX / 2); // absurd element count for a u64 vec
+        let mut r = SnapReader::from_file_bytes(w.into_file_bytes(1), 1).unwrap();
+        assert!(matches!(r.get_u64_vec(), Err(SnapshotError::Corrupt(_))));
+
+        // wrong section tag is structural corruption
+        let mut w = SnapWriter::new();
+        w.section(3);
+        let mut r = SnapReader::from_file_bytes(w.into_file_bytes(1), 1).unwrap();
+        assert!(matches!(r.expect_section(4), Err(SnapshotError::Corrupt(_))));
+    }
+
+    #[test]
+    fn missing_file_is_an_io_error() {
+        let path = tmp_path("missing");
+        match load(&path, 1) {
+            Err(SnapshotError::Io(_)) => {}
+            other => panic!("expected Io, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn error_display_names_the_remedy() {
+        let e = SnapshotError::FingerprintMismatch { found: 1, expected: 2 };
+        assert!(e.to_string().contains("same --model"));
+        let e = SnapshotError::VersionMismatch { found: 9, expected: 1 };
+        assert!(e.to_string().contains("version 9"));
+    }
+}

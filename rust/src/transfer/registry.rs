@@ -9,6 +9,7 @@
 
 use super::similarity;
 use crate::runtime::AgentState;
+use crate::snapshot::{SnapReader, SnapWriter, SnapshotError};
 use crate::workload::{ConvLayer, ConvTask};
 use std::sync::{Arc, Mutex};
 
@@ -128,6 +129,139 @@ impl TransferRegistry {
     pub fn events(&self) -> Vec<TransferEvent> {
         self.inner.lock().unwrap().events.clone()
     }
+
+    /// Checkpoint serialization: every published artifact plus the full
+    /// publish/consult audit log, in order. No spans or counters are
+    /// emitted here — observability state is checkpointed by the obs layer.
+    pub fn snap_save(&self, w: &mut SnapWriter) {
+        // PANIC: session checkpointing is serial-only; the single lock
+        // holder cannot have panicked while holding it.
+        let g = self.inner.lock().unwrap();
+        w.put_usize(g.artifacts.len());
+        for a in g.artifacts.iter() {
+            w.put_str(&a.task_id);
+            put_layer(w, &a.layer);
+            w.put_usize(a.pairs.len());
+            for (values, target) in &a.pairs {
+                w.put_i64_slice(values);
+                w.put_f32(*target);
+            }
+            w.put_usize(a.best_values.len());
+            for values in &a.best_values {
+                w.put_i64_slice(values);
+            }
+            match &a.agent_state {
+                Some(s) => {
+                    w.put_bool(true);
+                    w.put_f32_slice(&s.params);
+                    w.put_f32_slice(&s.m);
+                    w.put_f32_slice(&s.v);
+                    w.put_f32(s.t);
+                }
+                None => w.put_bool(false),
+            }
+            w.put_f64(a.best_gflops);
+        }
+        w.put_usize(g.events.len());
+        for e in g.events.iter() {
+            match e {
+                TransferEvent::Published { task } => {
+                    w.put_u8(0);
+                    w.put_str(task);
+                }
+                TransferEvent::Consulted { task, donors } => {
+                    w.put_u8(1);
+                    w.put_str(task);
+                    w.put_usize(donors.len());
+                    for d in donors {
+                        w.put_str(d);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Restore into a freshly-constructed (empty) registry.
+    pub fn snap_restore(&self, r: &mut SnapReader) -> Result<(), SnapshotError> {
+        // PANIC: restore runs before any tuning thread exists; the lock
+        // cannot be poisoned.
+        let mut g = self.inner.lock().unwrap();
+        if !g.artifacts.is_empty() || !g.events.is_empty() {
+            return Err(SnapshotError::Corrupt("restore into a non-empty registry"));
+        }
+        let n_artifacts = r.get_usize()?;
+        for _ in 0..n_artifacts {
+            let task_id = r.get_string()?;
+            let layer = get_layer(r)?;
+            let n_pairs = r.get_usize()?;
+            let mut pairs = Vec::new();
+            for _ in 0..n_pairs {
+                let values = r.get_i64_vec()?;
+                let target = r.get_f32()?;
+                pairs.push((values, target));
+            }
+            let n_best = r.get_usize()?;
+            let mut best_values = Vec::new();
+            for _ in 0..n_best {
+                best_values.push(r.get_i64_vec()?);
+            }
+            let agent_state = if r.get_bool()? {
+                let params = r.get_f32_vec()?;
+                let m = r.get_f32_vec()?;
+                let v = r.get_f32_vec()?;
+                let t = r.get_f32()?;
+                Some(AgentState { params, m, v, t })
+            } else {
+                None
+            };
+            let best_gflops = r.get_f64()?;
+            g.artifacts.push(Arc::new(TaskArtifact {
+                task_id,
+                layer,
+                pairs,
+                best_values,
+                agent_state,
+                best_gflops,
+            }));
+        }
+        let n_events = r.get_usize()?;
+        for _ in 0..n_events {
+            match r.get_u8()? {
+                0 => g.events.push(TransferEvent::Published { task: r.get_string()? }),
+                1 => {
+                    let task = r.get_string()?;
+                    let n_donors = r.get_usize()?;
+                    let mut donors = Vec::new();
+                    for _ in 0..n_donors {
+                        donors.push(r.get_string()?);
+                    }
+                    g.events.push(TransferEvent::Consulted { task, donors });
+                }
+                _ => return Err(SnapshotError::Corrupt("transfer event tag")),
+            }
+        }
+        Ok(())
+    }
+}
+
+fn put_layer(w: &mut SnapWriter, l: &ConvLayer) {
+    for v in [l.n, l.c, l.h, l.w, l.k, l.kh, l.kw, l.stride, l.pad] {
+        w.put_i64(v);
+    }
+}
+
+fn get_layer(r: &mut SnapReader) -> Result<ConvLayer, SnapshotError> {
+    Ok(ConvLayer {
+        n: r.get_i64()?,
+        c: r.get_i64()?,
+        h: r.get_i64()?,
+        w: r.get_i64()?,
+        k: r.get_i64()?,
+        kh: r.get_i64()?,
+        kw: r.get_i64()?,
+        stride: r.get_i64()?,
+        pad: r.get_i64()?,
+    })
 }
 
 impl Default for TransferRegistry {

@@ -19,7 +19,8 @@ use crate::sampling::{adaptive_sample, fill_random_unvisited, greedy_sample, Sam
 use crate::search::{
     ga::GeneticAlgorithm, random::RandomSearch, sa::SimulatedAnnealing, Searcher,
 };
-use crate::sim::{Clock, Measurement, Measurer};
+use crate::sim::{Clock, MeasureError, Measurement, Measurer};
+use crate::snapshot::{SnapReader, SnapWriter, SnapshotError};
 use crate::space::{Config, DesignSpace};
 use crate::transfer::{
     self, TaskArtifact, TransferConfig, TransferPlan, TransferRegistry,
@@ -422,6 +423,17 @@ impl TaskTuner {
         }
     }
 
+    /// Simulated-clock position — the session anchors checkpoint spans here
+    /// so a resumed run's trace is byte-identical to an uninterrupted one.
+    pub(crate) fn clock_total_s(&self) -> f64 {
+        self.clock.total_s()
+    }
+
+    /// Absorbed rounds so far (the session's checkpoint-cadence unit).
+    pub(crate) fn rounds(&self) -> usize {
+        self.iterations.len()
+    }
+
     /// Measurement budget not yet claimed by a planned batch.
     fn budget_left(&self) -> usize {
         self.cfg.max_trials.saturating_sub(self.cum + self.pending)
@@ -712,6 +724,355 @@ impl TaskTuner {
             transfer: self.transfer,
         }
     }
+
+    /// Serialize every mutable field of the tuning loop, in declaration
+    /// order. Together with [`Self::snap_restore`] this round-trips the
+    /// loop bit-identically: RNG cursor, cost-model buffers + fitted
+    /// forest, searcher internals, visited/in-flight sets, clock,
+    /// convergence bookkeeping, and the task's trace context.
+    pub(crate) fn snap_save(&self, w: &mut SnapWriter) {
+        w.put_str(&self.task_id);
+        let (state, inc) = self.rng.snapshot();
+        w.put_u64(state);
+        w.put_u64(inc);
+        self.model.snap_save(w);
+        self.searcher.snap_save(w);
+        let visited: Vec<u64> = self.visited.iter().copied().collect();
+        w.put_u64_slice(&visited);
+        let in_flight: Vec<u64> = self.in_flight.iter().copied().collect();
+        w.put_u64_slice(&in_flight);
+        w.put_usize(self.pending);
+        match &self.best {
+            Some((c, ms, gf)) => {
+                w.put_bool(true);
+                w.put_config(c);
+                w.put_f64(*ms);
+                w.put_f64(*gf);
+            }
+            None => w.put_bool(false),
+        }
+        w.put_usize(self.iterations.len());
+        for it in &self.iterations {
+            put_iteration(w, it);
+        }
+        put_clock(w, &self.clock);
+        w.put_usize(self.cum);
+        w.put_usize(self.stall);
+        w.put_configs(&self.last_traj);
+        w.put_usize(self.iter);
+        w.put_bool(self.stopped);
+        w.put_bool(self.record_pairs);
+        w.put_usize(self.artifact_pairs.len());
+        for (values, target) in &self.artifact_pairs {
+            w.put_i64_slice(values);
+            w.put_f32(*target);
+        }
+        put_transfer_summary(w, &self.transfer);
+        w.put_u32(self.obs.lane);
+        w.put_u32(self.obs.next_seq);
+        w.put_u64(self.obs.base_us);
+    }
+
+    /// Restore into a freshly [`TaskTuner::new`]-constructed tuner built
+    /// from the *same* task, method, config, and backend the checkpoint was
+    /// taken under (the session fingerprint guarantees that pairing).
+    pub(crate) fn snap_restore(&mut self, r: &mut SnapReader) -> Result<(), SnapshotError> {
+        let task_id = r.get_string()?;
+        if task_id != self.task_id {
+            return Err(SnapshotError::Corrupt("checkpoint task id mismatch"));
+        }
+        let state = r.get_u64()?;
+        let inc = r.get_u64()?;
+        self.rng = Pcg32::from_parts(state, inc);
+        self.model.snap_restore(r)?;
+        self.searcher.snap_restore(r)?;
+        self.visited = r.get_u64_vec()?.into_iter().collect();
+        self.in_flight = r.get_u64_vec()?.into_iter().collect();
+        self.pending = r.get_usize()?;
+        self.best = if r.get_bool()? {
+            let c = r.get_config()?;
+            let ms = r.get_f64()?;
+            let gf = r.get_f64()?;
+            Some((c, ms, gf))
+        } else {
+            None
+        };
+        let n_iters = r.get_usize()?;
+        self.iterations = Vec::new();
+        for _ in 0..n_iters {
+            self.iterations.push(get_iteration(r)?);
+        }
+        self.clock = get_clock(r)?;
+        self.cum = r.get_usize()?;
+        self.stall = r.get_usize()?;
+        self.last_traj = r.get_configs()?;
+        self.iter = r.get_usize()?;
+        self.stopped = r.get_bool()?;
+        self.record_pairs = r.get_bool()?;
+        let n_pairs = r.get_usize()?;
+        self.artifact_pairs = Vec::new();
+        for _ in 0..n_pairs {
+            let values = r.get_i64_vec()?;
+            let target = r.get_f32()?;
+            self.artifact_pairs.push((values, target));
+        }
+        self.transfer = get_transfer_summary(r)?;
+        self.obs = crate::obs::ObsCtx {
+            lane: r.get_u32()?,
+            next_seq: r.get_u32()?,
+            base_us: r.get_u64()?,
+        };
+        Ok(())
+    }
+}
+
+fn transfer_mode_tag(m: transfer::TransferMode) -> u8 {
+    match m {
+        transfer::TransferMode::Off => 0,
+        transfer::TransferMode::Model => 1,
+        transfer::TransferMode::Policy => 2,
+        transfer::TransferMode::Both => 3,
+    }
+}
+
+fn transfer_mode_from_tag(t: u8) -> Result<transfer::TransferMode, SnapshotError> {
+    match t {
+        0 => Ok(transfer::TransferMode::Off),
+        1 => Ok(transfer::TransferMode::Model),
+        2 => Ok(transfer::TransferMode::Policy),
+        3 => Ok(transfer::TransferMode::Both),
+        _ => Err(SnapshotError::Corrupt("transfer mode tag")),
+    }
+}
+
+fn put_clock(w: &mut SnapWriter, c: &Clock) {
+    w.put_f64(c.measure_s);
+    w.put_f64(c.search_s);
+    w.put_f64(c.model_s);
+    w.put_f64(c.wall_s);
+}
+
+fn get_clock(r: &mut SnapReader) -> Result<Clock, SnapshotError> {
+    Ok(Clock {
+        measure_s: r.get_f64()?,
+        search_s: r.get_f64()?,
+        model_s: r.get_f64()?,
+        wall_s: r.get_f64()?,
+    })
+}
+
+fn put_iteration(w: &mut SnapWriter, it: &IterationRecord) {
+    w.put_usize(it.iter);
+    w.put_usize(it.n_measured);
+    w.put_usize(it.cum_measured);
+    w.put_f64(it.best_gflops);
+    w.put_f64(it.best_runtime_ms);
+    w.put_usize(it.steps);
+    w.put_usize(it.steps_to_converge);
+    w.put_usize(it.sampler_k);
+    w.put_f64(it.plan_host_s);
+    w.put_f64(it.absorb_host_s);
+    put_clock(w, &it.clock);
+}
+
+fn get_iteration(r: &mut SnapReader) -> Result<IterationRecord, SnapshotError> {
+    Ok(IterationRecord {
+        iter: r.get_usize()?,
+        n_measured: r.get_usize()?,
+        cum_measured: r.get_usize()?,
+        best_gflops: r.get_f64()?,
+        best_runtime_ms: r.get_f64()?,
+        steps: r.get_usize()?,
+        steps_to_converge: r.get_usize()?,
+        sampler_k: r.get_usize()?,
+        plan_host_s: r.get_f64()?,
+        absorb_host_s: r.get_f64()?,
+        clock: get_clock(r)?,
+    })
+}
+
+fn put_transfer_summary(w: &mut SnapWriter, s: &Option<TransferSummary>) {
+    match s {
+        Some(s) => {
+            w.put_bool(true);
+            w.put_u8(transfer_mode_tag(s.mode));
+            w.put_usize(s.donors.len());
+            for d in &s.donors {
+                w.put_str(d);
+            }
+            w.put_usize(s.n_pairs);
+            w.put_usize(s.n_seed_configs);
+            w.put_bool(s.policy_warm);
+        }
+        None => w.put_bool(false),
+    }
+}
+
+fn get_transfer_summary(
+    r: &mut SnapReader,
+) -> Result<Option<TransferSummary>, SnapshotError> {
+    if !r.get_bool()? {
+        return Ok(None);
+    }
+    let mode = transfer_mode_from_tag(r.get_u8()?)?;
+    let n_donors = r.get_usize()?;
+    let mut donors = Vec::new();
+    for _ in 0..n_donors {
+        donors.push(r.get_string()?);
+    }
+    let n_pairs = r.get_usize()?;
+    let n_seed_configs = r.get_usize()?;
+    let policy_warm = r.get_bool()?;
+    Ok(Some(TransferSummary { mode, donors, n_pairs, n_seed_configs, policy_warm }))
+}
+
+/// Serialize a completed task's [`TuneResult`] (session checkpoints store
+/// the results of already-finished tasks this way).
+pub(crate) fn snap_save_result(w: &mut SnapWriter, res: &TuneResult) {
+    w.put_str(&res.task_id);
+    w.put_str(&res.method);
+    match &res.best_config {
+        Some(c) => {
+            w.put_bool(true);
+            w.put_config(c);
+        }
+        None => w.put_bool(false),
+    }
+    w.put_f64(res.best_runtime_ms);
+    w.put_f64(res.best_gflops);
+    w.put_usize(res.n_measurements);
+    put_clock(w, &res.clock);
+    w.put_usize(res.iterations.len());
+    for it in &res.iterations {
+        put_iteration(w, it);
+    }
+    w.put_configs(&res.last_trajectory);
+    put_transfer_summary(w, &res.transfer);
+}
+
+pub(crate) fn snap_restore_result(r: &mut SnapReader) -> Result<TuneResult, SnapshotError> {
+    let task_id = r.get_string()?;
+    let method = r.get_string()?;
+    let best_config = if r.get_bool()? { Some(r.get_config()?) } else { None };
+    let best_runtime_ms = r.get_f64()?;
+    let best_gflops = r.get_f64()?;
+    let n_measurements = r.get_usize()?;
+    let clock = get_clock(r)?;
+    let n_iters = r.get_usize()?;
+    let mut iterations = Vec::new();
+    for _ in 0..n_iters {
+        iterations.push(get_iteration(r)?);
+    }
+    let last_trajectory = r.get_configs()?;
+    let transfer = get_transfer_summary(r)?;
+    Ok(TuneResult {
+        task_id,
+        method,
+        best_config,
+        best_runtime_ms,
+        best_gflops,
+        n_measurements,
+        clock,
+        iterations,
+        last_trajectory,
+        transfer,
+    })
+}
+
+/// One pipelined batch waiting to be absorbed: the plan, its measurements,
+/// and the device-serial seconds the batch cost.
+pub(crate) type QueuedBatch = (PlannedBatch, Vec<Measurement>, f64);
+
+fn put_measurement(w: &mut SnapWriter, m: &Measurement) {
+    w.put_config(&m.config);
+    match m.runtime_ms {
+        Some(ms) => {
+            w.put_bool(true);
+            w.put_f64(ms);
+        }
+        None => w.put_bool(false),
+    }
+    w.put_u8(match m.error {
+        None => 0,
+        Some(MeasureError::TooManyThreads) => 1,
+        Some(MeasureError::SharedMemOverflow) => 2,
+        Some(MeasureError::RegisterOverflow) => 3,
+    });
+    w.put_f64(m.gflops);
+}
+
+fn get_measurement(r: &mut SnapReader) -> Result<Measurement, SnapshotError> {
+    let config = r.get_config()?;
+    let runtime_ms = if r.get_bool()? { Some(r.get_f64()?) } else { None };
+    let error = match r.get_u8()? {
+        0 => None,
+        1 => Some(MeasureError::TooManyThreads),
+        2 => Some(MeasureError::SharedMemOverflow),
+        3 => Some(MeasureError::RegisterOverflow),
+        _ => return Err(SnapshotError::Corrupt("measure error tag")),
+    };
+    let gflops = r.get_f64()?;
+    Ok(Measurement { config, runtime_ms, error, gflops })
+}
+
+/// Serialize the in-flight pipeline queue (planned-but-unabsorbed batches
+/// and their already-obtained measurements) alongside the tuner state, so a
+/// resume continues *mid-pipeline* instead of replanning.
+pub(crate) fn snap_save_queue(w: &mut SnapWriter, queue: &VecDeque<QueuedBatch>) {
+    w.put_usize(queue.len());
+    for (batch, results, secs) in queue {
+        w.put_usize(batch.iter);
+        w.put_configs(&batch.configs);
+        w.put_usize(batch.sampler_k);
+        w.put_f64(batch.search_s);
+        w.put_f64(batch.model_query_s);
+        w.put_usize(batch.steps);
+        w.put_usize(batch.steps_to_converge);
+        w.put_f64(batch.top_predicted);
+        w.put_usize(results.len());
+        for m in results {
+            put_measurement(w, m);
+        }
+        w.put_f64(*secs);
+    }
+}
+
+pub(crate) fn snap_restore_queue(
+    r: &mut SnapReader,
+) -> Result<VecDeque<QueuedBatch>, SnapshotError> {
+    let n = r.get_usize()?;
+    let mut queue = VecDeque::new();
+    for _ in 0..n {
+        let iter = r.get_usize()?;
+        let configs = r.get_configs()?;
+        let sampler_k = r.get_usize()?;
+        let search_s = r.get_f64()?;
+        let model_query_s = r.get_f64()?;
+        let steps = r.get_usize()?;
+        let steps_to_converge = r.get_usize()?;
+        let top_predicted = r.get_f64()?;
+        let n_results = r.get_usize()?;
+        let mut results = Vec::new();
+        for _ in 0..n_results {
+            results.push(get_measurement(r)?);
+        }
+        let secs = r.get_f64()?;
+        queue.push_back((
+            PlannedBatch {
+                iter,
+                configs,
+                sampler_k,
+                search_s,
+                model_query_s,
+                steps,
+                steps_to_converge,
+                top_predicted,
+            },
+            results,
+            secs,
+        ));
+    }
+    Ok(queue)
 }
 
 /// Drive one task's plan → measure → absorb loop over `coordinator`,
@@ -748,20 +1109,58 @@ pub fn tune_with_coordinator_transfer(
     pipeline_depth: usize,
     transfer: Option<(&TransferRegistry, &TransferConfig)>,
 ) -> TuneResult {
+    tune_with_coordinator_resumable(
+        task,
+        coordinator,
+        method,
+        cfg,
+        backend,
+        pipeline_depth,
+        transfer,
+        None,
+        None,
+    )
+}
+
+/// [`tune_with_coordinator_transfer`] with checkpoint hooks: `resume` skips
+/// construction + transfer consult and continues a restored tuner exactly
+/// where its snapshot left off (mid-pipeline included), and `on_round` is
+/// invoked after every absorbed batch with the tuner and the in-flight
+/// queue — the session engine serializes both there at its checkpoint
+/// cadence. With both `None` this is byte-for-byte the plain loop.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn tune_with_coordinator_resumable(
+    task: &ConvTask,
+    coordinator: &MeasureCoordinator<'_>,
+    method: MethodSpec,
+    cfg: &TunerConfig,
+    backend: Option<Arc<dyn Backend>>,
+    pipeline_depth: usize,
+    transfer: Option<(&TransferRegistry, &TransferConfig)>,
+    resume: Option<(TaskTuner, VecDeque<QueuedBatch>)>,
+    mut on_round: Option<&mut dyn FnMut(&TaskTuner, &VecDeque<QueuedBatch>)>,
+) -> TuneResult {
     let depth = pipeline_depth.max(1);
-    let mut tuner = TaskTuner::new(task, method, cfg, backend.clone());
-    if let Some((registry, tcfg)) = transfer {
-        tuner.enable_artifact_recording();
-        // consult/publish spans land on the task's lane, like every other
-        // stage of this loop
-        let prev = tuner.obs_enter();
-        let plan = transfer::build_plan(registry, task, &tuner.space, tcfg);
-        tuner.obs_exit(prev);
-        if let Some(plan) = plan {
-            tuner.apply_transfer(&plan, backend.as_ref());
+    let (mut tuner, mut queue) = match resume {
+        // the snapshot already contains the applied transfer plan, the
+        // recording flag, and the consult event (in the restored registry)
+        Some((tuner, queue)) => (tuner, queue),
+        None => {
+            let mut tuner = TaskTuner::new(task, method, cfg, backend.clone());
+            if let Some((registry, tcfg)) = transfer {
+                tuner.enable_artifact_recording();
+                // consult/publish spans land on the task's lane, like every
+                // other stage of this loop
+                let prev = tuner.obs_enter();
+                let plan = transfer::build_plan(registry, task, &tuner.space, tcfg);
+                tuner.obs_exit(prev);
+                if let Some(plan) = plan {
+                    tuner.apply_transfer(&plan, backend.as_ref());
+                }
+            }
+            (tuner, VecDeque::new())
         }
-    }
-    let mut queue: VecDeque<(PlannedBatch, Vec<Measurement>, f64)> = VecDeque::new();
+    };
     loop {
         while queue.len() < depth {
             match tuner.plan() {
@@ -776,7 +1175,12 @@ pub fn tune_with_coordinator_transfer(
             }
         }
         match queue.pop_front() {
-            Some((batch, results, secs)) => tuner.absorb(batch, results, secs),
+            Some((batch, results, secs)) => {
+                tuner.absorb(batch, results, secs);
+                if let Some(hook) = on_round.as_deref_mut() {
+                    hook(&tuner, &queue);
+                }
+            }
             None => break,
         }
     }
@@ -893,6 +1297,74 @@ mod tests {
         assert_eq!(r.n_measurements, n);
         assert!(r.best_runtime_ms.is_finite());
         assert_eq!(r.iterations.len(), 1);
+    }
+
+    #[test]
+    fn tuner_snapshot_roundtrip_resumes_bit_identically() {
+        let task = &zoo::alexnet()[2];
+        let meas = SimMeasurer::titan_xp(4);
+        let cfg = TunerConfig { max_trials: 96, seed: 11, ..Default::default() };
+        let coordinator = MeasureCoordinator::new(&meas, cfg.measure_workers);
+        let reference =
+            tune_with_coordinator(task, &coordinator, MethodSpec::sa_as(), &cfg, None, 1);
+
+        // interrupted run: two rounds, snapshot, restore into a *fresh*
+        // tuner, continue to completion — every result field must match
+        // the uninterrupted run bit-for-bit
+        let mut t = TaskTuner::new(task, MethodSpec::sa_as(), &cfg, None);
+        for _ in 0..2 {
+            let batch = t.plan().expect("early batch");
+            let (results, secs) = coordinator.measure_timed(&t.space, &batch.configs);
+            t.absorb(batch, results, secs);
+        }
+        let mut w = SnapWriter::new();
+        t.snap_save(&mut w);
+        let bytes = w.into_file_bytes(42);
+        drop(t);
+
+        let mut r = SnapReader::from_file_bytes(bytes, 42).expect("reader");
+        let mut t = TaskTuner::new(task, MethodSpec::sa_as(), &cfg, None);
+        t.snap_restore(&mut r).expect("restore");
+        loop {
+            let Some(batch) = t.plan() else { break };
+            let (results, secs) = coordinator.measure_timed(&t.space, &batch.configs);
+            t.absorb(batch, results, secs);
+        }
+        let resumed = t.finish();
+
+        assert_eq!(reference.n_measurements, resumed.n_measurements);
+        assert_eq!(
+            reference.best_runtime_ms.to_bits(),
+            resumed.best_runtime_ms.to_bits()
+        );
+        assert_eq!(reference.best_gflops.to_bits(), resumed.best_gflops.to_bits());
+        assert_eq!(reference.best_config, resumed.best_config);
+        assert_eq!(reference.iterations.len(), resumed.iterations.len());
+        for (x, y) in reference.iterations.iter().zip(&resumed.iterations) {
+            assert_eq!(x.cum_measured, y.cum_measured);
+            assert_eq!(x.best_gflops.to_bits(), y.best_gflops.to_bits());
+            assert_eq!(x.clock.total_s().to_bits(), y.clock.total_s().to_bits());
+        }
+        assert_eq!(
+            reference.clock.total_s().to_bits(),
+            resumed.clock.total_s().to_bits()
+        );
+    }
+
+    #[test]
+    fn restore_rejects_a_different_tasks_checkpoint() {
+        let tasks = zoo::alexnet();
+        let cfg = TunerConfig { max_trials: 32, ..Default::default() };
+        let t = TaskTuner::new(&tasks[0], MethodSpec::autotvm(), &cfg, None);
+        let mut w = SnapWriter::new();
+        t.snap_save(&mut w);
+        let bytes = w.into_file_bytes(1);
+        let mut r = SnapReader::from_file_bytes(bytes, 1).expect("reader");
+        let mut other = TaskTuner::new(&tasks[1], MethodSpec::autotvm(), &cfg, None);
+        assert_eq!(
+            other.snap_restore(&mut r),
+            Err(crate::snapshot::SnapshotError::Corrupt("checkpoint task id mismatch"))
+        );
     }
 
     #[test]

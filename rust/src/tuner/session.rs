@@ -39,14 +39,21 @@
 //! bit-identical to the serial path — the determinism tests pin that.
 
 use super::e2e::{self, ModelTuneResult};
-use super::{tune_with_coordinator_transfer, MethodSpec, TuneResult, TunerConfig};
+use super::{
+    snap_restore_queue, snap_restore_result, snap_save_queue, snap_save_result,
+    transfer_mode_tag, tune_with_coordinator_resumable, tune_with_coordinator_transfer,
+    MethodSpec, QueuedBatch, TaskTuner, TuneResult, TunerConfig,
+};
 use crate::coordinator::MeasureCoordinator;
 use crate::runtime::Backend;
 use crate::sim::Measurer;
+use crate::snapshot::{self, SnapshotError};
 use crate::transfer::{curriculum_order, TransferConfig, TransferRegistry};
+use crate::util::rng::hash64;
 use crate::util::stats::argmin;
 use crate::workload::{zoo, ConvTask};
 use std::collections::VecDeque;
+use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
 
 /// How a tuning session schedules a network's tasks.
@@ -154,6 +161,8 @@ fn task_budgets(scfg: &SessionConfig, n: usize) -> Vec<usize> {
     if pool >= n {
         for i in 0..n {
             if budgets[i] == 0 {
+                // PANIC: n >= 1 here (the loop is running), so max_by_key
+                // over a non-empty range always yields a donor
                 let donor = (0..n).max_by_key(|&j| budgets[j]).unwrap();
                 if budgets[donor] <= 1 {
                     break;
@@ -166,17 +175,236 @@ fn task_budgets(scfg: &SessionConfig, n: usize) -> Vec<usize> {
     budgets
 }
 
-/// Tune every task of `model_name` under the session schedule.
+/// Errors a checkpointable tuning session can surface instead of
+/// panicking: an unknown zoo model, or a checkpoint save/load failure
+/// (I/O, format version, fingerprint mismatch, corruption).
+#[derive(Debug)]
+pub enum SessionError {
+    /// The requested model is not in the workload zoo.
+    UnknownModel { model: String },
+    /// Checkpoint save or resume failed.
+    Snapshot(SnapshotError),
+}
+
+impl std::fmt::Display for SessionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SessionError::UnknownModel { model } => write!(
+                f,
+                "unknown model {model} (available: {})",
+                zoo::MODELS.join(", ")
+            ),
+            SessionError::Snapshot(e) => write!(f, "checkpoint error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for SessionError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            SessionError::UnknownModel { .. } => None,
+            SessionError::Snapshot(e) => Some(e),
+        }
+    }
+}
+
+impl From<SnapshotError> for SessionError {
+    fn from(e: SnapshotError) -> Self {
+        SessionError::Snapshot(e)
+    }
+}
+
+/// Where and how often a session writes its resume checkpoint.
+#[derive(Debug, Clone)]
+pub struct CheckpointSpec {
+    /// Snapshot file path. Writes are atomic: the bytes land in
+    /// `<path>.tmp`, are fsynced, then renamed over `path`, so a crash
+    /// mid-write can never leave a torn checkpoint behind.
+    pub path: PathBuf,
+    /// Write a checkpoint every `every` absorbed tuner rounds, counted
+    /// across the whole session (clamped to at least 1).
+    pub every: usize,
+    /// Exit the process (status 0) right after the Nth successful
+    /// checkpoint write — the CI kill-mid-run smoke hook.
+    pub kill_after: Option<usize>,
+}
+
+impl CheckpointSpec {
+    pub fn new(path: impl Into<PathBuf>, every: usize) -> Self {
+        CheckpointSpec { path: path.into(), every, kill_after: None }
+    }
+}
+
+/// Mixing step of the session fingerprint (SplitMix64 over an xor chain).
+fn mix(h: u64, v: u64) -> u64 {
+    hash64(h ^ v)
+}
+
+fn mix_str(h: u64, s: &str) -> u64 {
+    let mut h = mix(h, s.len() as u64);
+    for &b in s.as_bytes() {
+        h = mix(h, b as u64);
+    }
+    h
+}
+
+fn mix_f64(h: u64, v: f64) -> u64 {
+    mix(h, v.to_bits())
+}
+
+/// Fingerprint of everything that determines a session's result stream:
+/// model, method, task list (shapes + occurrences), tuner policy, and the
+/// session schedule/transfer knobs. A resume is only accepted when the
+/// fingerprints match, so a checkpoint can never silently continue under a
+/// different configuration. `threads` and trace lanes are deliberately
+/// excluded — results are bit-identical at any `--threads`, so resuming on
+/// a different thread count is legal.
+pub(crate) fn session_fingerprint(
+    model_name: &str,
+    tasks: &[ConvTask],
+    method: MethodSpec,
+    scfg: &SessionConfig,
+) -> u64 {
+    let mut h = 0x52454c5f534e4150; // b"REL_SNAP" as the chain seed
+    h = mix_str(h, model_name);
+    h = mix_str(h, &method.name());
+    h = mix(h, tasks.len() as u64);
+    for t in tasks {
+        h = mix_str(h, &t.id);
+        h = mix(h, t.occurrences as u64);
+        let l = &t.layer;
+        for v in [l.n, l.c, l.h, l.w, l.k, l.kh, l.kw, l.stride, l.pad] {
+            h = mix(h, v as u64);
+        }
+    }
+    let t = &scfg.tuner;
+    h = mix(h, t.max_trials as u64);
+    h = mix(h, t.plan_size as u64);
+    match t.early_stop {
+        Some(es) => {
+            h = mix(h, 1);
+            h = mix(h, es.patience_meas as u64);
+            h = mix_f64(h, es.min_improve);
+        }
+        None => h = mix(h, 0),
+    }
+    h = mix(h, t.min_iters as u64);
+    h = mix(h, t.seed);
+    h = mix(h, t.measure_workers as u64);
+    h = mix(h, t.exploit_top as u64);
+    h = mix(h, scfg.task_parallelism as u64);
+    h = mix(h, scfg.device_slots as u64);
+    h = mix(h, scfg.pipeline_depth as u64);
+    match scfg.budget_shares.as_ref() {
+        Some(shares) => {
+            h = mix(h, 1 + shares.len() as u64);
+            for &s in shares {
+                h = mix_f64(h, s);
+            }
+        }
+        None => h = mix(h, 0),
+    }
+    h = mix(h, transfer_mode_tag(scfg.transfer.mode) as u64);
+    h = mix(h, scfg.transfer.topk as u64);
+    h = mix(h, scfg.transfer.max_pairs as u64);
+    h = mix_f64(h, scfg.transfer.min_similarity);
+    h
+}
+
+// Session snapshot sections, in file order. OBS is deliberately last:
+// restoring a mid-flight task refits its cost model (bumping counters), and
+// the sequential reader lets the obs section overwrite those spurious bumps
+// only if it comes after the task state.
+const SEC_SESSION: u32 = 1;
+const SEC_REGISTRY: u32 = 2;
+const SEC_RESULTS: u32 = 3;
+const SEC_TASK: u32 = 4;
+const SEC_OBS: u32 = 5;
+
+/// Serialize the whole session — identity, execution order, completed-task
+/// results, transfer registry, the mid-flight task (tuner + pipeline
+/// queue), and the observability state — and write it atomically.
+#[allow(clippy::too_many_arguments)]
+fn write_checkpoint(
+    path: &Path,
+    fingerprint: u64,
+    model_name: &str,
+    method_name: &str,
+    order: &[usize],
+    done: usize,
+    results: &[Option<TuneResult>],
+    reg: Option<&TransferRegistry>,
+    mid: Option<(&TaskTuner, &VecDeque<QueuedBatch>, usize)>,
+) -> Result<(), SnapshotError> {
+    let mut w = snapshot::SnapWriter::new();
+    w.section(SEC_SESSION);
+    w.put_str(model_name);
+    w.put_str(method_name);
+    let order_u64: Vec<u64> = order.iter().map(|&i| i as u64).collect();
+    w.put_u64_slice(&order_u64);
+    w.put_usize(done);
+    w.put_bool(mid.is_some());
+    w.section(SEC_REGISTRY);
+    match reg {
+        Some(r) => {
+            w.put_bool(true);
+            r.snap_save(&mut w);
+        }
+        None => w.put_bool(false),
+    }
+    w.section(SEC_RESULTS);
+    w.put_usize(done);
+    for &i in order.iter().take(done) {
+        w.put_u64(i as u64);
+        match results[i].as_ref() {
+            Some(r) => snap_save_result(&mut w, r),
+            None => {
+                return Err(SnapshotError::Corrupt("completed task missing its result"))
+            }
+        }
+    }
+    if let Some((tuner, queue, pos)) = mid {
+        w.section(SEC_TASK);
+        w.put_usize(pos);
+        tuner.snap_save(&mut w);
+        snap_save_queue(&mut w, queue);
+    }
+    w.section(SEC_OBS);
+    crate::obs::snap_save(&mut w);
+    snapshot::save(path, fingerprint, w)
+}
+
+/// Tune every task of `model_name` under the session schedule. Unknown
+/// models get a typed [`SessionError::UnknownModel`] listing the zoo.
 pub fn tune_model_session(
     model_name: &str,
     measurer: &dyn Measurer,
     method: MethodSpec,
     scfg: &SessionConfig,
     backend: Option<Arc<dyn Backend>>,
-) -> ModelTuneResult {
+) -> Result<ModelTuneResult, SessionError> {
+    tune_model_session_checkpointed(model_name, measurer, method, scfg, backend, None, None)
+}
+
+/// [`tune_model_session`] with optional mid-flight checkpointing (`ckpt`)
+/// and/or a resume point (`resume`). Resuming replays nothing: the
+/// snapshot carries every RNG stream, model buffer, searcher internal,
+/// pipeline queue and clock at its exact cursor, so a resumed session's
+/// results — and its trace — are bit-identical to an uninterrupted run.
+/// Checkpointing requires the serial task schedule
+/// (`task_parallelism <= 1`); `--threads` model-side parallelism is fine.
+pub fn tune_model_session_checkpointed(
+    model_name: &str,
+    measurer: &dyn Measurer,
+    method: MethodSpec,
+    scfg: &SessionConfig,
+    backend: Option<Arc<dyn Backend>>,
+    ckpt: Option<&CheckpointSpec>,
+    resume: Option<&Path>,
+) -> Result<ModelTuneResult, SessionError> {
     let tasks = zoo::model_tasks(model_name)
-        .unwrap_or_else(|| panic!("unknown model {model_name}"));
-    tune_tasks_session(model_name, &tasks, measurer, method, scfg, backend)
+        .ok_or_else(|| SessionError::UnknownModel { model: model_name.to_string() })?;
+    run_session(model_name, &tasks, measurer, method, scfg, backend, None, ckpt, resume)
 }
 
 /// Tune an explicit task list under the session schedule.
@@ -204,6 +432,30 @@ pub fn tune_tasks_session_observed(
     backend: Option<Arc<dyn Backend>>,
     registry: Option<&TransferRegistry>,
 ) -> ModelTuneResult {
+    match run_session(model_name, tasks, measurer, method, scfg, backend, registry, None, None)
+    {
+        Ok(r) => r,
+        // without checkpoint/resume the session has no fallible path left —
+        // every remaining failure mode is a panic, not an Err
+        Err(e) => unreachable!("checkpoint-free session failed: {e}"),
+    }
+}
+
+/// The session engine. Runs the (optionally resumed) task schedule,
+/// writing checkpoints at the configured cadence, and replays the executed
+/// schedule through the wall model.
+#[allow(clippy::too_many_arguments)]
+fn run_session(
+    model_name: &str,
+    tasks: &[ConvTask],
+    measurer: &dyn Measurer,
+    method: MethodSpec,
+    scfg: &SessionConfig,
+    backend: Option<Arc<dyn Backend>>,
+    registry: Option<&TransferRegistry>,
+    ckpt: Option<&CheckpointSpec>,
+    resume: Option<&Path>,
+) -> Result<ModelTuneResult, SessionError> {
     crate::util::parallel::set_threads(scfg.threads.max(1));
     let n = tasks.len();
     let budgets = task_budgets(scfg, n);
@@ -241,18 +493,161 @@ pub fn tune_tasks_session_observed(
     let coordinator = MeasureCoordinator::new(measurer, workers);
     let tp = scfg.task_parallelism.max(1).min(n.max(1));
 
+    if (ckpt.is_some() || resume.is_some()) && tp > 1 {
+        return Err(SnapshotError::Unsupported(
+            "checkpoint/resume requires task_parallelism <= 1 (serial task schedule)",
+        )
+        .into());
+    }
+
+    let fingerprint = session_fingerprint(model_name, tasks, method, scfg);
     let mut results: Vec<Option<TuneResult>> = (0..n).map(|_| None).collect();
+    let mut start_pos = 0usize;
+    let mut mid_state: Option<(TaskTuner, VecDeque<QueuedBatch>)> = None;
+    if let Some(path) = resume {
+        let mut r = snapshot::load(path, fingerprint)?;
+        r.expect_section(SEC_SESSION)?;
+        let saved_model = r.get_string()?;
+        let saved_method = r.get_string()?;
+        if saved_model != model_name || saved_method != method.name() {
+            return Err(SnapshotError::Corrupt("snapshot session identity mismatch").into());
+        }
+        let saved_order = r.get_u64_vec()?;
+        if saved_order.len() != order.len()
+            || saved_order.iter().zip(&order).any(|(&a, &b)| a != b as u64)
+        {
+            return Err(SnapshotError::Corrupt("snapshot task order mismatch").into());
+        }
+        let done = r.get_usize()?;
+        if done > order.len() {
+            return Err(SnapshotError::Corrupt("snapshot completed-task count").into());
+        }
+        let has_mid = r.get_bool()?;
+        r.expect_section(SEC_REGISTRY)?;
+        if r.get_bool()? {
+            match reg {
+                Some(reg) => reg.snap_restore(&mut r)?,
+                None => {
+                    return Err(
+                        SnapshotError::Corrupt("snapshot transfer mode mismatch").into()
+                    )
+                }
+            }
+        }
+        r.expect_section(SEC_RESULTS)?;
+        if r.get_usize()? != done {
+            return Err(SnapshotError::Corrupt("snapshot completed-task count").into());
+        }
+        for _ in 0..done {
+            let i = r.get_u64()? as usize;
+            if i >= n {
+                return Err(SnapshotError::Corrupt("snapshot result task index").into());
+            }
+            results[i] = Some(snap_restore_result(&mut r)?);
+        }
+        start_pos = done;
+        if has_mid {
+            r.expect_section(SEC_TASK)?;
+            let pos = r.get_usize()?;
+            if pos != done || pos >= order.len() {
+                return Err(SnapshotError::Corrupt("snapshot mid-task position").into());
+            }
+            let i = order[pos];
+            let mut tuner = TaskTuner::new(&tasks[i], method, &cfgs[i], backend.clone());
+            tuner.snap_restore(&mut r)?;
+            let queue = snap_restore_queue(&mut r)?;
+            mid_state = Some((tuner, queue));
+        }
+        // obs last, after the mid-task restore: the task restore refits its
+        // cost model (bumping fit counters) and this overwrite undoes that
+        r.expect_section(SEC_OBS)?;
+        crate::obs::snap_restore(&mut r)?;
+        crate::obs::metrics::inc(crate::obs::metrics::Counter::CheckpointLoads);
+    }
+
     if tp <= 1 {
-        for &i in &order {
-            results[i] = Some(tune_with_coordinator_transfer(
-                &tasks[i],
-                &coordinator,
-                method,
-                &cfgs[i],
-                backend.clone(),
-                depth,
-                reg.map(|r| (r, &scfg.transfer)),
-            ));
+        // Checkpoint-cadence state shared across tasks: the cadence counts
+        // absorbed rounds session-wide and resets on every save, so a
+        // resumed run's later checkpoints land on exactly the same rounds
+        // an uninterrupted run's would (trace equivalence depends on this).
+        let mut rounds_since = 0usize;
+        let mut saves = 0usize;
+        let mut save_err: Option<SnapshotError> = None;
+        for pos in start_pos..order.len() {
+            let i = order[pos];
+            let resume_state = if pos == start_pos { mid_state.take() } else { None };
+            let transfer = reg.map(|r| (r, &scfg.transfer));
+            let r = if let Some(spec) = ckpt {
+                let every = spec.every.max(1);
+                let mut hook = |tuner: &TaskTuner, queue: &VecDeque<QueuedBatch>| {
+                    if save_err.is_some() {
+                        return;
+                    }
+                    rounds_since += 1;
+                    if rounds_since < every {
+                        return;
+                    }
+                    rounds_since = 0;
+                    // record the save's own span + counter *before*
+                    // serializing obs so the checkpoint carries its own
+                    // save event — resumed traces stay byte-identical
+                    crate::obs::metrics::inc(crate::obs::metrics::Counter::CheckpointSaves);
+                    crate::obs::emit_serial(
+                        crate::obs::LANE_CKPT,
+                        "ckpt",
+                        "save",
+                        crate::obs::us(tuner.clock_total_s()),
+                        0,
+                        &[("task", i as f64), ("iter", tuner.rounds() as f64)],
+                    );
+                    match write_checkpoint(
+                        &spec.path,
+                        fingerprint,
+                        model_name,
+                        &method.name(),
+                        &order,
+                        pos,
+                        &results,
+                        reg,
+                        Some((tuner, queue, pos)),
+                    ) {
+                        Ok(()) => {
+                            saves += 1;
+                            if spec.kill_after.is_some_and(|k| saves >= k) {
+                                std::process::exit(0);
+                            }
+                        }
+                        Err(e) => save_err = Some(e),
+                    }
+                };
+                tune_with_coordinator_resumable(
+                    &tasks[i],
+                    &coordinator,
+                    method,
+                    &cfgs[i],
+                    backend.clone(),
+                    depth,
+                    transfer,
+                    resume_state,
+                    Some(&mut hook),
+                )
+            } else {
+                tune_with_coordinator_resumable(
+                    &tasks[i],
+                    &coordinator,
+                    method,
+                    &cfgs[i],
+                    backend.clone(),
+                    depth,
+                    transfer,
+                    resume_state,
+                    None,
+                )
+            };
+            results[i] = Some(r);
+            if let Some(e) = save_err.take() {
+                return Err(e.into());
+            }
         }
     } else {
         // Each worker thread owns whole tasks (a task's tuner state is
@@ -264,20 +659,28 @@ pub fn tune_tasks_session_observed(
         // they compute. With transfer enabled, the donor set a task sees
         // depends on which siblings completed first — the budget and
         // registry disciplines are pinned by property tests instead.
+        //
+        // A panicking measurer must not cascade into poisoned-mutex panics
+        // on its siblings: every shared lock recovers the guard on poison,
+        // each tune call runs under catch_unwind, and the first panic
+        // payload is re-raised afterwards with the task attached.
         let slots = Mutex::new(&mut results);
         let next = Mutex::new(0usize);
+        let panicked: Mutex<Option<(usize, Box<dyn std::any::Any + Send>)>> =
+            Mutex::new(None);
         let order = &order;
         std::thread::scope(|scope| {
             for _ in 0..tp {
                 let be = backend.clone();
                 let slots = &slots;
                 let next = &next;
+                let panicked = &panicked;
                 let coordinator = &coordinator;
                 let cfgs = &cfgs;
                 let transfer = &scfg.transfer;
                 scope.spawn(move || loop {
                     let pos = {
-                        let mut g = next.lock().unwrap();
+                        let mut g = next.lock().unwrap_or_else(|e| e.into_inner());
                         let pos = *g;
                         *g += 1;
                         pos
@@ -285,23 +688,56 @@ pub fn tune_tasks_session_observed(
                     if pos >= order.len() {
                         break;
                     }
+                    if panicked.lock().unwrap_or_else(|e| e.into_inner()).is_some() {
+                        break; // a sibling failed — stop taking new work
+                    }
                     let i = order[pos];
-                    let r = tune_with_coordinator_transfer(
-                        &tasks[i],
-                        coordinator,
-                        method,
-                        &cfgs[i],
-                        be.clone(),
-                        depth,
-                        reg.map(|r| (r, transfer)),
-                    );
-                    slots.lock().unwrap()[i] = Some(r);
+                    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        tune_with_coordinator_transfer(
+                            &tasks[i],
+                            coordinator,
+                            method,
+                            &cfgs[i],
+                            be.clone(),
+                            depth,
+                            reg.map(|r| (r, transfer)),
+                        )
+                    }));
+                    match r {
+                        Ok(res) => {
+                            slots.lock().unwrap_or_else(|e| e.into_inner())[i] = Some(res)
+                        }
+                        Err(payload) => {
+                            let mut g =
+                                panicked.lock().unwrap_or_else(|e| e.into_inner());
+                            if g.is_none() {
+                                *g = Some((i, payload));
+                            }
+                            break;
+                        }
+                    }
                 });
             }
         });
+        if let Some((i, payload)) =
+            panicked.into_inner().unwrap_or_else(|e| e.into_inner())
+        {
+            let msg = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "non-string panic payload".to_string());
+            panic!("task {i} ({}) panicked during tuning: {msg}", tasks[i].id);
+        }
     }
-    let mut results: Vec<TuneResult> =
-        results.into_iter().map(|r| r.expect("task left untuned")).collect();
+    let mut results: Vec<TuneResult> = results
+        .into_iter()
+        .enumerate()
+        .map(|(i, r)| match r {
+            Some(r) => r,
+            None => panic!("task {i} left untuned (worker exited early)"),
+        })
+        .collect();
 
     // Replay the recorded per-iteration costs through the session's lanes
     // and device slots to get the schedule's elapsed (wall) time — both the
@@ -321,7 +757,7 @@ pub fn tune_tasks_session_observed(
         }
     }
 
-    e2e::aggregate(model_name, method, tasks, results, Some(wall_s))
+    Ok(e2e::aggregate(model_name, method, tasks, results, Some(wall_s)))
 }
 
 /// (plan_host_s, measure_s, absorb_host_s) of one tuner iteration: the
@@ -477,11 +913,14 @@ fn schedule_wall(
         // serve the earliest booking request (ties broken by task order)
         let mut best = 0;
         for j in 1..active.len() {
+            // PANIC: the retire pass above removed every lane whose pending
+            // booking is None, so all remaining requests are Some
             let (ra, rb) = (active[best].0.unwrap(), active[j].0.unwrap());
             if rb < ra || (rb == ra && active[j].1.task < active[best].1.task) {
                 best = j;
             }
         }
+        // PANIC: same invariant — only lanes with a pending booking survive
         let req = active[best].0.unwrap();
         let si = argmin(&slots);
         let device_start = if slots[si] > req { slots[si] } else { req };
@@ -620,7 +1059,8 @@ mod tests {
             MethodSpec::sa_as(),
             &scfg,
             None,
-        );
+        )
+        .expect("resnet18 is in the zoo");
         assert!(
             pipe.wall_s * 1.5 <= serial.opt_time_s,
             "pipelined wall {} vs serial sum {} ({}x)",
@@ -639,6 +1079,78 @@ mod tests {
         }
         let gm = geomean(&ratios);
         assert!(gm > 0.6 && gm < 1.67, "quality geomean ratio {gm}");
+    }
+
+    #[test]
+    fn unknown_model_session_lists_available_models() {
+        // regression: the session engine used to panic!("unknown model …");
+        // it must return the same typed, zoo-listing error the CLI shows
+        let err = tune_model_session(
+            "nope",
+            &SimMeasurer::titan_xp(1),
+            MethodSpec::autotvm(),
+            &SessionConfig::default(),
+            None,
+        )
+        .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("unknown model nope"), "{msg}");
+        for m in zoo::MODELS {
+            assert!(msg.contains(m), "error must list {m}: {msg}");
+        }
+        assert!(matches!(err, SessionError::UnknownModel { .. }));
+    }
+
+    /// A measurer that blows up on first contact — stands in for a device
+    /// worker dying mid-session.
+    struct PanickingMeasurer;
+
+    impl crate::sim::Measurer for PanickingMeasurer {
+        fn measure_batch_timed(
+            &self,
+            _space: &crate::space::DesignSpace,
+            _configs: &[crate::space::Config],
+        ) -> (Vec<crate::sim::Measurement>, f64) {
+            panic!("device exploded");
+        }
+
+        fn elapsed_s(&self) -> f64 {
+            0.0
+        }
+
+        fn count(&self) -> usize {
+            0
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "panicked during tuning: device exploded")]
+    fn worker_panic_surfaces_with_task_index() {
+        // regression: a panic inside a parallel task worker used to surface
+        // as a poisoned-mutex unwrap or the opaque "task left untuned"
+        // expect; now the original payload is re-raised with the task
+        // attached. measure_workers = 1 keeps the coordinator on its
+        // single-dispatch path so the payload reaches the session worker
+        // intact (the pool's scope would genericize it).
+        let tasks = zoo::alexnet();
+        let scfg = SessionConfig {
+            tuner: TunerConfig {
+                max_trials: 16,
+                measure_workers: 1,
+                ..Default::default()
+            },
+            task_parallelism: 2,
+            device_slots: 1,
+            ..Default::default()
+        };
+        let _ = tune_tasks_session(
+            "alexnet",
+            &tasks,
+            &PanickingMeasurer,
+            MethodSpec::autotvm(),
+            &scfg,
+            None,
+        );
     }
 
     #[test]

@@ -1,0 +1,308 @@
+//! Checkpoint/resume equivalence: a session snapshotted at any round and
+//! resumed must produce bit-identical results to an uninterrupted run —
+//! across every method arm, thread count, and checkpoint cadence — and
+//! damaged or mismatched snapshots must be rejected with typed errors,
+//! never a panic or a silently-wrong resume.
+//!
+//! (The companion trace test in `rust/tests/trace.rs` pins that the
+//! chrome-trace export of a resumed run is byte-identical too.)
+
+mod common;
+
+use common::{assert_tasks_bitwise_equal, measurer, native_backend, quick_cfg_trials};
+use release::runtime::Backend;
+use release::snapshot::SnapshotError;
+use release::transfer::{TransferConfig, TransferMode};
+use release::tuner::e2e::ModelTuneResult;
+use release::tuner::session::{
+    tune_model_session, tune_model_session_checkpointed, CheckpointSpec, SessionConfig,
+    SessionError,
+};
+use release::tuner::MethodSpec;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+const MODEL: &str = "alexnet";
+const MEAS_SEED: u64 = 7;
+
+fn snap_path(tag: &str) -> PathBuf {
+    std::env::temp_dir()
+        .join(format!("release-snap-{}-{tag}.snap", std::process::id()))
+}
+
+fn serial_scfg(trials: usize, threads: usize) -> SessionConfig {
+    SessionConfig {
+        tuner: quick_cfg_trials(13, trials),
+        threads,
+        ..Default::default()
+    }
+}
+
+fn run_plain(
+    method: MethodSpec,
+    scfg: &SessionConfig,
+    backend: Option<Arc<dyn Backend>>,
+) -> ModelTuneResult {
+    tune_model_session(MODEL, &measurer(MEAS_SEED), method, scfg, backend)
+        .expect("uninterrupted session")
+}
+
+/// The core property: (1) running with checkpointing on does not perturb
+/// results, and (2) resuming from the run's last mid-flight snapshot
+/// reproduces the reference bit-for-bit.
+fn assert_checkpoint_resume_equivalent(
+    tag: &str,
+    method: MethodSpec,
+    scfg: &SessionConfig,
+    backend: Option<Arc<dyn Backend>>,
+    every: usize,
+    reference: &ModelTuneResult,
+) {
+    let path = snap_path(tag);
+    let _ = std::fs::remove_file(&path);
+    let spec = CheckpointSpec::new(path.clone(), every);
+    let with_ckpt = tune_model_session_checkpointed(
+        MODEL,
+        &measurer(MEAS_SEED),
+        method,
+        scfg,
+        backend.clone(),
+        Some(&spec),
+        None,
+    )
+    .expect("checkpointed session");
+    assert_tasks_bitwise_equal(reference, &with_ckpt);
+    assert!(path.exists(), "{tag}: cadence {every} wrote no checkpoint");
+    let resumed = tune_model_session_checkpointed(
+        MODEL,
+        &measurer(MEAS_SEED),
+        method,
+        scfg,
+        backend,
+        Some(&spec),
+        Some(&path),
+    )
+    .expect("resumed session");
+    assert_tasks_bitwise_equal(reference, &resumed);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn all_six_arms_resume_bit_identically() {
+    let arms: [(&str, bool); 6] = [
+        ("autotvm", false),
+        ("rl", true),
+        ("sa+as", false),
+        ("release", true),
+        ("ga", false),
+        ("random", false),
+    ];
+    for (k, (name, needs_backend)) in arms.iter().enumerate() {
+        let method = MethodSpec::parse(name).expect(name);
+        let backend = needs_backend.then(native_backend);
+        let scfg = serial_scfg(48, 2);
+        let reference = run_plain(method, &scfg, backend.clone());
+        // vary the cadence per arm so the resume point lands on different
+        // rounds (including mid-task ones)
+        let every = k % 3 + 1;
+        assert_checkpoint_resume_equivalent(
+            &format!("arm-{name}").replace('+', "_"),
+            method,
+            &scfg,
+            backend,
+            every,
+            &reference,
+        );
+    }
+}
+
+#[test]
+fn every_cadence_resumes_bit_identically() {
+    // 96 trials -> multiple rounds per task, so the cadences below place
+    // the snapshot at round 1, 2, 3, 5, 9... positions: task starts,
+    // mid-pipeline, and final-absorb boundaries are all hit
+    let method = MethodSpec::autotvm();
+    let scfg = serial_scfg(96, 1);
+    let reference = run_plain(method, &scfg, None);
+    for every in [1usize, 2, 3, 5, 9] {
+        assert_checkpoint_resume_equivalent(
+            &format!("cadence-{every}"),
+            method,
+            &scfg,
+            None,
+            every,
+            &reference,
+        );
+    }
+}
+
+#[test]
+fn resume_is_thread_count_invariant() {
+    // the fingerprint deliberately excludes --threads: a snapshot taken at
+    // --threads 1 must resume at 2 or 4 with bit-identical results
+    let method = MethodSpec::sa_as();
+    let reference = run_plain(method, &serial_scfg(96, 1), None);
+    let path = snap_path("threads");
+    let _ = std::fs::remove_file(&path);
+    let spec = CheckpointSpec::new(path.clone(), 3);
+    let ckpt_run = tune_model_session_checkpointed(
+        MODEL,
+        &measurer(MEAS_SEED),
+        method,
+        &serial_scfg(96, 1),
+        None,
+        Some(&spec),
+        None,
+    )
+    .expect("checkpointed at threads 1");
+    assert_tasks_bitwise_equal(&reference, &ckpt_run);
+    for threads in [1usize, 2, 4] {
+        let resumed = tune_model_session_checkpointed(
+            MODEL,
+            &measurer(MEAS_SEED),
+            method,
+            &serial_scfg(96, threads),
+            None,
+            None,
+            Some(&path),
+        )
+        .unwrap_or_else(|e| panic!("resume at --threads {threads}: {e}"));
+        assert_tasks_bitwise_equal(&reference, &resumed);
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn transfer_both_sessions_resume_bit_identically() {
+    // --transfer both exercises the registry section of the snapshot (the
+    // artifact store + audit log) and the PPO policy warm-start path
+    let method = MethodSpec::release();
+    let mut scfg = serial_scfg(48, 2);
+    scfg.transfer = TransferConfig::with_mode(TransferMode::Both);
+    let reference = run_plain(method, &scfg, Some(native_backend()));
+    assert_checkpoint_resume_equivalent(
+        "transfer-both",
+        method,
+        &scfg,
+        Some(native_backend()),
+        2,
+        &reference,
+    );
+}
+
+#[test]
+fn damaged_and_mismatched_snapshots_are_rejected() {
+    // produce a real snapshot to tamper with
+    let method = MethodSpec::autotvm();
+    let scfg = serial_scfg(32, 1);
+    let path = snap_path("tamper");
+    let _ = std::fs::remove_file(&path);
+    let spec = CheckpointSpec::new(path.clone(), 1);
+    tune_model_session_checkpointed(
+        MODEL,
+        &measurer(MEAS_SEED),
+        method,
+        &scfg,
+        None,
+        Some(&spec),
+        None,
+    )
+    .expect("checkpointed session");
+    let good = std::fs::read(&path).expect("snapshot bytes");
+    assert!(good.len() > 28, "snapshot is just a header?");
+
+    let resume_with = |bytes: &[u8], scfg: &SessionConfig| {
+        std::fs::write(&path, bytes).expect("write tampered snapshot");
+        tune_model_session_checkpointed(
+            MODEL,
+            &measurer(MEAS_SEED),
+            method,
+            scfg,
+            None,
+            None,
+            Some(&path),
+        )
+        .map(|_| ())
+    };
+
+    // truncated payload: checksum can no longer match
+    let err = resume_with(&good[..good.len() / 2], &scfg).unwrap_err();
+    assert!(
+        matches!(err, SessionError::Snapshot(SnapshotError::ChecksumMismatch)),
+        "truncated: {err:?}"
+    );
+    // sub-header truncation
+    let err = resume_with(&good[..10], &scfg).unwrap_err();
+    assert!(
+        matches!(err, SessionError::Snapshot(SnapshotError::UnexpectedEof)),
+        "tiny: {err:?}"
+    );
+    // flipped payload byte
+    let mut flipped = good.clone();
+    let mid = flipped.len() / 2;
+    flipped[mid] ^= 0xff;
+    let err = resume_with(&flipped, &scfg).unwrap_err();
+    assert!(
+        matches!(err, SessionError::Snapshot(SnapshotError::ChecksumMismatch)),
+        "flipped: {err:?}"
+    );
+    // future format version (checked before the checksum, so a clear
+    // version error wins over a generic corruption one)
+    let mut vbump = good.clone();
+    vbump[8] = vbump[8].wrapping_add(1);
+    let err = resume_with(&vbump, &scfg).unwrap_err();
+    assert!(
+        matches!(
+            err,
+            SessionError::Snapshot(SnapshotError::VersionMismatch { .. })
+        ),
+        "version: {err:?}"
+    );
+    // wrong magic
+    let mut bad_magic = good.clone();
+    bad_magic[0] ^= 0xff;
+    let err = resume_with(&bad_magic, &scfg).unwrap_err();
+    assert!(
+        matches!(err, SessionError::Snapshot(SnapshotError::BadMagic)),
+        "magic: {err:?}"
+    );
+    // a different session configuration (seed changed) must be refused by
+    // the fingerprint, not resumed into silently-wrong results
+    let mut other = scfg.clone();
+    other.tuner.seed ^= 1;
+    let err = resume_with(&good, &other).unwrap_err();
+    assert!(
+        matches!(
+            err,
+            SessionError::Snapshot(SnapshotError::FingerprintMismatch { .. })
+        ),
+        "fingerprint: {err:?}"
+    );
+    // the pristine bytes still resume fine after all that
+    resume_with(&good, &scfg).expect("pristine snapshot resumes");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn checkpointing_requires_the_serial_task_schedule() {
+    let mut scfg = serial_scfg(32, 1);
+    scfg.task_parallelism = 2;
+    scfg.device_slots = 2;
+    let spec = CheckpointSpec::new(snap_path("tp2"), 1);
+    let err = tune_model_session_checkpointed(
+        MODEL,
+        &measurer(MEAS_SEED),
+        MethodSpec::autotvm(),
+        &scfg,
+        None,
+        Some(&spec),
+        None,
+    )
+    .unwrap_err();
+    assert!(
+        matches!(err, SessionError::Snapshot(SnapshotError::Unsupported(_))),
+        "{err:?}"
+    );
+    // message names the constraint
+    assert!(err.to_string().contains("task_parallelism"), "{err}");
+}

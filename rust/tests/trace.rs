@@ -13,7 +13,9 @@ mod common;
 use common::{measurer, native_backend, quick_cfg_trials, sibling_tasks};
 use release::obs;
 use release::transfer::{TransferConfig, TransferMode};
-use release::tuner::session::{tune_tasks_session, SessionConfig};
+use release::tuner::session::{
+    tune_model_session_checkpointed, tune_tasks_session, CheckpointSpec, SessionConfig,
+};
 use release::tuner::MethodSpec;
 use release::util::parallel::{set_threads, thread_knob_guard};
 
@@ -128,4 +130,62 @@ fn golden_trace_bit_identical_across_thread_counts() {
     let s = obs::summary::summarize(&events);
     assert_eq!(s.n_events, events.len());
     assert!(!s.per_stage.rows.is_empty() && !s.per_lane.rows.is_empty());
+
+    // checkpoint/resume leg (same binary: the obs sink is process-global):
+    // a resumed session's trace — restored spans plus the re-executed tail
+    // — must be byte-identical to the uninterrupted checkpointed run's
+    let (full_trace, resumed_trace) = traced_checkpoint_resume();
+    assert_same_trace("checkpointed vs resumed", &full_trace, &resumed_trace);
+    assert!(
+        full_trace.contains("\"cat\":\"ckpt\",\"name\":\"save\""),
+        "checkpoint saves must appear in the trace"
+    );
+}
+
+/// Run a serial alexnet session twice — once end-to-end with checkpointing
+/// at a 2-round cadence, once resumed from the snapshot the first run left
+/// behind — and return both chrome renderings.
+fn traced_checkpoint_resume() -> (String, String) {
+    let path = std::env::temp_dir()
+        .join(format!("release-trace-ckpt-{}.snap", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    let scfg = SessionConfig {
+        tuner: quick_cfg_trials(11, 96),
+        threads: 2,
+        ..Default::default()
+    };
+    let spec = CheckpointSpec::new(path.clone(), 2);
+    obs::enable();
+    let full = tune_model_session_checkpointed(
+        "alexnet",
+        &measurer(5),
+        MethodSpec::sa_as(),
+        &scfg,
+        None,
+        Some(&spec),
+        None,
+    )
+    .expect("checkpointed session");
+    obs::disable();
+    assert_eq!(obs::dropped(), 0);
+    let full_trace = obs::render_chrome_jsonl(&obs::drain());
+    assert!(path.exists(), "cadence 2 wrote no checkpoint");
+
+    obs::enable();
+    let resumed = tune_model_session_checkpointed(
+        "alexnet",
+        &measurer(5),
+        MethodSpec::sa_as(),
+        &scfg,
+        None,
+        Some(&spec),
+        Some(&path),
+    )
+    .expect("resumed session");
+    obs::disable();
+    assert_eq!(obs::dropped(), 0);
+    let resumed_trace = obs::render_chrome_jsonl(&obs::drain());
+    common::assert_tasks_bitwise_equal(&full, &resumed);
+    let _ = std::fs::remove_file(&path);
+    (full_trace, resumed_trace)
 }
