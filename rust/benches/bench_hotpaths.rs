@@ -18,7 +18,10 @@
 //!     ratchet; see `ALLOC_BASELINE.json`),
 //!   - tracing-disabled obs overhead bounded at <= 3% of the serial e2e
 //!     run (measured guard cost x traced call volume — the pallas-trace
-//!     "near-zero when off" contract).
+//!     "near-zero when off" contract),
+//!   - faults-disabled `FaultInjector` overhead bounded at <= 2% of the
+//!     serial e2e run, and exactly zero extra heap allocations on the
+//!     measurement path (the fault-layer "free when off" contract).
 //!
 //! `RELEASE_QUICK=1 cargo bench --bench bench_hotpaths` for the CI smoke;
 //! `RELEASE_ALLOC_ONLY=1` runs just the (deterministic) allocation audit +
@@ -30,7 +33,7 @@ use release::gbt::{Binner, BinnedMatrix, Gbt, GbtParams, Tree, TreeParams};
 use release::nn::NativeBackend;
 use release::runtime::Backend;
 use release::sampling::adaptive_sample;
-use release::sim::{Measurer, SimMeasurer};
+use release::sim::{FaultConfig, FaultInjector, Measurer, SimMeasurer};
 use release::space::features::{features, features_fill, NFEATURES};
 use release::space::{Config, DesignSpace};
 use release::tuner::{tune, MethodSpec, TunerConfig};
@@ -377,6 +380,33 @@ fn main() {
         std::hint::black_box(s.k);
         allocs() - before
     };
+
+    // fault layer off must add exactly zero allocations to the measurement
+    // path: wrapped-vs-bare counts on identical input are deterministic, so
+    // this is an equality, not a ratchet
+    let fault_off = FaultInjector::new(&meas, FaultConfig::default(), 2);
+    let bare_measure_allocs = {
+        let before = allocs();
+        let r = meas.measure_batch(&space, audit_cfgs);
+        std::hint::black_box(r.len());
+        allocs() - before
+    };
+    let wrapped_measure_allocs = {
+        let before = allocs();
+        let r = fault_off.measure_batch(&space, audit_cfgs);
+        std::hint::black_box(r.len());
+        allocs() - before
+    };
+    println!(
+        "faults-off measure allocs per {audit_n}-config batch: bare \
+         {bare_measure_allocs}, wrapped {wrapped_measure_allocs}"
+    );
+    assert_eq!(
+        wrapped_measure_allocs, bare_measure_allocs,
+        "faults-off FaultInjector must be allocation-free on the \
+         measurement path"
+    );
+
     set_threads(0);
     let alloc_ratio = naive_allocs as f64 / flat_allocs.max(1) as f64;
     println!(
@@ -426,9 +456,10 @@ fn main() {
     }
 
     // --- quick end-to-end session (sanity: the wiring pays off in situ) -----
-    let (e2e_serial_s, e2e_parallel_s, trace_overhead_frac) = if alloc_only {
-        (0.0, 0.0, 0.0)
-    } else {
+    let (e2e_serial_s, e2e_parallel_s, trace_overhead_frac, faults_overhead_frac) =
+        if alloc_only {
+            (0.0, 0.0, 0.0, 0.0)
+        } else {
         let e2e_task = &zoo::resnet18()[5];
         let e2e_cfg = TunerConfig { max_trials: 96, seed: 3, ..Default::default() };
         set_threads(1);
@@ -486,7 +517,31 @@ fn main() {
             per_call_s * 1e9,
             frac * 100.0
         );
-        (serial, parallel, frac)
+
+        // faults-disabled overhead bound (the fault-layer contract): the
+        // Off-profile wrapper is one branch per measure call. Time wrapped
+        // vs bare on a real batch (best-of-reps tames noise; the delta is
+        // clamped at zero) and scale the per-config cost by the e2e run's
+        // measure volume — conservative, since the branch is per batch,
+        // not per config.
+        let fbatch = &configs[..512.min(n_feat)];
+        set_threads(1);
+        let fbare_s = time_best(reps, || meas.measure_batch(&space, fbatch).len());
+        let fwrapped_s =
+            time_best(reps, || fault_off.measure_batch(&space, fbatch).len());
+        set_threads(0);
+        let per_cfg_s = (fwrapped_s - fbare_s).max(0.0) / fbatch.len() as f64;
+        let ffrac = per_cfg_s * e2e_cfg.max_trials as f64 / serial.max(1e-9);
+        println!(
+            "faults-disabled overhead: wrapped {:.3} ms vs bare {:.3} ms per \
+             {}-config batch = {:.4}% of the serial e2e run",
+            fwrapped_s * 1e3,
+            fbare_s * 1e3,
+            fbatch.len(),
+            ffrac * 100.0
+        );
+
+        (serial, parallel, frac, ffrac)
     };
 
     // --- combined bars + JSON ------------------------------------------------
@@ -563,6 +618,9 @@ fn main() {
         "  \"trace_overhead_frac\": {trace_overhead_frac:.6},\n"
     ));
     json.push_str(&format!(
+        "  \"faults_overhead_frac\": {faults_overhead_frac:.6},\n"
+    ));
+    json.push_str(&format!(
         "  \"allocs\": {{\"naive_round\": {naive_allocs}, \
          \"flat_round\": {flat_allocs}, \"ratio\": {alloc_ratio:.3}, \
          \"baseline\": {}}}\n",
@@ -578,6 +636,12 @@ fn main() {
         trace_overhead_frac <= 0.03,
         "tracing-disabled overhead bound {:.3}% exceeds the 3% obs contract",
         trace_overhead_frac * 100.0
+    );
+    assert!(
+        faults_overhead_frac <= 0.02,
+        "faults-disabled overhead bound {:.3}% exceeds the 2% fault-layer \
+         contract",
+        faults_overhead_frac * 100.0
     );
     assert!(
         alloc_ratio >= 2.0,

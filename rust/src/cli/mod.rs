@@ -8,14 +8,15 @@
 //! release report trace out.jsonl
 //! ```
 
+use crate::coordinator::{MeasureCoordinator, RetryPolicy};
 use crate::report::{self, ExperimentConfig};
 use crate::runtime::{select_backend, Backend, BackendKind};
-use crate::sim::SimMeasurer;
+use crate::sim::{FaultConfig, FaultInjector, FaultProfile, SimMeasurer};
 use crate::transfer::{TransferConfig, TransferMode};
 use crate::tuner::session::{
     tune_model_session_checkpointed, CheckpointSpec, SessionConfig, SessionError,
 };
-use crate::tuner::{tune, MethodSpec, TunerConfig};
+use crate::tuner::{tune, tune_with_coordinator, MethodSpec, TunerConfig};
 use crate::workload::zoo;
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -71,6 +72,21 @@ CHECKPOINT / RESUME (model tuning, requires --task-parallelism 1):
                             rejected with a clear error)
   --checkpoint-kill-after N exit(0) right after the Nth checkpoint write
                             (CI kill-mid-run smoke hook)
+
+FAULT INJECTION (tune commands; deterministic chaos testing):
+  --faults <off|standard>   inject operational measurement faults (transient
+                            errors, timeouts, corrupt readings, a flaky
+                            device slot); off (default) is bit-identical to
+                            the fault-free pipeline
+  --fault-seed N            fault-plan seed; a fixed seed replays the exact
+                            same fault schedule at any --threads (default: 0)
+  --retry-max N             retries per config after the first attempt, with
+                            exponential backoff; exhausted configs are
+                            quarantined (default: 2)
+  --retry-backoff-ms N      first retry backoff in simulated ms; doubles per
+                            attempt (default: 50)
+  --measure-timeout-ms N    simulated ms a timed-out measurement burns
+                            before giving up (default: 500)
 ";
 
 /// Parse `--key value` pairs and positional args.
@@ -258,6 +274,39 @@ fn parse_threads_flag(flags: &HashMap<String, String>) -> Option<usize> {
     })
 }
 
+/// Parse the fault-injection flags. The default (`--faults off`) keeps the
+/// measurement path bit-identical to the fault-free pipeline.
+fn fault_config(flags: &HashMap<String, String>) -> FaultConfig {
+    let mut fc = FaultConfig::default();
+    if let Some(v) = flags.get("faults") {
+        fc.profile = FaultProfile::parse(v)
+            .unwrap_or_else(|| panic!("--faults must be off|standard"));
+    }
+    if let Some(v) = flags.get("fault-seed") {
+        fc.fault_seed = v
+            .parse()
+            .unwrap_or_else(|_| panic!("--fault-seed must be an integer"));
+    }
+    if let Some(v) = flags.get("retry-max") {
+        fc.retry_max = v
+            .parse()
+            .unwrap_or_else(|_| panic!("--retry-max must be an integer"));
+    }
+    if let Some(v) = flags.get("retry-backoff-ms") {
+        let ms: f64 = v
+            .parse()
+            .unwrap_or_else(|_| panic!("--retry-backoff-ms must be a number"));
+        fc.backoff_base_s = ms / 1000.0;
+    }
+    if let Some(v) = flags.get("measure-timeout-ms") {
+        let ms: f64 = v
+            .parse()
+            .unwrap_or_else(|_| panic!("--measure-timeout-ms must be a number"));
+        fc.measure_timeout_s = ms / 1000.0;
+    }
+    fc
+}
+
 fn session_config(flags: &HashMap<String, String>, tuner: TunerConfig) -> SessionConfig {
     let parse = |key: &str| -> Option<usize> {
         flags.get(key).map(|v| {
@@ -296,6 +345,7 @@ fn session_config(flags: &HashMap<String, String>, tuner: TunerConfig) -> Sessio
         budget_shares,
         transfer,
         threads,
+        faults: fault_config(flags),
     }
 }
 
@@ -350,7 +400,20 @@ fn cmd_tune(flags: &HashMap<String, String>) -> i32 {
             return 2;
         };
         println!("tuning {} ({}) with {}", layer, task.id, method.name());
-        let r = tune(&task, &meas, method, &cfg, backend);
+        let faults = fault_config(flags);
+        let r = if faults.profile.is_off() {
+            tune(&task, &meas, method, &cfg, backend)
+        } else {
+            // single-task fault path: one device slot, retrying coordinator
+            let injector = FaultInjector::new(&meas, faults, 1);
+            let coordinator = MeasureCoordinator::new(&injector, cfg.measure_workers)
+                .with_retry(RetryPolicy {
+                    max_attempts: 1 + faults.retry_max,
+                    backoff_base_s: faults.backoff_base_s,
+                    ..Default::default()
+                });
+            tune_with_coordinator(&task, &coordinator, method, &cfg, backend, 1)
+        };
         println!(
             "best: {:.4} ms ({:.0} GFLOPS) after {} measurements, {:.1} simulated min",
             r.best_runtime_ms,
@@ -358,6 +421,14 @@ fn cmd_tune(flags: &HashMap<String, String>) -> i32 {
             r.n_measurements,
             r.clock.total_s() / 60.0
         );
+        if !faults.profile.is_off() {
+            let quarantined: u32 = r.iterations.iter().map(|it| it.quarantined).sum();
+            println!(
+                "faults: profile {}, seed {}: {quarantined} config(s) quarantined",
+                faults.profile.as_str(),
+                faults.fault_seed
+            );
+        }
         return 0;
     }
 
@@ -382,12 +453,13 @@ fn cmd_tune(flags: &HashMap<String, String>) -> i32 {
     }
     println!(
         "tuning {model} end-to-end with {} (task-parallelism {}, device slots {}, \
-         pipeline depth {}, transfer {})",
+         pipeline depth {}, transfer {}, faults {})",
         method.name(),
         scfg.task_parallelism,
         scfg.device_slots,
         scfg.pipeline_depth,
-        scfg.transfer.mode.name()
+        scfg.transfer.mode.name(),
+        scfg.faults.profile.as_str()
     );
     let ckpt = flags.get("checkpoint").filter(|p| !p.is_empty()).map(|p| {
         let every = flags
@@ -454,6 +526,20 @@ fn cmd_tune(flags: &HashMap<String, String>) -> i32 {
         r.wall_speedup(),
         r.inference_ms
     );
+    if !scfg.faults.profile.is_off() {
+        println!(
+            "faults: profile {}, seed {}: {} config(s) quarantined, {} slot(s) ejected{}",
+            scfg.faults.profile.as_str(),
+            scfg.faults.fault_seed,
+            r.n_quarantined,
+            r.ejected_slots.len(),
+            if r.ejected_slots.is_empty() {
+                String::new()
+            } else {
+                format!(" {:?}", r.ejected_slots)
+            }
+        );
+    }
     0
 }
 
@@ -696,6 +782,34 @@ mod tests {
         let mut flags = HashMap::new();
         flags.insert("threads".to_string(), "0".to_string());
         session_config(&flags, TunerConfig::default());
+    }
+
+    #[test]
+    fn fault_flags_parse_and_default_off() {
+        let defaults = session_config(&HashMap::new(), TunerConfig::default());
+        assert!(defaults.faults.profile.is_off());
+        assert_eq!(defaults.faults, FaultConfig::default());
+
+        let mut flags = HashMap::new();
+        flags.insert("faults".to_string(), "standard".to_string());
+        flags.insert("fault-seed".to_string(), "7".to_string());
+        flags.insert("retry-max".to_string(), "3".to_string());
+        flags.insert("retry-backoff-ms".to_string(), "100".to_string());
+        flags.insert("measure-timeout-ms".to_string(), "250".to_string());
+        let s = session_config(&flags, TunerConfig::default());
+        assert_eq!(s.faults.profile, FaultProfile::Standard);
+        assert_eq!(s.faults.fault_seed, 7);
+        assert_eq!(s.faults.retry_max, 3);
+        assert!((s.faults.backoff_base_s - 0.1).abs() < 1e-12);
+        assert!((s.faults.measure_timeout_s - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "--faults must be off|standard")]
+    fn bogus_fault_profile_is_rejected() {
+        let mut flags = HashMap::new();
+        flags.insert("faults".to_string(), "chaotic".to_string());
+        fault_config(&flags);
     }
 
     #[test]

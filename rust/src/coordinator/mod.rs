@@ -6,9 +6,19 @@
 //! batch across a bounded worker pool (std threads — tokio is not vendored)
 //! with backpressure: at most `workers * queue_depth` configs are in flight,
 //! results are returned in submission order.
+//!
+//! Fault tolerance: each chunk runs under a [`RetryPolicy`] — bounded
+//! per-config retries with deterministic exponential backoff charged to the
+//! simulated clock, a per-chunk retry budget, and quarantine on exhaustion
+//! (a quarantined config surfaces as a failed `Measurement` feeding the
+//! cost model, never a panic). A worker that dies mid-chunk (measurer
+//! panic) is recovered by re-measuring the chunk inline on the caller
+//! thread, where a deterministic panic re-raises with its original payload.
 
-use crate::sim::{Measurement, Measurer};
+use crate::sim::{MeasureFailure, Measurement, Measurer};
 use crate::space::{Config, DesignSpace};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Condvar, Mutex};
 
@@ -31,12 +41,12 @@ impl Gate {
     /// deadlock the sibling callers still waiting on the gate.
     fn acquire(&self) -> GatePermit<'_> {
         crate::obs::metrics::inc(crate::obs::metrics::Counter::GateAcquires);
-        // PANIC: the permit lock is only ever held for the counter update
-        // itself (never across a measurer call), so it cannot be poisoned
-        let mut p = self.permits.lock().unwrap();
+        // poison-tolerant like `release`: a sibling worker unwinding through
+        // a measurer panic poisons these, and turning every waiting acquire
+        // into a second panic would take the whole session down with it
+        let mut p = self.permits.lock().unwrap_or_else(|e| e.into_inner());
         while *p == 0 {
-            // PANIC: same short-critical-section argument for the condvar
-            p = self.cv.wait(p).unwrap();
+            p = self.cv.wait(p).unwrap_or_else(|e| e.into_inner());
         }
         *p -= 1;
         GatePermit(self)
@@ -59,6 +69,74 @@ impl Drop for GatePermit<'_> {
     }
 }
 
+/// Retry policy for faulted measurements. All simulated-clock quantities —
+/// wall time never enters the schedule.
+#[derive(Debug, Clone, Copy)]
+pub struct RetryPolicy {
+    /// Total attempts per config (1 = no retries; the faults-off default,
+    /// which leaves the measurement path bit-identical to the pre-fault
+    /// pipeline).
+    pub max_attempts: u32,
+    /// Backoff before attempt `k` (k >= 2): `base * 2^(k-2)` simulated
+    /// seconds, charged to the batch's device time.
+    pub backoff_base_s: f64,
+    /// Per-chunk retry budget (backoff + re-measure seconds): once spent,
+    /// the remaining failures quarantine instead of retrying further.
+    pub batch_budget_s: f64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { max_attempts: 1, backoff_base_s: 0.05, batch_budget_s: 8.0 }
+    }
+}
+
+/// Per-batch fault accounting, merged across chunks in submission order so
+/// it is bit-reproducible at any worker count. Flows by return value (no
+/// shared mutable schedule state) from `measure_timed_faults` to the tuner,
+/// which persists the slot-failure/quarantine columns in its iteration log
+/// — that is how slot health survives checkpoint/resume exactly.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct BatchFaultReport {
+    /// `(slot, failed_attempts)` sorted by slot — every failed attempt
+    /// counts, including ones whose config later succeeded on retry.
+    pub slot_failures: Vec<(u32, u32)>,
+    /// Re-measure dispatches (config x attempt pairs).
+    pub retries: u32,
+    /// Configs given up after exhausting every allowed attempt.
+    pub quarantined: u32,
+    /// Simulated seconds the retries added (backoff + re-measures).
+    pub retry_s: f64,
+    /// Highest attempt number dispatched (0 when no retries ran).
+    pub max_attempt: u32,
+}
+
+impl BatchFaultReport {
+    pub fn is_empty(&self) -> bool {
+        self.slot_failures.is_empty() && self.retries == 0 && self.quarantined == 0
+    }
+
+    fn note_failure(&mut self, slot: u32) {
+        match self.slot_failures.binary_search_by_key(&slot, |&(s, _)| s) {
+            Ok(i) => self.slot_failures[i].1 += 1,
+            Err(i) => self.slot_failures.insert(i, (slot, 1)),
+        }
+    }
+
+    fn merge(&mut self, other: BatchFaultReport) {
+        for (slot, n) in other.slot_failures {
+            match self.slot_failures.binary_search_by_key(&slot, |&(s, _)| s) {
+                Ok(i) => self.slot_failures[i].1 += n,
+                Err(i) => self.slot_failures.insert(i, (slot, n)),
+            }
+        }
+        self.retries += other.retries;
+        self.quarantined += other.quarantined;
+        self.retry_s += other.retry_s;
+        self.max_attempt = self.max_attempt.max(other.max_attempt);
+    }
+}
+
 /// A worker-pool front-end over any `Measurer`.
 pub struct MeasureCoordinator<'m> {
     measurer: &'m dyn Measurer,
@@ -66,7 +144,9 @@ pub struct MeasureCoordinator<'m> {
     /// Max configs one worker takes per job (batching granularity).
     chunk: usize,
     /// Total jobs dispatched (telemetry).
-    jobs: Mutex<usize>,
+    jobs: AtomicUsize,
+    /// Retry/backoff/quarantine policy applied per chunk.
+    retry: RetryPolicy,
     /// Global bound on in-flight jobs across all concurrent callers.
     gate: Gate,
 }
@@ -77,7 +157,8 @@ impl<'m> MeasureCoordinator<'m> {
             measurer,
             workers: workers.max(1),
             chunk: 8,
-            jobs: Mutex::new(0),
+            jobs: AtomicUsize::new(0),
+            retry: RetryPolicy::default(),
             gate: Gate::new(workers),
         }
     }
@@ -87,8 +168,13 @@ impl<'m> MeasureCoordinator<'m> {
         self
     }
 
+    pub fn with_retry(mut self, retry: RetryPolicy) -> Self {
+        self.retry = RetryPolicy { max_attempts: retry.max_attempts.max(1), ..retry };
+        self
+    }
+
     pub fn jobs_dispatched(&self) -> usize {
-        *self.jobs.lock().unwrap()
+        self.jobs.load(Ordering::Relaxed)
     }
 
     /// Measure a batch, fanning chunks out to workers; results come back in
@@ -106,25 +192,35 @@ impl<'m> MeasureCoordinator<'m> {
         space: &DesignSpace,
         configs: &[Config],
     ) -> (Vec<Measurement>, f64) {
+        let (out, secs, _) = self.measure_timed_faults(space, configs);
+        (out, secs)
+    }
+
+    /// Full-fat measurement: results, device seconds, and the merged fault
+    /// report (retries run under the coordinator's `RetryPolicy`).
+    pub fn measure_timed_faults(
+        &self,
+        space: &DesignSpace,
+        configs: &[Config],
+    ) -> (Vec<Measurement>, f64, BatchFaultReport) {
         if configs.is_empty() {
-            return (Vec::new(), 0.0);
+            return (Vec::new(), 0.0, BatchFaultReport::default());
         }
         let chunks: Vec<(usize, &[Config])> =
             configs.chunks(self.chunk).enumerate().collect();
 
         if self.workers == 1 || chunks.len() == 1 {
             // single dispatch: the whole batch goes down as one job
-            *self.jobs.lock().unwrap() += 1;
-            let permit = self.gate.acquire();
-            let out = self.measurer.measure_batch_timed(space, configs);
-            drop(permit);
-            self.record_batch(configs.len(), 1, out.1);
-            return out;
+            self.jobs.fetch_add(1, Ordering::Relaxed);
+            let (out, secs, report) = self.measure_chunk(space, configs);
+            self.record_batch(configs.len(), 1, secs, &report);
+            return (out, secs, report);
         }
-        *self.jobs.lock().unwrap() += chunks.len();
+        self.jobs.fetch_add(chunks.len(), Ordering::Relaxed);
 
-        let (tx, rx) = mpsc::channel::<(usize, Vec<Measurement>, f64)>();
-        let next = Mutex::new(0usize);
+        type ChunkResult = (usize, Vec<Measurement>, f64, BatchFaultReport);
+        let (tx, rx) = mpsc::channel::<ChunkResult>();
+        let next = AtomicUsize::new(0);
         std::thread::scope(|scope| {
             for _ in 0..self.workers.min(chunks.len()) {
                 let tx = tx.clone();
@@ -132,20 +228,21 @@ impl<'m> MeasureCoordinator<'m> {
                 let chunks = &chunks;
                 scope.spawn(move || loop {
                     // pull the next chunk index (work stealing via counter)
-                    let idx = {
-                        let mut n = next.lock().unwrap();
-                        let i = *n;
-                        *n += 1;
-                        i
-                    };
+                    let idx = next.fetch_add(1, Ordering::Relaxed);
                     if idx >= chunks.len() {
                         break;
                     }
                     let (pos, slice) = chunks[idx];
-                    let permit = self.gate.acquire();
-                    let (out, secs) = self.measurer.measure_batch_timed(space, slice);
-                    drop(permit);
-                    if tx.send((pos, out, secs)).is_err() {
+                    // a measurer panic must not drop the chunk on the floor
+                    // and abort the session: swallow it here, leave the
+                    // bucket empty, and let the leader recover below
+                    let Ok(res) = catch_unwind(AssertUnwindSafe(|| {
+                        self.measure_chunk(space, slice)
+                    })) else {
+                        continue;
+                    };
+                    let (out, secs, report) = res;
+                    if tx.send((pos, out, secs, report)).is_err() {
                         break;
                     }
                 });
@@ -153,35 +250,124 @@ impl<'m> MeasureCoordinator<'m> {
         });
         drop(tx);
 
-        let mut buckets: Vec<Option<(Vec<Measurement>, f64)>> = vec![None; chunks.len()];
-        for (pos, out, secs) in rx {
-            buckets[pos] = Some((out, secs));
+        let mut buckets: Vec<Option<(Vec<Measurement>, f64, BatchFaultReport)>> =
+            vec![None; chunks.len()];
+        for (pos, out, secs, report) in rx {
+            buckets[pos] = Some((out, secs, report));
         }
-        // sum seconds in submission order so the total is bit-reproducible
-        // regardless of worker completion order
+        // merge seconds and fault reports in submission order so the totals
+        // are bit-reproducible regardless of worker completion order
         let mut total_secs = 0.0;
         let mut all = Vec::with_capacity(configs.len());
-        for b in buckets {
-            let (out, secs) = b.expect("worker dropped a chunk");
+        let mut report = BatchFaultReport::default();
+        for (i, b) in buckets.into_iter().enumerate() {
+            let (out, secs, rep) = match b {
+                Some(t) => t,
+                // the worker on this chunk died (measurer panic): recover
+                // by re-measuring inline — a deterministic panic re-raises
+                // here, on the caller thread, with its original payload
+                None => self.measure_chunk(space, chunks[i].1),
+            };
             total_secs += secs;
             all.extend(out);
+            report.merge(rep);
         }
-        self.record_batch(configs.len(), chunks.len(), total_secs);
-        (all, total_secs)
+        self.record_batch(configs.len(), chunks.len(), total_secs, &report);
+        (all, total_secs, report)
+    }
+
+    /// Measure one chunk under the retry policy. Retryable failures
+    /// (transient / timeout / brownout) are re-dispatched with exponential
+    /// backoff until they succeed, attempts run out, or the chunk's retry
+    /// budget is spent — whatever still fails then is quarantined. The
+    /// fault plan is a pure function of `(config, attempt)`, so the chunk's
+    /// outcome is too.
+    fn measure_chunk(
+        &self,
+        space: &DesignSpace,
+        slice: &[Config],
+    ) -> (Vec<Measurement>, f64, BatchFaultReport) {
+        let permit = self.gate.acquire();
+        let (mut out, mut secs) = self.measurer.measure_batch_attempt(space, slice, 1);
+        drop(permit);
+        let mut report = BatchFaultReport::default();
+        for m in &out {
+            if let Some(f) = m.failure {
+                report.note_failure(f.slot());
+            }
+        }
+        let mut attempt = 1u32;
+        let mut retry_secs = 0.0f64;
+        loop {
+            let retryable: Vec<usize> = out
+                .iter()
+                .enumerate()
+                .filter(|(_, m)| m.failure.is_some_and(|f| f.is_retryable()))
+                .map(|(i, _)| i)
+                .collect();
+            if retryable.is_empty() {
+                break;
+            }
+            if attempt >= self.retry.max_attempts
+                || retry_secs >= self.retry.batch_budget_s
+            {
+                for i in retryable {
+                    let slot = out[i].failure.map(|f| f.slot()).unwrap_or(0);
+                    out[i].failure =
+                        Some(MeasureFailure::Quarantined { attempts: attempt, slot });
+                    report.quarantined += 1;
+                }
+                break;
+            }
+            attempt += 1;
+            report.max_attempt = report.max_attempt.max(attempt);
+            // deterministic exponential backoff before attempt k: charged
+            // to the simulated device clock, never wall time
+            retry_secs += self.retry.backoff_base_s * 2f64.powi(attempt as i32 - 2);
+            let cfgs: Vec<Config> =
+                retryable.iter().map(|&i| out[i].config.clone()).collect();
+            let permit = self.gate.acquire();
+            let (redo, s) = self.measurer.measure_batch_attempt(space, &cfgs, attempt);
+            drop(permit);
+            retry_secs += s;
+            report.retries += retryable.len() as u32;
+            for (&i, m) in retryable.iter().zip(redo) {
+                if let Some(f) = m.failure {
+                    report.note_failure(f.slot());
+                }
+                out[i] = m;
+            }
+        }
+        report.retry_s = retry_secs;
+        secs += retry_secs;
+        (out, secs, report)
     }
 
     /// Telemetry for one completed batch: counters, histograms, and — when
     /// the calling thread carries a task trace context — a `measure/batch`
-    /// span anchored at the task's simulated-timeline position. `secs` is
-    /// the batch's deterministic per-batch attribution, so the span is
+    /// span (plus a `measure/retry` span when retries ran) anchored at the
+    /// task's simulated-timeline position. `secs` and the report are the
+    /// batch's deterministic per-batch attribution, so the spans are
     /// bit-identical at any worker/thread count.
-    fn record_batch(&self, n_configs: usize, n_chunks: usize, secs: f64) {
+    fn record_batch(
+        &self,
+        n_configs: usize,
+        n_chunks: usize,
+        secs: f64,
+        report: &BatchFaultReport,
+    ) {
         use crate::obs::metrics::{self, Counter, Histogram};
         if !crate::obs::enabled() {
             return;
         }
         metrics::inc(Counter::CoordBatches);
         metrics::add(Counter::CoordJobs, n_chunks as u64);
+        if report.retries > 0 {
+            metrics::add(Counter::MeasureRetries, report.retries as u64);
+        }
+        if report.quarantined > 0 {
+            metrics::add(Counter::ConfigsQuarantined, report.quarantined as u64);
+        }
         metrics::observe(Histogram::MeasureBatchConfigs, n_configs as u64);
         metrics::observe(Histogram::MeasureBatchSimMs, (secs * 1e3) as u64);
         crate::obs::emit_ctx(
@@ -191,13 +377,25 @@ impl<'m> MeasureCoordinator<'m> {
             crate::obs::us(secs),
             &[("n", n_configs as f64), ("chunks", n_chunks as f64)],
         );
+        if report.retries > 0 {
+            crate::obs::emit_ctx(
+                "measure",
+                "retry",
+                crate::obs::ctx_base(),
+                crate::obs::us(report.retry_s),
+                &[
+                    ("n", report.retries as f64),
+                    ("attempt", report.max_attempt as f64),
+                ],
+            );
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sim::SimMeasurer;
+    use crate::sim::{FaultConfig, FaultInjector, FaultProfile, SimMeasurer};
     use crate::util::rng::Pcg32;
     use crate::workload::zoo;
 
@@ -206,6 +404,14 @@ mod tests {
         let mut rng = Pcg32::seed_from(0);
         let configs: Vec<Config> = (0..67).map(|_| space.random_config(&mut rng)).collect();
         (SimMeasurer::titan_xp(0), space, configs)
+    }
+
+    fn standard(seed: u64) -> FaultConfig {
+        FaultConfig {
+            profile: FaultProfile::Standard,
+            fault_seed: seed,
+            ..Default::default()
+        }
     }
 
     #[test]
@@ -260,6 +466,146 @@ mod tests {
     }
 
     #[test]
+    fn gate_acquire_survives_a_poisoned_lock() {
+        // regression: acquire used to unwrap() the permit mutex while
+        // release was already poison-tolerant, so one panicking worker
+        // turned every sibling's acquire into a second panic
+        let gate = Gate::new(2);
+        let _ = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            let _g = gate.permits.lock().unwrap();
+            panic!("poison the gate");
+        }));
+        assert!(gate.permits.is_poisoned());
+        let p = gate.acquire(); // must not panic
+        drop(p);
+        let _q = gate.acquire();
+    }
+
+    #[test]
+    fn worker_panic_recovers_by_inline_remeasure() {
+        // a measurer that blows up exactly once: the worker that hits it
+        // dies, its chunk stays empty, and the leader re-measures inline —
+        // the batch completes with results identical to a clean run
+        struct FlakyOnce {
+            inner: SimMeasurer,
+            tripped: AtomicUsize,
+        }
+        impl Measurer for FlakyOnce {
+            fn measure_batch_timed(
+                &self,
+                space: &DesignSpace,
+                configs: &[Config],
+            ) -> (Vec<Measurement>, f64) {
+                if self.tripped.fetch_add(1, Ordering::SeqCst) == 0 {
+                    panic!("transient device explosion");
+                }
+                self.inner.measure_batch_timed(space, configs)
+            }
+            fn elapsed_s(&self) -> f64 {
+                self.inner.elapsed_s()
+            }
+            fn count(&self) -> usize {
+                self.inner.count()
+            }
+        }
+        let (_, space, configs) = setup();
+        let flaky =
+            FlakyOnce { inner: SimMeasurer::titan_xp(0), tripped: AtomicUsize::new(0) };
+        let coord = MeasureCoordinator::new(&flaky, 4).with_chunk(8);
+        let out = coord.measure(&space, &configs);
+        assert_eq!(out.len(), configs.len());
+        let clean = SimMeasurer::titan_xp(0).measure_batch(&space, &configs);
+        for (a, b) in clean.iter().zip(&out) {
+            assert_eq!(a.runtime_ms, b.runtime_ms);
+        }
+    }
+
+    #[test]
+    fn retries_recover_transient_faults() {
+        let (meas, space, configs) = setup();
+        let inj = FaultInjector::new(&meas, standard(7), 2);
+        let no_retry = MeasureCoordinator::new(&inj, 1);
+        let (r0, _, rep0) = no_retry.measure_timed_faults(&space, &configs);
+        let failed0 = r0.iter().filter(|m| m.failure.is_some()).count();
+        assert!(failed0 > 0, "standard profile should fault some configs");
+        assert_eq!(rep0.retries, 0);
+        // every exhausted config is quarantined, not left raw-faulted
+        for m in &r0 {
+            if let Some(f) = m.failure {
+                assert!(matches!(f, MeasureFailure::Quarantined { attempts: 1, .. }));
+                assert_eq!(m.gflops, 0.0);
+                assert!(m.runtime_ms.is_none());
+            }
+        }
+
+        let meas2 = SimMeasurer::titan_xp(0);
+        let inj2 = FaultInjector::new(&meas2, standard(7), 2);
+        let retry = MeasureCoordinator::new(&inj2, 1)
+            .with_retry(RetryPolicy { max_attempts: 3, ..Default::default() });
+        let (r3, _, rep3) = retry.measure_timed_faults(&space, &configs);
+        let failed3 = r3.iter().filter(|m| m.failure.is_some()).count();
+        assert!(rep3.retries > 0);
+        assert!(rep3.retry_s > 0.0);
+        assert!(
+            failed3 < failed0,
+            "retries must recover some transients: {failed3} vs {failed0}"
+        );
+    }
+
+    #[test]
+    fn faulted_measurement_replays_bit_identically() {
+        let run = |workers: usize, chunk: usize| {
+            let meas = SimMeasurer::titan_xp(0);
+            let space = DesignSpace::for_conv(zoo::resnet18()[5].layer);
+            let mut rng = Pcg32::seed_from(0);
+            let configs: Vec<Config> =
+                (0..67).map(|_| space.random_config(&mut rng)).collect();
+            let inj = FaultInjector::new(&meas, standard(7), 2);
+            let coord = MeasureCoordinator::new(&inj, workers)
+                .with_chunk(chunk)
+                .with_retry(RetryPolicy { max_attempts: 3, ..Default::default() });
+            let (out, secs, report) = coord.measure_timed_faults(&space, &configs);
+            let runtimes: Vec<u64> = out
+                .iter()
+                .map(|m| m.runtime_ms.unwrap_or(-1.0).to_bits())
+                .collect();
+            let failures: Vec<Option<MeasureFailure>> =
+                out.iter().map(|m| m.failure).collect();
+            (runtimes, failures, secs.to_bits(), report)
+        };
+        // identical settings replay bitwise, including across repeated runs
+        // with a parallel worker pool (merge order is submission order)
+        let a = run(4, 8);
+        let b = run(4, 8);
+        assert_eq!(a, b);
+        let c = run(1, 8);
+        let d = run(1, 8);
+        assert_eq!(c, d);
+    }
+
+    #[test]
+    fn exhausted_configs_are_quarantined_with_slot_counts() {
+        let (meas, space, configs) = setup();
+        let inj = FaultInjector::new(&meas, standard(7), 2);
+        let coord = MeasureCoordinator::new(&inj, 1)
+            .with_retry(RetryPolicy { max_attempts: 2, ..Default::default() });
+        let (out, _, report) = coord.measure_timed_faults(&space, &configs);
+        let quarantined = out
+            .iter()
+            .filter(|m| matches!(m.failure, Some(MeasureFailure::Quarantined { .. })))
+            .count();
+        assert_eq!(quarantined as u32, report.quarantined);
+        // the flaky slot's persistent brownout must show up in the per-slot
+        // failure counts (slot_failures is sorted by slot)
+        assert!(!report.slot_failures.is_empty());
+        for w in report.slot_failures.windows(2) {
+            assert!(w[0].0 < w[1].0);
+        }
+        let total: u32 = report.slot_failures.iter().map(|&(_, n)| n).sum();
+        assert!(total as usize >= quarantined);
+    }
+
+    #[test]
     fn shared_pool_bounds_concurrency_across_callers() {
         // the bound that makes one coordinator a *global* device-worker
         // pool: two tasks measuring at once must never exceed `workers`
@@ -291,6 +637,7 @@ mod tests {
                         runtime_ms: Some(1.0),
                         error: None,
                         gflops: 1.0,
+                        failure: None,
                     })
                     .collect();
                 *self.active.lock().unwrap() -= 1;

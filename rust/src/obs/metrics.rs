@@ -64,9 +64,17 @@ pub enum Counter {
     CheckpointSaves,
     /// Session checkpoints loaded for resume.
     CheckpointLoads,
+    /// Faults injected into measurements (fault layer enabled).
+    FaultsInjected,
+    /// Re-measure dispatches the coordinator issued for failed configs.
+    MeasureRetries,
+    /// Configs given up on after exhausting every allowed retry.
+    ConfigsQuarantined,
+    /// Device slots ejected by the session for persistent failures.
+    SlotEjects,
 }
 
-pub const N_COUNTERS: usize = 21;
+pub const N_COUNTERS: usize = 25;
 
 /// Display names, in `Counter` discriminant order.
 pub const COUNTER_NAMES: [&str; N_COUNTERS] = [
@@ -91,6 +99,10 @@ pub const COUNTER_NAMES: [&str; N_COUNTERS] = [
     "policy_warm_skipped",
     "checkpoint_saves",
     "checkpoint_loads",
+    "faults_injected",
+    "measure_retries",
+    "configs_quarantined",
+    "slot_ejects",
 ];
 
 // PANIC-free const-init of the static slot arrays (pre-1.79 pattern).
@@ -301,7 +313,11 @@ mod tests {
             COUNTER_NAMES[Counter::CheckpointSaves as usize],
             "checkpoint_saves"
         );
-        assert_eq!(Counter::CheckpointLoads as usize, N_COUNTERS - 1);
+        assert_eq!(
+            COUNTER_NAMES[Counter::ConfigsQuarantined as usize],
+            "configs_quarantined"
+        );
+        assert_eq!(Counter::SlotEjects as usize, N_COUNTERS - 1);
     }
 
     #[test]

@@ -390,6 +390,8 @@ pub fn intern_static(s: &str) -> Option<&'static str> {
         "service" => "service",
         "schedule" => "schedule",
         "save" => "save",
+        "retry" => "retry",
+        "eject" => "eject",
         // argument keys
         "n" => "n",
         "chunks" => "chunks",
@@ -406,6 +408,8 @@ pub fn intern_static(s: &str) -> Option<&'static str> {
         "tasks" => "tasks",
         "lanes" => "lanes",
         "slots" => "slots",
+        "attempt" => "attempt",
+        "slot" => "slot",
         _ => return None,
     })
 }
@@ -634,7 +638,10 @@ mod tests {
 
     #[test]
     fn intern_covers_the_whole_span_vocabulary() {
-        for s in ["tuner", "plan", "sa", "best_gflops", "ckpt", "save", ""] {
+        for s in [
+            "tuner", "plan", "sa", "best_gflops", "ckpt", "save", "retry", "eject",
+            "attempt", "slot", "",
+        ] {
             assert_eq!(intern_static(s), Some(s));
         }
         assert_eq!(intern_static("not-a-span-string"), None);

@@ -1,0 +1,515 @@
+//! Deterministic fault injection for the measurement path.
+//!
+//! Real-hardware measurement fails: timeouts, transient driver errors,
+//! flaky boards, corrupted timer readings. The `FaultInjector` wraps any
+//! [`Measurer`] and injects those failure modes from a seeded plan that is
+//! a *pure function* of `(fault_seed, config fingerprint, attempt, slot)` —
+//! no mutable schedule state — so the exact same fault sequence replays
+//! bit-identically at any `--threads` value, any coordinator chunking, and
+//! across checkpoint/resume. The retry/backoff/quarantine policy that
+//! consumes these faults lives in `coordinator::RetryPolicy`; device-slot
+//! health tracking and ejection live in `tuner::session`.
+
+use super::gpu::gflops;
+use super::measure::{Measurement, Measurer};
+use crate::space::{Config, DesignSpace};
+use crate::util::rng::{hash64, hash_unit};
+use std::sync::Mutex;
+
+/// Which fault plan drives the injector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultProfile {
+    /// No faults: the wrapper is a single-branch pass-through, bit-identical
+    /// to the bare inner measurer and allocation-free.
+    Off,
+    /// The standard chaos plan: transient errors, timeouts, corrupt/outlier
+    /// readings, and one persistently flaky (brownout) device slot.
+    Standard,
+}
+
+impl FaultProfile {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "off" => Some(FaultProfile::Off),
+            "standard" => Some(FaultProfile::Standard),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FaultProfile::Off => "off",
+            FaultProfile::Standard => "standard",
+        }
+    }
+
+    pub fn is_off(self) -> bool {
+        self == FaultProfile::Off
+    }
+}
+
+/// Fault-layer knobs (CLI: `--faults`, `--fault-seed`, `--retry-max`,
+/// `--retry-backoff-ms`, `--measure-timeout-ms`). All-`Copy` so the session
+/// config stays `Clone`-cheap; `retry_max`/`backoff_base_s` parameterize
+/// the coordinator's `RetryPolicy`, the rest drive the injector itself.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultConfig {
+    pub profile: FaultProfile,
+    /// Seed of the fault plan (a different seed = a different bad day).
+    pub fault_seed: u64,
+    /// Retries per config after the first attempt (0 = fail immediately).
+    pub retry_max: u32,
+    /// First retry backoff in simulated seconds; doubles per attempt.
+    pub backoff_base_s: f64,
+    /// Simulated seconds a timed-out measurement burns before giving up.
+    pub measure_timeout_s: f64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            profile: FaultProfile::Off,
+            fault_seed: 0,
+            retry_max: 2,
+            backoff_base_s: 0.05,
+            measure_timeout_s: 0.5,
+        }
+    }
+}
+
+/// Typed cause attached to a failed [`Measurement`] (`Measurement::failure`).
+/// Unlike [`super::gpu::MeasureError`] (static validity, deterministic per
+/// config), these are *operational* failures of the measurement itself; a
+/// quarantined config feeds the cost model exactly like an errored one
+/// (gflops 0) instead of panicking the tuning loop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MeasureFailure {
+    /// Transient device/driver error; retryable.
+    Transient { attempt: u32, slot: u32 },
+    /// The measurement ran past the timeout budget; retryable.
+    Timeout { attempt: u32, slot: u32 },
+    /// The config landed on a browned-out (flaky) device slot; retryable.
+    Brownout { attempt: u32, slot: u32 },
+    /// Every allowed attempt failed; the config is given up as errored.
+    Quarantined { attempts: u32, slot: u32 },
+}
+
+impl MeasureFailure {
+    /// Device slot the (last) failing attempt ran on.
+    pub fn slot(&self) -> u32 {
+        match *self {
+            MeasureFailure::Transient { slot, .. }
+            | MeasureFailure::Timeout { slot, .. }
+            | MeasureFailure::Brownout { slot, .. }
+            | MeasureFailure::Quarantined { slot, .. } => slot,
+        }
+    }
+
+    /// Whether the retry policy may try this config again.
+    pub fn is_retryable(&self) -> bool {
+        !matches!(self, MeasureFailure::Quarantined { .. })
+    }
+}
+
+/// One fault decision for a `(config, attempt)` pair.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    None,
+    Transient,
+    Timeout,
+    /// Bad timer reading: the measurement "succeeds" with a silently
+    /// outlier runtime (20–80x). Not retried — nothing looked wrong.
+    Corrupt,
+    Brownout,
+}
+
+// Hash-chain salts: each decision draws from an independent lane of the
+// SplitMix64 stream so the marginals stay uncorrelated.
+const S_FLAKY: u64 = 0x0F1A_57DE_7EC7_0001;
+const S_SLOT: u64 = 0x5107_5107_5107_5107;
+const S_KIND: u64 = 0xFA01_7FA0_17FA_017F;
+const S_BROWN: u64 = 0xB405_B405_B405_B405;
+const S_CORRUPT: u64 = 0xC042_4042_C042_4042;
+
+// Standard-profile marginal rates per attempt (cumulative thresholds).
+const P_TRANSIENT: f64 = 0.06;
+const P_TIMEOUT: f64 = 0.10; // 0.04 marginal
+const P_CORRUPT: f64 = 0.13; // 0.03 marginal
+/// A config routed to the flaky slot fails with this probability at EVERY
+/// attempt — that persistence is what exhausts retries and produces real
+/// quarantines (and, upstream, slot ejection).
+const P_BROWNOUT: f64 = 0.85;
+
+/// A `Measurer` wrapper injecting deterministic faults (see module docs).
+///
+/// Holds no fault-schedule state: the only interior mutability is the same
+/// `(elapsed_s, count)` accounting pair `SimMeasurer` keeps, covering the
+/// fault-charged seconds and faulted configs the inner measurer never sees.
+pub struct FaultInjector<'m> {
+    inner: &'m dyn Measurer,
+    cfg: FaultConfig,
+    device_slots: u32,
+    state: Mutex<(f64, usize)>, // (fault-charged secs, faulted configs)
+}
+
+impl<'m> FaultInjector<'m> {
+    pub fn new(inner: &'m dyn Measurer, cfg: FaultConfig, device_slots: u32) -> Self {
+        FaultInjector {
+            inner,
+            cfg,
+            device_slots: device_slots.max(1),
+            state: Mutex::new((0.0, 0)),
+        }
+    }
+
+    /// Root of this plan's hash chain.
+    fn h0(&self) -> u64 {
+        hash64(self.cfg.fault_seed ^ 0xC0FF_EE00_DEAD_BEE5)
+    }
+
+    /// The plan's one persistently flaky slot (None with a single slot:
+    /// browning out the only slot would quarantine most of the run).
+    pub fn flaky_slot(&self) -> Option<u32> {
+        if self.device_slots > 1 {
+            Some((hash64(self.h0() ^ S_FLAKY) % self.device_slots as u64) as u32)
+        } else {
+            None
+        }
+    }
+
+    /// Pure fault decision for `(config fingerprint, attempt)`: the kind
+    /// and the device slot the attempt is routed to. Independent of call
+    /// order, batching, and thread count by construction.
+    pub fn decide(&self, fingerprint: u64, attempt: u32) -> (FaultKind, u32) {
+        let ha = hash64(hash64(self.h0() ^ fingerprint) ^ attempt as u64);
+        let slot = (hash64(ha ^ S_SLOT) % self.device_slots as u64) as u32;
+        if self.flaky_slot() == Some(slot)
+            && hash_unit(ha ^ S_BROWN) < P_BROWNOUT
+        {
+            return (FaultKind::Brownout, slot);
+        }
+        let u = hash_unit(ha ^ S_KIND);
+        let kind = if u < P_TRANSIENT {
+            FaultKind::Transient
+        } else if u < P_TIMEOUT {
+            FaultKind::Timeout
+        } else if u < P_CORRUPT {
+            FaultKind::Corrupt
+        } else {
+            FaultKind::None
+        };
+        (kind, slot)
+    }
+
+    /// Outlier factor for a corrupt reading (20–80x, deterministic).
+    fn corrupt_factor(&self, fingerprint: u64, attempt: u32) -> f64 {
+        let ha = hash64(hash64(self.h0() ^ fingerprint) ^ attempt as u64);
+        20.0 + 60.0 * hash_unit(ha ^ S_CORRUPT)
+    }
+}
+
+impl Measurer for FaultInjector<'_> {
+    fn measure_batch_timed(
+        &self,
+        space: &DesignSpace,
+        configs: &[Config],
+    ) -> (Vec<Measurement>, f64) {
+        self.measure_batch_attempt(space, configs, 1)
+    }
+
+    fn measure_batch_attempt(
+        &self,
+        space: &DesignSpace,
+        configs: &[Config],
+        attempt: u32,
+    ) -> (Vec<Measurement>, f64) {
+        if self.cfg.profile.is_off() {
+            // faults off: single branch, straight through — bit-identical
+            // to (and allocation-free over) the bare inner measurer
+            return self.inner.measure_batch_timed(space, configs);
+        }
+        if configs.is_empty() {
+            return (Vec::new(), 0.0);
+        }
+
+        // Decide every config up front; only the survivors (incl. corrupt
+        // readings, which "succeed") reach the inner measurer, so the
+        // inner per-config-linear cost attribution stays exact.
+        let decisions: Vec<(FaultKind, u32)> = configs
+            .iter()
+            .map(|c| self.decide(space.flat_index(c), attempt))
+            .collect();
+        let pass: Vec<Config> = configs
+            .iter()
+            .zip(&decisions)
+            .filter(|(_, (k, _))| {
+                matches!(k, FaultKind::None | FaultKind::Corrupt)
+            })
+            .map(|(c, _)| c.clone())
+            .collect();
+        let (measured, inner_secs) = if pass.is_empty() {
+            (Vec::new(), 0.0)
+        } else {
+            self.inner.measure_batch_timed(space, &pass)
+        };
+
+        // Stitch results back into input order; faulted configs become
+        // failed measurements carrying their typed cause.
+        let mut out = Vec::with_capacity(configs.len());
+        let mut cursor = measured.into_iter();
+        let mut fault_secs = 0.0f64;
+        let mut n_faults = 0u64;
+        for (c, &(kind, slot)) in configs.iter().zip(&decisions) {
+            match kind {
+                FaultKind::None | FaultKind::Corrupt => {
+                    // defensive: a short inner result degrades to a
+                    // transient fault instead of panicking the loop
+                    let mut m = if let Some(m) = cursor.next() {
+                        m
+                    } else {
+                        n_faults += 1;
+                        fault_secs += 0.1;
+                        out.push(Measurement {
+                            config: c.clone(),
+                            runtime_ms: None,
+                            error: None,
+                            gflops: 0.0,
+                            failure: Some(MeasureFailure::Transient {
+                                attempt,
+                                slot,
+                            }),
+                        });
+                        continue;
+                    };
+                    if kind == FaultKind::Corrupt {
+                        if let Some(ms) = m.runtime_ms {
+                            // a bad timer reading: silently wrong, never
+                            // retried — the caller can't tell it failed
+                            let bad =
+                                ms * self.corrupt_factor(space.flat_index(c), attempt);
+                            m.runtime_ms = Some(bad);
+                            m.gflops = gflops(&space.layer, bad);
+                            n_faults += 1;
+                        }
+                    }
+                    out.push(m);
+                }
+                FaultKind::Transient | FaultKind::Brownout => {
+                    n_faults += 1;
+                    fault_secs += 0.1; // error surfaces fast
+                    let failure = if kind == FaultKind::Transient {
+                        MeasureFailure::Transient { attempt, slot }
+                    } else {
+                        MeasureFailure::Brownout { attempt, slot }
+                    };
+                    out.push(Measurement {
+                        config: c.clone(),
+                        runtime_ms: None,
+                        error: None,
+                        gflops: 0.0,
+                        failure: Some(failure),
+                    });
+                }
+                FaultKind::Timeout => {
+                    n_faults += 1;
+                    fault_secs += self.cfg.measure_timeout_s;
+                    out.push(Measurement {
+                        config: c.clone(),
+                        runtime_ms: None,
+                        error: None,
+                        gflops: 0.0,
+                        failure: Some(MeasureFailure::Timeout { attempt, slot }),
+                    });
+                }
+            }
+        }
+        if n_faults > 0 {
+            crate::obs::metrics::add(
+                crate::obs::metrics::Counter::FaultsInjected,
+                n_faults,
+            );
+        }
+        let faulted = configs.len() - pass.len();
+        if faulted > 0 || fault_secs > 0.0 {
+            // poison-tolerant like Gate::release: held for the adds only
+            let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+            st.0 += fault_secs;
+            st.1 += faulted;
+        }
+        (out, inner_secs + fault_secs)
+    }
+
+    fn elapsed_s(&self) -> f64 {
+        let extra = self.state.lock().unwrap_or_else(|e| e.into_inner()).0;
+        self.inner.elapsed_s() + extra
+    }
+
+    fn count(&self) -> usize {
+        let faulted = self.state.lock().unwrap_or_else(|e| e.into_inner()).1;
+        self.inner.count() + faulted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::SimMeasurer;
+    use crate::util::rng::Pcg32;
+    use crate::workload::zoo;
+
+    fn setup() -> (SimMeasurer, DesignSpace, Vec<Config>) {
+        let space = DesignSpace::for_conv(zoo::resnet18()[5].layer);
+        let mut rng = Pcg32::seed_from(0);
+        let configs: Vec<Config> =
+            (0..96).map(|_| space.random_config(&mut rng)).collect();
+        (SimMeasurer::titan_xp(0), space, configs)
+    }
+
+    fn standard(seed: u64) -> FaultConfig {
+        FaultConfig {
+            profile: FaultProfile::Standard,
+            fault_seed: seed,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn off_profile_is_bit_identical_to_bare() {
+        let (meas, space, configs) = setup();
+        let bare = SimMeasurer::titan_xp(0);
+        let inj = FaultInjector::new(&meas, FaultConfig::default(), 2);
+        let (a, sa) = bare.measure_batch_timed(&space, &configs);
+        let (b, sb) = inj.measure_batch_timed(&space, &configs);
+        assert_eq!(sa.to_bits(), sb.to_bits());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.runtime_ms, y.runtime_ms);
+            assert_eq!(x.gflops.to_bits(), y.gflops.to_bits());
+            assert!(y.failure.is_none());
+        }
+    }
+
+    #[test]
+    fn decisions_are_pure_and_batch_invariant() {
+        let (meas, space, configs) = setup();
+        let inj = FaultInjector::new(&meas, standard(7), 2);
+        let whole = inj.measure_batch_timed(&space, &configs).0;
+        // a fresh injector measuring one config at a time must reproduce
+        // the exact same outcomes: no hidden schedule state
+        let meas2 = SimMeasurer::titan_xp(0);
+        let inj2 = FaultInjector::new(&meas2, standard(7), 2);
+        for (c, w) in configs.iter().zip(&whole) {
+            let one = inj2
+                .measure_batch_timed(&space, std::slice::from_ref(c))
+                .0
+                .remove(0);
+            assert_eq!(w.runtime_ms, one.runtime_ms);
+            assert_eq!(w.failure, one.failure);
+        }
+    }
+
+    #[test]
+    fn standard_profile_injects_every_kind() {
+        let (meas, space, configs) = setup();
+        let inj = FaultInjector::new(&meas, standard(7), 2);
+        let mut kinds = [0usize; 4]; // transient, timeout, brownout, ok
+        for m in inj.measure_batch_timed(&space, &configs).0 {
+            match m.failure {
+                Some(MeasureFailure::Transient { .. }) => kinds[0] += 1,
+                Some(MeasureFailure::Timeout { .. }) => kinds[1] += 1,
+                Some(MeasureFailure::Brownout { .. }) => kinds[2] += 1,
+                _ => kinds[3] += 1,
+            }
+        }
+        assert!(kinds[0] > 0, "no transients: {kinds:?}");
+        assert!(kinds[1] > 0, "no timeouts: {kinds:?}");
+        assert!(kinds[2] > 0, "no brownouts: {kinds:?}");
+        assert!(kinds[3] > configs.len() / 2, "mostly ok: {kinds:?}");
+    }
+
+    #[test]
+    fn faults_charge_simulated_seconds() {
+        let (meas, space, configs) = setup();
+        let inj = FaultInjector::new(&meas, standard(7), 2);
+        let bare = SimMeasurer::titan_xp(0);
+        let (out, secs) = inj.measure_batch_timed(&space, &configs);
+        let passed: Vec<Config> = out
+            .iter()
+            .filter(|m| m.failure.is_none())
+            .map(|m| m.config.clone())
+            .collect();
+        let (_, pass_secs) = bare.measure_batch_timed(&space, &passed);
+        // total = inner cost of the survivors + per-fault charges
+        assert!(secs > pass_secs);
+        assert!((inj.elapsed_s() - secs).abs() < 1e-9);
+        assert_eq!(inj.count(), configs.len());
+    }
+
+    #[test]
+    fn corrupt_readings_are_silent_outliers() {
+        let (meas, space, configs) = setup();
+        let inj = FaultInjector::new(&meas, standard(7), 2);
+        let bare = SimMeasurer::titan_xp(0);
+        let clean = bare.measure_batch(&space, &configs);
+        let faulted = inj.measure_batch(&space, &configs);
+        let mut n_corrupt = 0;
+        for (c, f) in clean.iter().zip(&faulted) {
+            if f.failure.is_some() || !c.ok() {
+                continue;
+            }
+            let (a, b) = (c.runtime_ms.unwrap(), f.runtime_ms.unwrap());
+            if a != b {
+                n_corrupt += 1;
+                let factor = b / a;
+                assert!(
+                    (19.9..80.1).contains(&factor),
+                    "corrupt factor {factor}"
+                );
+                assert!(f.gflops < c.gflops);
+            }
+        }
+        assert!(n_corrupt > 0, "seed 7 over 96 configs should corrupt some");
+    }
+
+    #[test]
+    fn flaky_slot_brownout_persists_across_attempts() {
+        let (meas, space, configs) = setup();
+        let inj = FaultInjector::new(&meas, standard(7), 2);
+        let flaky = inj.flaky_slot().expect("2 slots -> one flaky");
+        // any config browned out at attempt 1 AND routed to the flaky slot
+        // again at attempt 2 must usually brown out again (p = 0.85)
+        let (mut again, mut routed) = (0u32, 0u32);
+        for c in &configs {
+            let fp = space.flat_index(c);
+            if inj.decide(fp, 1).0 == FaultKind::Brownout {
+                let (k2, s2) = inj.decide(fp, 2);
+                if s2 == flaky {
+                    routed += 1;
+                    if k2 == FaultKind::Brownout {
+                        again += 1;
+                    }
+                }
+            }
+        }
+        assert!(routed > 0, "no repeat routings to the flaky slot");
+        assert!(again * 2 > routed, "brownout not persistent: {again}/{routed}");
+    }
+
+    #[test]
+    fn single_slot_has_no_flaky_slot() {
+        let (meas, _, _) = setup();
+        let inj = FaultInjector::new(&meas, standard(7), 1);
+        assert_eq!(inj.flaky_slot(), None);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let (meas, space, configs) = setup();
+        let a = FaultInjector::new(&meas, standard(1), 2);
+        let b = FaultInjector::new(&meas, standard(2), 2);
+        let differs = configs.iter().any(|c| {
+            let fp = space.flat_index(c);
+            a.decide(fp, 1) != b.decide(fp, 1)
+        });
+        assert!(differs);
+    }
+}

@@ -2,6 +2,7 @@
 //! "hardware", plus the simulated wall-clock accounting that reproduces the
 //! paper's optimization-time results (Fig 2, Fig 8, Fig 9, Table 5).
 
+use super::faults::MeasureFailure;
 use super::gpu::{evaluate_config, gflops, GpuModel, MeasureError};
 use crate::space::{Config, DesignSpace};
 use std::sync::Mutex;
@@ -15,6 +16,10 @@ pub struct Measurement {
     pub error: Option<MeasureError>,
     /// Fitness: achieved GFLOPS (0 on failure, AutoTVM convention).
     pub gflops: f64,
+    /// Operational failure cause (fault layer): injected/real measurement
+    /// faults and retry exhaustion, as opposed to the static-validity
+    /// `error`. `None` on success and on static-validity errors.
+    pub failure: Option<MeasureFailure>,
 }
 
 impl Measurement {
@@ -123,6 +128,19 @@ pub trait Measurer: Send + Sync {
         self.measure_batch_timed(space, configs).0
     }
 
+    /// Measure one retry attempt of a batch (`attempt` is 1-based). Only
+    /// fault-aware measurers distinguish attempts — the default ignores the
+    /// attempt number, so plain measurers behave identically under retry.
+    fn measure_batch_attempt(
+        &self,
+        space: &DesignSpace,
+        configs: &[Config],
+        attempt: u32,
+    ) -> (Vec<Measurement>, f64) {
+        let _ = attempt;
+        self.measure_batch_timed(space, configs)
+    }
+
     /// Total simulated seconds spent measuring so far.
     fn elapsed_s(&self) -> f64;
     /// Total number of configs measured so far.
@@ -164,12 +182,14 @@ impl Measurer for SimMeasurer {
                         runtime_ms: Some(ms),
                         error: None,
                         gflops: gflops(&space.layer, ms),
+                        failure: None,
                     },
                     Err(e) => Measurement {
                         config: c.clone(),
                         runtime_ms: None,
                         error: Some(e),
                         gflops: 0.0,
+                        failure: None,
                     },
                 }
             })

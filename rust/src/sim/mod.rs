@@ -1,8 +1,10 @@
 //! The simulated hardware substrate: an analytical Titan Xp model and the
 //! measurement interface + simulated wall-clock (DESIGN.md §2, §6).
 
+pub mod faults;
 pub mod gpu;
 pub mod measure;
 
+pub use faults::{FaultConfig, FaultInjector, FaultProfile, MeasureFailure};
 pub use gpu::{evaluate, evaluate_config, gflops, screen_scores, static_valid, GpuModel, MeasureError, INVALID_SCORE};
 pub use measure::{Clock, MeasureCost, Measurement, Measurer, SimMeasurer};

@@ -42,7 +42,9 @@ use std::path::Path;
 pub const MAGIC: [u8; 8] = *b"RELSNAPS";
 
 /// Bump on any layout change; old files are refused, never misread.
-pub const FORMAT_VERSION: u32 = 1;
+/// v2: fault-layer columns — measurement failure tags, per-iteration
+/// slot-failure/quarantine counts, and the pipeline queue's fault reports.
+pub const FORMAT_VERSION: u32 = 2;
 
 /// Typed error for every snapshot save/load/resume failure mode — the
 /// snapshot paths carry no `unwrap`/`expect` (lint rule S2 stays clean).

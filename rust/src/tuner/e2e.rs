@@ -24,6 +24,12 @@ pub struct ModelTuneResult {
     /// Occurrence-weighted sum of best conv runtimes + non-conv residue.
     pub inference_ms: f64,
     pub n_measurements: usize,
+    /// Configs quarantined by the fault layer (retries exhausted), summed
+    /// over every task's iteration records. 0 with faults off.
+    pub n_quarantined: usize,
+    /// Device slots the session ejected for persistent failures (graceful
+    /// degradation). Empty with faults off and outside the session engine.
+    pub ejected_slots: Vec<usize>,
 }
 
 impl ModelTuneResult {
@@ -111,6 +117,11 @@ pub(crate) fn aggregate(
         .sum::<f64>()
         + zoo::non_conv_residue_ms(model_name);
     let n_measurements = results.iter().map(|r| r.n_measurements).sum();
+    let n_quarantined = results
+        .iter()
+        .flat_map(|r| r.iterations.iter())
+        .map(|it| it.quarantined as usize)
+        .sum();
     ModelTuneResult {
         model: model_name.to_string(),
         method: method.name(),
@@ -119,6 +130,8 @@ pub(crate) fn aggregate(
         wall_s: wall_s.unwrap_or(opt_time_s),
         inference_ms,
         n_measurements,
+        n_quarantined,
+        ejected_slots: Vec::new(),
     }
 }
 

@@ -11,7 +11,7 @@
 pub mod e2e;
 pub mod session;
 
-use crate::coordinator::MeasureCoordinator;
+use crate::coordinator::{BatchFaultReport, MeasureCoordinator};
 use crate::costmodel::CostModel;
 use crate::rl::PpoAgent;
 use crate::runtime::Backend;
@@ -19,7 +19,7 @@ use crate::sampling::{adaptive_sample, fill_random_unvisited, greedy_sample, Sam
 use crate::search::{
     ga::GeneticAlgorithm, random::RandomSearch, sa::SimulatedAnnealing, Searcher,
 };
-use crate::sim::{Clock, MeasureError, Measurement, Measurer};
+use crate::sim::{Clock, MeasureError, MeasureFailure, Measurement, Measurer};
 use crate::snapshot::{SnapReader, SnapWriter, SnapshotError};
 use crate::space::{Config, DesignSpace};
 use crate::transfer::{
@@ -170,6 +170,14 @@ pub struct IterationRecord {
     /// Host seconds of this iteration's absorb stage (cost-model refit),
     /// which needs the measurement results and cannot be hidden.
     pub absorb_host_s: f64,
+    /// Failed measurement attempts per device slot this iteration —
+    /// `(slot, failures)` sorted by slot, empty when faults are off. The
+    /// session's slot-health/ejection derivation reads these; because they
+    /// live in the checkpointed iteration log, slot health survives
+    /// checkpoint/resume exactly.
+    pub slot_failures: Vec<(u32, u32)>,
+    /// Configs quarantined (every allowed retry exhausted) this iteration.
+    pub quarantined: u32,
     /// Cumulative simulated clock after this iteration.
     pub clock: Clock,
 }
@@ -578,12 +586,32 @@ impl TaskTuner {
     /// cost-model refit, searcher seeding, clock accounting, iteration
     /// record, and the convergence policy.
     pub fn absorb(&mut self, batch: PlannedBatch, results: Vec<Measurement>, device_s: f64) {
+        self.absorb_faults(batch, results, device_s, &BatchFaultReport::default());
+    }
+
+    /// [`Self::absorb`] carrying the batch's fault report: per-slot failed
+    /// attempts and quarantine counts land in the iteration record (and so in
+    /// checkpoints), which is where the session's slot-health derivation
+    /// reads them.
+    pub fn absorb_faults(
+        &mut self,
+        batch: PlannedBatch,
+        results: Vec<Measurement>,
+        device_s: f64,
+        report: &BatchFaultReport,
+    ) {
         let prev = self.obs_enter();
-        self.absorb_inner(batch, results, device_s);
+        self.absorb_inner(batch, results, device_s, report);
         self.obs_exit(prev);
     }
 
-    fn absorb_inner(&mut self, batch: PlannedBatch, results: Vec<Measurement>, device_s: f64) {
+    fn absorb_inner(
+        &mut self,
+        batch: PlannedBatch,
+        results: Vec<Measurement>,
+        device_s: f64,
+        report: &BatchFaultReport,
+    ) {
         for c in &batch.configs {
             self.in_flight.remove(&self.space.flat_index(c));
         }
@@ -680,6 +708,8 @@ impl TaskTuner {
             sampler_k: batch.sampler_k,
             plan_host_s: batch.search_s + batch.model_query_s,
             absorb_host_s: model_fit_s,
+            slot_failures: report.slot_failures.clone(),
+            quarantined: report.quarantined,
             clock: self.clock,
         });
 
@@ -872,6 +902,12 @@ fn put_iteration(w: &mut SnapWriter, it: &IterationRecord) {
     w.put_usize(it.sampler_k);
     w.put_f64(it.plan_host_s);
     w.put_f64(it.absorb_host_s);
+    w.put_usize(it.slot_failures.len());
+    for &(slot, n) in &it.slot_failures {
+        w.put_u32(slot);
+        w.put_u32(n);
+    }
+    w.put_u32(it.quarantined);
     put_clock(w, &it.clock);
 }
 
@@ -887,6 +923,17 @@ fn get_iteration(r: &mut SnapReader) -> Result<IterationRecord, SnapshotError> {
         sampler_k: r.get_usize()?,
         plan_host_s: r.get_f64()?,
         absorb_host_s: r.get_f64()?,
+        slot_failures: {
+            let n = r.get_usize()?;
+            let mut v = Vec::with_capacity(n.min(1024));
+            for _ in 0..n {
+                let slot = r.get_u32()?;
+                let failures = r.get_u32()?;
+                v.push((slot, failures));
+            }
+            v
+        },
+        quarantined: r.get_u32()?,
         clock: get_clock(r)?,
     })
 }
@@ -980,8 +1027,9 @@ pub(crate) fn snap_restore_result(r: &mut SnapReader) -> Result<TuneResult, Snap
 }
 
 /// One pipelined batch waiting to be absorbed: the plan, its measurements,
-/// and the device-serial seconds the batch cost.
-pub(crate) type QueuedBatch = (PlannedBatch, Vec<Measurement>, f64);
+/// the device-serial seconds the batch cost, and the batch's fault report
+/// (retries/quarantines/per-slot failures — empty when faults are off).
+pub(crate) type QueuedBatch = (PlannedBatch, Vec<Measurement>, f64, BatchFaultReport);
 
 fn put_measurement(w: &mut SnapWriter, m: &Measurement) {
     w.put_config(&m.config);
@@ -998,6 +1046,29 @@ fn put_measurement(w: &mut SnapWriter, m: &Measurement) {
         Some(MeasureError::SharedMemOverflow) => 2,
         Some(MeasureError::RegisterOverflow) => 3,
     });
+    match m.failure {
+        None => w.put_u8(0),
+        Some(MeasureFailure::Transient { attempt, slot }) => {
+            w.put_u8(1);
+            w.put_u32(attempt);
+            w.put_u32(slot);
+        }
+        Some(MeasureFailure::Timeout { attempt, slot }) => {
+            w.put_u8(2);
+            w.put_u32(attempt);
+            w.put_u32(slot);
+        }
+        Some(MeasureFailure::Brownout { attempt, slot }) => {
+            w.put_u8(3);
+            w.put_u32(attempt);
+            w.put_u32(slot);
+        }
+        Some(MeasureFailure::Quarantined { attempts, slot }) => {
+            w.put_u8(4);
+            w.put_u32(attempts);
+            w.put_u32(slot);
+        }
+    }
     w.put_f64(m.gflops);
 }
 
@@ -1011,8 +1082,16 @@ fn get_measurement(r: &mut SnapReader) -> Result<Measurement, SnapshotError> {
         3 => Some(MeasureError::RegisterOverflow),
         _ => return Err(SnapshotError::Corrupt("measure error tag")),
     };
+    let failure = match r.get_u8()? {
+        0 => None,
+        1 => Some(MeasureFailure::Transient { attempt: r.get_u32()?, slot: r.get_u32()? }),
+        2 => Some(MeasureFailure::Timeout { attempt: r.get_u32()?, slot: r.get_u32()? }),
+        3 => Some(MeasureFailure::Brownout { attempt: r.get_u32()?, slot: r.get_u32()? }),
+        4 => Some(MeasureFailure::Quarantined { attempts: r.get_u32()?, slot: r.get_u32()? }),
+        _ => return Err(SnapshotError::Corrupt("measure failure tag")),
+    };
     let gflops = r.get_f64()?;
-    Ok(Measurement { config, runtime_ms, error, gflops })
+    Ok(Measurement { config, runtime_ms, error, gflops, failure })
 }
 
 /// Serialize the in-flight pipeline queue (planned-but-unabsorbed batches
@@ -1020,7 +1099,7 @@ fn get_measurement(r: &mut SnapReader) -> Result<Measurement, SnapshotError> {
 /// resume continues *mid-pipeline* instead of replanning.
 pub(crate) fn snap_save_queue(w: &mut SnapWriter, queue: &VecDeque<QueuedBatch>) {
     w.put_usize(queue.len());
-    for (batch, results, secs) in queue {
+    for (batch, results, secs, report) in queue {
         w.put_usize(batch.iter);
         w.put_configs(&batch.configs);
         w.put_usize(batch.sampler_k);
@@ -1034,6 +1113,15 @@ pub(crate) fn snap_save_queue(w: &mut SnapWriter, queue: &VecDeque<QueuedBatch>)
             put_measurement(w, m);
         }
         w.put_f64(*secs);
+        w.put_usize(report.slot_failures.len());
+        for &(slot, n) in &report.slot_failures {
+            w.put_u32(slot);
+            w.put_u32(n);
+        }
+        w.put_u32(report.retries);
+        w.put_u32(report.quarantined);
+        w.put_f64(report.retry_s);
+        w.put_u32(report.max_attempt);
     }
 }
 
@@ -1057,6 +1145,20 @@ pub(crate) fn snap_restore_queue(
             results.push(get_measurement(r)?);
         }
         let secs = r.get_f64()?;
+        let n_slots = r.get_usize()?;
+        let mut slot_failures = Vec::with_capacity(n_slots.min(1024));
+        for _ in 0..n_slots {
+            let slot = r.get_u32()?;
+            let failures = r.get_u32()?;
+            slot_failures.push((slot, failures));
+        }
+        let report = BatchFaultReport {
+            slot_failures,
+            retries: r.get_u32()?,
+            quarantined: r.get_u32()?,
+            retry_s: r.get_f64()?,
+            max_attempt: r.get_u32()?,
+        };
         queue.push_back((
             PlannedBatch {
                 iter,
@@ -1070,6 +1172,7 @@ pub(crate) fn snap_restore_queue(
             },
             results,
             secs,
+            report,
         ));
     }
     Ok(queue)
@@ -1166,17 +1269,17 @@ pub(crate) fn tune_with_coordinator_resumable(
             match tuner.plan() {
                 Some(batch) => {
                     let prev = tuner.obs_enter();
-                    let (results, secs) =
-                        coordinator.measure_timed(&tuner.space, &batch.configs);
+                    let (results, secs, report) =
+                        coordinator.measure_timed_faults(&tuner.space, &batch.configs);
                     tuner.obs_exit(prev);
-                    queue.push_back((batch, results, secs));
+                    queue.push_back((batch, results, secs, report));
                 }
                 None => break,
             }
         }
         match queue.pop_front() {
-            Some((batch, results, secs)) => {
-                tuner.absorb(batch, results, secs);
+            Some((batch, results, secs, report)) => {
+                tuner.absorb_faults(batch, results, secs, &report);
                 if let Some(hook) = on_round.as_deref_mut() {
                     hook(&tuner, &queue);
                 }
@@ -1288,6 +1391,7 @@ mod tests {
                 runtime_ms: Some(1.0),
                 error: None,
                 gflops: 1.0,
+                failure: None,
             })
             .collect();
         results[0].gflops = f64::NAN; // poisoned fitness, "successful" run

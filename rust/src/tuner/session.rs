@@ -44,9 +44,9 @@ use super::{
     transfer_mode_tag, tune_with_coordinator_resumable, tune_with_coordinator_transfer,
     MethodSpec, QueuedBatch, TaskTuner, TuneResult, TunerConfig,
 };
-use crate::coordinator::MeasureCoordinator;
+use crate::coordinator::{MeasureCoordinator, RetryPolicy};
 use crate::runtime::Backend;
-use crate::sim::Measurer;
+use crate::sim::{FaultConfig, FaultInjector, Measurer};
 use crate::snapshot::{self, SnapshotError};
 use crate::transfer::{curriculum_order, TransferConfig, TransferRegistry};
 use crate::util::rng::hash64;
@@ -89,6 +89,14 @@ pub struct SessionConfig {
     /// independent); only wall-clock changes. Default:
     /// [`crate::util::parallel::default_threads`].
     pub threads: usize,
+    /// Fault-injection / retry / quarantine policy
+    /// ([`crate::sim::FaultProfile::Off`] by default, which keeps the
+    /// measurement path bit-identical to the fault-free pipeline). When
+    /// enabled, the measurer is wrapped in a [`FaultInjector`] and the
+    /// shared coordinator retries with exponential backoff before
+    /// quarantining; persistently failing device slots are ejected from the
+    /// wall model (graceful degradation).
+    pub faults: FaultConfig,
 }
 
 impl Default for SessionConfig {
@@ -101,6 +109,7 @@ impl Default for SessionConfig {
             budget_shares: None,
             transfer: TransferConfig::off(),
             threads: crate::util::parallel::default_threads(),
+            faults: FaultConfig::default(),
         }
     }
 }
@@ -308,6 +317,13 @@ pub(crate) fn session_fingerprint(
     h = mix(h, scfg.transfer.topk as u64);
     h = mix(h, scfg.transfer.max_pairs as u64);
     h = mix_f64(h, scfg.transfer.min_similarity);
+    // fault plan: a different profile/seed/retry policy is a different
+    // result stream, so a resume under changed fault knobs must be refused
+    h = mix_str(h, scfg.faults.profile.as_str());
+    h = mix(h, scfg.faults.fault_seed);
+    h = mix(h, scfg.faults.retry_max as u64);
+    h = mix_f64(h, scfg.faults.backoff_base_s);
+    h = mix_f64(h, scfg.faults.measure_timeout_s);
     h
 }
 
@@ -490,7 +506,27 @@ fn run_session(
     let depth = scfg.pipeline_depth.max(1);
     let device_slots = scfg.device_slots.max(1);
     let workers = scfg.tuner.measure_workers.max(device_slots);
-    let coordinator = MeasureCoordinator::new(measurer, workers);
+    // With faults off the bare measurer is used directly and the retry
+    // policy stays at its no-retry default — that path is bit-identical to
+    // (and allocation-free like) the fault-free pipeline. When enabled, the
+    // injector's fault plan is a pure function of (fault_seed, config,
+    // attempt), so the schedule replays identically at any `--threads`.
+    let injector;
+    let measurer: &dyn Measurer = if scfg.faults.profile.is_off() {
+        measurer
+    } else {
+        injector = FaultInjector::new(measurer, scfg.faults, device_slots as u32);
+        &injector
+    };
+    let coordinator = if scfg.faults.profile.is_off() {
+        MeasureCoordinator::new(measurer, workers)
+    } else {
+        MeasureCoordinator::new(measurer, workers).with_retry(RetryPolicy {
+            max_attempts: 1 + scfg.faults.retry_max,
+            backoff_base_s: scfg.faults.backoff_base_s,
+            ..Default::default()
+        })
+    };
     let tp = scfg.task_parallelism.max(1).min(n.max(1));
 
     if (ckpt.is_some() || resume.is_some()) && tp > 1 {
@@ -747,8 +783,14 @@ fn run_session(
     // enabled), and the walls map back to original task indices.
     let deltas: Vec<Vec<IterCost>> =
         order.iter().map(|&i| iteration_deltas(&results[i])).collect();
+    // Graceful device-slot degradation: derive slot health from the
+    // checkpointed per-iteration fault reports and stop routing bookings to
+    // a persistently failing slot. Derived purely from the recorded batch
+    // stream (in execution order), so the ejection points are deterministic
+    // at any --threads and survive checkpoint/resume exactly.
+    let ejects = derive_slot_ejects(&order, &results, device_slots);
     let (wall_s, task_walls, iter_walls) =
-        schedule_wall(&deltas, &order, tp, device_slots, depth);
+        schedule_wall(&deltas, &order, tp, device_slots, depth, &ejects);
     for ((&i, w), iw) in order.iter().zip(task_walls).zip(iter_walls) {
         let r = &mut results[i];
         r.clock.wall_s = w;
@@ -756,8 +798,80 @@ fn run_session(
             rec.clock.wall_s = t;
         }
     }
+    if !ejects.is_empty() {
+        crate::obs::metrics::add(
+            crate::obs::metrics::Counter::SlotEjects,
+            ejects.len() as u64,
+        );
+        for &(slot, booking) in &ejects {
+            crate::obs::emit_serial(
+                crate::obs::LANE_DEVICE0 + slot as u32,
+                "device",
+                "eject",
+                crate::obs::us(wall_s),
+                0,
+                &[("slot", slot as f64), ("n", booking as f64)],
+            );
+        }
+    }
 
-    Ok(e2e::aggregate(model_name, method, tasks, results, Some(wall_s)))
+    let mut agg = e2e::aggregate(model_name, method, tasks, results, Some(wall_s));
+    agg.ejected_slots = ejects.iter().map(|&(s, _)| s).collect();
+    Ok(agg)
+}
+
+/// Consecutive failed measurement attempts a device slot can accumulate
+/// (across batches, reset by any clean batch) before it is ejected.
+const EJECT_CONSECUTIVE_FAILURES: u32 = 6;
+
+/// Walk the recorded batch stream in execution order and decide which
+/// device slots to eject, and when. A slot's failure streak grows by the
+/// failed attempts charged to it each batch and resets on a batch where it
+/// had none; crossing [`EJECT_CONSECUTIVE_FAILURES`] ejects it — unless it
+/// is the last survivor, which always stays in service so the session still
+/// completes. Returns `(slot, bookings_before_eject)` pairs for
+/// [`schedule_wall`]: the replay stops routing device bookings to the slot
+/// once that many have been dispatched session-wide.
+fn derive_slot_ejects(
+    order: &[usize],
+    results: &[TuneResult],
+    device_slots: usize,
+) -> Vec<(usize, usize)> {
+    if device_slots < 2 {
+        return Vec::new();
+    }
+    let mut streak = vec![0u32; device_slots];
+    let mut ejected = vec![false; device_slots];
+    let mut out = Vec::new();
+    let mut booking = 0usize;
+    for &i in order {
+        for it in &results[i].iterations {
+            booking += 1;
+            let mut alive = ejected.iter().filter(|&&e| !e).count();
+            for s in 0..device_slots {
+                if ejected[s] {
+                    continue;
+                }
+                let failed = it
+                    .slot_failures
+                    .iter()
+                    .find(|&&(slot, _)| slot as usize == s)
+                    .map(|&(_, f)| f)
+                    .unwrap_or(0);
+                if failed > 0 {
+                    streak[s] = streak[s].saturating_add(failed);
+                } else {
+                    streak[s] = 0;
+                }
+                if streak[s] >= EJECT_CONSECUTIVE_FAILURES && alive > 1 {
+                    ejected[s] = true;
+                    alive -= 1;
+                    out.push((s, booking));
+                }
+            }
+        }
+    }
+    out
 }
 
 /// (plan_host_s, measure_s, absorb_host_s) of one tuner iteration: the
@@ -806,12 +920,18 @@ fn iteration_deltas(r: &TuneResult) -> Vec<IterCost> {
 /// makes the serial sequence counter deterministic. `labels[i]` is the
 /// original task index of `per_task[i]` (the replay receives tasks in
 /// execution order).
+/// `ejects` is the graceful-degradation schedule from
+/// [`derive_slot_ejects`]: `(slot, bookings_before_eject)` pairs — once
+/// that many bookings have been dispatched session-wide, the slot stops
+/// taking new ones and the survivors absorb the load. Empty = no
+/// degradation (the fault-free schedule, bit-identical to before).
 fn schedule_wall(
     per_task: &[Vec<IterCost>],
     labels: &[usize],
     task_parallelism: usize,
     device_slots: usize,
     depth: usize,
+    ejects: &[(usize, usize)],
 ) -> (f64, Vec<f64>, Vec<Vec<f64>>) {
     struct TaskSim<'a> {
         task: usize,
@@ -871,6 +991,7 @@ fn schedule_wall(
     let depth = depth.max(1);
     let n = per_task.len();
     let mut slots = vec![0.0f64; device_slots.max(1)];
+    let mut booked = 0usize;
     let mut walls = vec![0.0f64; n];
     let mut iter_walls: Vec<Vec<f64>> = vec![Vec::new(); n];
     let mut makespan = 0.0f64;
@@ -922,7 +1043,23 @@ fn schedule_wall(
         }
         // PANIC: same invariant — only lanes with a pending booking survive
         let req = active[best].0.unwrap();
-        let si = argmin(&slots);
+        // least-loaded *surviving* slot: an ejected slot stops taking
+        // bookings past its eject point. The derivation never ejects the
+        // last survivor, but fall back to every slot if it somehow did —
+        // degraded service beats a stuck schedule.
+        let si = if ejects.is_empty() {
+            argmin(&slots)
+        } else {
+            let mut best_slot: Option<usize> = None;
+            for s in 0..slots.len() {
+                let gone = ejects.iter().any(|&(es, ab)| es == s && booked >= ab);
+                if !gone && best_slot.map(|b| slots[s] < slots[b]).unwrap_or(true) {
+                    best_slot = Some(s);
+                }
+            }
+            best_slot.unwrap_or_else(|| argmin(&slots))
+        };
+        booked += 1;
         let device_start = if slots[si] > req { slots[si] } else { req };
         let sim = &mut active[best].1;
         let measure_end = device_start + sim.iters[sim.next].1;
@@ -1209,8 +1346,8 @@ mod tests {
         // of batch i, while absorb time stays serial
         let iters = vec![(10.0, 100.0, 1.0); 4];
         let (serial_wall, _, serial_iter_walls) =
-            schedule_wall(&[iters.clone()], &[0], 1, 1, 1);
-        let (pipe_wall, _, _) = schedule_wall(&[iters], &[0], 1, 1, 2);
+            schedule_wall(&[iters.clone()], &[0], 1, 1, 1, &[]);
+        let (pipe_wall, _, _) = schedule_wall(&[iters], &[0], 1, 1, 2, &[]);
         // per-iteration walls are monotone absorb-completion times
         assert_eq!(serial_iter_walls[0].len(), 4);
         assert!(serial_iter_walls[0].windows(2).all(|w| w[0] < w[1]));
@@ -1229,8 +1366,8 @@ mod tests {
         // empty input, so pin that the slot vector stays non-empty even for
         // a (nonsensical) zero-slot request — schedule_wall clamps it to 1
         let iters = vec![(1.0, 2.0, 0.5); 3];
-        let (zero, walls_zero, _) = schedule_wall(&[iters.clone()], &[0], 1, 0, 1);
-        let (one, walls_one, _) = schedule_wall(&[iters], &[0], 1, 1, 1);
+        let (zero, walls_zero, _) = schedule_wall(&[iters.clone()], &[0], 1, 0, 1, &[]);
+        let (one, walls_one, _) = schedule_wall(&[iters], &[0], 1, 1, 1, &[]);
         assert_eq!(zero.to_bits(), one.to_bits());
         assert_eq!(walls_zero, walls_one);
     }
@@ -1241,14 +1378,94 @@ mod tests {
         // the makespan cannot drop below the summed device time
         let iters = vec![(1.0, 50.0, 1.0); 3];
         let (one_slot, walls, _) =
-            schedule_wall(&[iters.clone(), iters.clone()], &[0, 1], 2, 1, 1);
+            schedule_wall(&[iters.clone(), iters.clone()], &[0, 1], 2, 1, 1, &[]);
         assert!(one_slot >= 300.0, "{one_slot}");
         // FCFS slot service: contention delays BOTH tasks (interleaved
         // batches), rather than letting task 0 run as if uncontended and
         // pushing all the waiting onto task 1
         assert!(walls[0] > 200.0 && walls[1] > 200.0, "{walls:?}");
         // two slots: tasks truly overlap
-        let (two_slots, _, _) = schedule_wall(&[iters.clone(), iters], &[0, 1], 2, 2, 1);
+        let (two_slots, _, _) =
+            schedule_wall(&[iters.clone(), iters], &[0, 1], 2, 2, 1, &[]);
         assert!(two_slots < one_slot - 100.0, "{two_slots} vs {one_slot}");
+    }
+
+    #[test]
+    fn wall_model_ejected_slot_stops_taking_bookings() {
+        // two parallel tasks over two slots: ejecting slot 1 right away
+        // must serialize everything onto slot 0, reproducing the one-slot
+        // makespan; an empty eject list reproduces the two-slot schedule
+        let iters = vec![(1.0, 50.0, 1.0); 3];
+        let (two_free, _, _) =
+            schedule_wall(&[iters.clone(), iters.clone()], &[0, 1], 2, 2, 1, &[]);
+        let (degraded, walls, _) =
+            schedule_wall(&[iters.clone(), iters.clone()], &[0, 1], 2, 2, 1, &[(1, 0)]);
+        let (one_slot, _, _) =
+            schedule_wall(&[iters.clone(), iters.clone()], &[0, 1], 2, 1, 1, &[]);
+        assert!(degraded > two_free + 50.0, "{degraded} vs {two_free}");
+        assert_eq!(degraded.to_bits(), one_slot.to_bits());
+        assert!(walls.iter().all(|&w| w > 0.0));
+        // a mid-stream eject point degrades less than an immediate one
+        let (late, _, _) =
+            schedule_wall(&[iters.clone(), iters], &[0, 1], 2, 2, 1, &[(1, 4)]);
+        assert!(late <= degraded, "{late} vs {degraded}");
+    }
+
+    #[test]
+    fn slot_eject_derivation_streaks_and_spares_last_survivor() {
+        use crate::tuner::IterationRecord;
+        let rec = |slot_failures: Vec<(u32, u32)>| IterationRecord {
+            iter: 0,
+            n_measured: 8,
+            cum_measured: 8,
+            best_gflops: 1.0,
+            best_runtime_ms: 1.0,
+            steps: 0,
+            steps_to_converge: 0,
+            sampler_k: 0,
+            plan_host_s: 0.0,
+            absorb_host_s: 0.0,
+            slot_failures,
+            quarantined: 0,
+            clock: Default::default(),
+        };
+        let result = |iters: Vec<IterationRecord>| TuneResult {
+            task_id: "t".into(),
+            method: "m".into(),
+            best_config: None,
+            best_runtime_ms: 1.0,
+            best_gflops: 1.0,
+            n_measurements: 8,
+            clock: Default::default(),
+            iterations: iters,
+            last_trajectory: Vec::new(),
+            transfer: None,
+        };
+        // slot 1 fails 3 attempts/batch: streak crosses 6 on batch 2
+        let failing = result(vec![
+            rec(vec![(1, 3)]),
+            rec(vec![(1, 3)]),
+            rec(vec![(1, 3)]),
+        ]);
+        assert_eq!(derive_slot_ejects(&[0], &[failing], 2), vec![(1, 2)]);
+        // a clean batch in between resets the streak — no eject
+        let recovering = result(vec![
+            rec(vec![(1, 3)]),
+            rec(vec![]),
+            rec(vec![(1, 3)]),
+        ]);
+        assert!(derive_slot_ejects(&[0], &[recovering], 2).is_empty());
+        // single-slot sessions never eject (nothing to degrade onto)
+        let single = result(vec![rec(vec![(0, 9)]), rec(vec![(0, 9)])]);
+        assert!(derive_slot_ejects(&[0], &[single], 1).is_empty());
+        // both slots failing hard: the first to cross goes, the survivor
+        // is spared even with an unbounded streak
+        let both = result(vec![
+            rec(vec![(0, 7), (1, 7)]),
+            rec(vec![(0, 7), (1, 7)]),
+            rec(vec![(0, 7), (1, 7)]),
+        ]);
+        let ejects = derive_slot_ejects(&[0], &[both], 2);
+        assert_eq!(ejects, vec![(0, 1)]);
     }
 }

@@ -1,0 +1,141 @@
+//! Fault-tolerance determinism (the fault-injection tentpole's pins):
+//!
+//!  1. `--faults off` is bit-identical to the fault-free pipeline at any
+//!     `--threads` — the wrapper and retry layer add nothing when disabled.
+//!  2. A fixed `--fault-seed` replays the exact same fault schedule —
+//!     results AND chrome trace — at any `--threads`: faults are a pure
+//!     function of (seed, config, attempt), never of host scheduling.
+//!  3. A chaos session under the standard profile (2 lanes, 2 device
+//!     slots) completes on the surviving slot, with quarantined configs
+//!     and an ejected slot reported.
+//!
+//! The obs sink is process-global, so this binary keeps everything inside
+//! one `#[test]` (same discipline as `rust/tests/trace.rs`).
+
+mod common;
+
+use common::{assert_tasks_bitwise_equal, measurer, quick_cfg_trials};
+use release::obs;
+use release::sim::{FaultConfig, FaultProfile};
+use release::tuner::e2e::ModelTuneResult;
+use release::tuner::session::{tune_model_session, SessionConfig};
+use release::tuner::MethodSpec;
+use release::util::parallel::{set_threads, thread_knob_guard};
+
+fn faulted_scfg(threads: usize) -> SessionConfig {
+    SessionConfig {
+        tuner: quick_cfg_trials(11, 48),
+        device_slots: 2,
+        threads,
+        faults: FaultConfig {
+            profile: FaultProfile::Standard,
+            fault_seed: 7,
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+fn run(scfg: &SessionConfig) -> ModelTuneResult {
+    tune_model_session("alexnet", &measurer(5), MethodSpec::sa_as(), scfg, None)
+        .expect("session completes")
+}
+
+#[test]
+fn fault_layer_is_deterministic_and_degrades_gracefully() {
+    let _knob = thread_knob_guard();
+
+    // --- 1. faults off: bit-identical to the bare pipeline at any --threads
+    let base = SessionConfig {
+        tuner: quick_cfg_trials(11, 48),
+        threads: 1,
+        ..Default::default()
+    };
+    let bare = run(&base);
+    assert_eq!(bare.n_quarantined, 0);
+    assert!(bare.ejected_slots.is_empty());
+    assert!(bare.tasks.iter().all(|t| t
+        .iterations
+        .iter()
+        .all(|it| it.slot_failures.is_empty() && it.quarantined == 0)));
+    for threads in [2usize, 4] {
+        let mut scfg = base.clone();
+        scfg.threads = threads;
+        assert_tasks_bitwise_equal(&bare, &run(&scfg));
+    }
+
+    // --- 2. fixed fault seed: bit-identical results at any --threads
+    let a = run(&faulted_scfg(1));
+    let b = run(&faulted_scfg(2));
+    let c = run(&faulted_scfg(4));
+    assert_tasks_bitwise_equal(&a, &b);
+    assert_tasks_bitwise_equal(&a, &c);
+    assert_eq!(a.n_quarantined, b.n_quarantined);
+    assert_eq!(a.ejected_slots, b.ejected_slots);
+    assert_eq!(a.ejected_slots, c.ejected_slots);
+    // the fault plan actually fired — the pins above are not vacuous
+    assert!(
+        a.tasks
+            .iter()
+            .any(|t| t.iterations.iter().any(|it| !it.slot_failures.is_empty())),
+        "standard profile at seed 7 recorded no slot failures"
+    );
+
+    // a different fault seed is a different (but equally valid) bad day
+    let mut other = faulted_scfg(1);
+    other.faults.fault_seed = 8;
+    let d = run(&other);
+    let same = a.n_quarantined == d.n_quarantined
+        && a
+            .tasks
+            .iter()
+            .zip(&d.tasks)
+            .all(|(x, y)| x.best_runtime_ms.to_bits() == y.best_runtime_ms.to_bits());
+    assert!(!same, "the fault seed must steer the fault plan");
+
+    // --- 3. chaos completion: 2 lanes + 2 slots under standard faults ends
+    // with quarantines, one ejected slot, and every task still tuned
+    let mut chaos = faulted_scfg(1);
+    chaos.tuner = quick_cfg_trials(3, 96);
+    chaos.task_parallelism = 2;
+    chaos.pipeline_depth = 2;
+    let r = run(&chaos);
+    for t in &r.tasks {
+        assert!(t.best_gflops > 0.0, "{} found nothing under faults", t.task_id);
+        assert!(t.best_runtime_ms.is_finite(), "{}", t.task_id);
+    }
+    assert!(r.n_quarantined > 0, "chaos run quarantined nothing");
+    assert_eq!(r.ejected_slots.len(), 1, "{:?}", r.ejected_slots);
+    assert!(r.wall_s > 0.0 && r.wall_s.is_finite());
+
+    // --- trace determinism: same fault seed => byte-identical trace at
+    // any --threads, with the retry + eject spans recorded
+    let t1 = traced_faulted_run(1);
+    let t2 = traced_faulted_run(2);
+    let t4 = traced_faulted_run(4);
+    set_threads(0);
+    assert_eq!(t1, t2, "faulted trace diverges between threads 1 and 2");
+    assert_eq!(t1, t4, "faulted trace diverges between threads 1 and 4");
+    assert!(
+        t1.contains("\"cat\":\"measure\",\"name\":\"retry\""),
+        "retry spans missing from the faulted trace"
+    );
+    assert!(
+        t1.contains("\"cat\":\"device\",\"name\":\"eject\""),
+        "eject span missing from the faulted trace"
+    );
+}
+
+/// One serial faulted session with tracing on; returns the chrome
+/// rendering. Serial schedule: the trace contract covers deterministic
+/// runs, and `--threads` must not perturb a single byte of it.
+fn traced_faulted_run(threads: usize) -> String {
+    let mut scfg = faulted_scfg(threads);
+    scfg.task_parallelism = 1;
+    obs::enable();
+    let r = run(&scfg);
+    obs::disable();
+    assert_eq!(obs::dropped(), 0, "sink overflow would truncate the trace");
+    assert!(r.n_measurements > 0);
+    obs::render_chrome_jsonl(&obs::drain())
+}

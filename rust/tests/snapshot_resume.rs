@@ -11,6 +11,7 @@ mod common;
 
 use common::{assert_tasks_bitwise_equal, measurer, native_backend, quick_cfg_trials};
 use release::runtime::Backend;
+use release::sim::{FaultConfig, FaultProfile};
 use release::snapshot::SnapshotError;
 use release::transfer::{TransferConfig, TransferMode};
 use release::tuner::e2e::ModelTuneResult;
@@ -188,6 +189,101 @@ fn transfer_both_sessions_resume_bit_identically() {
         2,
         &reference,
     );
+}
+
+fn faulted_scfg(trials: usize, threads: usize) -> SessionConfig {
+    let mut scfg = serial_scfg(trials, threads);
+    scfg.device_slots = 2;
+    scfg.faults = FaultConfig {
+        profile: FaultProfile::Standard,
+        fault_seed: 7,
+        ..Default::default()
+    };
+    scfg
+}
+
+#[test]
+fn faulted_sessions_resume_bit_identically() {
+    // Snapshot a session mid-bad-day and resume: retry/backoff accounting,
+    // quarantined configs (their failure causes included), and the
+    // per-iteration slot-failure columns that drive slot ejection must all
+    // come back exactly — the resumed run's degradation story is the
+    // uninterrupted run's, bit for bit.
+    let method = MethodSpec::sa_as();
+    let scfg = faulted_scfg(48, 2);
+    let reference = run_plain(method, &scfg, None);
+    // the fault plan actually fired, so the equivalence below is not
+    // vacuously comparing two clean runs
+    assert!(
+        reference.n_quarantined > 0
+            || reference
+                .tasks
+                .iter()
+                .any(|t| t.iterations.iter().any(|it| !it.slot_failures.is_empty())),
+        "standard profile at fault seed 7 left no failure evidence"
+    );
+    assert_checkpoint_resume_equivalent("faulted", method, &scfg, None, 2, &reference);
+}
+
+#[test]
+fn changed_fault_plan_is_refused_by_the_fingerprint() {
+    // A snapshot records the fault plan it was taken under; resuming into
+    // a different plan (another seed, or faults disabled) would splice two
+    // incompatible measurement histories — the fingerprint must refuse.
+    let method = MethodSpec::autotvm();
+    let scfg = faulted_scfg(32, 1);
+    let path = snap_path("fault-plan");
+    let _ = std::fs::remove_file(&path);
+    let spec = CheckpointSpec::new(path.clone(), 1);
+    tune_model_session_checkpointed(
+        MODEL,
+        &measurer(MEAS_SEED),
+        method,
+        &scfg,
+        None,
+        Some(&spec),
+        None,
+    )
+    .expect("checkpointed faulted session");
+
+    let resume_into = |scfg: &SessionConfig| {
+        tune_model_session_checkpointed(
+            MODEL,
+            &measurer(MEAS_SEED),
+            method,
+            scfg,
+            None,
+            None,
+            Some(&path),
+        )
+        .map(|_| ())
+    };
+
+    let mut reseeded = scfg.clone();
+    reseeded.faults.fault_seed = 8;
+    let err = resume_into(&reseeded).unwrap_err();
+    assert!(
+        matches!(
+            err,
+            SessionError::Snapshot(SnapshotError::FingerprintMismatch { .. })
+        ),
+        "fault seed change: {err:?}"
+    );
+
+    let mut disabled = scfg.clone();
+    disabled.faults = FaultConfig::default();
+    let err = resume_into(&disabled).unwrap_err();
+    assert!(
+        matches!(
+            err,
+            SessionError::Snapshot(SnapshotError::FingerprintMismatch { .. })
+        ),
+        "faults off: {err:?}"
+    );
+
+    // the matching plan still resumes
+    resume_into(&scfg).expect("matching fault plan resumes");
+    let _ = std::fs::remove_file(&path);
 }
 
 #[test]
