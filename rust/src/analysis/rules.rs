@@ -102,9 +102,9 @@ pub const ALLOWLIST: &[AllowEntry] = &[
     },
     AllowEntry {
         rule: "D3",
-        file_suffix: "rust/src/tuner/session.rs",
+        file_suffix: "rust/src/tuner/session/engine.rs",
         ident: "thread",
-        reason: "scoped task-parallel tuner threads; results keyed to task order; pinned in tests",
+        reason: "scoped task-parallel lane workers; results keyed to task order; pinned in tests",
     },
     AllowEntry {
         rule: "O1",

@@ -6,6 +6,7 @@
 //! release tune --layer L8 [--method autotvm] ...
 //! release experiment <fig2|fig3|fig5|fig6|fig7|fig8|fig9|transfer|all> [--quick] [--seed 0]
 //! release report trace out.jsonl
+//! release snapshot evict session.snap 2 lane2.snap
 //! ```
 
 use crate::coordinator::{MeasureCoordinator, RetryPolicy};
@@ -14,7 +15,8 @@ use crate::runtime::{select_backend, Backend, BackendKind};
 use crate::sim::{FaultConfig, FaultInjector, FaultProfile, SimMeasurer};
 use crate::transfer::{TransferConfig, TransferMode};
 use crate::tuner::session::{
-    tune_model_session_checkpointed, CheckpointSpec, SessionConfig, SessionError,
+    evict_lane, tune_model_session_checkpointed, CheckpointSpec, SessionConfig,
+    SessionError, SlotPolicy,
 };
 use crate::tuner::{tune, tune_with_coordinator, MethodSpec, TunerConfig};
 use crate::workload::zoo;
@@ -30,6 +32,10 @@ USAGE:
   release tune --layer <L1..L8> [options]
   release experiment <fig2|fig3|fig5|fig6|fig7|fig8|fig9|transfer|all> [--quick] [--seed N]
   release report trace <out.jsonl>   summarize a recorded trace
+  release snapshot evict <session.snap> <task-index> <out.lane>
+                                     extract one in-flight lane from a
+                                     session snapshot into a standalone
+                                     lane file (migration primitive)
 
 OBSERVABILITY (any tune/experiment command):
   --trace <out.jsonl>  record a deterministic chrome://tracing file of the
@@ -55,16 +61,23 @@ SESSION OPTIONS (model tuning):
   --pipeline-depth N     1 = serial, 2 = overlap search with measurement
                          (default: 2 when task-parallelism > 1, else 1)
   --budget-shares W,...  per-task trial shares, cycled over tasks and
-                         normalized to keep the total pool (default: even)
+                         normalized to keep the total pool (default: even;
+                         more shares than the model has tasks is an error)
+  --slot-policy <fair|fcfs>
+                         device-slot scheduling in the wall replay: fair =
+                         weighted fair share by budget share (default),
+                         fcfs = legacy first-come-first-served
   --transfer <off|model|policy|both>
                          cross-task transfer: completed tasks warm-start
                          queued siblings (cost-model pairs and/or PPO
                          policy); off = bit-identical baseline (default)
   --transfer-topk N      donors consulted per task (default: 3)
 
-CHECKPOINT / RESUME (model tuning, requires --task-parallelism 1):
+CHECKPOINT / RESUME (model tuning, any --task-parallelism):
   --checkpoint <path>       write a resumable snapshot of the whole session
-                            (atomic: temp file + rename) while tuning
+                            (atomic: temp file + rename) while tuning; with
+                            task-parallelism > 1, concurrent lanes quiesce
+                            at their next round boundary before the write
   --checkpoint-every N      rounds between checkpoint writes (default: 8)
   --resume <path>           continue a session from a snapshot; results and
                             traces are bit-identical to an uninterrupted
@@ -132,6 +145,7 @@ pub fn run(args: &[String]) -> i32 {
         "tune" => cmd_tune(&flags),
         "experiment" => cmd_experiment(&pos[1..], &flags),
         "report" => cmd_report(&pos[1..]),
+        "snapshot" => cmd_snapshot(&pos[1..]),
         other => {
             eprintln!("unknown command {other:?}\n{USAGE}");
             2
@@ -187,6 +201,47 @@ fn cmd_report(pos: &[String]) -> i32 {
         }
         _ => {
             eprintln!("unknown report (want: trace <file.jsonl>)\n{USAGE}");
+            2
+        }
+    }
+}
+
+/// `release snapshot evict <session.snap> <task-index> <out.lane>` — copy
+/// one in-flight lane out of a session snapshot into a standalone lane
+/// file without disturbing the session file (the daemon's migration
+/// primitive).
+fn cmd_snapshot(pos: &[String]) -> i32 {
+    const EVICT_USAGE: &str =
+        "usage: release snapshot evict <session.snap> <task-index> <out.lane>";
+    match pos.first().map(String::as_str) {
+        Some("evict") => {
+            let (Some(session), Some(index), Some(out)) =
+                (pos.get(1), pos.get(2), pos.get(3))
+            else {
+                eprintln!("{EVICT_USAGE}");
+                return 2;
+            };
+            let Ok(task_index) = index.parse::<usize>() else {
+                eprintln!("task-index must be an integer\n{EVICT_USAGE}");
+                return 2;
+            };
+            match evict_lane(
+                std::path::Path::new(session),
+                task_index,
+                std::path::Path::new(out),
+            ) {
+                Ok(()) => {
+                    println!("lane {task_index} evicted from {session} to {out}");
+                    0
+                }
+                Err(e) => {
+                    eprintln!("cannot evict lane {task_index} from {session}: {e}");
+                    1
+                }
+            }
+        }
+        _ => {
+            eprintln!("unknown snapshot command (want: evict)\n{USAGE}");
             2
         }
     }
@@ -335,6 +390,13 @@ fn session_config(flags: &HashMap<String, String>, tuner: TunerConfig) -> Sessio
     if let Some(k) = parse("transfer-topk") {
         transfer.topk = k.max(1);
     }
+    let slot_policy = flags
+        .get("slot-policy")
+        .map(|v| {
+            SlotPolicy::parse(v)
+                .unwrap_or_else(|| panic!("--slot-policy must be fair|fcfs"))
+        })
+        .unwrap_or_default();
     let threads =
         parse_threads_flag(flags).unwrap_or_else(crate::util::parallel::default_threads);
     SessionConfig {
@@ -343,6 +405,7 @@ fn session_config(flags: &HashMap<String, String>, tuner: TunerConfig) -> Sessio
         device_slots,
         pipeline_depth,
         budget_shares,
+        slot_policy,
         transfer,
         threads,
         faults: fault_config(flags),
@@ -433,14 +496,27 @@ fn cmd_tune(flags: &HashMap<String, String>) -> i32 {
     }
 
     let model = flags.get("model").map(String::as_str).unwrap_or("resnet18");
-    if zoo::model_tasks(model).is_none() {
+    let Some(model_tasks) = zoo::model_tasks(model) else {
         eprintln!(
             "unknown --model {model} (available: {})",
             zoo::MODELS.join(", ")
         );
         return 2;
-    }
+    };
     let scfg = session_config(flags, cfg);
+    // fewer shares than tasks cycle; MORE shares than tasks is a typo'd
+    // flag (the surplus would be silently dropped) — reject it up front
+    if let Some(shares) = &scfg.budget_shares {
+        if shares.len() > model_tasks.len() {
+            eprintln!(
+                "--budget-shares has {} entries but {model} has only {} tasks; \
+                 pass at most one share per task (shorter lists cycle)",
+                shares.len(),
+                model_tasks.len()
+            );
+            return 2;
+        }
+    }
     if scfg.transfer.mode.policy_enabled()
         && method.searcher != crate::tuner::SearcherKind::Rl
     {
@@ -719,17 +795,55 @@ mod tests {
     }
 
     #[test]
-    fn checkpoint_under_task_parallelism_is_rejected() {
-        // checkpointing is defined for the serial task schedule only; the
-        // typed Unsupported error must arrive before any tuning happens
+    fn checkpoint_write_failure_under_task_parallelism_is_a_graceful_error() {
+        // checkpointing now works at any task parallelism; a failing write
+        // (unwritable directory) must surface as a message + exit 1 after
+        // the workers join, never a panic or a silent success
         let args: Vec<String> = [
             "tune", "--model", "alexnet", "--method", "autotvm", "--trials", "8",
-            "--task-parallelism", "2", "--checkpoint", "/nonexistent/dir/s.snap",
+            "--task-parallelism", "2", "--checkpoint-every", "1", "--checkpoint",
+            "/nonexistent/dir/s.snap",
         ]
         .iter()
         .map(|s| s.to_string())
         .collect();
         assert_eq!(run(&args), 1);
+    }
+
+    #[test]
+    fn budget_shares_longer_than_task_count_are_rejected() {
+        // surplus shares would be silently dropped by the cycling rule;
+        // the mismatch must be caught at parse time with exit 2
+        let args: Vec<String> = [
+            "tune", "--model", "alexnet", "--method", "autotvm", "--trials", "8",
+            "--budget-shares", "1,1,1,1,1,1,1,1,1,1,1,1,1,1,1,1",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        assert_eq!(run(&args), 2);
+    }
+
+    #[test]
+    fn snapshot_evict_argument_errors_are_graceful() {
+        let argv = |a: &[&str]| a.iter().map(|s| s.to_string()).collect::<Vec<_>>();
+        assert_eq!(run(&argv(&["snapshot"])), 2);
+        assert_eq!(run(&argv(&["snapshot", "bogus"])), 2);
+        assert_eq!(run(&argv(&["snapshot", "evict", "only.snap"])), 2);
+        assert_eq!(run(&argv(&["snapshot", "evict", "s.snap", "x", "out.lane"])), 2);
+        // a missing snapshot file is a runtime error, not a usage error
+        assert_eq!(
+            run(&argv(&["snapshot", "evict", "/nonexistent/s.snap", "0", "out.lane"])),
+            1
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "--slot-policy must be fair|fcfs")]
+    fn bogus_slot_policy_is_rejected() {
+        let mut flags = HashMap::new();
+        flags.insert("slot-policy".to_string(), "lifo".to_string());
+        session_config(&flags, TunerConfig::default());
     }
 
     #[test]
@@ -748,6 +862,7 @@ mod tests {
         assert_eq!(defaults.task_parallelism, 1);
         assert_eq!(defaults.device_slots, 1);
         assert_eq!(defaults.pipeline_depth, 1);
+        assert_eq!(defaults.slot_policy, SlotPolicy::FairShare);
 
         let mut flags = HashMap::new();
         flags.insert("task-parallelism".to_string(), "4".to_string());
@@ -759,9 +874,11 @@ mod tests {
         flags.insert("device-slots".to_string(), "2".to_string());
         flags.insert("pipeline-depth".to_string(), "1".to_string());
         flags.insert("budget-shares".to_string(), "2, 1,1".to_string());
+        flags.insert("slot-policy".to_string(), "fcfs".to_string());
         let s = session_config(&flags, TunerConfig::default());
         assert_eq!((s.device_slots, s.pipeline_depth), (2, 1));
         assert_eq!(s.budget_shares, Some(vec![2.0, 1.0, 1.0]));
+        assert_eq!(s.slot_policy, SlotPolicy::Fcfs);
     }
 
     #[test]

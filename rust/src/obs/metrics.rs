@@ -72,9 +72,15 @@ pub enum Counter {
     ConfigsQuarantined,
     /// Device slots ejected by the session for persistent failures.
     SlotEjects,
+    /// Rounds (plan→measure→absorb) stepped across all session lanes.
+    LaneRounds,
+    /// Lanes extracted from a session snapshot into standalone files.
+    LaneEvicts,
+    /// Lanes restored from a per-lane snapshot payload.
+    LaneRestores,
 }
 
-pub const N_COUNTERS: usize = 25;
+pub const N_COUNTERS: usize = 28;
 
 /// Display names, in `Counter` discriminant order.
 pub const COUNTER_NAMES: [&str; N_COUNTERS] = [
@@ -103,6 +109,9 @@ pub const COUNTER_NAMES: [&str; N_COUNTERS] = [
     "measure_retries",
     "configs_quarantined",
     "slot_ejects",
+    "lane_rounds",
+    "lane_evicts",
+    "lane_restores",
 ];
 
 // PANIC-free const-init of the static slot arrays (pre-1.79 pattern).
@@ -317,7 +326,8 @@ mod tests {
             COUNTER_NAMES[Counter::ConfigsQuarantined as usize],
             "configs_quarantined"
         );
-        assert_eq!(Counter::SlotEjects as usize, N_COUNTERS - 1);
+        assert_eq!(COUNTER_NAMES[Counter::LaneRounds as usize], "lane_rounds");
+        assert_eq!(Counter::LaneRestores as usize, N_COUNTERS - 1);
     }
 
     #[test]

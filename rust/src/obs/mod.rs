@@ -374,6 +374,7 @@ pub fn intern_static(s: &str) -> Option<&'static str> {
         "device" => "device",
         "session" => "session",
         "ckpt" => "ckpt",
+        "lane" => "lane",
         // names (searcher names double as span names under "search")
         "batch" => "batch",
         "ppo_update" => "ppo_update",
@@ -392,6 +393,7 @@ pub fn intern_static(s: &str) -> Option<&'static str> {
         "save" => "save",
         "retry" => "retry",
         "eject" => "eject",
+        "finish" => "finish",
         // argument keys
         "n" => "n",
         "chunks" => "chunks",
@@ -640,7 +642,7 @@ mod tests {
     fn intern_covers_the_whole_span_vocabulary() {
         for s in [
             "tuner", "plan", "sa", "best_gflops", "ckpt", "save", "retry", "eject",
-            "attempt", "slot", "",
+            "attempt", "slot", "lane", "finish", "",
         ] {
             assert_eq!(intern_static(s), Some(s));
         }

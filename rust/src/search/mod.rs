@@ -34,8 +34,10 @@ pub struct SearchRound {
     pub sim_time_s: f64,
 }
 
-/// A search agent the tuner can drive.
-pub trait Searcher {
+/// A search agent the tuner can drive. `Send` so a whole tuning lane
+/// (tuner + searcher + pipeline queue) is a movable unit: the session
+/// engine restores lanes on the main thread and hands them to workers.
+pub trait Searcher: Send {
     fn name(&self) -> &'static str;
 
     /// Run one round of search and return the trajectory. `visited` is an

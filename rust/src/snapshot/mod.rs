@@ -44,7 +44,12 @@ pub const MAGIC: [u8; 8] = *b"RELSNAPS";
 /// Bump on any layout change; old files are refused, never misread.
 /// v2: fault-layer columns — measurement failure tags, per-iteration
 /// slot-failure/quarantine counts, and the pipeline queue's fault reports.
-pub const FORMAT_VERSION: u32 = 2;
+/// v3: lane-oriented sessions — one independently-tagged section per task
+/// lane (pending / in-flight / done, payload length-prefixed so a single
+/// lane can be extracted without deserializing it), replacing the v2
+/// results-prefix + single-mid-task layout; checkpoints now cover any
+/// `task_parallelism`.
+pub const FORMAT_VERSION: u32 = 3;
 
 /// Typed error for every snapshot save/load/resume failure mode — the
 /// snapshot paths carry no `unwrap`/`expect` (lint rule S2 stays clean).
@@ -220,6 +225,22 @@ impl SnapWriter {
         }
     }
 
+    /// Length-prefixed opaque byte block — the inverse of
+    /// [`SnapReader::get_bytes`]. Lane sections embed their payload this
+    /// way so a reader can skip or extract one lane without understanding
+    /// its internals (the daemon's evict/migrate primitive).
+    pub fn put_bytes(&mut self, bytes: &[u8]) {
+        self.put_usize(bytes.len());
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// The raw payload written so far, unframed (no magic / version /
+    /// checksum). Pair with [`SnapReader::from_payload`] to nest one
+    /// serialized object inside another snapshot via [`put_bytes`].
+    pub fn into_payload(self) -> Vec<u8> {
+        self.buf
+    }
+
     /// Payload bytes written so far (diagnostics / cadence decisions).
     pub fn len(&self) -> usize {
         self.buf.len()
@@ -252,6 +273,14 @@ pub struct SnapReader {
 }
 
 impl SnapReader {
+    /// Cursor over an unframed payload produced by
+    /// [`SnapWriter::into_payload`] (typically the block returned by
+    /// [`SnapReader::get_bytes`]). No header validation happens here —
+    /// the enclosing snapshot's checksum already covered these bytes.
+    pub fn from_payload(bytes: Vec<u8>) -> Self {
+        SnapReader { buf: bytes, pos: 0 }
+    }
+
     /// Verify magic, version, fingerprint and checksum; on success the
     /// cursor sits at the first payload byte.
     pub fn from_file_bytes(
@@ -424,10 +453,43 @@ impl SnapReader {
         Ok(out)
     }
 
+    /// Length-prefixed opaque byte block written by
+    /// [`SnapWriter::put_bytes`].
+    pub fn get_bytes(&mut self) -> Result<Vec<u8>, SnapshotError> {
+        let n = self.get_len(1)?;
+        Ok(self.take(n)?.to_vec())
+    }
+
     /// Bytes not yet consumed (a fully-read snapshot ends at 0).
     pub fn remaining(&self) -> usize {
         self.buf.len() - self.pos
     }
+}
+
+/// Read the session fingerprint out of a framed snapshot file image
+/// without deserializing the payload. Magic and version are validated
+/// (and the image must be long enough to carry a checksum), but the
+/// checksum itself is not verified here — callers that go on to read the
+/// payload do so through [`SnapReader::from_file_bytes`], which is. This
+/// is how context-free tools (the `snapshot` CLI subcommands) open a
+/// snapshot they did not write.
+pub fn peek_fingerprint(bytes: &[u8]) -> Result<u64, SnapshotError> {
+    if bytes.len() < 28 {
+        return Err(SnapshotError::UnexpectedEof);
+    }
+    if bytes[..8] != MAGIC {
+        return Err(SnapshotError::BadMagic);
+    }
+    let version = u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]);
+    if version != FORMAT_VERSION {
+        return Err(SnapshotError::VersionMismatch {
+            found: version,
+            expected: FORMAT_VERSION,
+        });
+    }
+    let mut fp = [0u8; 8];
+    fp.copy_from_slice(&bytes[12..20]);
+    Ok(u64::from_le_bytes(fp))
 }
 
 /// Atomically persist a framed snapshot: write `<path>.tmp`, fsync, then
@@ -571,6 +633,82 @@ mod tests {
             }
             other => panic!("expected VersionMismatch, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn v2_snapshot_rejected_with_version_mismatch() {
+        // a file written by the retired v2 layout must be refused up
+        // front, never misread as lane sections
+        let mut w = SnapWriter::new();
+        w.put_u8(1);
+        let mut bytes = w.into_file_bytes(1);
+        bytes[8..12].copy_from_slice(&2u32.to_le_bytes());
+        let end = bytes.len() - 8;
+        let sum = checksum64(&bytes[..end]);
+        bytes[end..].copy_from_slice(&sum.to_le_bytes());
+        match SnapReader::from_file_bytes(bytes, 1) {
+            Err(SnapshotError::VersionMismatch { found, expected }) => {
+                assert_eq!(found, 2);
+                assert_eq!(expected, FORMAT_VERSION);
+            }
+            other => panic!("expected VersionMismatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn nested_payload_roundtrips_through_bytes_block() {
+        // serialize an object into a detached payload, embed it, pull it
+        // back out and read it with an unframed reader — the lane-section
+        // pattern
+        let mut inner = SnapWriter::new();
+        inner.put_str("lane payload");
+        inner.put_f64(-2.5);
+        inner.put_u64_slice(&[9, 8, 7]);
+        let payload = inner.into_payload();
+
+        let mut outer = SnapWriter::new();
+        outer.section(6);
+        outer.put_u32(3); // lane index
+        outer.put_bytes(&payload);
+        outer.put_str("after");
+        let mut r = SnapReader::from_file_bytes(outer.into_file_bytes(11), 11).unwrap();
+        r.expect_section(6).unwrap();
+        assert_eq!(r.get_u32().unwrap(), 3);
+        let block = r.get_bytes().unwrap();
+        assert_eq!(r.get_string().unwrap(), "after");
+        assert_eq!(r.remaining(), 0);
+
+        let mut ir = SnapReader::from_payload(block);
+        assert_eq!(ir.get_string().unwrap(), "lane payload");
+        assert_eq!(ir.get_f64().unwrap(), -2.5);
+        assert_eq!(ir.get_u64_vec().unwrap(), vec![9, 8, 7]);
+        assert_eq!(ir.remaining(), 0);
+
+        // a truncated bytes block is a typed error, not a panic
+        let mut w = SnapWriter::new();
+        w.put_u64(1_000_000);
+        let mut r = SnapReader::from_file_bytes(w.into_file_bytes(1), 1).unwrap();
+        assert!(matches!(r.get_bytes(), Err(SnapshotError::Corrupt(_))));
+    }
+
+    #[test]
+    fn peek_fingerprint_reads_the_header_without_the_payload() {
+        let bytes = sample_writer().into_file_bytes(0xFACE);
+        assert_eq!(peek_fingerprint(&bytes), Ok(0xFACE));
+        // bad magic / version still refused; short files are EOF
+        let mut bad = bytes.clone();
+        bad[0] ^= 0xFF;
+        assert!(matches!(peek_fingerprint(&bad), Err(SnapshotError::BadMagic)));
+        let mut old = bytes.clone();
+        old[8..12].copy_from_slice(&2u32.to_le_bytes());
+        assert!(matches!(
+            peek_fingerprint(&old),
+            Err(SnapshotError::VersionMismatch { found: 2, .. })
+        ));
+        assert!(matches!(
+            peek_fingerprint(&bytes[..10]),
+            Err(SnapshotError::UnexpectedEof)
+        ));
     }
 
     #[test]

@@ -134,9 +134,9 @@ impl TransferRegistry {
     /// publish/consult audit log, in order. No spans or counters are
     /// emitted here — observability state is checkpointed by the obs layer.
     pub fn snap_save(&self, w: &mut SnapWriter) {
-        // PANIC: session checkpointing is serial-only; the single lock
-        // holder cannot have panicked while holding it.
-        let g = self.inner.lock().unwrap();
+        // poison-tolerant: under task-parallel checkpointing a panicking
+        // lane worker must not wedge the quiesce barrier's snapshot write
+        let g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
         w.put_usize(g.artifacts.len());
         for a in g.artifacts.iter() {
             w.put_str(&a.task_id);

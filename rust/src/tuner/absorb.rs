@@ -1,0 +1,163 @@
+//! The absorb stage of the Fig 4(a) loop: ingest one planned batch's
+//! hardware measurements — visited/best tracking, cost-model refit,
+//! searcher seeding, clock accounting, the iteration record, and the
+//! convergence policy. Split out of `tuner/mod.rs` alongside
+//! [`plan`](super::plan); the state both stages share stays on
+//! [`TaskTuner`].
+
+use super::*;
+
+impl TaskTuner {
+    /// Ingest the measurements of one planned batch: visited/best tracking,
+    /// cost-model refit, searcher seeding, clock accounting, iteration
+    /// record, and the convergence policy.
+    pub fn absorb(&mut self, batch: PlannedBatch, results: Vec<Measurement>, device_s: f64) {
+        self.absorb_faults(batch, results, device_s, &BatchFaultReport::default());
+    }
+
+    /// [`Self::absorb`] carrying the batch's fault report: per-slot failed
+    /// attempts and quarantine counts land in the iteration record (and so in
+    /// checkpoints), which is where the session's slot-health derivation
+    /// reads them.
+    pub fn absorb_faults(
+        &mut self,
+        batch: PlannedBatch,
+        results: Vec<Measurement>,
+        device_s: f64,
+        report: &BatchFaultReport,
+    ) {
+        let prev = self.obs_enter();
+        self.absorb_inner(batch, results, device_s, report);
+        self.obs_exit(prev);
+    }
+
+    fn absorb_inner(
+        &mut self,
+        batch: PlannedBatch,
+        results: Vec<Measurement>,
+        device_s: f64,
+        report: &BatchFaultReport,
+    ) {
+        for c in &batch.configs {
+            self.in_flight.remove(&self.space.flat_index(c));
+        }
+        self.pending -= batch.configs.len();
+        self.cum += results.len();
+        for m in &results {
+            self.visited.insert(self.space.flat_index(&m.config));
+            if self.record_pairs {
+                self.artifact_pairs.push((
+                    self.space.knob_values(&m.config),
+                    crate::costmodel::measurement_target(m),
+                ));
+            }
+            if let Some(ms) = m.runtime_ms {
+                if self.best.as_ref().map(|(_, b, _)| ms < *b).unwrap_or(true) {
+                    self.best = Some((m.config.clone(), ms, m.gflops));
+                }
+            }
+        }
+
+        // update the cost model + feed the best configs back to the
+        // searcher (warm starts / walker seeding)
+        let prev_best_gflops =
+            self.iterations.last().map(|r| r.best_gflops).unwrap_or(0.0);
+        let model_spent_before = self.model.spent_s.get();
+        self.model.update(&self.space, &results);
+        let model_fit_s = self.model.spent_s.get() - model_spent_before;
+        {
+            let mut ranked: Vec<&Measurement> =
+                results.iter().filter(|m| m.ok()).collect();
+            // a NaN-fitness measurement (pathological measurer) must not
+            // panic the tuner — and must rank like the worst fitness, never
+            // surface as a searcher seed
+            let key =
+                |v: f64| if v.is_nan() { f64::NEG_INFINITY } else { v };
+            ranked.sort_by(|a, b| key(b.gflops).total_cmp(&key(a.gflops)));
+            let mut seeds: Vec<Config> =
+                ranked.iter().take(8).map(|m| m.config.clone()).collect();
+            if let Some((c, _, _)) = &self.best {
+                seeds.insert(0, c.clone());
+            }
+            self.searcher.seed(&seeds);
+        }
+
+        {
+            use crate::obs::metrics::{add, Counter};
+            add(Counter::ConfigsMeasured, results.len() as u64);
+            if crate::obs::enabled() {
+                // captured before this batch's costs are charged, so the
+                // refit span sits after the batch's search + device time
+                let t0 = crate::obs::us(self.clock.total_s());
+                let refit_ts = t0 + crate::obs::us(batch.search_s + device_s);
+                crate::obs::emit_ctx(
+                    "model",
+                    "refit",
+                    refit_ts,
+                    crate::obs::us(model_fit_s),
+                    &[("n", results.len() as f64)],
+                );
+                crate::obs::emit_ctx(
+                    "tuner",
+                    "absorb",
+                    refit_ts,
+                    crate::obs::us(model_fit_s + batch.model_query_s),
+                    &[("iter", batch.iter as f64), ("cum", self.cum as f64)],
+                );
+            }
+        }
+
+        // charge this batch's own plan-stage costs here so the iteration
+        // record (and the session wall model's deltas) attribute search and
+        // model-query time to the batch that incurred them, even when
+        // planning ran ahead of absorbing (pipelined schedules)
+        self.clock.search_s += batch.search_s;
+        self.clock.measure_s += device_s;
+        self.clock.model_s += batch.model_query_s + model_fit_s;
+        // serial wall; the session scheduler overwrites with the pipelined
+        // schedule's elapsed time
+        self.clock.wall_s = self.clock.total_s();
+
+        let (best_ms, best_gf) = self
+            .best
+            .as_ref()
+            .map(|(_, ms, gf)| (*ms, *gf))
+            .unwrap_or((f64::INFINITY, 0.0));
+        self.iterations.push(IterationRecord {
+            iter: batch.iter,
+            n_measured: results.len(),
+            cum_measured: self.cum,
+            best_gflops: best_gf,
+            best_runtime_ms: best_ms,
+            steps: batch.steps,
+            steps_to_converge: batch.steps_to_converge,
+            sampler_k: batch.sampler_k,
+            plan_host_s: batch.search_s + batch.model_query_s,
+            absorb_host_s: model_fit_s,
+            slot_failures: report.slot_failures.clone(),
+            quarantined: report.quarantined,
+            clock: self.clock,
+        });
+
+        // convergence-based termination (RELEASE's policy). Two guards:
+        //    (a) fitness plateau for `patience` iterations, AND
+        //    (b) the cost model no longer predicts meaningfully better
+        //        configurations than the measured best (otherwise the
+        //        search is still on a promising scent — keep going, up to
+        //        a hard stall cap).
+        if let Some(es) = self.cfg.early_stop {
+            let improved = prev_best_gflops == 0.0
+                || best_gf > prev_best_gflops * (1.0 + es.min_improve);
+            self.stall = if improved { 0 } else { self.stall + results.len() };
+            let model_satisfied = !self.model.is_trained()
+                || batch.top_predicted <= (best_gf.max(1e-3)).ln() + 0.05;
+            let hard_cap = self.stall >= es.patience_meas * 3;
+            if batch.iter >= self.cfg.min_iters
+                && self.stall >= es.patience_meas
+                && (model_satisfied || hard_cap)
+            {
+                self.stopped = true;
+            }
+        }
+    }
+}

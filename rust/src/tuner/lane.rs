@@ -1,0 +1,172 @@
+//! A first-class tuning lane: everything ONE task owns while a session
+//! tunes it — the [`TaskTuner`] (searcher, cost model, RNG cursor,
+//! iteration log, trace context) plus the in-flight pipeline queue of
+//! planned-but-unabsorbed batches.
+//!
+//! A lane is the session engine's unit of scheduling *and* of snapshot:
+//! [`Lane::save_payload`] serializes the whole lane into one opaque byte
+//! block, and [`Lane::resume`] reconstructs a bit-identical lane from it.
+//! Because a lane never shares mutable state with its siblings (the
+//! transfer registry is consulted once at [`Lane::start`] and published to
+//! once at [`Lane::finish`]), a session checkpoint is just the set of its
+//! lanes' payloads — which is what lets checkpoint/resume work at any
+//! `task_parallelism`, and what makes a single lane extractable from a
+//! session snapshot and movable to another process (the daemon's planned
+//! migration primitive).
+
+use super::*;
+use crate::obs::metrics::{inc, Counter};
+
+/// One task's complete, schedulable tuning state. Drive it with
+/// [`Lane::step`] until it reports done, then [`Lane::finish`] it.
+pub struct Lane {
+    /// The session task index this lane tunes (also its trace lane id).
+    index: usize,
+    /// Pipeline depth the lane runs (and snapshots) at.
+    depth: usize,
+    tuner: TaskTuner,
+    /// Measured-but-unabsorbed batches, oldest first.
+    queue: VecDeque<QueuedBatch>,
+}
+
+impl Lane {
+    /// Open a fresh lane for `task`: construct its tuner and, when the
+    /// session runs with transfer, consult the registry before the first
+    /// iteration (the consult span lands on this lane's trace lane).
+    pub fn start(
+        index: usize,
+        task: &ConvTask,
+        method: MethodSpec,
+        cfg: &TunerConfig,
+        backend: Option<Arc<dyn Backend>>,
+        depth: usize,
+        transfer: Option<(&TransferRegistry, &TransferConfig)>,
+    ) -> Lane {
+        let mut tuner = TaskTuner::new(task, method, cfg, backend.clone());
+        if let Some((registry, tcfg)) = transfer {
+            tuner.enable_artifact_recording();
+            // consult/publish spans land on the task's lane, like every
+            // other stage of this loop
+            let prev = tuner.obs_enter();
+            let plan = transfer::build_plan(registry, task, &tuner.space, tcfg);
+            tuner.obs_exit(prev);
+            if let Some(plan) = plan {
+                tuner.apply_transfer(&plan, backend.as_ref());
+            }
+        }
+        Lane { index, depth: depth.max(1), tuner, queue: VecDeque::new() }
+    }
+
+    /// Reconstruct a lane from a [`Lane::save_payload`] block, taken under
+    /// the *same* task, method, config, and backend (the session
+    /// fingerprint guarantees that pairing; `TaskTuner::snap_restore`
+    /// additionally rejects a task-id mismatch). The restored lane already
+    /// carries the applied transfer plan, the recording flag, and the
+    /// consult event — nothing is re-consulted.
+    pub fn resume(
+        index: usize,
+        task: &ConvTask,
+        method: MethodSpec,
+        cfg: &TunerConfig,
+        backend: Option<Arc<dyn Backend>>,
+        depth: usize,
+        payload: Vec<u8>,
+    ) -> Result<Lane, SnapshotError> {
+        let depth = depth.max(1);
+        let mut r = SnapReader::from_payload(payload);
+        if r.get_usize()? != index {
+            return Err(SnapshotError::Corrupt("lane payload task index mismatch"));
+        }
+        if r.get_usize()? != depth {
+            return Err(SnapshotError::Corrupt("lane payload pipeline depth mismatch"));
+        }
+        let mut tuner = TaskTuner::new(task, method, cfg, backend);
+        tuner.snap_restore(&mut r)?;
+        let queue = snap_restore_queue(&mut r)?;
+        if r.remaining() != 0 {
+            return Err(SnapshotError::Corrupt("trailing bytes in lane payload"));
+        }
+        inc(Counter::LaneRestores);
+        Ok(Lane { index, depth, tuner, queue })
+    }
+
+    /// Advance the lane by one round: top the pipeline queue up to `depth`
+    /// (plan + dispatch to the device), then absorb the oldest batch.
+    /// Returns `true` when the lane is exhausted (budget spent or
+    /// convergence fired, queue drained) — after every `false` return the
+    /// lane sits at a round boundary, which is exactly the state
+    /// [`Lane::save_payload`] serializes.
+    pub fn step(&mut self, coordinator: &MeasureCoordinator<'_>) -> bool {
+        while self.queue.len() < self.depth {
+            match self.tuner.plan() {
+                Some(batch) => {
+                    let prev = self.tuner.obs_enter();
+                    let (results, secs, report) =
+                        coordinator.measure_timed_faults(&self.tuner.space, &batch.configs);
+                    self.tuner.obs_exit(prev);
+                    self.queue.push_back((batch, results, secs, report));
+                }
+                None => break,
+            }
+        }
+        match self.queue.pop_front() {
+            Some((batch, results, secs, report)) => {
+                self.tuner.absorb_faults(batch, results, secs, &report);
+                inc(Counter::LaneRounds);
+                false
+            }
+            None => true,
+        }
+    }
+
+    /// Close the lane: emit its deterministic `lane/finish` span (anchored
+    /// at the task's simulated clock, so it is identical across thread
+    /// counts and across checkpoint/resume), publish the task's artifact
+    /// when the session runs with transfer — strictly after tuning, so
+    /// concurrent siblings never observe a half-tuned donor — and finalize
+    /// the [`TuneResult`].
+    pub fn finish(mut self, transfer: Option<(&TransferRegistry, &TransferConfig)>) -> TuneResult {
+        let prev = self.tuner.obs_enter();
+        crate::obs::emit_ctx(
+            "lane",
+            "finish",
+            crate::obs::us(self.tuner.clock_total_s()),
+            0,
+            &[("task", self.index as f64), ("iter", self.tuner.rounds() as f64)],
+        );
+        if let Some((registry, _)) = transfer {
+            registry.publish(self.tuner.export_artifact());
+        }
+        self.tuner.obs_exit(prev);
+        self.tuner.finish()
+    }
+
+    /// Serialize the whole lane — index, depth, tuner state, in-flight
+    /// queue — into one opaque byte block. Only valid at a round boundary
+    /// (between [`Lane::step`] calls), which is the only time the caller
+    /// can hold `&self` anyway.
+    pub fn save_payload(&self) -> Vec<u8> {
+        let mut w = SnapWriter::new();
+        w.put_usize(self.index);
+        w.put_usize(self.depth);
+        self.tuner.snap_save(&mut w);
+        snap_save_queue(&mut w, &self.queue);
+        w.into_payload()
+    }
+
+    /// The session task index this lane tunes.
+    pub fn index(&self) -> usize {
+        self.index
+    }
+
+    /// Absorbed rounds so far (the session's checkpoint-cadence unit).
+    pub fn rounds(&self) -> usize {
+        self.tuner.rounds()
+    }
+
+    /// The lane's simulated-clock position — checkpoint spans anchor here
+    /// so a resumed run's trace is byte-identical to an uninterrupted one.
+    pub fn clock_total_s(&self) -> f64 {
+        self.tuner.clock_total_s()
+    }
+}

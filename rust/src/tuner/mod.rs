@@ -4,18 +4,25 @@
 //!
 //! The loop is decomposed into a [`TaskTuner`] with explicit `plan` (search
 //! + sample) and `absorb` (measure results → model update → bookkeeping)
-//! stages, so schedulers can pipeline them: [`tune`] runs the serial
+//! stages — [`plan`] and [`absorb`] hold the stage bodies — and a [`Lane`]
+//! wraps one task's tuner together with its in-flight pipeline queue into
+//! a single schedulable, snapshottable unit: [`tune`] runs the serial
 //! depth-1 schedule; [`session`] runs whole networks with task parallelism
-//! and search/measure overlap.
+//! and search/measure overlap by stepping many lanes.
 
+mod absorb;
 pub mod e2e;
+pub mod lane;
+mod plan;
 pub mod session;
+
+pub use lane::Lane;
 
 use crate::coordinator::{BatchFaultReport, MeasureCoordinator};
 use crate::costmodel::CostModel;
 use crate::rl::PpoAgent;
 use crate::runtime::Backend;
-use crate::sampling::{adaptive_sample, fill_random_unvisited, greedy_sample, SamplerKind};
+use crate::sampling::SamplerKind;
 use crate::search::{
     ga::GeneticAlgorithm, random::RandomSearch, sa::SimulatedAnnealing, Searcher,
 };
@@ -224,6 +231,9 @@ fn make_searcher(
         SearcherKind::Ga => Box::new(GeneticAlgorithm::default()),
         SearcherKind::Random => Box::new(RandomSearch::default()),
         SearcherKind::Rl => {
+            // PANIC: every RL-capable entry point (CLI, session engine, the
+            // report harness) resolves a backend via runtime::select_backend
+            // before constructing tuners; None here is a caller bug.
             let be = backend.expect(
                 "RL searcher needs a PPO backend (runtime::select_backend)",
             );
@@ -445,294 +455,6 @@ impl TaskTuner {
     /// Measurement budget not yet claimed by a planned batch.
     fn budget_left(&self) -> usize {
         self.cfg.max_trials.saturating_sub(self.cum + self.pending)
-    }
-
-    /// Run one search + sample stage. Returns `None` when the budget is
-    /// exhausted, convergence fired, or sampling produced nothing new.
-    pub fn plan(&mut self) -> Option<PlannedBatch> {
-        let prev = self.obs_enter();
-        let out = self.plan_inner();
-        self.obs_exit(prev);
-        out
-    }
-
-    fn plan_inner(&mut self) -> Option<PlannedBatch> {
-        if self.stopped || self.budget_left() == 0 {
-            return None;
-        }
-        let iter = self.iter + 1;
-        if crate::obs::enabled() {
-            // anchor this iteration's spans at the task's simulated clock
-            crate::obs::set_ctx_base(crate::obs::us(self.clock.total_s()));
-        }
-
-        // Configs to exclude from sampling: measured ones plus anything an
-        // in-flight batch already claimed.
-        let excluded_owned: BTreeSet<u64>;
-        let excluded: &BTreeSet<u64> = if self.in_flight.is_empty() {
-            &self.visited
-        } else {
-            excluded_owned = self.visited.union(&self.in_flight).copied().collect();
-            &excluded_owned
-        };
-
-        // 1. search: trajectory over the cost-model surface
-        let model_spent_before = self.model.spent_s.get();
-        let round = self.searcher.round(&self.space, &self.model, excluded, &mut self.rng);
-        self.last_traj = round.trajectory.clone();
-
-        // 2. sample: pick which configs to really measure
-        let budget_left = self.budget_left();
-        let (mut samples, k) = match self.method.sampler {
-            SamplerKind::Greedy => (
-                greedy_sample(
-                    &self.space,
-                    &round.trajectory,
-                    &round.scores,
-                    excluded,
-                    self.cfg.plan_size,
-                    crate::sampling::DEFAULT_EPSILON,
-                    &mut self.rng,
-                ),
-                0,
-            ),
-            SamplerKind::Adaptive => {
-                let r = adaptive_sample(&self.space, &round.trajectory, excluded, &mut self.rng);
-                let mut samples = r.samples;
-                let mut taken: BTreeSet<u64> =
-                    samples.iter().map(|c| self.space.flat_index(c)).collect();
-                // exploitation top-up: the highest-predicted unvisited
-                // trajectory points (the configs the compiler most wants
-                // to confirm on hardware). The cap is captured before the
-                // loop: when centroid give-ups left fewer than k cluster
-                // representatives, topping up to k + exploit_top would
-                // silently inflate the exploit share.
-                let exploit_cap = samples.len() + self.cfg.exploit_top;
-                for (c, _) in round.trajectory.iter().zip(&round.scores) {
-                    if samples.len() >= exploit_cap {
-                        break;
-                    }
-                    let flat = self.space.flat_index(c);
-                    if !excluded.contains(&flat) && taken.insert(flat) {
-                        samples.push(c.clone());
-                    }
-                }
-                // ε exploration: a few uniform-random configs keep the cost
-                // model from going blind outside the trajectory's basin
-                // (mirrors AutoTVM's ε-greedy exploration share)
-                let n_random = (samples.len() / 6).max(4);
-                fill_random_unvisited(
-                    &self.space,
-                    excluded,
-                    &mut taken,
-                    n_random,
-                    1000,
-                    &mut self.rng,
-                    &mut samples,
-                );
-                (samples, r.k)
-            }
-        };
-        samples.truncate(budget_left);
-        let model_query_s = self.model.spent_s.get() - model_spent_before;
-        {
-            use crate::obs::metrics::{add, inc, Counter};
-            inc(Counter::SearchRounds);
-            add(Counter::ConfigsSampled, samples.len() as u64);
-            let t0 = crate::obs::ctx_base();
-            crate::obs::emit_ctx(
-                "search",
-                self.searcher.name(),
-                t0,
-                crate::obs::us(round.sim_time_s),
-                &[("steps", round.steps as f64)],
-            );
-            crate::obs::emit_ctx(
-                "tuner",
-                "plan",
-                t0,
-                crate::obs::us(round.sim_time_s + model_query_s),
-                &[("n", samples.len() as f64), ("k", k as f64)],
-            );
-        }
-        if samples.is_empty() {
-            // the round still happened: charge its host time even though it
-            // produced nothing to measure, and keep the serial invariant
-            // wall_s == total_s() intact
-            self.clock.search_s += round.sim_time_s;
-            self.clock.model_s += model_query_s;
-            self.clock.wall_s = self.clock.total_s();
-            return None;
-        }
-
-        self.iter = iter;
-        self.pending += samples.len();
-        for c in &samples {
-            self.in_flight.insert(self.space.flat_index(c));
-        }
-        Some(PlannedBatch {
-            iter,
-            configs: samples,
-            sampler_k: k,
-            search_s: round.sim_time_s,
-            model_query_s,
-            steps: round.steps,
-            steps_to_converge: round.steps_to_converge,
-            top_predicted: round.scores.first().copied().unwrap_or(0.0),
-        })
-    }
-
-    /// Ingest the measurements of one planned batch: visited/best tracking,
-    /// cost-model refit, searcher seeding, clock accounting, iteration
-    /// record, and the convergence policy.
-    pub fn absorb(&mut self, batch: PlannedBatch, results: Vec<Measurement>, device_s: f64) {
-        self.absorb_faults(batch, results, device_s, &BatchFaultReport::default());
-    }
-
-    /// [`Self::absorb`] carrying the batch's fault report: per-slot failed
-    /// attempts and quarantine counts land in the iteration record (and so in
-    /// checkpoints), which is where the session's slot-health derivation
-    /// reads them.
-    pub fn absorb_faults(
-        &mut self,
-        batch: PlannedBatch,
-        results: Vec<Measurement>,
-        device_s: f64,
-        report: &BatchFaultReport,
-    ) {
-        let prev = self.obs_enter();
-        self.absorb_inner(batch, results, device_s, report);
-        self.obs_exit(prev);
-    }
-
-    fn absorb_inner(
-        &mut self,
-        batch: PlannedBatch,
-        results: Vec<Measurement>,
-        device_s: f64,
-        report: &BatchFaultReport,
-    ) {
-        for c in &batch.configs {
-            self.in_flight.remove(&self.space.flat_index(c));
-        }
-        self.pending -= batch.configs.len();
-        self.cum += results.len();
-        for m in &results {
-            self.visited.insert(self.space.flat_index(&m.config));
-            if self.record_pairs {
-                self.artifact_pairs.push((
-                    self.space.knob_values(&m.config),
-                    crate::costmodel::measurement_target(m),
-                ));
-            }
-            if let Some(ms) = m.runtime_ms {
-                if self.best.as_ref().map(|(_, b, _)| ms < *b).unwrap_or(true) {
-                    self.best = Some((m.config.clone(), ms, m.gflops));
-                }
-            }
-        }
-
-        // update the cost model + feed the best configs back to the
-        // searcher (warm starts / walker seeding)
-        let prev_best_gflops =
-            self.iterations.last().map(|r| r.best_gflops).unwrap_or(0.0);
-        let model_spent_before = self.model.spent_s.get();
-        self.model.update(&self.space, &results);
-        let model_fit_s = self.model.spent_s.get() - model_spent_before;
-        {
-            let mut ranked: Vec<&Measurement> =
-                results.iter().filter(|m| m.ok()).collect();
-            // a NaN-fitness measurement (pathological measurer) must not
-            // panic the tuner — and must rank like the worst fitness, never
-            // surface as a searcher seed
-            let key =
-                |v: f64| if v.is_nan() { f64::NEG_INFINITY } else { v };
-            ranked.sort_by(|a, b| key(b.gflops).total_cmp(&key(a.gflops)));
-            let mut seeds: Vec<Config> =
-                ranked.iter().take(8).map(|m| m.config.clone()).collect();
-            if let Some((c, _, _)) = &self.best {
-                seeds.insert(0, c.clone());
-            }
-            self.searcher.seed(&seeds);
-        }
-
-        {
-            use crate::obs::metrics::{add, Counter};
-            add(Counter::ConfigsMeasured, results.len() as u64);
-            if crate::obs::enabled() {
-                // captured before this batch's costs are charged, so the
-                // refit span sits after the batch's search + device time
-                let t0 = crate::obs::us(self.clock.total_s());
-                let refit_ts = t0 + crate::obs::us(batch.search_s + device_s);
-                crate::obs::emit_ctx(
-                    "model",
-                    "refit",
-                    refit_ts,
-                    crate::obs::us(model_fit_s),
-                    &[("n", results.len() as f64)],
-                );
-                crate::obs::emit_ctx(
-                    "tuner",
-                    "absorb",
-                    refit_ts,
-                    crate::obs::us(model_fit_s + batch.model_query_s),
-                    &[("iter", batch.iter as f64), ("cum", self.cum as f64)],
-                );
-            }
-        }
-
-        // charge this batch's own plan-stage costs here so the iteration
-        // record (and the session wall model's deltas) attribute search and
-        // model-query time to the batch that incurred them, even when
-        // planning ran ahead of absorbing (pipelined schedules)
-        self.clock.search_s += batch.search_s;
-        self.clock.measure_s += device_s;
-        self.clock.model_s += batch.model_query_s + model_fit_s;
-        // serial wall; the session scheduler overwrites with the pipelined
-        // schedule's elapsed time
-        self.clock.wall_s = self.clock.total_s();
-
-        let (best_ms, best_gf) = self
-            .best
-            .as_ref()
-            .map(|(_, ms, gf)| (*ms, *gf))
-            .unwrap_or((f64::INFINITY, 0.0));
-        self.iterations.push(IterationRecord {
-            iter: batch.iter,
-            n_measured: results.len(),
-            cum_measured: self.cum,
-            best_gflops: best_gf,
-            best_runtime_ms: best_ms,
-            steps: batch.steps,
-            steps_to_converge: batch.steps_to_converge,
-            sampler_k: batch.sampler_k,
-            plan_host_s: batch.search_s + batch.model_query_s,
-            absorb_host_s: model_fit_s,
-            slot_failures: report.slot_failures.clone(),
-            quarantined: report.quarantined,
-            clock: self.clock,
-        });
-
-        // convergence-based termination (RELEASE's policy). Two guards:
-        //    (a) fitness plateau for `patience` iterations, AND
-        //    (b) the cost model no longer predicts meaningfully better
-        //        configurations than the measured best (otherwise the
-        //        search is still on a promising scent — keep going, up to
-        //        a hard stall cap).
-        if let Some(es) = self.cfg.early_stop {
-            let improved = prev_best_gflops == 0.0
-                || best_gf > prev_best_gflops * (1.0 + es.min_improve);
-            self.stall = if improved { 0 } else { self.stall + results.len() };
-            let model_satisfied = !self.model.is_trained()
-                || batch.top_predicted <= (best_gf.max(1e-3)).ln() + 0.05;
-            let hard_cap = self.stall >= es.patience_meas * 3;
-            if batch.iter >= self.cfg.min_iters
-                && self.stall >= es.patience_meas
-                && (model_satisfied || hard_cap)
-            {
-                self.stopped = true;
-            }
-        }
     }
 
     /// Finalize into a [`TuneResult`].
@@ -1203,6 +925,9 @@ pub fn tune_with_coordinator(
 /// and publishes its own artifact after the loop completes — strictly
 /// after, so concurrent siblings can never observe a half-tuned donor.
 /// With `transfer = None` this is byte-for-byte the baseline loop.
+///
+/// Implemented as the one-lane special case of the session engine: start a
+/// [`Lane`], step it to exhaustion, finish it.
 pub fn tune_with_coordinator_transfer(
     task: &ConvTask,
     coordinator: &MeasureCoordinator<'_>,
@@ -1212,87 +937,17 @@ pub fn tune_with_coordinator_transfer(
     pipeline_depth: usize,
     transfer: Option<(&TransferRegistry, &TransferConfig)>,
 ) -> TuneResult {
-    tune_with_coordinator_resumable(
+    let mut lane = Lane::start(
+        cfg.obs_lane as usize,
         task,
-        coordinator,
         method,
         cfg,
         backend,
         pipeline_depth,
         transfer,
-        None,
-        None,
-    )
-}
-
-/// [`tune_with_coordinator_transfer`] with checkpoint hooks: `resume` skips
-/// construction + transfer consult and continues a restored tuner exactly
-/// where its snapshot left off (mid-pipeline included), and `on_round` is
-/// invoked after every absorbed batch with the tuner and the in-flight
-/// queue — the session engine serializes both there at its checkpoint
-/// cadence. With both `None` this is byte-for-byte the plain loop.
-#[allow(clippy::too_many_arguments)]
-pub(crate) fn tune_with_coordinator_resumable(
-    task: &ConvTask,
-    coordinator: &MeasureCoordinator<'_>,
-    method: MethodSpec,
-    cfg: &TunerConfig,
-    backend: Option<Arc<dyn Backend>>,
-    pipeline_depth: usize,
-    transfer: Option<(&TransferRegistry, &TransferConfig)>,
-    resume: Option<(TaskTuner, VecDeque<QueuedBatch>)>,
-    mut on_round: Option<&mut dyn FnMut(&TaskTuner, &VecDeque<QueuedBatch>)>,
-) -> TuneResult {
-    let depth = pipeline_depth.max(1);
-    let (mut tuner, mut queue) = match resume {
-        // the snapshot already contains the applied transfer plan, the
-        // recording flag, and the consult event (in the restored registry)
-        Some((tuner, queue)) => (tuner, queue),
-        None => {
-            let mut tuner = TaskTuner::new(task, method, cfg, backend.clone());
-            if let Some((registry, tcfg)) = transfer {
-                tuner.enable_artifact_recording();
-                // consult/publish spans land on the task's lane, like every
-                // other stage of this loop
-                let prev = tuner.obs_enter();
-                let plan = transfer::build_plan(registry, task, &tuner.space, tcfg);
-                tuner.obs_exit(prev);
-                if let Some(plan) = plan {
-                    tuner.apply_transfer(&plan, backend.as_ref());
-                }
-            }
-            (tuner, VecDeque::new())
-        }
-    };
-    loop {
-        while queue.len() < depth {
-            match tuner.plan() {
-                Some(batch) => {
-                    let prev = tuner.obs_enter();
-                    let (results, secs, report) =
-                        coordinator.measure_timed_faults(&tuner.space, &batch.configs);
-                    tuner.obs_exit(prev);
-                    queue.push_back((batch, results, secs, report));
-                }
-                None => break,
-            }
-        }
-        match queue.pop_front() {
-            Some((batch, results, secs, report)) => {
-                tuner.absorb_faults(batch, results, secs, &report);
-                if let Some(hook) = on_round.as_deref_mut() {
-                    hook(&tuner, &queue);
-                }
-            }
-            None => break,
-        }
-    }
-    if let Some((registry, _)) = transfer {
-        let prev = tuner.obs_enter();
-        registry.publish(tuner.export_artifact());
-        tuner.obs_exit(prev);
-    }
-    tuner.finish()
+    );
+    while !lane.step(coordinator) {}
+    lane.finish(transfer)
 }
 
 /// Tune one conv task with the given method. This is RELEASE's (and

@@ -1,0 +1,144 @@
+//! The plan stage of the Fig 4(a) loop: one search round over the cost
+//! model, then the sampler picks which configurations actually get
+//! hardware time. Split out of `tuner/mod.rs` so the loop's two stages
+//! read independently; the state they share stays on [`TaskTuner`].
+
+use super::*;
+use crate::sampling::{adaptive_sample, fill_random_unvisited, greedy_sample};
+
+impl TaskTuner {
+    /// Run one search + sample stage. Returns `None` when the budget is
+    /// exhausted, convergence fired, or sampling produced nothing new.
+    pub fn plan(&mut self) -> Option<PlannedBatch> {
+        let prev = self.obs_enter();
+        let out = self.plan_inner();
+        self.obs_exit(prev);
+        out
+    }
+
+    fn plan_inner(&mut self) -> Option<PlannedBatch> {
+        if self.stopped || self.budget_left() == 0 {
+            return None;
+        }
+        let iter = self.iter + 1;
+        if crate::obs::enabled() {
+            // anchor this iteration's spans at the task's simulated clock
+            crate::obs::set_ctx_base(crate::obs::us(self.clock.total_s()));
+        }
+
+        // Configs to exclude from sampling: measured ones plus anything an
+        // in-flight batch already claimed.
+        let excluded_owned: BTreeSet<u64>;
+        let excluded: &BTreeSet<u64> = if self.in_flight.is_empty() {
+            &self.visited
+        } else {
+            excluded_owned = self.visited.union(&self.in_flight).copied().collect();
+            &excluded_owned
+        };
+
+        // 1. search: trajectory over the cost-model surface
+        let model_spent_before = self.model.spent_s.get();
+        let round = self.searcher.round(&self.space, &self.model, excluded, &mut self.rng);
+        self.last_traj = round.trajectory.clone();
+
+        // 2. sample: pick which configs to really measure
+        let budget_left = self.budget_left();
+        let (mut samples, k) = match self.method.sampler {
+            SamplerKind::Greedy => (
+                greedy_sample(
+                    &self.space,
+                    &round.trajectory,
+                    &round.scores,
+                    excluded,
+                    self.cfg.plan_size,
+                    crate::sampling::DEFAULT_EPSILON,
+                    &mut self.rng,
+                ),
+                0,
+            ),
+            SamplerKind::Adaptive => {
+                let r = adaptive_sample(&self.space, &round.trajectory, excluded, &mut self.rng);
+                let mut samples = r.samples;
+                let mut taken: BTreeSet<u64> =
+                    samples.iter().map(|c| self.space.flat_index(c)).collect();
+                // exploitation top-up: the highest-predicted unvisited
+                // trajectory points (the configs the compiler most wants
+                // to confirm on hardware). The cap is captured before the
+                // loop: when centroid give-ups left fewer than k cluster
+                // representatives, topping up to k + exploit_top would
+                // silently inflate the exploit share.
+                let exploit_cap = samples.len() + self.cfg.exploit_top;
+                for (c, _) in round.trajectory.iter().zip(&round.scores) {
+                    if samples.len() >= exploit_cap {
+                        break;
+                    }
+                    let flat = self.space.flat_index(c);
+                    if !excluded.contains(&flat) && taken.insert(flat) {
+                        samples.push(c.clone());
+                    }
+                }
+                // ε exploration: a few uniform-random configs keep the cost
+                // model from going blind outside the trajectory's basin
+                // (mirrors AutoTVM's ε-greedy exploration share)
+                let n_random = (samples.len() / 6).max(4);
+                fill_random_unvisited(
+                    &self.space,
+                    excluded,
+                    &mut taken,
+                    n_random,
+                    1000,
+                    &mut self.rng,
+                    &mut samples,
+                );
+                (samples, r.k)
+            }
+        };
+        samples.truncate(budget_left);
+        let model_query_s = self.model.spent_s.get() - model_spent_before;
+        {
+            use crate::obs::metrics::{add, inc, Counter};
+            inc(Counter::SearchRounds);
+            add(Counter::ConfigsSampled, samples.len() as u64);
+            let t0 = crate::obs::ctx_base();
+            crate::obs::emit_ctx(
+                "search",
+                self.searcher.name(),
+                t0,
+                crate::obs::us(round.sim_time_s),
+                &[("steps", round.steps as f64)],
+            );
+            crate::obs::emit_ctx(
+                "tuner",
+                "plan",
+                t0,
+                crate::obs::us(round.sim_time_s + model_query_s),
+                &[("n", samples.len() as f64), ("k", k as f64)],
+            );
+        }
+        if samples.is_empty() {
+            // the round still happened: charge its host time even though it
+            // produced nothing to measure, and keep the serial invariant
+            // wall_s == total_s() intact
+            self.clock.search_s += round.sim_time_s;
+            self.clock.model_s += model_query_s;
+            self.clock.wall_s = self.clock.total_s();
+            return None;
+        }
+
+        self.iter = iter;
+        self.pending += samples.len();
+        for c in &samples {
+            self.in_flight.insert(self.space.flat_index(c));
+        }
+        Some(PlannedBatch {
+            iter,
+            configs: samples,
+            sampler_k: k,
+            search_s: round.sim_time_s,
+            model_query_s,
+            steps: round.steps,
+            steps_to_converge: round.steps_to_converge,
+            top_predicted: round.scores.first().copied().unwrap_or(0.0),
+        })
+    }
+}

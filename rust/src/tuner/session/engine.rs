@@ -1,0 +1,669 @@
+//! The session executor: schedules [`Lane`]s serially or over a worker
+//! pool, writes/loads v3 checkpoints at any `task_parallelism`, and
+//! replays the executed schedule through the wall model.
+//!
+//! Checkpointing at `task_parallelism > 1` uses a quiesce barrier
+//! ([`CkptController`]): the cadence counts absorbed rounds session-wide;
+//! the worker whose round crosses the cadence becomes the writer, stages
+//! its own lane payload, and waits until every other active worker parks
+//! at a round boundary (staging its lane on the way in). The writer then
+//! serializes the whole session — every lane sits at a round boundary, so
+//! the snapshot is exactly the state an uninterrupted run would reach —
+//! and releases the barrier. Lanes that were restored from a snapshot but
+//! not yet claimed by a worker are staged straight from the lane table, so
+//! no restored progress is ever dropped from a follow-up checkpoint.
+
+use super::health::derive_slot_ejects;
+use super::schedule::{iteration_deltas, schedule_wall};
+use super::{
+    session_fingerprint, task_budgets, CheckpointSpec, SessionConfig, SessionError,
+    LANE_DONE, LANE_IN_FLIGHT, LANE_PENDING, SEC_LANE, SEC_OBS, SEC_REGISTRY, SEC_SESSION,
+};
+use crate::coordinator::{MeasureCoordinator, RetryPolicy};
+use crate::runtime::Backend;
+use crate::sim::{FaultInjector, Measurer};
+use crate::snapshot::{self, SnapshotError};
+use crate::transfer::{curriculum_order, TransferRegistry};
+use crate::tuner::e2e::{self, ModelTuneResult};
+use crate::tuner::{
+    snap_restore_result, snap_save_result, Lane, MethodSpec, TuneResult, TunerConfig,
+};
+use crate::workload::ConvTask;
+use std::path::Path;
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Serialize the whole session — identity, execution order, the shared
+/// transfer registry, one section per lane (pending / in-flight payload /
+/// completed result), and the observability state — and write it
+/// atomically. `mid[i]`, when set, is task `i`'s staged in-flight lane
+/// payload and takes precedence over a (necessarily absent) result.
+#[allow(clippy::too_many_arguments)]
+fn write_checkpoint(
+    path: &Path,
+    fingerprint: u64,
+    model_name: &str,
+    method_name: &str,
+    order: &[usize],
+    results: &[Option<TuneResult>],
+    reg: Option<&TransferRegistry>,
+    mid: &[Option<Vec<u8>>],
+) -> Result<(), SnapshotError> {
+    let n = results.len();
+    let mut w = snapshot::SnapWriter::new();
+    w.section(SEC_SESSION);
+    w.put_str(model_name);
+    w.put_str(method_name);
+    w.put_usize(n);
+    let order_u64: Vec<u64> = order.iter().map(|&i| i as u64).collect();
+    w.put_u64_slice(&order_u64);
+    w.section(SEC_REGISTRY);
+    match reg {
+        Some(r) => {
+            w.put_bool(true);
+            // the registry rides in an opaque byte block, like each lane:
+            // readers that only care about one lane can skip it unparsed
+            let mut rw = snapshot::SnapWriter::new();
+            r.snap_save(&mut rw);
+            w.put_bytes(&rw.into_payload());
+        }
+        None => w.put_bool(false),
+    }
+    for i in 0..n {
+        w.section(SEC_LANE);
+        w.put_usize(i);
+        match (&mid[i], &results[i]) {
+            (Some(payload), _) => {
+                w.put_u8(LANE_IN_FLIGHT);
+                w.put_bytes(payload);
+            }
+            (None, Some(r)) => {
+                w.put_u8(LANE_DONE);
+                let mut rw = snapshot::SnapWriter::new();
+                snap_save_result(&mut rw, r);
+                w.put_bytes(&rw.into_payload());
+            }
+            (None, None) => w.put_u8(LANE_PENDING),
+        }
+    }
+    w.section(SEC_OBS);
+    crate::obs::snap_save(&mut w);
+    snapshot::save(path, fingerprint, w)
+}
+
+/// The quiesce barrier for checkpointing at `task_parallelism > 1`.
+///
+/// Lifecycle per worker: [`CkptController::enter`] once (RAII guard keeps
+/// `active` honest even across panics), [`CkptController::pause_point`]
+/// before claiming each task (the worker owns no lane there), and
+/// [`CkptController::on_round`] after every absorbed round (the worker's
+/// lane sits at a round boundary there — the only state a lane payload can
+/// serialize).
+struct CkptController {
+    every: usize,
+    kill_after: Option<usize>,
+    state: Mutex<CtrlState>,
+    cv: Condvar,
+}
+
+struct CtrlState {
+    /// Absorbed rounds since the last checkpoint, session-wide.
+    rounds_since: usize,
+    /// Successful checkpoint writes so far (drives `kill_after`).
+    saves: usize,
+    /// A writer is draining the barrier; workers park until it clears.
+    pausing: bool,
+    /// Per-task staged lane payloads for the in-progress checkpoint.
+    staged: Vec<Option<Vec<u8>>>,
+    /// Workers currently inside the session loop (entered, not exited).
+    active: usize,
+    /// Workers currently parked at the barrier.
+    parked: usize,
+    /// A checkpoint write failed: stop the cadence, let tuning finish —
+    /// the engine surfaces the stored error after the join.
+    failed: bool,
+}
+
+/// Decrements `active` when a worker exits (returns *or* unwinds), waking
+/// a writer that would otherwise wait for the departed worker forever.
+struct ActiveGuard<'a> {
+    ctrl: &'a CkptController,
+}
+
+impl Drop for ActiveGuard<'_> {
+    fn drop(&mut self) {
+        let mut st = self.ctrl.state.lock().unwrap_or_else(|e| e.into_inner());
+        st.active -= 1;
+        drop(st);
+        self.ctrl.cv.notify_all();
+    }
+}
+
+impl CkptController {
+    fn new(n_tasks: usize, every: usize, kill_after: Option<usize>) -> CkptController {
+        CkptController {
+            every: every.max(1),
+            kill_after,
+            state: Mutex::new(CtrlState {
+                rounds_since: 0,
+                saves: 0,
+                pausing: false,
+                staged: (0..n_tasks).map(|_| None).collect(),
+                active: 0,
+                parked: 0,
+                failed: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn enter(&self) -> ActiveGuard<'_> {
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        st.active += 1;
+        drop(st);
+        ActiveGuard { ctrl: self }
+    }
+
+    /// Park while a sibling writes a checkpoint. Called between tasks,
+    /// where the worker owns no lane, so nothing needs staging.
+    fn pause_point(&self) {
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        if !st.pausing {
+            return;
+        }
+        st.parked += 1;
+        self.cv.notify_all();
+        while st.pausing {
+            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+        st.parked -= 1;
+    }
+
+    /// Round-boundary hook. Either joins an in-progress pause (staging
+    /// this worker's lane and parking until the writer finishes) or, when
+    /// this round crosses the cadence, becomes the writer: stage the own
+    /// lane, wait for every other active worker to park, write through
+    /// `write`, release the barrier.
+    fn on_round<F: Fn(&[Option<Vec<u8>>]) -> bool>(&self, lane: &Lane, write: F) {
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        if st.failed {
+            return;
+        }
+        if st.pausing {
+            if st.staged[lane.index()].is_none() {
+                st.staged[lane.index()] = Some(lane.save_payload());
+            }
+            st.parked += 1;
+            self.cv.notify_all();
+            while st.pausing {
+                st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+            st.parked -= 1;
+            return;
+        }
+        st.rounds_since += 1;
+        if st.rounds_since < self.every {
+            return;
+        }
+        st.rounds_since = 0;
+        st.pausing = true;
+        st.staged[lane.index()] = Some(lane.save_payload());
+        // quiesce: every other active worker must reach a round boundary
+        // (on_round) or a between-tasks point (pause_point) and park
+        while st.parked + 1 < st.active {
+            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+        // counter before the write so the checkpoint carries its own save
+        // event; no ckpt span here — span timestamps would depend on which
+        // worker won the cadence race, and spans must stay deterministic
+        crate::obs::metrics::inc(crate::obs::metrics::Counter::CheckpointSaves);
+        if write(&st.staged) {
+            st.saves += 1;
+            if self.kill_after.is_some_and(|k| st.saves >= k) {
+                std::process::exit(0);
+            }
+        } else {
+            st.failed = true;
+        }
+        for s in st.staged.iter_mut() {
+            *s = None;
+        }
+        st.pausing = false;
+        drop(st);
+        self.cv.notify_all();
+    }
+}
+
+/// The session engine. Runs the (optionally resumed) lane schedule,
+/// writing checkpoints at the configured cadence, and replays the executed
+/// schedule through the wall model.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn run_session(
+    model_name: &str,
+    tasks: &[ConvTask],
+    measurer: &dyn Measurer,
+    method: MethodSpec,
+    scfg: &SessionConfig,
+    backend: Option<Arc<dyn Backend>>,
+    registry: Option<&TransferRegistry>,
+    ckpt: Option<&CheckpointSpec>,
+    resume: Option<&Path>,
+) -> Result<ModelTuneResult, SessionError> {
+    crate::util::parallel::set_threads(scfg.threads.max(1));
+    let n = tasks.len();
+    let budgets = task_budgets(scfg, n);
+    let cfgs: Vec<TunerConfig> = (0..n)
+        .map(|i| {
+            let mut c = e2e::per_task_config(&scfg.tuner, i);
+            c.max_trials = budgets[i];
+            c
+        })
+        .collect();
+
+    // Transfer overlay. Per-task seeds stay tied to the *original* task
+    // index, so `--transfer off` is bit-identical to the baseline and the
+    // curriculum reorders only *when* tasks run, never their RNG streams.
+    let local_registry;
+    let reg: Option<&TransferRegistry> = if scfg.transfer.mode.is_off() {
+        None
+    } else if let Some(r) = registry {
+        Some(r)
+    } else {
+        local_registry = TransferRegistry::new();
+        Some(&local_registry)
+    };
+    // Execution order: the transfer curriculum runs the most-connected
+    // shapes first so the best donors are published as early as possible.
+    let order: Vec<usize> = if reg.is_some() {
+        curriculum_order(tasks)
+    } else {
+        (0..n).collect()
+    };
+
+    let depth = scfg.pipeline_depth.max(1);
+    let device_slots = scfg.device_slots.max(1);
+    let workers = scfg.tuner.measure_workers.max(device_slots);
+    // With faults off the bare measurer is used directly and the retry
+    // policy stays at its no-retry default — that path is bit-identical to
+    // (and allocation-free like) the fault-free pipeline. When enabled, the
+    // injector's fault plan is a pure function of (fault_seed, config,
+    // attempt), so the schedule replays identically at any `--threads`.
+    let injector;
+    let measurer: &dyn Measurer = if scfg.faults.profile.is_off() {
+        measurer
+    } else {
+        injector = FaultInjector::new(measurer, scfg.faults, device_slots as u32);
+        &injector
+    };
+    let coordinator = if scfg.faults.profile.is_off() {
+        MeasureCoordinator::new(measurer, workers)
+    } else {
+        MeasureCoordinator::new(measurer, workers).with_retry(RetryPolicy {
+            max_attempts: 1 + scfg.faults.retry_max,
+            backoff_base_s: scfg.faults.backoff_base_s,
+            ..Default::default()
+        })
+    };
+    let tp = scfg.task_parallelism.max(1).min(n.max(1));
+
+    let fingerprint = session_fingerprint(model_name, tasks, method, scfg);
+    let method_name = method.name();
+    let mut results: Vec<Option<TuneResult>> = (0..n).map(|_| None).collect();
+    // Restored-but-not-yet-claimed lanes, by task index.
+    let mut lanes: Vec<Option<Lane>> = (0..n).map(|_| None).collect();
+    if let Some(path) = resume {
+        let mut r = snapshot::load(path, fingerprint)?;
+        r.expect_section(SEC_SESSION)?;
+        let saved_model = r.get_string()?;
+        let saved_method = r.get_string()?;
+        if saved_model != model_name || saved_method != method_name {
+            return Err(SnapshotError::Corrupt("snapshot session identity mismatch").into());
+        }
+        if r.get_usize()? != n {
+            return Err(SnapshotError::Corrupt("snapshot task count mismatch").into());
+        }
+        let saved_order = r.get_u64_vec()?;
+        if saved_order.len() != order.len()
+            || saved_order.iter().zip(&order).any(|(&a, &b)| a != b as u64)
+        {
+            return Err(SnapshotError::Corrupt("snapshot task order mismatch").into());
+        }
+        r.expect_section(SEC_REGISTRY)?;
+        if r.get_bool()? {
+            match reg {
+                Some(reg) => {
+                    let payload = r.get_bytes()?;
+                    let mut rr = snapshot::SnapReader::from_payload(payload);
+                    reg.snap_restore(&mut rr)?;
+                }
+                None => {
+                    return Err(
+                        SnapshotError::Corrupt("snapshot transfer mode mismatch").into()
+                    )
+                }
+            }
+        }
+        // Lanes restore eagerly, on this thread, *before* the obs section:
+        // an in-flight lane's restore refits its cost model (bumping fit
+        // counters) and the obs overwrite right after undoes exactly that.
+        let mut restored = 0u64;
+        for (i, lane_slot) in lanes.iter_mut().enumerate() {
+            r.expect_section(SEC_LANE)?;
+            if r.get_usize()? != i {
+                return Err(SnapshotError::Corrupt("snapshot lane order").into());
+            }
+            match r.get_u8()? {
+                LANE_PENDING => {}
+                LANE_IN_FLIGHT => {
+                    let payload = r.get_bytes()?;
+                    *lane_slot = Some(Lane::resume(
+                        i,
+                        &tasks[i],
+                        method,
+                        &cfgs[i],
+                        backend.clone(),
+                        depth,
+                        payload,
+                    )?);
+                    restored += 1;
+                }
+                LANE_DONE => {
+                    let payload = r.get_bytes()?;
+                    let mut rr = snapshot::SnapReader::from_payload(payload);
+                    results[i] = Some(snap_restore_result(&mut rr)?);
+                }
+                _ => return Err(SnapshotError::Corrupt("lane status tag").into()),
+            }
+        }
+        r.expect_section(SEC_OBS)?;
+        crate::obs::snap_restore(&mut r)?;
+        // these land after the obs overwrite on purpose: the restore
+        // events belong to *this* process, not the checkpointed one
+        crate::obs::metrics::inc(crate::obs::metrics::Counter::CheckpointLoads);
+        crate::obs::metrics::add(crate::obs::metrics::Counter::LaneRestores, restored);
+    }
+
+    if tp <= 1 {
+        // Checkpoint-cadence state shared across tasks: the cadence counts
+        // absorbed rounds session-wide and resets on every save, so a
+        // resumed run's later checkpoints land on exactly the same rounds
+        // an uninterrupted run's would (trace equivalence depends on this).
+        let mut rounds_since = 0usize;
+        let mut saves = 0usize;
+        let mut save_err: Option<SnapshotError> = None;
+        for pos in 0..order.len() {
+            let i = order[pos];
+            if results[i].is_some() {
+                continue; // restored as completed
+            }
+            let transfer = reg.map(|r| (r, &scfg.transfer));
+            let mut lane = match lanes[i].take() {
+                Some(lane) => lane,
+                None => Lane::start(
+                    i,
+                    &tasks[i],
+                    method,
+                    &cfgs[i],
+                    backend.clone(),
+                    depth,
+                    transfer,
+                ),
+            };
+            while !lane.step(&coordinator) {
+                let Some(spec) = ckpt else { continue };
+                if save_err.is_some() {
+                    continue;
+                }
+                rounds_since += 1;
+                if rounds_since < spec.every.max(1) {
+                    continue;
+                }
+                rounds_since = 0;
+                // record the save's own span + counter *before*
+                // serializing obs so the checkpoint carries its own
+                // save event — resumed traces stay byte-identical
+                crate::obs::metrics::inc(crate::obs::metrics::Counter::CheckpointSaves);
+                crate::obs::emit_serial(
+                    crate::obs::LANE_CKPT,
+                    "ckpt",
+                    "save",
+                    crate::obs::us(lane.clock_total_s()),
+                    0,
+                    &[("task", i as f64), ("iter", lane.rounds() as f64)],
+                );
+                let mut mid: Vec<Option<Vec<u8>>> = (0..n).map(|_| None).collect();
+                mid[i] = Some(lane.save_payload());
+                match write_checkpoint(
+                    &spec.path,
+                    fingerprint,
+                    model_name,
+                    &method_name,
+                    &order,
+                    &results,
+                    reg,
+                    &mid,
+                ) {
+                    Ok(()) => {
+                        saves += 1;
+                        if spec.kill_after.is_some_and(|k| saves >= k) {
+                            std::process::exit(0);
+                        }
+                    }
+                    Err(e) => save_err = Some(e),
+                }
+            }
+            results[i] = Some(lane.finish(transfer));
+            if let Some(e) = save_err.take() {
+                return Err(e.into());
+            }
+        }
+    } else {
+        // Each worker thread owns whole lanes (a lane's tuner state is
+        // thread-local between checkpoints); only the coordinator, the
+        // transfer registry, the lane table and the result slots are
+        // shared. Without transfer, per-task outcomes are independent of
+        // the interleaving: each lane has its own RNG/model/searcher and
+        // the simulated device is deterministic per config, so the
+        // schedule changes *when* things run, never *what* they compute.
+        // With transfer enabled, the donor set a task sees depends on
+        // which siblings completed first — the budget and registry
+        // disciplines are pinned by property tests instead.
+        //
+        // A panicking measurer must not cascade into poisoned-mutex panics
+        // on its siblings: every shared lock recovers the guard on poison,
+        // each lane runs under catch_unwind, and the first panic payload
+        // is re-raised afterwards with the task attached.
+        let ctrl = ckpt.map(|spec| CkptController::new(n, spec.every, spec.kill_after));
+        let lanes_shared = Mutex::new(lanes);
+        let slots = Mutex::new(&mut results);
+        let next = Mutex::new(0usize);
+        let panicked: Mutex<Option<(usize, Box<dyn std::any::Any + Send>)>> =
+            Mutex::new(None);
+        let save_err: Mutex<Option<SnapshotError>> = Mutex::new(None);
+        let order = &order;
+        let write_ckpt = |staged: &[Option<Vec<u8>>]| -> bool {
+            // PANIC: on_round only runs when a CheckpointSpec exists (ctrl
+            // is built from ckpt), so the spec is always present here
+            let spec = ckpt.expect("checkpoint write without a spec");
+            let slots_g = slots.lock().unwrap_or_else(|e| e.into_inner());
+            let results_now: &[Option<TuneResult>] = &slots_g;
+            // restored lanes nobody has claimed yet still carry progress —
+            // stage them straight from the lane table
+            let lanes_g = lanes_shared.lock().unwrap_or_else(|e| e.into_inner());
+            let mut mid: Vec<Option<Vec<u8>>> = staged.to_vec();
+            for (m, lane_slot) in mid.iter_mut().zip(lanes_g.iter()) {
+                if m.is_none() {
+                    *m = lane_slot.as_ref().map(|lane| lane.save_payload());
+                }
+            }
+            match write_checkpoint(
+                &spec.path,
+                fingerprint,
+                model_name,
+                &method_name,
+                order,
+                results_now,
+                reg,
+                &mid,
+            ) {
+                Ok(()) => true,
+                Err(e) => {
+                    *save_err.lock().unwrap_or_else(|p| p.into_inner()) = Some(e);
+                    false
+                }
+            }
+        };
+        std::thread::scope(|scope| {
+            for _ in 0..tp {
+                let be = backend.clone();
+                let slots = &slots;
+                let next = &next;
+                let panicked = &panicked;
+                let coordinator = &coordinator;
+                let cfgs = &cfgs;
+                let lanes_shared = &lanes_shared;
+                let ctrl = &ctrl;
+                let write_ckpt = &write_ckpt;
+                let transfer = &scfg.transfer;
+                scope.spawn(move || {
+                    let _active = ctrl.as_ref().map(|c| c.enter());
+                    loop {
+                        if let Some(c) = ctrl.as_ref() {
+                            c.pause_point();
+                        }
+                        let pos = {
+                            let mut g = next.lock().unwrap_or_else(|e| e.into_inner());
+                            let pos = *g;
+                            *g += 1;
+                            pos
+                        };
+                        if pos >= order.len() {
+                            break;
+                        }
+                        if panicked.lock().unwrap_or_else(|e| e.into_inner()).is_some() {
+                            break; // a sibling failed — stop taking new work
+                        }
+                        let i = order[pos];
+                        if slots.lock().unwrap_or_else(|e| e.into_inner())[i].is_some() {
+                            continue; // restored as completed
+                        }
+                        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                            let restored = {
+                                let mut g =
+                                    lanes_shared.lock().unwrap_or_else(|e| e.into_inner());
+                                g[i].take()
+                            };
+                            let mut lane = match restored {
+                                Some(lane) => lane,
+                                None => Lane::start(
+                                    i,
+                                    &tasks[i],
+                                    method,
+                                    &cfgs[i],
+                                    be.clone(),
+                                    depth,
+                                    reg.map(|r| (r, transfer)),
+                                ),
+                            };
+                            while !lane.step(coordinator) {
+                                if let Some(c) = ctrl.as_ref() {
+                                    c.on_round(&lane, write_ckpt);
+                                }
+                            }
+                            lane.finish(reg.map(|r| (r, transfer)))
+                        }));
+                        match r {
+                            Ok(res) => {
+                                slots.lock().unwrap_or_else(|e| e.into_inner())[i] = Some(res)
+                            }
+                            Err(payload) => {
+                                let mut g =
+                                    panicked.lock().unwrap_or_else(|e| e.into_inner());
+                                if g.is_none() {
+                                    *g = Some((i, payload));
+                                }
+                                break;
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        if let Some((i, payload)) =
+            panicked.into_inner().unwrap_or_else(|e| e.into_inner())
+        {
+            let msg = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "non-string panic payload".to_string());
+            panic!("task {i} ({}) panicked during tuning: {msg}", tasks[i].id);
+        }
+        // a failed checkpoint write never aborts in-flight tuning (workers
+        // would deadlock against a dead writer); it surfaces here instead
+        if let Some(e) = save_err.into_inner().unwrap_or_else(|e| e.into_inner()) {
+            return Err(e.into());
+        }
+    }
+    let mut results: Vec<TuneResult> = results
+        .into_iter()
+        .enumerate()
+        .map(|(i, r)| match r {
+            Some(r) => r,
+            None => panic!("task {i} left untuned (worker exited early)"),
+        })
+        .collect();
+
+    // Replay the recorded per-iteration costs through the session's lanes
+    // and device slots to get the schedule's elapsed (wall) time — both the
+    // per-task totals and each iteration's wall snapshot (the serial values
+    // recorded during tuning don't describe the pipelined schedule). Tasks
+    // enter the replay in *execution* order (the transfer curriculum when
+    // enabled), and the walls map back to original task indices.
+    let deltas: Vec<_> = order.iter().map(|&i| iteration_deltas(&results[i])).collect();
+    // Graceful device-slot degradation: derive slot health from the
+    // checkpointed per-iteration fault reports and stop routing bookings to
+    // a persistently failing slot. Derived purely from the recorded batch
+    // stream (in execution order), so the ejection points are deterministic
+    // at any --threads and survive checkpoint/resume exactly.
+    let ejects = derive_slot_ejects(&order, &results, device_slots);
+    // Fair-share weights follow the budget apportionment, in execution
+    // order (equal weights when shares are unset).
+    let weights: Vec<f64> = order.iter().map(|&i| budgets[i] as f64).collect();
+    let (wall_s, task_walls, iter_walls) = schedule_wall(
+        &deltas,
+        &order,
+        tp,
+        device_slots,
+        depth,
+        &ejects,
+        scfg.slot_policy,
+        &weights,
+    );
+    for ((&i, w), iw) in order.iter().zip(task_walls).zip(iter_walls) {
+        let r = &mut results[i];
+        r.clock.wall_s = w;
+        for (rec, t) in r.iterations.iter_mut().zip(iw) {
+            rec.clock.wall_s = t;
+        }
+    }
+    if !ejects.is_empty() {
+        crate::obs::metrics::add(
+            crate::obs::metrics::Counter::SlotEjects,
+            ejects.len() as u64,
+        );
+        for &(slot, booking) in &ejects {
+            crate::obs::emit_serial(
+                crate::obs::LANE_DEVICE0 + slot as u32,
+                "device",
+                "eject",
+                crate::obs::us(wall_s),
+                0,
+                &[("slot", slot as f64), ("n", booking as f64)],
+            );
+        }
+    }
+
+    let mut agg = e2e::aggregate(model_name, method, tasks, results, Some(wall_s));
+    agg.ejected_slots = ejects.iter().map(|&(s, _)| s).collect();
+    Ok(agg)
+}

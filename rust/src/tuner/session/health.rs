@@ -1,0 +1,125 @@
+//! Device-slot health: derive the graceful-degradation (slot ejection)
+//! schedule from the recorded fault columns, after the workers have joined.
+//! Pure function of deterministic inputs, so the degraded wall schedule is
+//! bit-identical at any `--threads`.
+
+use crate::tuner::TuneResult;
+
+/// Consecutive failed measurement attempts a device slot can accumulate
+/// (across batches, reset by any clean batch) before it is ejected.
+const EJECT_CONSECUTIVE_FAILURES: u32 = 6;
+
+/// Walk the recorded batch stream in execution order and decide which
+/// device slots to eject, and when. A slot's failure streak grows by the
+/// failed attempts charged to it each batch and resets on a batch where it
+/// had none; crossing [`EJECT_CONSECUTIVE_FAILURES`] ejects it — unless it
+/// is the last survivor, which always stays in service so the session still
+/// completes. Returns `(slot, bookings_before_eject)` pairs for
+/// [`schedule_wall`]: the replay stops routing device bookings to the slot
+/// once that many have been dispatched session-wide.
+///
+/// [`schedule_wall`]: super::schedule::schedule_wall
+pub(super) fn derive_slot_ejects(
+    order: &[usize],
+    results: &[TuneResult],
+    device_slots: usize,
+) -> Vec<(usize, usize)> {
+    if device_slots < 2 {
+        return Vec::new();
+    }
+    let mut streak = vec![0u32; device_slots];
+    let mut ejected = vec![false; device_slots];
+    let mut out = Vec::new();
+    let mut booking = 0usize;
+    for &i in order {
+        for it in &results[i].iterations {
+            booking += 1;
+            let mut alive = ejected.iter().filter(|&&e| !e).count();
+            for s in 0..device_slots {
+                if ejected[s] {
+                    continue;
+                }
+                let failed = it
+                    .slot_failures
+                    .iter()
+                    .find(|&&(slot, _)| slot as usize == s)
+                    .map(|&(_, f)| f)
+                    .unwrap_or(0);
+                if failed > 0 {
+                    streak[s] = streak[s].saturating_add(failed);
+                } else {
+                    streak[s] = 0;
+                }
+                if streak[s] >= EJECT_CONSECUTIVE_FAILURES && alive > 1 {
+                    ejected[s] = true;
+                    alive -= 1;
+                    out.push((s, booking));
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slot_eject_derivation_streaks_and_spares_last_survivor() {
+        use crate::tuner::IterationRecord;
+        let rec = |slot_failures: Vec<(u32, u32)>| IterationRecord {
+            iter: 0,
+            n_measured: 8,
+            cum_measured: 8,
+            best_gflops: 1.0,
+            best_runtime_ms: 1.0,
+            steps: 0,
+            steps_to_converge: 0,
+            sampler_k: 0,
+            plan_host_s: 0.0,
+            absorb_host_s: 0.0,
+            slot_failures,
+            quarantined: 0,
+            clock: Default::default(),
+        };
+        let result = |iters: Vec<IterationRecord>| TuneResult {
+            task_id: "t".into(),
+            method: "m".into(),
+            best_config: None,
+            best_runtime_ms: 1.0,
+            best_gflops: 1.0,
+            n_measurements: 8,
+            clock: Default::default(),
+            iterations: iters,
+            last_trajectory: Vec::new(),
+            transfer: None,
+        };
+        // slot 1 fails 3 attempts/batch: streak crosses 6 on batch 2
+        let failing = result(vec![
+            rec(vec![(1, 3)]),
+            rec(vec![(1, 3)]),
+            rec(vec![(1, 3)]),
+        ]);
+        assert_eq!(derive_slot_ejects(&[0], &[failing], 2), vec![(1, 2)]);
+        // a clean batch in between resets the streak — no eject
+        let recovering = result(vec![
+            rec(vec![(1, 3)]),
+            rec(vec![]),
+            rec(vec![(1, 3)]),
+        ]);
+        assert!(derive_slot_ejects(&[0], &[recovering], 2).is_empty());
+        // single-slot sessions never eject (nothing to degrade onto)
+        let single = result(vec![rec(vec![(0, 9)]), rec(vec![(0, 9)])]);
+        assert!(derive_slot_ejects(&[0], &[single], 1).is_empty());
+        // both slots failing hard: the first to cross goes, the survivor
+        // is spared even with an unbounded streak
+        let both = result(vec![
+            rec(vec![(0, 7), (1, 7)]),
+            rec(vec![(0, 7), (1, 7)]),
+            rec(vec![(0, 7), (1, 7)]),
+        ]);
+        let ejects = derive_slot_ejects(&[0], &[both], 2);
+        assert_eq!(ejects, vec![(0, 1)]);
+    }
+}

@@ -1,0 +1,177 @@
+//! Single-lane eviction: one in-flight lane extracted from a session
+//! snapshot (`evict_lane`) must load back (`load_lane`) and drive to
+//! completion standalone with results bit-identical to the task's outcome
+//! in an uninterrupted session — the daemon's planned migration primitive.
+
+mod common;
+
+use common::{measurer, quick_cfg_trials};
+use release::coordinator::MeasureCoordinator;
+use release::snapshot::SnapshotError;
+use release::tuner::session::{
+    evict_lane, lane_config, load_lane, tune_model_session,
+    tune_model_session_checkpointed, CheckpointSpec, SessionConfig,
+};
+use release::tuner::MethodSpec;
+use release::workload::zoo;
+use std::path::PathBuf;
+
+const MODEL: &str = "alexnet";
+const MEAS_SEED: u64 = 7;
+
+fn tmp(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("release-lane-{}-{tag}", std::process::id()))
+}
+
+#[test]
+fn evicted_lane_completes_standalone_bit_identically() {
+    let method = MethodSpec::sa_as();
+    let scfg = SessionConfig {
+        tuner: quick_cfg_trials(13, 64),
+        threads: 1,
+        ..Default::default()
+    };
+    let reference = tune_model_session(MODEL, &measurer(MEAS_SEED), method, &scfg, None)
+        .expect("uninterrupted session");
+
+    // cadence 1: checkpoints are written inside a lane's step loop, so the
+    // final snapshot on disk holds the last task mid-flight and every
+    // earlier task completed
+    let snap = tmp("session.snap");
+    let _ = std::fs::remove_file(&snap);
+    let spec = CheckpointSpec::new(snap.clone(), 1);
+    let full = tune_model_session_checkpointed(
+        MODEL,
+        &measurer(MEAS_SEED),
+        method,
+        &scfg,
+        None,
+        Some(&spec),
+        None,
+    )
+    .expect("checkpointed session");
+    common::assert_tasks_bitwise_equal(&reference, &full);
+    assert!(snap.exists(), "cadence 1 wrote no checkpoint");
+
+    let tasks = zoo::model_tasks(MODEL).expect("alexnet is in the zoo");
+    let n = tasks.len();
+    let last = n - 1;
+    let lane_file = tmp("lane.snap");
+    let _ = std::fs::remove_file(&lane_file);
+    evict_lane(&snap, last, &lane_file).expect("evict the in-flight lane");
+    assert!(lane_file.exists());
+
+    // a completed lane refuses eviction (its result lives in the session
+    // snapshot), and an out-of-range index is a typed error — in both
+    // cases no lane file is produced
+    let reject = tmp("reject.snap");
+    let _ = std::fs::remove_file(&reject);
+    let err = evict_lane(&snap, 0, &reject).unwrap_err();
+    assert!(matches!(err, SnapshotError::Unsupported(_)), "done lane: {err:?}");
+    let err = evict_lane(&snap, n + 5, &reject).unwrap_err();
+    assert!(matches!(err, SnapshotError::Unsupported(_)), "out of range: {err:?}");
+    assert!(!reject.exists(), "rejected evictions must not write a file");
+
+    // resurrect the lane outside the session and drive it to completion
+    // with the same measurement stream the session would have used
+    let cfg = lane_config(&scfg, n, last);
+    let meas = measurer(MEAS_SEED);
+    let mut lane = load_lane(&lane_file, &tasks[last], method, &cfg, None, 1)
+        .expect("load the evicted lane");
+    assert_eq!(lane.index(), last);
+    assert!(lane.rounds() > 0, "an in-flight lane has absorbed rounds");
+    let coordinator =
+        MeasureCoordinator::new(&meas, scfg.tuner.measure_workers.max(1));
+    while !lane.step(&coordinator) {}
+    let got = lane.finish(None);
+
+    // bit-identical to the task's outcome in the uninterrupted session
+    // (wall times excluded: they belong to the session schedule replay)
+    let want = &reference.tasks[last];
+    assert_eq!(got.task_id, want.task_id);
+    assert_eq!(got.best_runtime_ms.to_bits(), want.best_runtime_ms.to_bits());
+    assert_eq!(got.best_gflops.to_bits(), want.best_gflops.to_bits());
+    assert_eq!(got.best_config, want.best_config);
+    assert_eq!(got.n_measurements, want.n_measurements);
+    assert_eq!(got.iterations.len(), want.iterations.len());
+    assert_eq!(got.clock.measure_s.to_bits(), want.clock.measure_s.to_bits());
+    assert_eq!(got.clock.search_s.to_bits(), want.clock.search_s.to_bits());
+    assert_eq!(got.clock.model_s.to_bits(), want.clock.model_s.to_bits());
+
+    // the session snapshot is untouched by the eviction and still resumes
+    let resumed = tune_model_session_checkpointed(
+        MODEL,
+        &measurer(MEAS_SEED),
+        method,
+        &scfg,
+        None,
+        None,
+        Some(&snap),
+    )
+    .expect("session snapshot still resumes after eviction");
+    common::assert_tasks_bitwise_equal(&reference, &resumed);
+
+    // a lane file is not a session snapshot: resuming a session from it is
+    // rejected (fingerprint matches, but the layout check refuses it)
+    let err = tune_model_session_checkpointed(
+        MODEL,
+        &measurer(MEAS_SEED),
+        method,
+        &scfg,
+        None,
+        None,
+        Some(&lane_file),
+    )
+    .unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("checkpoint error"), "{msg}");
+
+    let _ = std::fs::remove_file(&snap);
+    let _ = std::fs::remove_file(&lane_file);
+}
+
+#[test]
+fn lane_file_rejects_mismatched_reload() {
+    // build a session snapshot with an in-flight lane, evict it, then try
+    // to load it back under the wrong task / depth — Lane::resume must
+    // refuse with a typed corruption error, never resurrect a wrong lane
+    let method = MethodSpec::autotvm();
+    let scfg = SessionConfig {
+        tuner: quick_cfg_trials(5, 48),
+        threads: 1,
+        ..Default::default()
+    };
+    let snap = tmp("mismatch-session.snap");
+    let _ = std::fs::remove_file(&snap);
+    let spec = CheckpointSpec::new(snap.clone(), 1);
+    tune_model_session_checkpointed(
+        MODEL,
+        &measurer(MEAS_SEED),
+        method,
+        &scfg,
+        None,
+        Some(&spec),
+        None,
+    )
+    .expect("checkpointed session");
+
+    let tasks = zoo::model_tasks(MODEL).expect("alexnet is in the zoo");
+    let n = tasks.len();
+    let last = n - 1;
+    let lane_file = tmp("mismatch-lane.snap");
+    let _ = std::fs::remove_file(&lane_file);
+    evict_lane(&snap, last, &lane_file).expect("evict");
+
+    let cfg = lane_config(&scfg, n, last);
+    // wrong pipeline depth
+    let err = load_lane(&lane_file, &tasks[last], method, &cfg, None, 2).unwrap_err();
+    assert!(matches!(err, SnapshotError::Corrupt(_)), "depth: {err:?}");
+    // wrong task for the payload
+    let err = load_lane(&lane_file, &tasks[0], method, &cfg, None, 1).unwrap_err();
+    assert!(matches!(err, SnapshotError::Corrupt(_)), "task: {err:?}");
+    // the matching reload still works
+    load_lane(&lane_file, &tasks[last], method, &cfg, None, 1).expect("matching reload");
+
+    let _ = std::fs::remove_file(&snap);
+    let _ = std::fs::remove_file(&lane_file);
+}

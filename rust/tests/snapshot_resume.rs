@@ -101,7 +101,11 @@ fn all_six_arms_resume_bit_identically() {
     for (k, (name, needs_backend)) in arms.iter().enumerate() {
         let method = MethodSpec::parse(name).expect(name);
         let backend = needs_backend.then(native_backend);
-        let scfg = serial_scfg(48, 2);
+        // vary the task parallelism per arm so every method exercises both
+        // the serial cadence and the quiesce-barrier checkpoint path
+        let mut scfg = serial_scfg(48, 2);
+        scfg.task_parallelism = [1, 2, 4][k % 3];
+        scfg.device_slots = scfg.task_parallelism;
         let reference = run_plain(method, &scfg, backend.clone());
         // vary the cadence per arm so the resume point lands on different
         // rounds (including mid-task ones)
@@ -112,6 +116,30 @@ fn all_six_arms_resume_bit_identically() {
             &scfg,
             backend,
             every,
+            &reference,
+        );
+    }
+}
+
+#[test]
+fn task_parallel_sessions_resume_bit_identically() {
+    // checkpointing is no longer serial-only: at task_parallelism > 1 the
+    // concurrent lanes quiesce at their next round boundary while one
+    // worker serializes the whole session, and a resume must reproduce the
+    // uninterrupted run bit-for-bit at tp 1, 2, and 4 alike
+    let method = MethodSpec::sa_as();
+    for tp in [1usize, 2, 4] {
+        let mut scfg = serial_scfg(48, 2);
+        scfg.task_parallelism = tp;
+        scfg.device_slots = 2;
+        scfg.pipeline_depth = 2;
+        let reference = run_plain(method, &scfg, None);
+        assert_checkpoint_resume_equivalent(
+            &format!("tp-{tp}"),
+            method,
+            &scfg,
+            None,
+            2,
             &reference,
         );
     }
@@ -354,6 +382,19 @@ fn damaged_and_mismatched_snapshots_are_rejected() {
         ),
         "version: {err:?}"
     );
+    // a v2 (pre-lane layout) snapshot is likewise refused by the version
+    // check — v3 readers never try to parse the retired RESULTS/TASK
+    // sections
+    let mut v2 = good.clone();
+    v2[8] = 2;
+    let err = resume_with(&v2, &scfg).unwrap_err();
+    assert!(
+        matches!(
+            err,
+            SessionError::Snapshot(SnapshotError::VersionMismatch { .. })
+        ),
+        "v2: {err:?}"
+    );
     // wrong magic
     let mut bad_magic = good.clone();
     bad_magic[0] ^= 0xff;
@@ -379,26 +420,3 @@ fn damaged_and_mismatched_snapshots_are_rejected() {
     let _ = std::fs::remove_file(&path);
 }
 
-#[test]
-fn checkpointing_requires_the_serial_task_schedule() {
-    let mut scfg = serial_scfg(32, 1);
-    scfg.task_parallelism = 2;
-    scfg.device_slots = 2;
-    let spec = CheckpointSpec::new(snap_path("tp2"), 1);
-    let err = tune_model_session_checkpointed(
-        MODEL,
-        &measurer(MEAS_SEED),
-        MethodSpec::autotvm(),
-        &scfg,
-        None,
-        Some(&spec),
-        None,
-    )
-    .unwrap_err();
-    assert!(
-        matches!(err, SessionError::Snapshot(SnapshotError::Unsupported(_))),
-        "{err:?}"
-    );
-    // message names the constraint
-    assert!(err.to_string().contains("task_parallelism"), "{err}");
-}

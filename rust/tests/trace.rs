@@ -115,6 +115,7 @@ fn golden_trace_bit_identical_across_thread_counts() {
         "\"cat\":\"sample\",\"name\":\"adaptive\"",
         "\"cat\":\"rl\",\"name\":\"ppo_update\"",
         "\"cat\":\"device\",\"name\":\"service\"",
+        "\"cat\":\"lane\",\"name\":\"finish\"",
         "\"cat\":\"session\",\"name\":\"schedule\"",
         "\"cat\":\"transfer\",\"name\":\"consult\"",
         "\"cat\":\"transfer\",\"name\":\"publish\"",
@@ -134,23 +135,37 @@ fn golden_trace_bit_identical_across_thread_counts() {
     // checkpoint/resume leg (same binary: the obs sink is process-global):
     // a resumed session's trace — restored spans plus the re-executed tail
     // — must be byte-identical to the uninterrupted checkpointed run's
-    let (full_trace, resumed_trace) = traced_checkpoint_resume();
+    let (full_trace, resumed_trace) = traced_checkpoint_resume(1);
     assert_same_trace("checkpointed vs resumed", &full_trace, &resumed_trace);
     assert!(
         full_trace.contains("\"cat\":\"ckpt\",\"name\":\"save\""),
         "checkpoint saves must appear in the trace"
     );
+
+    // same contract under the lane-parallel engine (ckpt/save spans are
+    // suppressed there — they key on worker races — but every lane span is
+    // simulated-clock-deterministic, so the renderings still match bitwise)
+    let (full_tp2, resumed_tp2) = traced_checkpoint_resume(2);
+    assert_same_trace("tp=2 checkpointed vs resumed", &full_tp2, &resumed_tp2);
+    assert!(
+        !full_tp2.contains("\"cat\":\"ckpt\",\"name\":\"save\""),
+        "ckpt spans are worker-race-dependent and must be suppressed at tp>1"
+    );
 }
 
-/// Run a serial alexnet session twice — once end-to-end with checkpointing
-/// at a 2-round cadence, once resumed from the snapshot the first run left
-/// behind — and return both chrome renderings.
-fn traced_checkpoint_resume() -> (String, String) {
-    let path = std::env::temp_dir()
-        .join(format!("release-trace-ckpt-{}.snap", std::process::id()));
+/// Run an alexnet session twice at the given task parallelism — once
+/// end-to-end with checkpointing at a 2-round cadence, once resumed from
+/// the snapshot the first run left behind — and return both renderings.
+fn traced_checkpoint_resume(task_parallelism: usize) -> (String, String) {
+    let path = std::env::temp_dir().join(format!(
+        "release-trace-ckpt-tp{task_parallelism}-{}.snap",
+        std::process::id()
+    ));
     let _ = std::fs::remove_file(&path);
     let scfg = SessionConfig {
         tuner: quick_cfg_trials(11, 96),
+        task_parallelism,
+        device_slots: task_parallelism,
         threads: 2,
         ..Default::default()
     };
